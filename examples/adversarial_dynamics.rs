@@ -1,0 +1,94 @@
+//! The §2.2 story: Naive Optimal ASGD is brittle under time-varying worker
+//! speeds; Ringmaster ASGD adapts automatically.
+//!
+//! Universal computation model (§5): half the workers start fast and become
+//! slow at `t_flip`; the other half start slow and become fast.  Naive
+//! Optimal ASGD commits to the *initially* fast subset and collapses after
+//! the flip; Ringmaster ASGD never selects workers explicitly — the delay
+//! threshold simply starts ignoring the now-slow ones.
+//!
+//! ```bash
+//! cargo run --release --example adversarial_dynamics
+//! ```
+
+use ringmaster::complexity;
+use ringmaster::coordinator::SchedulerKind;
+use ringmaster::driver::{Driver, DriverConfig};
+use ringmaster::metrics::ascii_plot;
+use ringmaster::opt::{Noisy, QuadraticProblem};
+use ringmaster::sim::{ComputeModel, PowerFn};
+use ringmaster::util::fmt_secs;
+
+fn main() {
+    let d = 32;
+    let n = 16;
+    let noise_sigma = 0.01;
+    let fast = 1.0; // 1 gradient/s
+    let slow = 0.01; // 100 s/gradient
+    let t_flip = 300.0;
+
+    // workers 0..n/2 start fast → turn slow; n/2..n start slow → turn fast
+    let powers: Vec<PowerFn> = (0..n)
+        .map(|i| {
+            if i < n / 2 {
+                PowerFn::Flip { rate_before: fast, rate_after: slow, t_flip }
+            } else {
+                PowerFn::Flip { rate_before: slow, rate_after: fast, t_flip }
+            }
+        })
+        .collect();
+    let model = ComputeModel::Universal { powers };
+
+    // Naive selects m* from the *initial* speeds: the first n/2 workers.
+    // (τ profile as seen at t=0: fast ones 1s, slow ones 50s.)
+    let taus_initial: Vec<f64> = (0..n)
+        .map(|i| if i < n / 2 { 1.0 / fast } else { 1.0 / slow })
+        .collect();
+    let eps = 4e-4;
+    let sigma_sq = d as f64 * noise_sigma * noise_sigma;
+    let m_star = complexity::naive_m_star(&taus_initial, sigma_sq, eps);
+    // R = 8 (= ⌈σ²/ε⌉) and the Theorem-4.1 stepsize keep the delayed
+    // iteration stable: γ·L·R ≈ 0.5.
+    let r = complexity::default_r(sigma_sq, eps);
+    let gamma = 0.06;
+
+    println!(
+        "speed flip at t={t_flip}s | naive commits to m*={m_star} initially-fast workers | R={r}"
+    );
+    let budget = 3000.0;
+    let mut curves = Vec::new();
+    for kind in [
+        SchedulerKind::Naive { m_star, gamma },
+        SchedulerKind::Ringmaster { r, gamma, cancel: true },
+        SchedulerKind::DelayAdaptive { gamma },
+    ] {
+        let problem = Noisy::new(QuadraticProblem::paper(d), noise_sigma);
+        let cfg = DriverConfig {
+            seed: 3,
+            max_time: budget,
+            max_iters: 5_000_000,
+            record_every: 50,
+            ..Default::default()
+        };
+        let mut driver = Driver::new(problem, model.clone(), cfg);
+        let mut sched = kind.build();
+        let rec = driver.run(sched.as_mut());
+        println!(
+            "{:<22} after {:>9}: f-f* = {:.3e}   ({} updates, {} cancelled)",
+            rec.scheduler,
+            fmt_secs(rec.sim_time.min(budget)),
+            rec.final_gap,
+            rec.iters,
+            rec.cluster.cancellations,
+        );
+        let mut c = rec.gap_curve;
+        c.name = kind.name();
+        curves.push(c);
+    }
+    let refs: Vec<&_> = curves.iter().collect();
+    print!("\n{}", ascii_plot(&refs, 76, 20));
+    println!(
+        "note how the naive curve flattens after t={t_flip}s — its committed workers went slow —\n\
+         while ringmaster keeps descending on the newly-fast half."
+    );
+}

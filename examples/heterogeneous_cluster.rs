@@ -1,0 +1,103 @@
+//! Figure-2-style study at laptop scale: Ringmaster ASGD vs Delay-Adaptive
+//! ASGD vs Rennala SGD on the §G quadratic under the paper's random
+//! computation-time model `τ_i = i + |N(0, i)|`, with the paper's tuning
+//! protocol (stepsize grid `{5^p}`, R/B grid `{⌈n/4^p⌉}`).
+//!
+//! Writes `out/heterogeneous_cluster.csv` and prints an ASCII convergence
+//! plot.  For the full-scale run (d=1729, n=6174) use
+//! `cargo bench --bench fig2_quadratic` with RINGMASTER_BENCH_SCALE=full.
+//!
+//! ```bash
+//! cargo run --release --example heterogeneous_cluster
+//! ```
+
+use std::path::Path;
+
+use ringmaster::coordinator::SchedulerKind;
+use ringmaster::experiments::{
+    paper_rb_grid, paper_stepsize_grid, tune_stepsize, QuadExpConfig,
+};
+use ringmaster::metrics::{ascii_plot, write_curves_csv};
+use ringmaster::sim::ComputeModel;
+use ringmaster::util::fmt_secs;
+
+fn main() {
+    let cfg = QuadExpConfig {
+        d: 64,
+        n_workers: 256,
+        noise_sigma: 0.01,
+        seed: 1,
+        max_iters: 400_000,
+        max_time: f64::INFINITY,
+        target_gap: Some(1e-3),
+        record_every: 200,
+    };
+    let model = ComputeModel::random_paper(cfg.n_workers);
+    // trimmed grids keep the example under a minute; the fig2 bench runs
+    // the paper's full {5^p} × {⌈n/4^p⌉} protocol
+    let grid: Vec<f64> = paper_stepsize_grid()
+        .into_iter()
+        .filter(|&g| (1e-3..=1.0).contains(&g))
+        .collect();
+    let rb: Vec<u64> = paper_rb_grid(cfg.n_workers).into_iter().step_by(2).collect();
+    println!(
+        "quadratic d={} n={} | stepsize grid {} values, R/B grid {rb:?}",
+        cfg.d,
+        cfg.n_workers,
+        grid.len()
+    );
+
+    let mut curves = Vec::new();
+    for (name, make) in [
+        (
+            "ringmaster",
+            Box::new(|rb_val: u64, g: f64| SchedulerKind::Ringmaster {
+                r: rb_val,
+                gamma: g,
+                cancel: true,
+            }) as Box<dyn Fn(u64, f64) -> SchedulerKind>,
+        ),
+        (
+            "rennala",
+            Box::new(|rb_val: u64, g: f64| SchedulerKind::Rennala { b: rb_val, gamma: g }),
+        ),
+    ] {
+        // joint tune over (R/B, γ)
+        let mut best: Option<(u64, f64, ringmaster::driver::RunRecord)> = None;
+        for &rb_val in &rb {
+            let (gamma, rec) = tune_stepsize(&cfg, &model, &grid, |g| make(rb_val, g));
+            let t_new = rec.time_to_target().unwrap_or(f64::INFINITY);
+            let t_old = best
+                .as_ref()
+                .and_then(|(_, _, b)| b.time_to_target())
+                .unwrap_or(f64::INFINITY);
+            if best.is_none() || t_new < t_old {
+                best = Some((rb_val, gamma, rec));
+            }
+        }
+        let (rb_best, gamma, mut rec) = best.unwrap();
+        println!(
+            "{name:<22} best R/B={rb_best:<5} γ={gamma:<8.4} time-to-target {}",
+            rec.time_to_target().map(fmt_secs).unwrap_or("—".into())
+        );
+        rec.gap_curve.name = name.to_string();
+        curves.push(rec.gap_curve);
+    }
+    // delay-adaptive ASGD tunes stepsize only
+    let (gamma, mut rec) = tune_stepsize(&cfg, &model, &grid, |g| SchedulerKind::DelayAdaptive {
+        gamma: g,
+    });
+    println!(
+        "{:<22} γ={gamma:<8.4} time-to-target {}",
+        "delay-adaptive-asgd",
+        rec.time_to_target().map(fmt_secs).unwrap_or("—".into())
+    );
+    rec.gap_curve.name = "delay-adaptive-asgd".into();
+    curves.push(rec.gap_curve);
+
+    let refs: Vec<&_> = curves.iter().collect();
+    print!("\n{}", ascii_plot(&refs, 76, 20));
+    let out = Path::new("out/heterogeneous_cluster.csv");
+    write_curves_csv(out, &refs).expect("write csv");
+    println!("wrote {}", out.display());
+}

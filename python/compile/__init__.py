@@ -1,0 +1,7 @@
+"""Build-time compile package: L2 JAX models + L1 Pallas kernels + AOT lowering.
+
+Nothing in this package is imported at runtime — ``make artifacts`` runs
+:mod:`compile.aot` once, producing ``artifacts/*.hlo.txt`` plus
+``artifacts/manifest.json``, and the Rust binary is self-contained after
+that.
+"""

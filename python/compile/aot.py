@@ -1,0 +1,170 @@
+"""AOT lowering: JAX → HLO *text* artifacts + manifest for the Rust runtime.
+
+Interchange format is HLO text, **not** a serialized ``HloModuleProto``:
+jax ≥ 0.5 emits protos with 64-bit instruction ids which the xla crate's
+XLA (xla_extension 0.5.1) rejects (``proto.id() <= INT_MAX``); the text
+parser reassigns ids, so text round-trips cleanly.  Lowering goes through
+stablehlo → ``XlaComputation`` with ``return_tuple=True`` (the Rust side
+unwraps the result tuple).
+
+Emitted entries (defaults; see ``--help``):
+
+* ``quad_vg_d{d}``   — ``(x[d]) -> (f(x), ∇f(x))`` for each requested d
+* ``mlp_step_{tag}`` — ``(p, xb, y1hot) -> (loss, ∇_p loss)``
+* ``mlp_eval_{tag}`` — ``(p, xb) -> (logits,)``
+
+plus ``manifest.json`` describing every entry's argument/result shapes and
+workload metadata (quadratic bands, MLP layer layout) that the Rust side
+needs to drive the artifacts without re-deriving anything.
+"""
+
+from __future__ import annotations
+
+import argparse
+import json
+import os
+from typing import Callable, Sequence
+
+import jax
+import jax.numpy as jnp
+from jax._src.lib import xla_client as xc
+
+from . import model
+
+
+def to_hlo_text(lowered) -> str:
+    """stablehlo → XlaComputation → HLO text (see module docstring)."""
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True
+    )
+    return comp.as_hlo_text()
+
+
+def _spec(shape: Sequence[int], dtype=jnp.float32) -> jax.ShapeDtypeStruct:
+    return jax.ShapeDtypeStruct(tuple(shape), dtype)
+
+
+def _shape_entry(s: jax.ShapeDtypeStruct) -> dict:
+    return {"shape": list(s.shape), "dtype": str(s.dtype)}
+
+
+def lower_entry(
+    name: str,
+    fn: Callable,
+    arg_specs: list[jax.ShapeDtypeStruct],
+    out_dir: str,
+    meta: dict | None = None,
+) -> dict:
+    """Lower ``fn`` at ``arg_specs``, write ``<name>.hlo.txt``, return manifest row."""
+    lowered = jax.jit(fn).lower(*arg_specs)
+    text = to_hlo_text(lowered)
+    fname = f"{name}.hlo.txt"
+    with open(os.path.join(out_dir, fname), "w") as f:
+        f.write(text)
+    out_specs = jax.eval_shape(fn, *arg_specs)
+    if not isinstance(out_specs, (tuple, list)):
+        out_specs = (out_specs,)
+    row = {
+        "name": name,
+        "file": fname,
+        "args": [_shape_entry(s) for s in arg_specs],
+        "results": [_shape_entry(s) for s in jax.tree.leaves(out_specs)],
+    }
+    if meta:
+        row["meta"] = meta
+    print(f"  {name}: {len(text)} chars -> {fname}")
+    return row
+
+
+def build_artifacts(
+    out_dir: str,
+    quad_dims: Sequence[int],
+    mlp_dims: Sequence[int],
+    batch: int,
+) -> dict:
+    os.makedirs(out_dir, exist_ok=True)
+    entries = []
+
+    for d in quad_dims:
+        entries.append(
+            lower_entry(
+                f"quad_vg_d{d}",
+                lambda x: model.quad_value_and_grad(x),
+                [_spec([d])],
+                out_dir,
+                meta={
+                    "kind": "quadratic",
+                    "d": d,
+                    "lo": model.QUAD_LO,
+                    "di": model.QUAD_DI,
+                    "up": model.QUAD_UP,
+                },
+            )
+        )
+
+    dims = list(mlp_dims)
+    tag = "x".join(str(d) for d in dims)
+    p_count = model.mlp_param_count(dims)
+    n_cls = dims[-1]
+    entries.append(
+        lower_entry(
+            f"mlp_step_{tag}",
+            lambda p, xb, yb: model.mlp_loss_and_grad(p, xb, yb, dims),
+            [_spec([p_count]), _spec([batch, dims[0]]), _spec([batch, n_cls])],
+            out_dir,
+            meta={
+                "kind": "mlp_step",
+                "dims": dims,
+                "batch": batch,
+                "param_count": p_count,
+                "layout": model.mlp_param_layout(dims),
+            },
+        )
+    )
+    entries.append(
+        lower_entry(
+            f"mlp_eval_{tag}",
+            lambda p, xb: (model.mlp_logits(p, xb, dims),),
+            [_spec([p_count]), _spec([batch, dims[0]])],
+            out_dir,
+            meta={"kind": "mlp_eval", "dims": dims, "batch": batch, "param_count": p_count},
+        )
+    )
+
+    manifest = {
+        "format_version": 1,
+        "jax_version": jax.__version__,
+        "entries": entries,
+    }
+    with open(os.path.join(out_dir, "manifest.json"), "w") as f:
+        json.dump(manifest, f, indent=2)
+    print(f"  manifest: {len(entries)} entries -> manifest.json")
+    return manifest
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--out", default="../artifacts", help="artifact output dir")
+    ap.add_argument(
+        "--quad-dims",
+        type=int,
+        nargs="+",
+        default=[64, 1729],
+        help="quadratic dimensions to lower (paper uses d=1729)",
+    )
+    ap.add_argument(
+        "--mlp-dims",
+        type=int,
+        nargs="+",
+        default=[784, 256, 10],
+        help="MLP layer sizes (input ... output)",
+    )
+    ap.add_argument("--batch", type=int, default=64, help="MLP minibatch size")
+    args = ap.parse_args()
+    print(f"lowering artifacts to {os.path.abspath(args.out)}")
+    build_artifacts(args.out, args.quad_dims, args.mlp_dims, args.batch)
+
+
+if __name__ == "__main__":
+    main()

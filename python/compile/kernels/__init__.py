@@ -1,0 +1,21 @@
+"""Layer-1 Pallas kernels.
+
+Each kernel here is the compute hot-spot of one of the paper's workloads:
+
+* :mod:`.tridiag` — the tridiagonal matvec ``A @ x`` at the heart of the
+  Section G quadratic objective's gradient.
+* :mod:`.fused_linear` — tiled matmul (+bias) used by the MLP layers of the
+  Section G.1 neural-network experiment.
+* :mod:`.softmax_xent` — fused, numerically stable softmax cross-entropy
+  (the MLP loss reduction).
+
+All kernels are lowered with ``interpret=True``: the CPU PJRT plugin cannot
+execute Mosaic custom-calls, so the interpret path is both the correctness
+oracle target and the artifact we ship.  Real-TPU efficiency is estimated
+structurally (VMEM footprint, MXU tile occupancy) in EXPERIMENTS.md.
+"""
+
+from . import ref  # noqa: F401
+from .tridiag import tridiag_matvec  # noqa: F401
+from .fused_linear import matmul_bias  # noqa: F401
+from .softmax_xent import softmax_xent_mean  # noqa: F401

@@ -1,0 +1,94 @@
+"""Pallas kernel: tiled matmul with optional bias — the MLP layer hot-spot.
+
+Computes ``y = x @ w (+ b)`` with a 3-D grid ``(M/bm, N/bn, K/bk)`` and an
+accumulator revisited across the ``k`` axis — the canonical Pallas/TPU
+matmul schedule.
+
+TPU mapping (DESIGN.md §Hardware-Adaptation): block shapes default to
+128×128×128 so each tile is one MXU-systolic-array pass; operand tiles are
+staged HBM→VMEM by the BlockSpec pipeline (the role a GPU kernel gives to
+shared-memory staging + WMMA).  Accumulation is f32 regardless of input
+dtype (``preferred_element_type``).
+
+Autodiff: ``pallas_call`` has no VJP rule, so :func:`matmul_bias` carries a
+``custom_vjp`` whose backward pass reuses the same kernel for both
+``dx = g @ w.T`` and ``dw = x.T @ g`` — the backward matmuls run on the MXU
+with the identical schedule.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+#: MXU-shaped default tiles.
+DEFAULT_BM = 128
+DEFAULT_BN = 128
+DEFAULT_BK = 128
+
+
+def _matmul_kernel(x_ref, w_ref, o_ref):
+    """One (i, j, k) grid step: accumulate ``x[i,k] @ w[k,j]`` into ``o[i,j]``."""
+
+    @pl.when(pl.program_id(2) == 0)
+    def _init():
+        o_ref[...] = jnp.zeros_like(o_ref)
+
+    o_ref[...] += jnp.dot(
+        x_ref[...], w_ref[...], preferred_element_type=o_ref.dtype
+    )
+
+
+def _pad_to(a: jax.Array, shape: tuple[int, ...]) -> jax.Array:
+    return jnp.pad(a, [(0, t - s) for s, t in zip(a.shape, shape)])
+
+
+@functools.partial(jax.jit, static_argnames=("bm", "bn", "bk"))
+def _matmul(x, w, *, bm: int, bn: int, bk: int):
+    m, k = x.shape
+    k2, n = w.shape
+    assert k == k2, f"inner dims mismatch: {k} vs {k2}"
+    bm = min(bm, max(m, 8))
+    bn = min(bn, max(n, 8))
+    bk = min(bk, max(k, 8))
+    mp = ((m + bm - 1) // bm) * bm
+    np_ = ((n + bn - 1) // bn) * bn
+    kp = ((k + bk - 1) // bk) * bk
+    xp = _pad_to(x, (mp, kp))
+    wp = _pad_to(w, (kp, np_))
+    out = pl.pallas_call(
+        _matmul_kernel,
+        out_shape=jax.ShapeDtypeStruct((mp, np_), jnp.float32),
+        grid=(mp // bm, np_ // bn, kp // bk),
+        in_specs=[
+            pl.BlockSpec((bm, bk), lambda i, j, kk: (i, kk)),
+            pl.BlockSpec((bk, bn), lambda i, j, kk: (kk, j)),
+        ],
+        out_specs=pl.BlockSpec((bm, bn), lambda i, j, kk: (i, j)),
+        interpret=True,
+    )(xp, wp)
+    return out[:m, :n].astype(x.dtype)
+
+
+@jax.custom_vjp
+def matmul_bias(x: jax.Array, w: jax.Array, b: jax.Array) -> jax.Array:
+    """``x @ w + b`` via the Pallas tiled-matmul kernel (differentiable)."""
+    return _matmul(x, w, bm=DEFAULT_BM, bn=DEFAULT_BN, bk=DEFAULT_BK) + b
+
+
+def _matmul_bias_fwd(x, w, b):
+    return matmul_bias(x, w, b), (x, w)
+
+
+def _matmul_bias_bwd(res, g):
+    x, w = res
+    dx = _matmul(g, w.T, bm=DEFAULT_BM, bn=DEFAULT_BN, bk=DEFAULT_BK)
+    dw = _matmul(x.T, g, bm=DEFAULT_BM, bn=DEFAULT_BN, bk=DEFAULT_BK)
+    db = jnp.sum(g, axis=0)
+    return dx, dw, db
+
+
+matmul_bias.defvjp(_matmul_bias_fwd, _matmul_bias_bwd)

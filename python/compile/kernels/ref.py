@@ -1,0 +1,37 @@
+"""Pure-jnp oracles for the Pallas kernels — the correctness ground truth.
+
+Every Pallas kernel in this package has a reference implementation here
+written with nothing but dense jnp ops.  ``python/tests`` sweeps shapes,
+dtypes and values with hypothesis and asserts ``allclose`` between kernel
+and oracle.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def tridiag_matvec_ref(x: jax.Array, *, lo: float, di: float, up: float) -> jax.Array:
+    """Dense-roll reference for the constant-band tridiagonal matvec."""
+    (d,) = x.shape
+    if d == 0:
+        return x
+    left = jnp.concatenate([jnp.zeros((1,), x.dtype), x[:-1]])
+    right = jnp.concatenate([x[1:], jnp.zeros((1,), x.dtype)])
+    return lo * left + di * x + up * right
+
+
+def tridiag_dense(d: int, *, lo: float, di: float, up: float, dtype=jnp.float32):
+    """Materialize the full tridiagonal matrix (test-only; O(d^2))."""
+    a = di * jnp.eye(d, dtype=dtype)
+    if d > 1:
+        a = a + lo * jnp.eye(d, k=-1, dtype=dtype) + up * jnp.eye(d, k=1, dtype=dtype)
+    return a
+
+
+def matmul_bias_ref(x: jax.Array, w: jax.Array, b: jax.Array) -> jax.Array:
+    """Reference for the fused linear kernel: plain ``x @ w + b`` in f32."""
+    return (
+        jnp.dot(x, w, preferred_element_type=jnp.float32).astype(x.dtype) + b
+    )

@@ -1,0 +1,78 @@
+"""Pallas kernel: constant-band (Toeplitz) tridiagonal matvec.
+
+Computes ``y = A @ x`` where ``A`` has constant sub/main/super-diagonal
+bands ``(lo, di, up)``, i.e.::
+
+    y[i] = lo * x[i-1] + di * x[i] + up * x[i+1]
+
+with out-of-range terms treated as zero.  This is the gradient hot-spot of
+the paper's Section G quadratic, where ``A = (1/4) * tridiag(-1, 2, -1)``.
+
+TPU mapping (DESIGN.md §Hardware-Adaptation): the output is tiled into
+``block`` -sized VMEM-resident chunks; each grid step dynamically loads a
+``block + 2`` window (1-element halos) of the padded input — the HBM→VMEM
+staging a GPU implementation would do with shared memory.  The stencil
+itself is pure VPU work (no MXU).
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+#: Default output tile, sized so a block plus its halo window stays far
+#: below the ~16 MiB VMEM budget (two f32 vectors of ``block + 2`` floats).
+DEFAULT_BLOCK = 256
+
+
+def _tridiag_kernel(xp_ref, out_ref, *, block: int, lo: float, di: float, up: float):
+    """One grid step: produce ``out[i*block : (i+1)*block]``.
+
+    ``xp_ref`` is the *whole* padded input (``d_pad + 2`` elements, one halo
+    cell on each side); we dynamically slice the ``block + 2`` window this
+    tile needs.
+    """
+    i = pl.program_id(0)
+    win = pl.load(xp_ref, (pl.dslice(i * block, block + 2),))
+    left = win[:block]        # x[j-1] for each output j in the tile
+    mid = win[1 : block + 1]  # x[j]
+    right = win[2 : block + 2]  # x[j+1]
+    out_ref[...] = lo * left + di * mid + up * right
+
+
+@functools.partial(jax.jit, static_argnames=("lo", "di", "up", "block"))
+def tridiag_matvec(
+    x: jax.Array,
+    *,
+    lo: float,
+    di: float,
+    up: float,
+    block: int = DEFAULT_BLOCK,
+) -> jax.Array:
+    """``y = tridiag(lo, di, up) @ x`` via the Pallas stencil kernel.
+
+    Pads ``x`` so every tile's halo window is in bounds and the grid evenly
+    divides the padded length, then slices the result back to ``len(x)``.
+    Zero padding is semantically exact because out-of-range stencil taps
+    are defined to be zero.
+    """
+    (d,) = x.shape
+    if d == 0:
+        return x
+    blk = min(block, max(d, 8))
+    d_pad = ((d + blk - 1) // blk) * blk
+    # one halo cell on each side + divisibility padding on the right
+    xp = jnp.pad(x, (1, d_pad - d + 1))
+    grid = (d_pad // blk,)
+    out = pl.pallas_call(
+        functools.partial(_tridiag_kernel, block=blk, lo=lo, di=di, up=up),
+        out_shape=jax.ShapeDtypeStruct((d_pad,), x.dtype),
+        grid=grid,
+        in_specs=[pl.BlockSpec((d_pad + 2,), lambda i: (0,))],
+        out_specs=pl.BlockSpec((blk,), lambda i: (i,)),
+        interpret=True,
+    )(xp)
+    return out[:d]

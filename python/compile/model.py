@@ -1,0 +1,156 @@
+"""Layer-2 JAX models: the paper's two experimental workloads.
+
+* **Quadratic** (Section G): ``f(x) = 0.5 x^T A x - b^T x`` with
+  ``A = (1/4) tridiag(-1, 2, -1)`` and ``b = (1/4)(-1, 0, ..., 0)``.
+  The gradient ``A x - b`` calls the Pallas tridiagonal-stencil kernel.
+* **MLP** (Section G.1): ReLU MLP with softmax cross-entropy, forward
+  built on the Pallas tiled-matmul kernel; gradients via ``jax.value_and_grad``
+  through the kernel's ``custom_vjp``.
+
+Everything here is build-time only: :mod:`compile.aot` lowers these
+functions once to HLO text, and the Rust runtime executes the artifacts.
+Stochastic-gradient noise (the paper's ``∇f(x) + ξ``) is added on the Rust
+side, keeping the artifacts deterministic.
+"""
+
+from __future__ import annotations
+
+from typing import Sequence
+
+import jax
+import jax.numpy as jnp
+
+from .kernels.tridiag import tridiag_matvec
+from .kernels.fused_linear import matmul_bias
+from .kernels.softmax_xent import softmax_xent_mean
+
+# ---------------------------------------------------------------------------
+# Quadratic (Section G)
+# ---------------------------------------------------------------------------
+
+#: Bands of the paper's matrix A = (1/4) * tridiag(-1, 2, -1).
+QUAD_LO = -0.25
+QUAD_DI = 0.5
+QUAD_UP = -0.25
+
+
+def quad_b(d: int) -> jax.Array:
+    """The paper's linear term: b = (1/4) * (-1, 0, ..., 0)."""
+    return jnp.zeros((d,), jnp.float32).at[0].set(-0.25)
+
+
+def quad_value_and_grad(x: jax.Array) -> tuple[jax.Array, jax.Array]:
+    """Exact ``(f(x), ∇f(x))`` for the Section G quadratic.
+
+    ``∇f = A x - b`` and ``f = 0.5 x·(A x) - b·x``; the matvec is the
+    Pallas stencil kernel, so a single fused HLO computes both outputs.
+    """
+    (d,) = x.shape
+    ax = tridiag_matvec(x, lo=QUAD_LO, di=QUAD_DI, up=QUAD_UP)
+    b = quad_b(d)
+    value = 0.5 * jnp.dot(x, ax) - jnp.dot(b, x)
+    grad = ax - b
+    return value, grad
+
+
+# ---------------------------------------------------------------------------
+# MLP (Section G.1)
+# ---------------------------------------------------------------------------
+
+
+def mlp_param_layout(dims: Sequence[int]) -> list[dict]:
+    """Flat-vector layout of the MLP parameters.
+
+    Returns one entry per layer with the offsets of ``W`` (``in_dim × out_dim``,
+    row-major) and ``b`` (``out_dim``) inside the flat parameter vector.  The
+    Rust side reads this layout from the artifact manifest to initialize and
+    update parameters without ever unflattening.
+    """
+    layout, off = [], 0
+    for i, (din, dout) in enumerate(zip(dims[:-1], dims[1:])):
+        w_sz, b_sz = din * dout, dout
+        layout.append(
+            {
+                "layer": i,
+                "in_dim": din,
+                "out_dim": dout,
+                "w_offset": off,
+                "w_size": w_sz,
+                "b_offset": off + w_sz,
+                "b_size": b_sz,
+            }
+        )
+        off += w_sz + b_sz
+    return layout
+
+
+def mlp_param_count(dims: Sequence[int]) -> int:
+    """Total number of scalars in the flat parameter vector."""
+    lay = mlp_param_layout(dims)
+    return 0 if not lay else lay[-1]["b_offset"] + lay[-1]["b_size"]
+
+
+def _unflatten(p: jax.Array, dims: Sequence[int]) -> list[tuple[jax.Array, jax.Array]]:
+    layers = []
+    for ent in mlp_param_layout(dims):
+        w = jax.lax.dynamic_slice_in_dim(p, ent["w_offset"], ent["w_size"]).reshape(
+            ent["in_dim"], ent["out_dim"]
+        )
+        b = jax.lax.dynamic_slice_in_dim(p, ent["b_offset"], ent["b_size"])
+        layers.append((w, b))
+    return layers
+
+
+def mlp_logits(p: jax.Array, xb: jax.Array, dims: Sequence[int]) -> jax.Array:
+    """Forward pass: ReLU MLP over the Pallas matmul kernel → logits."""
+    layers = _unflatten(p, dims)
+    h = xb
+    for li, (w, b) in enumerate(layers):
+        h = matmul_bias(h, w, b)
+        if li + 1 < len(layers):
+            h = jax.nn.relu(h)
+    return h
+
+
+def softmax_xent(logits: jax.Array, y_onehot: jax.Array) -> jax.Array:
+    """Mean softmax cross-entropy, numerically stable (logsumexp)."""
+    logz = jax.scipy.special.logsumexp(logits, axis=-1, keepdims=True)
+    logp = logits - logz
+    return -jnp.mean(jnp.sum(y_onehot * logp, axis=-1))
+
+
+def mlp_loss(p: jax.Array, xb: jax.Array, y_onehot: jax.Array, dims: Sequence[int]) -> jax.Array:
+    # fused Pallas softmax-xent kernel (L1) over the Pallas matmul logits
+    return softmax_xent_mean(mlp_logits(p, xb, dims), y_onehot)
+
+
+def mlp_loss_and_grad(
+    p: jax.Array, xb: jax.Array, y_onehot: jax.Array, dims: Sequence[int]
+) -> tuple[jax.Array, jax.Array]:
+    """One training-step oracle: ``(loss, ∇_p loss)`` — the fig-3 hot path."""
+    return jax.value_and_grad(lambda q: mlp_loss(q, xb, y_onehot, dims))(p)
+
+
+# ---------------------------------------------------------------------------
+# Pure-jnp twins (used by the python test-suite as oracles)
+# ---------------------------------------------------------------------------
+
+
+def quad_value_and_grad_ref(x: jax.Array) -> tuple[jax.Array, jax.Array]:
+    """Dense oracle for :func:`quad_value_and_grad`."""
+    from .kernels.ref import tridiag_matvec_ref
+
+    ax = tridiag_matvec_ref(x, lo=QUAD_LO, di=QUAD_DI, up=QUAD_UP)
+    b = quad_b(x.shape[0])
+    return 0.5 * jnp.dot(x, ax) - jnp.dot(b, x), ax - b
+
+
+def mlp_loss_ref(p, xb, y_onehot, dims):
+    """Oracle MLP loss using plain jnp matmuls (no Pallas)."""
+    layers = _unflatten(p, dims)
+    h = xb
+    for li, (w, b) in enumerate(layers):
+        h = h @ w + b
+        if li + 1 < len(layers):
+            h = jax.nn.relu(h)
+    return softmax_xent(h, y_onehot)

@@ -1,0 +1,14 @@
+"""Shared pytest configuration for the kernel/model test-suite."""
+
+import os
+import sys
+
+# Make `compile` importable when pytest is launched from python/ or repo root.
+sys.path.insert(0, os.path.dirname(os.path.dirname(os.path.abspath(__file__))))
+
+from hypothesis import settings
+
+# Pallas interpret-mode is slow; keep example counts sane and disable the
+# per-example deadline (first-call jit compilation can take seconds).
+settings.register_profile("kernels", max_examples=25, deadline=None)
+settings.load_profile("kernels")

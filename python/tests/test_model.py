@@ -1,0 +1,121 @@
+"""L2 model correctness: quadratic oracle, MLP loss/grads, parameter layout."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, strategies as st
+
+from compile import model
+from compile.kernels.ref import tridiag_dense
+
+
+def _rand(shape, seed=0, scale=1.0):
+    return scale * jax.random.normal(jax.random.PRNGKey(seed), shape, jnp.float32)
+
+
+# ---------------------------------------------------------------------------
+# quadratic
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.parametrize("d", [1, 2, 5, 64, 300, 1729])
+def test_quad_value_and_grad_vs_ref(d):
+    x = _rand((d,), seed=d)
+    v, g = model.quad_value_and_grad(x)
+    vr, gr = model.quad_value_and_grad_ref(x)
+    np.testing.assert_allclose(v, vr, rtol=1e-5, atol=1e-5)
+    np.testing.assert_allclose(g, gr, rtol=1e-5, atol=1e-5)
+
+
+def test_quad_grad_vs_dense_matrix():
+    d = 97
+    x = _rand((d,), seed=11)
+    a = tridiag_dense(d, lo=model.QUAD_LO, di=model.QUAD_DI, up=model.QUAD_UP)
+    b = model.quad_b(d)
+    _, g = model.quad_value_and_grad(x)
+    np.testing.assert_allclose(g, a @ x - b, rtol=1e-5, atol=1e-5)
+
+
+def test_quad_grad_vs_autodiff():
+    """∇f from the artifact path ≡ jax.grad of the scalar value."""
+    d = 50
+    x = _rand((d,), seed=5)
+    g_auto = jax.grad(lambda y: model.quad_value_and_grad_ref(y)[0])(x)
+    _, g = model.quad_value_and_grad(x)
+    np.testing.assert_allclose(g, g_auto, rtol=1e-5, atol=1e-5)
+
+
+def test_quad_minimizer_has_zero_grad():
+    """x* = A^{-1} b must satisfy ∇f(x*) = 0."""
+    d = 40
+    a = np.array(
+        tridiag_dense(d, lo=model.QUAD_LO, di=model.QUAD_DI, up=model.QUAD_UP)
+    )
+    b = np.array(model.quad_b(d))
+    xstar = jnp.asarray(np.linalg.solve(a, b), jnp.float32)
+    _, g = model.quad_value_and_grad(xstar)
+    np.testing.assert_allclose(g, np.zeros(d), atol=1e-5)
+
+
+# ---------------------------------------------------------------------------
+# MLP
+# ---------------------------------------------------------------------------
+
+
+def test_param_layout_contiguous_and_total():
+    dims = [784, 256, 10]
+    lay = model.mlp_param_layout(dims)
+    off = 0
+    for ent in lay:
+        assert ent["w_offset"] == off
+        assert ent["b_offset"] == off + ent["w_size"]
+        assert ent["w_size"] == ent["in_dim"] * ent["out_dim"]
+        off = ent["b_offset"] + ent["b_size"]
+    assert off == model.mlp_param_count(dims) == 784 * 256 + 256 + 256 * 10 + 10
+
+
+@given(
+    dims=st.lists(st.integers(1, 40), min_size=2, max_size=5),
+    seed=st.integers(0, 2**31 - 1),
+)
+def test_mlp_loss_and_grad_vs_ref(dims, seed):
+    """Pallas-backed MLP ≡ dense-jnp MLP (loss and full gradient)."""
+    batch, n_cls = 4, dims[-1]
+    key = jax.random.PRNGKey(seed)
+    kp, kx, ky = jax.random.split(key, 3)
+    p = 0.2 * jax.random.normal(kp, (model.mlp_param_count(dims),), jnp.float32)
+    xb = jax.random.normal(kx, (batch, dims[0]), jnp.float32)
+    yb = jax.nn.one_hot(jax.random.randint(ky, (batch,), 0, n_cls), n_cls)
+    loss, grad = model.mlp_loss_and_grad(p, xb, yb, dims)
+    loss_ref = model.mlp_loss_ref(p, xb, yb, dims)
+    grad_ref = jax.grad(model.mlp_loss_ref)(p, xb, yb, dims)
+    np.testing.assert_allclose(loss, loss_ref, rtol=1e-4, atol=1e-5)
+    np.testing.assert_allclose(grad, grad_ref, rtol=1e-3, atol=1e-4)
+
+
+def test_mlp_uniform_logits_loss_is_log_ncls():
+    """Zero params ⇒ uniform softmax ⇒ CE = log(n_classes)."""
+    dims = [12, 8, 5]
+    p = jnp.zeros((model.mlp_param_count(dims),))
+    xb = _rand((6, 12), seed=2)
+    yb = jax.nn.one_hot(jnp.arange(6) % 5, 5)
+    loss = model.mlp_loss(p, xb, yb, dims)
+    np.testing.assert_allclose(loss, np.log(5.0), rtol=1e-6)
+
+
+def test_mlp_sgd_step_decreases_loss():
+    dims = [16, 12, 4]
+    p = 0.3 * _rand((model.mlp_param_count(dims),), seed=9)
+    xb = _rand((32, 16), seed=10)
+    yb = jax.nn.one_hot(jnp.arange(32) % 4, 4)
+    l0, g = model.mlp_loss_and_grad(p, xb, yb, dims)
+    l1, _ = model.mlp_loss_and_grad(p - 0.1 * g, xb, yb, dims)
+    assert float(l1) < float(l0)
+
+
+def test_softmax_xent_stability_large_logits():
+    logits = jnp.array([[1e4, -1e4, 0.0]])
+    y = jnp.array([[1.0, 0.0, 0.0]])
+    loss = model.softmax_xent(logits, y)
+    assert np.isfinite(float(loss)) and float(loss) < 1e-3

@@ -1,0 +1,119 @@
+//! Hot-path microbenchmarks (the §Perf working set).
+//!
+//! * simulator event throughput (scheduler decision + event queue + delay
+//!   bookkeeping) with a no-op gradient — the L3 coordination overhead;
+//! * native quadratic gradient (tridiag matvec + axpy) at d = 1729;
+//! * end-to-end simulated events/s on the §G quadratic at several n;
+//! * PJRT quadratic gradient (artifact call overhead), when artifacts exist.
+
+use ringmaster::bench_util::{bb, bench, report};
+use ringmaster::coordinator::{RingmasterScheduler, Scheduler, SchedulerKind};
+use ringmaster::experiments::{run_quadratic, QuadExpConfig};
+use ringmaster::linalg::TridiagToeplitz;
+use ringmaster::opt::Problem;
+use ringmaster::sim::ComputeModel;
+
+fn main() {
+    println!("— hot-path microbenches —");
+
+    // 1. pure event loop: cluster + scheduler, zero-dim problem
+    {
+        use ringmaster::sim::Cluster;
+        use std::sync::Arc;
+        let n = 1024;
+        let events = 200_000u64;
+        let m = bench("sim event loop (n=1024, no grads)", 1, 5, || {
+            let mut cluster = Cluster::new(ComputeModel::fixed_linear(n), n, 1);
+            cluster.set_track_stale(true);
+            let mut sched = RingmasterScheduler::new(64, 0.1, true);
+            let mut k = 0u64;
+            let snap = Arc::new(Vec::new());
+            for w in 0..n {
+                cluster.assign(w, 0, &snap);
+            }
+            for _ in 0..events {
+                let a = cluster.next_arrival().unwrap();
+                let delay = k - a.start_k;
+                if matches!(
+                    sched.on_arrival(a.worker, delay),
+                    ringmaster::coordinator::Decision::Step { .. }
+                ) {
+                    k += 1;
+                    if let Some(th) = sched.cancel_threshold(k) {
+                        cluster.cancel_stale(th, k, &snap);
+                    }
+                }
+                cluster.assign(a.worker, k, &snap);
+            }
+            bb(k);
+        });
+        report(&m);
+        println!(
+            "    → {:.2} M events/s",
+            m.throughput(events as f64) / 1e6
+        );
+    }
+
+    // 2. native quadratic gradient at the paper's d
+    {
+        let d = 1729;
+        let a = TridiagToeplitz::paper(d);
+        let x = vec![0.5; d];
+        let mut out = vec![0.0; d];
+        let reps = 2000;
+        let m = bench("tridiag matvec d=1729", 10, 7, || {
+            for _ in 0..reps {
+                a.matvec(bb(&x), &mut out);
+            }
+            bb(&out);
+        });
+        report(&m);
+        let bytes = (2.0 * d as f64 * 8.0) * reps as f64;
+        println!(
+            "    → {:.2} GB/s effective ({} matvecs/rep)",
+            m.throughput(bytes) / 1e9,
+            reps
+        );
+    }
+
+    // 3. end-to-end simulated events/s (full gradient math in the loop)
+    for n in [64usize, 1024, 6174] {
+        let cfg = QuadExpConfig {
+            d: 1729,
+            n_workers: n,
+            noise_sigma: 0.01,
+            seed: 0,
+            max_iters: 20_000,
+            max_time: f64::INFINITY,
+            target_gap: None,
+            record_every: 100_000, // effectively off
+        };
+        let model = ComputeModel::random_paper(n);
+        let m = bench(&format!("driver 20k updates (d=1729, n={n})"), 0, 3, || {
+            let rec = run_quadratic(
+                &cfg,
+                model.clone(),
+                &SchedulerKind::Ringmaster { r: 173, gamma: 0.05, cancel: true },
+            );
+            bb(rec.iters);
+        });
+        report(&m);
+        println!(
+            "    → {:.0} k updates/s",
+            m.throughput(20_000.0) / 1e3
+        );
+    }
+
+    // 4. PJRT artifact gradient (if artifacts are built)
+    match ringmaster::opt::PjrtQuadratic::load_default(1729) {
+        Ok(p) => {
+            let x = vec![0.5; 1729];
+            let mut g = vec![0.0; 1729];
+            let m = bench("pjrt quad_vg_d1729 call", 3, 7, || {
+                bb(p.value_grad(bb(&x), &mut g));
+            });
+            report(&m);
+        }
+        Err(e) => println!("  (pjrt bench skipped: {e})"),
+    }
+}

@@ -1,0 +1,158 @@
+//! Micro-benchmark harness (no `criterion` in the offline environment).
+//!
+//! Used by the `rust/benches/*` targets (all `harness = false`): warmup,
+//! repeated timed runs, median / IQR reporting, and a tiny table printer
+//! shared by the paper-reproduction benches.
+
+use std::hint::black_box;
+use std::time::Instant;
+
+/// One benchmark measurement.
+#[derive(Clone, Debug)]
+pub struct Measurement {
+    pub name: String,
+    pub median_s: f64,
+    pub p25_s: f64,
+    pub p75_s: f64,
+    pub reps: usize,
+}
+
+impl Measurement {
+    pub fn throughput(&self, items: f64) -> f64 {
+        items / self.median_s
+    }
+}
+
+/// Time `f` with `warmup` unmeasured runs then `reps` measured runs.
+pub fn bench<F: FnMut()>(name: &str, warmup: usize, reps: usize, mut f: F) -> Measurement {
+    for _ in 0..warmup {
+        f();
+    }
+    let mut times = Vec::with_capacity(reps);
+    for _ in 0..reps {
+        let t0 = Instant::now();
+        f();
+        times.push(t0.elapsed().as_secs_f64());
+    }
+    times.sort_by(|a, b| a.partial_cmp(b).unwrap());
+    let q = |p: f64| -> f64 {
+        let idx = ((times.len() - 1) as f64 * p).round() as usize;
+        times[idx]
+    };
+    Measurement {
+        name: name.to_string(),
+        median_s: q(0.5),
+        p25_s: q(0.25),
+        p75_s: q(0.75),
+        reps,
+    }
+}
+
+/// Bench scale selector: `RINGMASTER_BENCH_SCALE=full` runs the paper-scale
+/// configuration (n=6174/10000, full tuning grids — minutes to hours);
+/// the default `quick` keeps every bench under ~a minute while preserving
+/// the comparison shape.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Scale {
+    Quick,
+    Full,
+}
+
+pub fn bench_scale() -> Scale {
+    match std::env::var("RINGMASTER_BENCH_SCALE").as_deref() {
+        Ok("full") => Scale::Full,
+        _ => Scale::Quick,
+    }
+}
+
+/// Re-export of `std::hint::black_box` for benches.
+pub fn bb<T>(x: T) -> T {
+    black_box(x)
+}
+
+/// Print a measurement row (aligned, human units).
+pub fn report(m: &Measurement) {
+    println!(
+        "  {:<42} median {:>12}  IQR [{} .. {}]  ({} reps)",
+        m.name,
+        crate::util::fmt_secs(m.median_s),
+        crate::util::fmt_secs(m.p25_s),
+        crate::util::fmt_secs(m.p75_s),
+        m.reps
+    );
+}
+
+/// Simple fixed-width table printer used by the paper-table benches.
+pub struct Table {
+    headers: Vec<String>,
+    rows: Vec<Vec<String>>,
+}
+
+impl Table {
+    pub fn new(headers: &[&str]) -> Self {
+        Self {
+            headers: headers.iter().map(|s| s.to_string()).collect(),
+            rows: Vec::new(),
+        }
+    }
+
+    pub fn row(&mut self, cells: &[String]) {
+        assert_eq!(cells.len(), self.headers.len());
+        self.rows.push(cells.to_vec());
+    }
+
+    pub fn print(&self) {
+        let mut widths: Vec<usize> = self.headers.iter().map(|h| h.len()).collect();
+        for row in &self.rows {
+            for (i, c) in row.iter().enumerate() {
+                widths[i] = widths[i].max(c.len());
+            }
+        }
+        let line = |cells: &[String]| {
+            let mut s = String::from("| ");
+            for (i, c) in cells.iter().enumerate() {
+                s.push_str(&format!("{:<w$} | ", c, w = widths[i]));
+            }
+            s
+        };
+        println!("{}", line(&self.headers));
+        println!(
+            "|{}|",
+            widths
+                .iter()
+                .map(|w| "-".repeat(w + 2))
+                .collect::<Vec<_>>()
+                .join("|")
+        );
+        for row in &self.rows {
+            println!("{}", line(row));
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn bench_measures_something() {
+        let m = bench("noop-loop", 1, 5, || {
+            let mut s = 0u64;
+            for i in 0..1000u64 {
+                s = s.wrapping_add(bb(i));
+            }
+            bb(s);
+        });
+        assert!(m.median_s > 0.0);
+        assert!(m.p25_s <= m.median_s && m.median_s <= m.p75_s);
+        assert_eq!(m.reps, 5);
+    }
+
+    #[test]
+    fn table_prints_without_panic() {
+        let mut t = Table::new(&["method", "time"]);
+        t.row(&["ringmaster".into(), "1.0s".into()]);
+        t.row(&["asgd".into(), "10.0s".into()]);
+        t.print();
+    }
+}

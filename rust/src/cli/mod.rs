@@ -1,0 +1,175 @@
+//! Command-line argument substrate (no `clap` in the offline environment).
+//!
+//! Grammar: `ringmaster <subcommand> [--key value | --key=value | --flag] ...`
+//! Unrecognized `--key value` pairs are *collected*, not rejected — the
+//! launcher forwards them as [`crate::config::ConfigMap`] overrides, which is
+//! how every experiment knob stays reachable from the command line without a
+//! central registry.
+
+use std::collections::BTreeMap;
+use std::fmt;
+
+/// Parsed command line: subcommand + options + positionals.
+#[derive(Clone, Debug, Default, PartialEq)]
+pub struct Args {
+    pub subcommand: Option<String>,
+    pub options: BTreeMap<String, String>,
+    pub positionals: Vec<String>,
+}
+
+#[derive(Debug, Clone, PartialEq)]
+pub struct CliError(pub String);
+
+impl fmt::Display for CliError {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(f, "{}", self.0)
+    }
+}
+
+impl std::error::Error for CliError {}
+
+/// Boolean-valued switches that take no argument.
+const SWITCHES: &[&str] = &["help", "version", "quiet", "verbose", "no-cancel", "cancel", "csv", "json", "plot"];
+
+/// Parse an argv slice (without the program name).
+pub fn parse(argv: &[String]) -> Result<Args, CliError> {
+    let mut args = Args::default();
+    let mut it = argv.iter().peekable();
+    while let Some(a) = it.next() {
+        if let Some(body) = a.strip_prefix("--") {
+            if body.is_empty() {
+                // `--` terminator: everything after is positional
+                args.positionals.extend(it.map(|s| s.to_string()));
+                break;
+            }
+            if let Some((k, v)) = body.split_once('=') {
+                args.options.insert(k.to_string(), v.to_string());
+            } else if SWITCHES.contains(&body) {
+                args.options.insert(body.to_string(), "true".to_string());
+            } else {
+                let v = it
+                    .next()
+                    .ok_or_else(|| CliError(format!("--{body} expects a value")))?;
+                args.options.insert(body.to_string(), v.to_string());
+            }
+        } else if a.starts_with('-') && a.len() > 1 {
+            return Err(CliError(format!(
+                "short options are not supported: {a} (use --long form)"
+            )));
+        } else if args.subcommand.is_none() && args.positionals.is_empty() {
+            args.subcommand = Some(a.to_string());
+        } else {
+            args.positionals.push(a.to_string());
+        }
+    }
+    Ok(args)
+}
+
+impl Args {
+    pub fn from_env() -> Result<Args, CliError> {
+        let argv: Vec<String> = std::env::args().skip(1).collect();
+        parse(&argv)
+    }
+
+    pub fn get(&self, key: &str) -> Option<&str> {
+        self.options.get(key).map(|s| s.as_str())
+    }
+
+    pub fn flag(&self, key: &str) -> bool {
+        matches!(self.get(key), Some("true") | Some("1") | Some("yes"))
+    }
+
+    pub fn f64(&self, key: &str) -> Result<Option<f64>, CliError> {
+        self.get(key)
+            .map(|v| {
+                v.parse::<f64>()
+                    .map_err(|_| CliError(format!("--{key} expects a number, got '{v}'")))
+            })
+            .transpose()
+    }
+
+    pub fn usize(&self, key: &str) -> Result<Option<usize>, CliError> {
+        self.get(key)
+            .map(|v| {
+                v.parse::<usize>()
+                    .map_err(|_| CliError(format!("--{key} expects an integer, got '{v}'")))
+            })
+            .transpose()
+    }
+
+    pub fn f64_or(&self, key: &str, default: f64) -> Result<f64, CliError> {
+        Ok(self.f64(key)?.unwrap_or(default))
+    }
+
+    pub fn usize_or(&self, key: &str, default: usize) -> Result<usize, CliError> {
+        Ok(self.usize(key)?.unwrap_or(default))
+    }
+
+    pub fn str_or<'a>(&'a self, key: &str, default: &'a str) -> &'a str {
+        self.get(key).unwrap_or(default)
+    }
+
+    /// Fold every option into a config map as an override.
+    pub fn apply_overrides(&self, cfg: &mut crate::config::ConfigMap) {
+        for (k, v) in &self.options {
+            let _ = cfg.set_override(k, v);
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn argv(items: &[&str]) -> Vec<String> {
+        items.iter().map(|s| s.to_string()).collect()
+    }
+
+    #[test]
+    fn parses_subcommand_options_positionals() {
+        let a = parse(&argv(&[
+            "fig2", "--n-workers", "6174", "--eps=1e-4", "--cancel", "out.csv",
+        ]))
+        .unwrap();
+        assert_eq!(a.subcommand.as_deref(), Some("fig2"));
+        assert_eq!(a.get("n-workers"), Some("6174"));
+        assert_eq!(a.get("eps"), Some("1e-4"));
+        assert!(a.flag("cancel"));
+        assert_eq!(a.positionals, vec!["out.csv"]);
+    }
+
+    #[test]
+    fn typed_getters() {
+        let a = parse(&argv(&["run", "--sigma", "0.01", "--d", "1729"])).unwrap();
+        assert_eq!(a.f64("sigma").unwrap(), Some(0.01));
+        assert_eq!(a.usize("d").unwrap(), Some(1729));
+        assert_eq!(a.usize_or("missing", 5).unwrap(), 5);
+        assert!(a.f64("d").unwrap().is_some());
+        let bad = parse(&argv(&["run", "--d", "abc"])).unwrap();
+        assert!(bad.usize("d").is_err());
+    }
+
+    #[test]
+    fn missing_value_is_error() {
+        assert!(parse(&argv(&["run", "--sigma"])).is_err());
+    }
+
+    #[test]
+    fn short_options_rejected() {
+        assert!(parse(&argv(&["-x"])).is_err());
+    }
+
+    #[test]
+    fn double_dash_terminator() {
+        let a = parse(&argv(&["run", "--", "--not-an-option"])).unwrap();
+        assert_eq!(a.positionals, vec!["--not-an-option"]);
+    }
+
+    #[test]
+    fn overrides_flow_into_config() {
+        let mut cfg = crate::config::ConfigMap::parse("cluster.n = 10").unwrap();
+        let a = parse(&argv(&["run", "--cluster.n", "20"])).unwrap();
+        a.apply_overrides(&mut cfg);
+        assert_eq!(cfg.usize("cluster.n"), Some(20));
+    }
+}

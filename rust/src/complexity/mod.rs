@@ -1,0 +1,338 @@
+//! Closed-form time-complexity theory from the paper.
+//!
+//! Implements, for the *fixed computation model* with sorted bounds
+//! `0 < τ_1 ≤ … ≤ τ_n`:
+//!
+//! * eq. (4) `T_A` — prior Asynchronous SGD (Koloskova/Mishchenko analysis);
+//! * eq. (3) `T_R` — the lower bound / Rennala / Ringmaster complexity,
+//!   with the minimizing worker count `m*`;
+//! * eq. (7) `t(R)` — Lemma 4.1's bound on any `R` consecutive updates;
+//! * eq. (9) the default delay threshold `R = max{1, ⌈σ²/ε⌉}` and §4.1's
+//!   refined τ-aware threshold;
+//! * eq. (6) the iteration complexity `K(R)` of Theorem 4.1;
+//! * §E's closed forms for the `τ_i = √i` worked example.
+//!
+//! All quantities use the paper's unitless convention: pass `L`, `Δ`, `σ²`,
+//! `ε` exactly as in the statements; constants match the paper's (these are
+//! `Θ(...)` results — the benches compare *shapes and ratios*, not raw
+//! seconds).
+
+/// Problem constants bundle (Assumptions 1.1–1.3 + target accuracy).
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub struct Constants {
+    /// Smoothness `L`.
+    pub l: f64,
+    /// Initial gap `Δ = f(x⁰) − f^inf`.
+    pub delta: f64,
+    /// Gradient-noise second moment `σ²`.
+    pub sigma_sq: f64,
+    /// Target `ε` for `E‖∇f‖² ≤ ε`.
+    pub eps: f64,
+}
+
+impl Constants {
+    pub fn new(l: f64, delta: f64, sigma_sq: f64, eps: f64) -> Self {
+        assert!(l > 0.0 && delta > 0.0 && sigma_sq >= 0.0 && eps > 0.0);
+        Self {
+            l,
+            delta,
+            sigma_sq,
+            eps,
+        }
+    }
+}
+
+/// Check that τ bounds are valid and sorted ascending (eq. 2's WLOG).
+fn check_taus(taus: &[f64]) {
+    assert!(!taus.is_empty(), "need at least one worker");
+    assert!(taus.iter().all(|&t| t > 0.0), "τ must be positive");
+    assert!(
+        taus.windows(2).all(|w| w[0] <= w[1]),
+        "τ must be sorted ascending (paper eq. 2)"
+    );
+}
+
+/// Harmonic-mean-based rate prefix: `(1/m · Σ_{i≤m} 1/τ_i)^{-1}`.
+#[inline]
+pub fn harmonic_prefix(taus: &[f64], m: usize) -> f64 {
+    debug_assert!(m >= 1 && m <= taus.len());
+    let s: f64 = taus[..m].iter().map(|&t| 1.0 / t).sum();
+    m as f64 / s
+}
+
+/// eq. (4): time complexity of prior Asynchronous SGD on all `n` workers.
+pub fn t_asgd(taus: &[f64], c: Constants) -> f64 {
+    check_taus(taus);
+    let n = taus.len();
+    harmonic_prefix(taus, n)
+        * (c.l * c.delta / c.eps + c.sigma_sq * c.l * c.delta / (n as f64 * c.eps * c.eps))
+}
+
+/// eq. (3): the optimal time complexity (lower bound = Rennala = Ringmaster),
+/// returning `(T_R, m*)` with `m*` the smallest minimizer.
+pub fn t_optimal(taus: &[f64], c: Constants) -> (f64, usize) {
+    check_taus(taus);
+    let mut best = f64::INFINITY;
+    let mut best_m = 1;
+    let mut inv_sum = 0.0;
+    for m in 1..=taus.len() {
+        inv_sum += 1.0 / taus[m - 1];
+        let t = (m as f64 / inv_sum)
+            * (c.l * c.delta / c.eps + c.sigma_sq * c.l * c.delta / (m as f64 * c.eps * c.eps));
+        if t < best {
+            best = t;
+            best_m = m;
+        }
+    }
+    (best, best_m)
+}
+
+/// eq. (7): Lemma 4.1's `t(R)` — max time for any `R` consecutive updates.
+pub fn t_of_r(taus: &[f64], r: u64) -> f64 {
+    check_taus(taus);
+    assert!(r >= 1);
+    let mut best = f64::INFINITY;
+    let mut inv_sum = 0.0;
+    for m in 1..=taus.len() {
+        inv_sum += 1.0 / taus[m - 1];
+        let t = 2.0 * (m as f64 / inv_sum) * (1.0 + r as f64 / m as f64);
+        best = best.min(t);
+    }
+    best
+}
+
+/// Algorithm 3 line 1: the Naive Optimal ASGD worker count
+/// `m* = argmin_m (1/m Σ_{i≤m} 1/τ_i)^{-1} (1 + σ²/(mε))`.
+pub fn naive_m_star(taus: &[f64], sigma_sq: f64, eps: f64) -> usize {
+    check_taus(taus);
+    assert!(eps > 0.0);
+    let mut best = f64::INFINITY;
+    let mut best_m = 1usize;
+    let mut inv_sum = 0.0;
+    for m in 1..=taus.len() {
+        inv_sum += 1.0 / taus[m - 1];
+        let t = (m as f64 / inv_sum) * (1.0 + sigma_sq / (m as f64 * eps));
+        if t < best {
+            best = t;
+            best_m = m;
+        }
+    }
+    best_m
+}
+
+/// eq. (9): the τ-independent default delay threshold
+/// `R = max{1, ⌈σ²/ε⌉}`.
+pub fn default_r(sigma_sq: f64, eps: f64) -> u64 {
+    assert!(eps > 0.0 && sigma_sq >= 0.0);
+    ((sigma_sq / eps).ceil() as u64).max(1)
+}
+
+/// §4.1's refined τ-aware threshold `R = max{σ√(m*/ε), 1}` with
+/// `m* = argmin_m (1/m Σ 1/τ_i)^{-1} (1 + 2√(σ²/(mε)) + σ²/(mε))`.
+pub fn refined_r(taus: &[f64], sigma_sq: f64, eps: f64) -> u64 {
+    check_taus(taus);
+    let mut best = f64::INFINITY;
+    let mut best_m = 1usize;
+    let mut inv_sum = 0.0;
+    for m in 1..=taus.len() {
+        inv_sum += 1.0 / taus[m - 1];
+        let ratio = sigma_sq / (m as f64 * eps);
+        let t = (m as f64 / inv_sum) * (1.0 + 2.0 * ratio.sqrt() + ratio);
+        if t < best {
+            best = t;
+            best_m = m;
+        }
+    }
+    let r = (sigma_sq * best_m as f64 / eps).sqrt();
+    (r.ceil() as u64).max(1)
+}
+
+/// eq. (6)/(10): Theorem 4.1's iteration complexity
+/// `K = ⌈8RLΔ/ε + 16σ²LΔ/ε²⌉`.
+pub fn iteration_complexity(r: u64, c: Constants) -> u64 {
+    assert!(r >= 1);
+    (8.0 * r as f64 * c.l * c.delta / c.eps
+        + 16.0 * c.sigma_sq * c.l * c.delta / (c.eps * c.eps))
+        .ceil() as u64
+}
+
+/// Theorem 4.1's stepsize `γ = min{1/(2RL), ε/(4Lσ²)}`.
+pub fn theorem_stepsize(r: u64, c: Constants) -> f64 {
+    let a = 1.0 / (2.0 * r as f64 * c.l);
+    if c.sigma_sq == 0.0 {
+        a
+    } else {
+        a.min(c.eps / (4.0 * c.l * c.sigma_sq))
+    }
+}
+
+/// Theorem 4.2's end-to-end time bound `t(R)·⌈K/R⌉` for a given `R`.
+pub fn ringmaster_time_bound(taus: &[f64], r: u64, c: Constants) -> f64 {
+    let k = iteration_complexity(r, c);
+    t_of_r(taus, r) * ((k + r - 1) / r) as f64
+}
+
+/// §E closed forms for the `τ_i = √i` example.
+pub mod sqrt_example {
+    use super::Constants;
+
+    /// `T_R = Θ(max[σLΔ/ε^{3/2}, σ²LΔ/(√n ε²)])` — paper §E.
+    pub fn t_optimal(n: usize, c: Constants) -> f64 {
+        let sigma = c.sigma_sq.sqrt();
+        let a = sigma * c.l * c.delta / c.eps.powf(1.5);
+        let b = c.sigma_sq * c.l * c.delta / ((n as f64).sqrt() * c.eps * c.eps);
+        a.max(b)
+    }
+
+    /// `T_A = Θ(max[√n LΔ/ε, σ²LΔ/(√n ε²)])` — paper §E.
+    pub fn t_asgd(n: usize, c: Constants) -> f64 {
+        let a = (n as f64).sqrt() * c.l * c.delta / c.eps;
+        let b = c.sigma_sq * c.l * c.delta / ((n as f64).sqrt() * c.eps * c.eps);
+        a.max(b)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::testkit;
+
+    fn c() -> Constants {
+        Constants::new(1.0, 10.0, 1.0, 1e-2)
+    }
+
+    #[test]
+    fn optimal_never_exceeds_asgd() {
+        // T_R ≤ T_A because min over m includes m = n.
+        testkit::check("T_R <= T_A", |g| {
+            let n = g.usize_in(1, 200);
+            let taus = g.tau_profile(n, 0.01, 100.0);
+            let cc = Constants::new(
+                g.f64_in(0.1, 5.0),
+                g.f64_in(0.1, 50.0),
+                g.f64_in(0.0, 10.0),
+                g.f64_in(1e-4, 1e-1),
+            );
+            let (tr, m) = t_optimal(&taus, cc);
+            let ta = t_asgd(&taus, cc);
+            assert!(tr <= ta + 1e-9 * ta, "T_R={tr} > T_A={ta}");
+            assert!(m >= 1 && m <= n);
+        });
+    }
+
+    #[test]
+    fn equal_workers_use_everyone() {
+        // equal τ ⇒ harmonic prefix constant ⇒ larger m strictly helps.
+        let taus = vec![2.0; 64];
+        let (_, m) = t_optimal(&taus, c());
+        assert_eq!(m, 64);
+    }
+
+    #[test]
+    fn one_dominant_slow_worker_is_excluded() {
+        let mut taus = vec![1.0; 10];
+        taus.push(1e9);
+        let (tr, m) = t_optimal(&taus, c());
+        assert!(m <= 10, "m={m}");
+        // robustness: τ_n → ∞ leaves the value finite (paper §4 discussion)
+        assert!(tr.is_finite());
+    }
+
+    #[test]
+    fn harmonic_prefix_simple() {
+        let taus = [1.0, 2.0, 4.0];
+        assert!((harmonic_prefix(&taus, 1) - 1.0).abs() < 1e-12);
+        // (1/3 (1 + 1/2 + 1/4))^{-1} = 3 / 1.75
+        assert!((harmonic_prefix(&taus, 3) - 3.0 / 1.75).abs() < 1e-12);
+    }
+
+    #[test]
+    fn t_of_r_monotone_in_r() {
+        let taus: Vec<f64> = (1..=50).map(|i| i as f64).collect();
+        let mut prev = 0.0;
+        for r in [1u64, 2, 4, 8, 64, 512] {
+            let t = t_of_r(&taus, r);
+            assert!(t >= prev, "t(R) must be nondecreasing");
+            prev = t;
+        }
+    }
+
+    #[test]
+    fn default_r_formula() {
+        assert_eq!(default_r(0.0, 1e-2), 1);
+        assert_eq!(default_r(1.0, 1e-2), 100);
+        assert_eq!(default_r(0.005, 1e-2), 1);
+        assert_eq!(default_r(0.011, 1e-2), 2);
+    }
+
+    #[test]
+    fn refined_r_at_least_one_and_scales() {
+        let taus = vec![1.0; 100];
+        let r_small = refined_r(&taus, 0.0, 1e-2);
+        assert_eq!(r_small, 1);
+        let r_big = refined_r(&taus, 10.0, 1e-3);
+        assert!(r_big > 50);
+    }
+
+    #[test]
+    fn iteration_complexity_matches_formula() {
+        let cc = Constants::new(2.0, 5.0, 1.0, 0.1);
+        // 8·R·L·Δ/ε = 8·3·2·5/0.1 = 2400 ; 16·σ²LΔ/ε² = 16·1·2·5/0.01 = 16000
+        assert_eq!(iteration_complexity(3, cc), 18400);
+    }
+
+    #[test]
+    fn stepsize_min_rule() {
+        let cc = Constants::new(1.0, 1.0, 4.0, 0.1);
+        // 1/(2R L) with R=1 is 0.5 ; ε/(4Lσ²) = 0.1/16 = 0.00625 → min
+        assert!((theorem_stepsize(1, cc) - 0.00625).abs() < 1e-12);
+        let cc0 = Constants::new(1.0, 1.0, 0.0, 0.1);
+        assert!((theorem_stepsize(4, cc0) - 0.125).abs() < 1e-12);
+    }
+
+    #[test]
+    fn ringmaster_bound_is_optimal_up_to_constants() {
+        // Theorem 4.2: with R = default_r, the bound is O(T_R).
+        testkit::check("ringmaster bound O(T_R)", |g| {
+            let n = g.usize_in(2, 150);
+            let taus = g.tau_profile(n, 0.1, 50.0);
+            let cc = Constants::new(1.0, g.f64_in(1.0, 20.0), g.f64_in(0.0, 5.0), 1e-2);
+            let r = default_r(cc.sigma_sq, cc.eps);
+            let bound = ringmaster_time_bound(&taus, r, cc);
+            let (t_r, _) = t_optimal(&taus, cc);
+            // universal-constant sanity: bound within 600x of the Θ-value
+            assert!(
+                bound <= 600.0 * t_r,
+                "bound {bound} vs T_R {t_r} (ratio {})",
+                bound / t_r
+            );
+            assert!(bound >= t_r * 1e-3);
+        });
+    }
+
+    #[test]
+    fn sqrt_example_shapes() {
+        // §E: T_A/T_R grows like √n·ε^{1/2}/σ for large n (first regimes).
+        let cc = Constants::new(1.0, 1.0, 1.0, 1e-3);
+        let r_small = sqrt_example::t_asgd(16, cc) / sqrt_example::t_optimal(16, cc);
+        let r_big = sqrt_example::t_asgd(4096, cc) / sqrt_example::t_optimal(4096, cc);
+        assert!(r_big > r_small, "gap must widen with n");
+        // and the closed forms roughly track the exact argmin computation
+        for n in [16usize, 256, 4096] {
+            let taus: Vec<f64> = (1..=n).map(|i| (i as f64).sqrt()).collect();
+            let (exact, _) = t_optimal(&taus, cc);
+            let closed = sqrt_example::t_optimal(n, cc);
+            let ratio = closed / exact;
+            assert!(
+                (0.05..20.0).contains(&ratio),
+                "n={n}: closed {closed} vs exact {exact}"
+            );
+        }
+    }
+
+    #[test]
+    #[should_panic(expected = "sorted ascending")]
+    fn unsorted_taus_rejected() {
+        t_asgd(&[2.0, 1.0], c());
+    }
+}

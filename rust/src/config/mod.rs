@@ -1,0 +1,313 @@
+//! Configuration system: a TOML-subset parser + typed accessor map.
+//!
+//! Supported syntax (covers everything the experiment configs need):
+//!
+//! ```toml
+//! # comment
+//! [section]
+//! key = "string"
+//! n_workers = 6174
+//! eps = 1e-4
+//! flag = true
+//! taus = [1.0, 2.0, 4.0]
+//! names = ["a", "b"]
+//! ```
+//!
+//! Keys are flattened to `section.key`. CLI `--key value` overrides merge on
+//! top ([`ConfigMap::set_override`]), giving the standard
+//! *file < command-line* precedence of a production launcher.
+
+use std::collections::BTreeMap;
+use std::fmt;
+
+/// A configuration value.
+#[derive(Clone, Debug, PartialEq)]
+pub enum Value {
+    Str(String),
+    Num(f64),
+    Bool(bool),
+    NumArr(Vec<f64>),
+    StrArr(Vec<String>),
+}
+
+impl Value {
+    /// Parse a scalar/array literal the way the TOML-subset grammar does.
+    pub fn parse_literal(s: &str) -> Result<Value, ConfigError> {
+        let s = s.trim();
+        if s.starts_with('[') {
+            return parse_array(s);
+        }
+        parse_scalar(s)
+    }
+}
+
+#[derive(Debug, Clone, PartialEq)]
+pub struct ConfigError {
+    pub line: usize,
+    pub message: String,
+}
+
+impl fmt::Display for ConfigError {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(f, "config error (line {}): {}", self.line, self.message)
+    }
+}
+
+impl std::error::Error for ConfigError {}
+
+fn err(line: usize, message: impl Into<String>) -> ConfigError {
+    ConfigError {
+        line,
+        message: message.into(),
+    }
+}
+
+fn parse_scalar(s: &str) -> Result<Value, ConfigError> {
+    if s == "true" {
+        return Ok(Value::Bool(true));
+    }
+    if s == "false" {
+        return Ok(Value::Bool(false));
+    }
+    if let Some(stripped) = s.strip_prefix('"') {
+        let inner = stripped
+            .strip_suffix('"')
+            .ok_or_else(|| err(0, format!("unterminated string: {s}")))?;
+        return Ok(Value::Str(inner.to_string()));
+    }
+    s.parse::<f64>()
+        .map(Value::Num)
+        .map_err(|_| err(0, format!("cannot parse value: {s}")))
+}
+
+fn parse_array(s: &str) -> Result<Value, ConfigError> {
+    let inner = s
+        .strip_prefix('[')
+        .and_then(|x| x.strip_suffix(']'))
+        .ok_or_else(|| err(0, format!("malformed array: {s}")))?;
+    let items: Vec<&str> = inner
+        .split(',')
+        .map(str::trim)
+        .filter(|x| !x.is_empty())
+        .collect();
+    if items.is_empty() {
+        return Ok(Value::NumArr(Vec::new()));
+    }
+    if items[0].starts_with('"') {
+        let mut out = Vec::new();
+        for item in items {
+            match parse_scalar(item)? {
+                Value::Str(x) => out.push(x),
+                _ => return Err(err(0, "mixed array types")),
+            }
+        }
+        Ok(Value::StrArr(out))
+    } else {
+        let mut out = Vec::new();
+        for item in items {
+            match parse_scalar(item)? {
+                Value::Num(x) => out.push(x),
+                _ => return Err(err(0, "mixed array types")),
+            }
+        }
+        Ok(Value::NumArr(out))
+    }
+}
+
+/// Flattened `section.key → value` map with typed getters.
+#[derive(Clone, Debug, Default, PartialEq)]
+pub struct ConfigMap {
+    values: BTreeMap<String, Value>,
+}
+
+impl ConfigMap {
+    /// Parse TOML-subset text.
+    pub fn parse(text: &str) -> Result<ConfigMap, ConfigError> {
+        let mut map = BTreeMap::new();
+        let mut section = String::new();
+        for (lineno, raw) in text.lines().enumerate() {
+            let line = raw.split('#').next().unwrap_or("").trim();
+            if line.is_empty() {
+                continue;
+            }
+            if let Some(sec) = line.strip_prefix('[') {
+                let sec = sec
+                    .strip_suffix(']')
+                    .ok_or_else(|| err(lineno + 1, "malformed section header"))?;
+                section = sec.trim().to_string();
+                continue;
+            }
+            let (key, val) = line
+                .split_once('=')
+                .ok_or_else(|| err(lineno + 1, format!("expected key = value: {line}")))?;
+            let full_key = if section.is_empty() {
+                key.trim().to_string()
+            } else {
+                format!("{section}.{}", key.trim())
+            };
+            let value = Value::parse_literal(val)
+                .map_err(|e| err(lineno + 1, e.message))?;
+            map.insert(full_key, value);
+        }
+        Ok(ConfigMap { values: map })
+    }
+
+    pub fn load(path: &std::path::Path) -> Result<ConfigMap, ConfigError> {
+        let text = std::fs::read_to_string(path)
+            .map_err(|e| err(0, format!("cannot read {}: {e}", path.display())))?;
+        Self::parse(&text)
+    }
+
+    /// CLI override (`--key value` beats the file).
+    pub fn set_override(&mut self, key: &str, raw: &str) -> Result<(), ConfigError> {
+        // CLI values arrive unquoted; try literal first, fall back to string.
+        let v = Value::parse_literal(raw).unwrap_or_else(|_| Value::Str(raw.to_string()));
+        self.values.insert(key.to_string(), v);
+        Ok(())
+    }
+
+    pub fn contains(&self, key: &str) -> bool {
+        self.values.contains_key(key)
+    }
+
+    pub fn str(&self, key: &str) -> Option<&str> {
+        match self.values.get(key) {
+            Some(Value::Str(s)) => Some(s),
+            _ => None,
+        }
+    }
+
+    pub fn f64(&self, key: &str) -> Option<f64> {
+        match self.values.get(key) {
+            Some(Value::Num(n)) => Some(*n),
+            _ => None,
+        }
+    }
+
+    pub fn usize(&self, key: &str) -> Option<usize> {
+        self.f64(key).and_then(|f| {
+            (f >= 0.0 && f.fract() == 0.0).then_some(f as usize)
+        })
+    }
+
+    pub fn bool(&self, key: &str) -> Option<bool> {
+        match self.values.get(key) {
+            Some(Value::Bool(b)) => Some(*b),
+            _ => None,
+        }
+    }
+
+    pub fn num_arr(&self, key: &str) -> Option<&[f64]> {
+        match self.values.get(key) {
+            Some(Value::NumArr(a)) => Some(a),
+            _ => None,
+        }
+    }
+
+    pub fn str_arr(&self, key: &str) -> Option<&[String]> {
+        match self.values.get(key) {
+            Some(Value::StrArr(a)) => Some(a),
+            _ => None,
+        }
+    }
+
+    /// Typed getters with defaults — the common launcher pattern.
+    pub fn f64_or(&self, key: &str, default: f64) -> f64 {
+        self.f64(key).unwrap_or(default)
+    }
+
+    pub fn usize_or(&self, key: &str, default: usize) -> usize {
+        self.usize(key).unwrap_or(default)
+    }
+
+    pub fn bool_or(&self, key: &str, default: bool) -> bool {
+        self.bool(key).unwrap_or(default)
+    }
+
+    pub fn str_or<'a>(&'a self, key: &str, default: &'a str) -> &'a str {
+        self.str(key).unwrap_or(default)
+    }
+
+    pub fn keys(&self) -> impl Iterator<Item = &str> {
+        self.values.keys().map(|s| s.as_str())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    const SAMPLE: &str = r#"
+# experiment configuration
+title = "fig2"
+
+[cluster]
+n_workers = 6174
+tau_model = "shifted_half_normal"
+
+[problem]
+d = 1729
+sigma = 0.01
+stepsizes = [0.04, 0.2, 1.0]
+names = ["ringmaster", "rennala"]
+
+[run]
+cancel = true
+"#;
+
+    #[test]
+    fn parses_sections_and_types() {
+        let c = ConfigMap::parse(SAMPLE).unwrap();
+        assert_eq!(c.str("title"), Some("fig2"));
+        assert_eq!(c.usize("cluster.n_workers"), Some(6174));
+        assert_eq!(c.str("cluster.tau_model"), Some("shifted_half_normal"));
+        assert_eq!(c.f64("problem.sigma"), Some(0.01));
+        assert_eq!(c.num_arr("problem.stepsizes"), Some(&[0.04, 0.2, 1.0][..]));
+        assert_eq!(
+            c.str_arr("problem.names").unwrap(),
+            &["ringmaster".to_string(), "rennala".to_string()]
+        );
+        assert_eq!(c.bool("run.cancel"), Some(true));
+    }
+
+    #[test]
+    fn overrides_beat_file() {
+        let mut c = ConfigMap::parse(SAMPLE).unwrap();
+        c.set_override("problem.sigma", "0.5").unwrap();
+        c.set_override("cluster.tau_model", "constant").unwrap();
+        assert_eq!(c.f64("problem.sigma"), Some(0.5));
+        // unquoted CLI strings fall back to Str
+        assert_eq!(c.str("cluster.tau_model"), Some("constant"));
+    }
+
+    #[test]
+    fn defaults() {
+        let c = ConfigMap::parse("").unwrap();
+        assert_eq!(c.f64_or("x", 2.0), 2.0);
+        assert_eq!(c.usize_or("y", 7), 7);
+        assert!(c.bool_or("z", true));
+        assert_eq!(c.str_or("w", "dflt"), "dflt");
+    }
+
+    #[test]
+    fn error_reporting_with_lines() {
+        let e = ConfigMap::parse("[broken\n").unwrap_err();
+        assert_eq!(e.line, 1);
+        let e2 = ConfigMap::parse("\n\nkey value\n").unwrap_err();
+        assert_eq!(e2.line, 3);
+    }
+
+    #[test]
+    fn rejects_bad_values() {
+        assert!(ConfigMap::parse("k = [1, \"a\"]").is_err());
+        assert!(ConfigMap::parse("k = nope").is_err());
+        assert!(ConfigMap::parse("k = \"unterminated").is_err());
+    }
+
+    #[test]
+    fn usize_rejects_fractional() {
+        let c = ConfigMap::parse("k = 1.5").unwrap();
+        assert_eq!(c.usize("k"), None);
+        assert_eq!(c.f64("k"), Some(1.5));
+    }
+}

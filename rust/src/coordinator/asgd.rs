@@ -1,0 +1,111 @@
+//! Classic Asynchronous SGD — Algorithm 1 — with the stepsize rules used
+//! by the prior state-of-the-art analyses the paper compares against.
+//!
+//! * [`StepsizeRule::Constant`]: plain ASGD, tuned constant `γ`.
+//! * [`StepsizeRule::DelayAdaptive`]: `γ_k = γ / (1 + δ^k)` — the
+//!   delay-scaled family of Cohen et al. (2021), Koloskova et al. (2022),
+//!   Mishchenko et al. (2022) (the "Delay-Adaptive ASGD" baseline of §G).
+//!
+//! Never discards a gradient, never stops a computation: every arrival
+//! produces a step, however stale.
+
+use super::{Decision, Scheduler};
+
+/// Stepsize schedule for Algorithm 1.
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub enum StepsizeRule {
+    /// `γ_k = γ`.
+    Constant(f64),
+    /// `γ_k = γ / (1 + δ^k)` — shrink with staleness.
+    DelayAdaptive { gamma: f64 },
+}
+
+impl StepsizeRule {
+    #[inline]
+    pub fn gamma(&self, delay: u64) -> f64 {
+        match *self {
+            StepsizeRule::Constant(g) => g,
+            StepsizeRule::DelayAdaptive { gamma } => gamma / (1.0 + delay as f64),
+        }
+    }
+}
+
+/// Algorithm 1: greedy fully-asynchronous SGD.
+#[derive(Clone, Debug)]
+pub struct AsgdScheduler {
+    pub rule: StepsizeRule,
+    max_delay_seen: u64,
+    steps: u64,
+}
+
+impl AsgdScheduler {
+    pub fn new(rule: StepsizeRule) -> Self {
+        assert!(rule.gamma(0) > 0.0);
+        Self {
+            rule,
+            max_delay_seen: 0,
+            steps: 0,
+        }
+    }
+
+    /// Largest staleness ever applied (the `max_k δ^k` of the classical
+    /// analyses — reported in the benches).
+    pub fn max_delay_seen(&self) -> u64 {
+        self.max_delay_seen
+    }
+
+    pub fn steps(&self) -> u64 {
+        self.steps
+    }
+}
+
+impl Scheduler for AsgdScheduler {
+    fn on_arrival(&mut self, _worker: usize, delay: u64) -> Decision {
+        self.max_delay_seen = self.max_delay_seen.max(delay);
+        self.steps += 1;
+        Decision::Step {
+            gamma: self.rule.gamma(delay),
+        }
+    }
+
+    fn name(&self) -> String {
+        match self.rule {
+            StepsizeRule::Constant(_) => "asgd".to_string(),
+            StepsizeRule::DelayAdaptive { .. } => "delay-adaptive-asgd".to_string(),
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn constant_rule_ignores_delay() {
+        let mut s = AsgdScheduler::new(StepsizeRule::Constant(0.2));
+        for d in [0u64, 5, 5000] {
+            assert_eq!(s.on_arrival(0, d), Decision::Step { gamma: 0.2 });
+        }
+        assert_eq!(s.max_delay_seen(), 5000);
+        assert_eq!(s.steps(), 3);
+    }
+
+    #[test]
+    fn delay_adaptive_shrinks() {
+        let mut s = AsgdScheduler::new(StepsizeRule::DelayAdaptive { gamma: 1.0 });
+        assert_eq!(s.on_arrival(0, 0), Decision::Step { gamma: 1.0 });
+        assert_eq!(s.on_arrival(0, 1), Decision::Step { gamma: 0.5 });
+        assert_eq!(s.on_arrival(0, 9), Decision::Step { gamma: 0.1 });
+    }
+
+    #[test]
+    fn never_discards_never_cancels() {
+        let mut s = AsgdScheduler::new(StepsizeRule::Constant(0.1));
+        for d in 0..1000 {
+            assert!(matches!(s.on_arrival(0, d), Decision::Step { .. }));
+        }
+        assert_eq!(s.cancel_threshold(10_000), None);
+        assert!(s.reassign_after_arrival());
+        assert!(s.active_workers().is_none());
+    }
+}

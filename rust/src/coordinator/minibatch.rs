@@ -1,0 +1,97 @@
+//! Synchronous Minibatch SGD — the fully synchronous baseline.
+//!
+//! Every round, each of the `m` participating workers computes exactly one
+//! stochastic gradient at the round's point; the server waits for *all* of
+//! them (round time = the slowest worker's τ — the straggler problem that
+//! motivates asynchrony), averages, and steps.
+
+use super::{Decision, Scheduler};
+
+/// Synchronous minibatch SGD over workers `0..m`.
+#[derive(Clone, Debug)]
+pub struct MinibatchScheduler {
+    pub gamma: f64,
+    active: Vec<usize>,
+    collected: usize,
+    rounds: u64,
+}
+
+impl MinibatchScheduler {
+    pub fn new(m: usize, gamma: f64) -> Self {
+        assert!(m >= 1);
+        assert!(gamma > 0.0);
+        Self {
+            gamma,
+            active: (0..m).collect(),
+            collected: 0,
+            rounds: 0,
+        }
+    }
+
+    pub fn rounds(&self) -> u64 {
+        self.rounds
+    }
+}
+
+impl Scheduler for MinibatchScheduler {
+    fn on_arrival(&mut self, _worker: usize, delay: u64) -> Decision {
+        debug_assert_eq!(
+            delay, 0,
+            "synchronous rounds can only produce zero-delay gradients"
+        );
+        self.collected += 1;
+        if self.collected == self.active.len() {
+            self.collected = 0;
+            self.rounds += 1;
+            Decision::Accumulate {
+                flush_gamma: Some(self.gamma),
+            }
+        } else {
+            Decision::Accumulate { flush_gamma: None }
+        }
+    }
+
+    fn active_workers(&self) -> Option<&[usize]> {
+        Some(&self.active)
+    }
+
+    fn reassign_after_arrival(&self) -> bool {
+        false // workers idle until the round completes
+    }
+
+    fn name(&self) -> String {
+        format!("minibatch(m={})", self.active.len())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn flushes_when_all_workers_reported() {
+        let mut s = MinibatchScheduler::new(3, 0.1);
+        assert_eq!(
+            s.on_arrival(0, 0),
+            Decision::Accumulate { flush_gamma: None }
+        );
+        assert_eq!(
+            s.on_arrival(1, 0),
+            Decision::Accumulate { flush_gamma: None }
+        );
+        assert_eq!(
+            s.on_arrival(2, 0),
+            Decision::Accumulate {
+                flush_gamma: Some(0.1)
+            }
+        );
+        assert_eq!(s.rounds(), 1);
+    }
+
+    #[test]
+    fn workers_idle_between_rounds() {
+        let s = MinibatchScheduler::new(2, 0.1);
+        assert!(!s.reassign_after_arrival());
+        assert_eq!(s.active_workers().unwrap().len(), 2);
+    }
+}

@@ -1,0 +1,161 @@
+//! The server-side scheduling disciplines — the paper's contribution and
+//! every baseline it is compared against.
+//!
+//! A [`Scheduler`] is the decision rule of the parameter server: given a
+//! gradient arrival (worker, staleness), it decides whether/how the iterate
+//! is updated, whether in-flight computations should be cancelled
+//! (Algorithm 5), which workers participate, and when workers are
+//! reassigned.  The [`crate::driver`] executes a scheduler against a
+//! [`crate::sim::Cluster`] and a [`crate::opt::StochasticProblem`].
+//!
+//! | scheduler | paper reference |
+//! |---|---|
+//! | [`RingmasterScheduler`] | Algorithms 4 & 5 (the contribution) |
+//! | [`AsgdScheduler`] | Algorithm 1; constant + delay-adaptive stepsizes (Koloskova/Mishchenko/Cohen) |
+//! | [`RennalaScheduler`] | Algorithm 2 (Tyurin & Richtárik 2023) |
+//! | [`NaiveOptimalScheduler`] | Algorithm 3 (new, non-robust strawman) |
+//! | [`MinibatchScheduler`] | fully synchronous Minibatch SGD |
+
+mod asgd;
+mod buffered;
+mod minibatch;
+mod naive;
+mod rennala;
+mod ringmaster;
+mod virtual_delay;
+
+pub use asgd::{AsgdScheduler, StepsizeRule};
+pub use buffered::{BufferedAsgdScheduler, StalenessWeight};
+pub use minibatch::MinibatchScheduler;
+pub use naive::NaiveOptimalScheduler;
+pub use rennala::RennalaScheduler;
+pub use ringmaster::RingmasterScheduler;
+pub use virtual_delay::VirtualDelayTracker;
+
+/// What the server does with an arrived stochastic gradient.
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub enum Decision {
+    /// `x^{k+1} = x^k − γ·g`; the iterate counter advances.
+    Step { gamma: f64 },
+    /// Add `g` to the server-side batch accumulator.  If `flush_gamma` is
+    /// set, the accumulated *average* is applied with that stepsize, the
+    /// iterate counter advances, and the accumulator resets.
+    Accumulate { flush_gamma: Option<f64> },
+    /// Ignore the gradient entirely.
+    Discard,
+}
+
+/// A server scheduling discipline.
+pub trait Scheduler {
+    /// Decide on a gradient that arrives from `worker` with staleness
+    /// `delay = k − (iterate it was computed at)`.
+    fn on_arrival(&mut self, worker: usize, delay: u64) -> Decision;
+
+    /// Workers that participate (None ⇒ all). Non-participants are never
+    /// assigned work (Algorithm 3 ignores the slow tail entirely).
+    fn active_workers(&self) -> Option<&[usize]> {
+        None
+    }
+
+    /// Algorithm 5's calculation stops: after the iterate advances to `k`,
+    /// return `Some(threshold)` to cancel every in-flight computation whose
+    /// start iterate is `≤ threshold` (i.e. delay `≥ R`), restarting it at
+    /// the current point.
+    fn cancel_threshold(&self, _k: u64) -> Option<u64> {
+        None
+    }
+
+    /// Whether the arriving worker is immediately reassigned at the current
+    /// iterate.  Synchronous schedulers return `false` (the worker idles
+    /// until the round flushes; the driver reassigns all idle workers after
+    /// every iterate update).
+    fn reassign_after_arrival(&self) -> bool {
+        true
+    }
+
+    /// Display name for tables/plots.
+    fn name(&self) -> String;
+}
+
+/// Factory enum so CLI/benches can construct any scheduler uniformly.
+#[derive(Clone, Debug, PartialEq)]
+pub enum SchedulerKind {
+    /// Ringmaster ASGD with delay threshold `r`; `cancel` selects
+    /// Algorithm 5 (true) vs Algorithm 4 (false).
+    Ringmaster { r: u64, gamma: f64, cancel: bool },
+    /// Classic Asynchronous SGD (Algorithm 1), constant stepsize.
+    Asgd { gamma: f64 },
+    /// Delay-adaptive ASGD: `γ_k = γ/(1 + δ^k)`.
+    DelayAdaptive { gamma: f64 },
+    /// Rennala SGD with batch size `b`.
+    Rennala { b: u64, gamma: f64 },
+    /// Buffered asynchronous SGD (FedBuff-style): batch of `b` gradients of
+    /// *any* staleness, `1/√(1+δ)` down-weighting.
+    Buffered { b: u64, gamma: f64 },
+    /// Naive Optimal ASGD on the fastest `m_star` workers.
+    Naive { m_star: usize, gamma: f64 },
+    /// Synchronous minibatch SGD over `m` workers.
+    Minibatch { m: usize, gamma: f64 },
+}
+
+impl SchedulerKind {
+    pub fn build(&self) -> Box<dyn Scheduler> {
+        match *self {
+            SchedulerKind::Ringmaster { r, gamma, cancel } => {
+                Box::new(RingmasterScheduler::new(r, gamma, cancel))
+            }
+            SchedulerKind::Asgd { gamma } => {
+                Box::new(AsgdScheduler::new(StepsizeRule::Constant(gamma)))
+            }
+            SchedulerKind::DelayAdaptive { gamma } => {
+                Box::new(AsgdScheduler::new(StepsizeRule::DelayAdaptive { gamma }))
+            }
+            SchedulerKind::Rennala { b, gamma } => Box::new(RennalaScheduler::new(b, gamma)),
+            SchedulerKind::Buffered { b, gamma } => Box::new(BufferedAsgdScheduler::new(
+                b,
+                gamma,
+                StalenessWeight::Polynomial { p: 0.5 },
+            )),
+            SchedulerKind::Naive { m_star, gamma } => {
+                Box::new(NaiveOptimalScheduler::with_m_star(m_star, gamma))
+            }
+            SchedulerKind::Minibatch { m, gamma } => Box::new(MinibatchScheduler::new(m, gamma)),
+        }
+    }
+
+    pub fn name(&self) -> String {
+        self.build().name()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn factory_builds_all_kinds() {
+        let kinds = [
+            SchedulerKind::Ringmaster {
+                r: 4,
+                gamma: 0.1,
+                cancel: true,
+            },
+            SchedulerKind::Asgd { gamma: 0.1 },
+            SchedulerKind::DelayAdaptive { gamma: 0.1 },
+            SchedulerKind::Rennala { b: 8, gamma: 0.1 },
+            SchedulerKind::Buffered { b: 8, gamma: 0.1 },
+            SchedulerKind::Naive {
+                m_star: 3,
+                gamma: 0.1,
+            },
+            SchedulerKind::Minibatch { m: 4, gamma: 0.1 },
+        ];
+        let names: Vec<String> = kinds.iter().map(|k| k.name()).collect();
+        assert_eq!(names.len(), 7);
+        // all distinct
+        let mut uniq = names.clone();
+        uniq.sort();
+        uniq.dedup();
+        assert_eq!(uniq.len(), 7, "{names:?}");
+    }
+}

@@ -1,0 +1,88 @@
+//! Naive Optimal ASGD — Algorithm 3.
+//!
+//! Pick `m* = argmin_m (1/m Σ_{i≤m} 1/τ_i)^{-1}(1 + σ²/(mε))` once, up
+//! front, from the (assumed static) τ profile, and run classic
+//! Asynchronous SGD on the fastest `m*` workers only.  Theorem 2.1: optimal
+//! under the fixed computation model — but §2.2 shows the static selection
+//! is brittle when worker speeds drift (see the `adversarial_dynamics`
+//! example and the ablation bench, where the speed-flip model defeats it).
+
+use super::{AsgdScheduler, Decision, Scheduler, StepsizeRule};
+
+/// Algorithm 3: ASGD restricted to the fastest `m*` workers.
+#[derive(Clone, Debug)]
+pub struct NaiveOptimalScheduler {
+    inner: AsgdScheduler,
+    active: Vec<usize>,
+}
+
+impl NaiveOptimalScheduler {
+    /// Line 1 of Algorithm 3: compute `m*` from the τ profile (must be
+    /// sorted ascending, eq. 2), then run ASGD on workers `0..m*`.
+    pub fn from_taus(taus: &[f64], sigma_sq: f64, eps: f64, gamma: f64) -> Self {
+        let m_star = crate::complexity::naive_m_star(taus, sigma_sq, eps);
+        Self::with_m_star(m_star, gamma)
+    }
+
+    /// Direct construction with a precomputed `m*`.
+    pub fn with_m_star(m_star: usize, gamma: f64) -> Self {
+        assert!(m_star >= 1);
+        Self {
+            inner: AsgdScheduler::new(StepsizeRule::Constant(gamma)),
+            active: (0..m_star).collect(),
+        }
+    }
+
+    pub fn m_star(&self) -> usize {
+        self.active.len()
+    }
+}
+
+impl Scheduler for NaiveOptimalScheduler {
+    fn on_arrival(&mut self, worker: usize, delay: u64) -> Decision {
+        debug_assert!(
+            self.active.contains(&worker),
+            "inactive worker {worker} should never be assigned"
+        );
+        self.inner.on_arrival(worker, delay)
+    }
+
+    fn active_workers(&self) -> Option<&[usize]> {
+        Some(&self.active)
+    }
+
+    fn name(&self) -> String {
+        format!("naive-optimal(m*={})", self.active.len())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn m_star_selection_matches_algorithm3() {
+        // equal workers: use all of them
+        let taus = vec![1.0; 16];
+        let s = NaiveOptimalScheduler::from_taus(&taus, 1.0, 0.1, 0.1);
+        assert_eq!(s.m_star(), 16);
+        // one catastrophically slow worker: exclude it
+        let mut taus2 = vec![1.0; 8];
+        taus2.push(1e12);
+        let s2 = NaiveOptimalScheduler::from_taus(&taus2, 1.0, 0.1, 0.1);
+        assert!(s2.m_star() <= 8);
+    }
+
+    #[test]
+    fn only_fast_workers_active() {
+        let s = NaiveOptimalScheduler::with_m_star(3, 0.1);
+        assert_eq!(s.active_workers(), Some(&[0usize, 1, 2][..]));
+    }
+
+    #[test]
+    fn behaves_like_asgd_on_active_set() {
+        let mut s = NaiveOptimalScheduler::with_m_star(2, 0.25);
+        assert_eq!(s.on_arrival(1, 7), Decision::Step { gamma: 0.25 });
+        assert_eq!(s.cancel_threshold(100), None);
+    }
+}

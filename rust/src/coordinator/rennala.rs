@@ -1,0 +1,125 @@
+//! Rennala SGD — Algorithm 2 (Tyurin & Richtárik 2023), the prior optimal
+//! *semi-asynchronous* method.
+//!
+//! Minibatch SGD with an asynchronous collection loop: only zero-delay
+//! gradients (computed at the current round's point) count toward the batch
+//! of size `B`; everything staler is discarded.  When the batch fills, the
+//! server applies the averaged gradient and the round index advances —
+//! which retroactively makes all still-in-flight computations stale (their
+//! arrivals will carry `delay ≥ 1` and be discarded: drawback (ii) of §1.3).
+
+use super::{Decision, Scheduler};
+
+/// Algorithm 2.
+#[derive(Clone, Debug)]
+pub struct RennalaScheduler {
+    /// Batch size `B ≥ 1`.
+    pub batch: u64,
+    /// Stepsize `γ` applied to the batch average.
+    pub gamma: f64,
+    collected: u64,
+    rounds: u64,
+    discarded: u64,
+}
+
+impl RennalaScheduler {
+    pub fn new(batch: u64, gamma: f64) -> Self {
+        assert!(batch >= 1);
+        assert!(gamma > 0.0);
+        Self {
+            batch,
+            gamma,
+            collected: 0,
+            rounds: 0,
+            discarded: 0,
+        }
+    }
+
+    pub fn rounds(&self) -> u64 {
+        self.rounds
+    }
+
+    pub fn discarded(&self) -> u64 {
+        self.discarded
+    }
+}
+
+impl Scheduler for RennalaScheduler {
+    fn on_arrival(&mut self, _worker: usize, delay: u64) -> Decision {
+        if delay != 0 {
+            // computed at a previous round's point — ignored (δ^{k_b} = 0
+            // condition in Algorithm 2)
+            self.discarded += 1;
+            return Decision::Discard;
+        }
+        self.collected += 1;
+        if self.collected == self.batch {
+            self.collected = 0;
+            self.rounds += 1;
+            Decision::Accumulate {
+                flush_gamma: Some(self.gamma),
+            }
+        } else {
+            Decision::Accumulate { flush_gamma: None }
+        }
+    }
+
+    fn name(&self) -> String {
+        format!("rennala(B={})", self.batch)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn collects_b_then_flushes() {
+        let mut s = RennalaScheduler::new(3, 0.4);
+        assert_eq!(
+            s.on_arrival(0, 0),
+            Decision::Accumulate { flush_gamma: None }
+        );
+        assert_eq!(
+            s.on_arrival(1, 0),
+            Decision::Accumulate { flush_gamma: None }
+        );
+        assert_eq!(
+            s.on_arrival(0, 0),
+            Decision::Accumulate {
+                flush_gamma: Some(0.4)
+            }
+        );
+        assert_eq!(s.rounds(), 1);
+        // next round starts fresh
+        assert_eq!(
+            s.on_arrival(2, 0),
+            Decision::Accumulate { flush_gamma: None }
+        );
+    }
+
+    #[test]
+    fn discards_stale_arrivals() {
+        let mut s = RennalaScheduler::new(2, 0.1);
+        assert_eq!(s.on_arrival(0, 1), Decision::Discard);
+        assert_eq!(s.on_arrival(0, 7), Decision::Discard);
+        assert_eq!(s.discarded(), 2);
+        // collection progress unaffected
+        assert_eq!(
+            s.on_arrival(1, 0),
+            Decision::Accumulate { flush_gamma: None }
+        );
+    }
+
+    #[test]
+    fn batch_one_is_sgd_like() {
+        let mut s = RennalaScheduler::new(1, 0.2);
+        assert_eq!(
+            s.on_arrival(0, 0),
+            Decision::Accumulate {
+                flush_gamma: Some(0.2)
+            }
+        );
+        assert_eq!(s.rounds(), 1);
+    }
+}

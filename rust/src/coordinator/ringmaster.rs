@@ -1,0 +1,139 @@
+//! Ringmaster ASGD — Algorithms 4 and 5, the paper's contribution.
+//!
+//! The scheduler is classic Asynchronous SGD with one modification: a
+//! gradient whose staleness `δ^k` has reached the *delay threshold* `R` is
+//! ignored, and its worker is pointed at the current iterate.  With
+//! `cancel = true` (Algorithm 5) the server additionally *stops* in-flight
+//! computations the moment their staleness reaches `R`, instead of letting
+//! them finish a result that would be discarded anyway.
+//!
+//! `R = 1` degenerates to fully synchronous SGD (only zero-delay gradients
+//! pass), `R = ∞` to classic Asynchronous SGD; Theorem 4.2's
+//! `R = max{1, ⌈σ²/ε⌉}` ([`crate::complexity::default_r`]) makes the method
+//! time-optimal.
+
+use super::{Decision, Scheduler};
+
+/// Algorithm 4 (`cancel = false`) / Algorithm 5 (`cancel = true`).
+#[derive(Clone, Debug)]
+pub struct RingmasterScheduler {
+    /// Delay threshold `R ≥ 1`.
+    pub r: u64,
+    /// Constant stepsize `γ` (Theorem 4.1/4.2 prescribe
+    /// `min{1/(2RL), ε/(4Lσ²)}`; see [`crate::complexity::theorem_stepsize`]).
+    pub gamma: f64,
+    /// Whether to stop in-flight stale computations (Algorithm 5).
+    pub cancel: bool,
+    applied: u64,
+    discarded: u64,
+}
+
+impl RingmasterScheduler {
+    pub fn new(r: u64, gamma: f64, cancel: bool) -> Self {
+        assert!(r >= 1, "delay threshold must be at least 1");
+        assert!(gamma > 0.0);
+        Self {
+            r,
+            gamma,
+            cancel,
+            applied: 0,
+            discarded: 0,
+        }
+    }
+
+    /// Theorem 4.2 configuration from problem constants.
+    pub fn from_theory(c: crate::complexity::Constants, cancel: bool) -> Self {
+        let r = crate::complexity::default_r(c.sigma_sq, c.eps);
+        Self::new(r, crate::complexity::theorem_stepsize(r, c), cancel)
+    }
+
+    pub fn applied(&self) -> u64 {
+        self.applied
+    }
+
+    pub fn discarded(&self) -> u64 {
+        self.discarded
+    }
+}
+
+impl Scheduler for RingmasterScheduler {
+    fn on_arrival(&mut self, _worker: usize, delay: u64) -> Decision {
+        if delay < self.r {
+            self.applied += 1;
+            Decision::Step { gamma: self.gamma }
+        } else {
+            // Algorithm 4's else-branch: ignore the outdated gradient.
+            // (Under Algorithm 5 this is unreachable in the simulator —
+            // stale computations are stopped before they can arrive.)
+            self.discarded += 1;
+            Decision::Discard
+        }
+    }
+
+    fn cancel_threshold(&self, k: u64) -> Option<u64> {
+        // Stop computations with delay ≥ R, i.e. start iterate ≤ k − R.
+        if self.cancel && k >= self.r {
+            Some(k - self.r)
+        } else {
+            None
+        }
+    }
+
+    fn name(&self) -> String {
+        format!(
+            "ringmaster(R={}{})",
+            self.r,
+            if self.cancel { ",stop" } else { "" }
+        )
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn applies_below_threshold_discards_at_threshold() {
+        let mut s = RingmasterScheduler::new(3, 0.5, false);
+        assert_eq!(s.on_arrival(0, 0), Decision::Step { gamma: 0.5 });
+        assert_eq!(s.on_arrival(0, 2), Decision::Step { gamma: 0.5 });
+        assert_eq!(s.on_arrival(0, 3), Decision::Discard);
+        assert_eq!(s.on_arrival(0, 100), Decision::Discard);
+        assert_eq!(s.applied(), 2);
+        assert_eq!(s.discarded(), 2);
+    }
+
+    #[test]
+    fn r_equals_one_is_synchronous_sgd() {
+        // Only zero-delay gradients pass — classical SGD (§3.2).
+        let mut s = RingmasterScheduler::new(1, 0.1, false);
+        assert_eq!(s.on_arrival(0, 0), Decision::Step { gamma: 0.1 });
+        assert_eq!(s.on_arrival(0, 1), Decision::Discard);
+    }
+
+    #[test]
+    fn cancel_threshold_only_for_algorithm5() {
+        let alg4 = RingmasterScheduler::new(4, 0.1, false);
+        assert_eq!(alg4.cancel_threshold(10), None);
+        let alg5 = RingmasterScheduler::new(4, 0.1, true);
+        assert_eq!(alg5.cancel_threshold(10), Some(6));
+        // before R updates have happened, nothing can be stale
+        assert_eq!(alg5.cancel_threshold(3), None);
+        assert_eq!(alg5.cancel_threshold(4), Some(0));
+    }
+
+    #[test]
+    fn from_theory_uses_paper_formulas() {
+        let c = crate::complexity::Constants::new(1.0, 1.0, 1.0, 1e-2);
+        let s = RingmasterScheduler::from_theory(c, true);
+        assert_eq!(s.r, 100); // ⌈σ²/ε⌉
+        let expect = (1.0f64 / (2.0 * 100.0)).min(1e-2 / 4.0);
+        assert!((s.gamma - expect).abs() < 1e-15);
+    }
+
+    #[test]
+    #[should_panic(expected = "at least 1")]
+    fn rejects_zero_threshold() {
+        RingmasterScheduler::new(0, 0.1, false);
+    }
+}

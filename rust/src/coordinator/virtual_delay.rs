@@ -1,0 +1,131 @@
+//! The adaptive-stepsize formulation of Ringmaster ASGD — eq. (5).
+//!
+//! The paper observes that Algorithm 4 *is* Algorithm 1 with the adaptive
+//! stepsize rule
+//!
+//! ```text
+//! γ_k = γ·[δ̄_i^k < R]
+//! δ̄_j^{k+1} = 0                 if j = i
+//!            = δ̄_j^k + 1        if j ≠ i and δ̄_i^k < R
+//!            = δ̄_j^k            if j ≠ i and δ̄_i^k ≥ R
+//! ```
+//!
+//! where `i` is the worker whose gradient is processed at event `k` and the
+//! virtual delays start at `δ̄_j^0 = 0`.  [`VirtualDelayTracker`] implements
+//! the rule verbatim; the property test in this module (and the equivalence
+//! test in `rust/tests/`) verify that the induced apply/ignore pattern is
+//! identical to Algorithm 4's explicit-delay formulation for arbitrary
+//! arrival sequences — the paper's claimed equivalence.
+
+/// Verbatim implementation of the virtual-delay stepsize rule (5).
+#[derive(Clone, Debug)]
+pub struct VirtualDelayTracker {
+    delays: Vec<u64>,
+    r: u64,
+}
+
+impl VirtualDelayTracker {
+    pub fn new(n_workers: usize, r: u64) -> Self {
+        assert!(r >= 1);
+        Self {
+            delays: vec![0; n_workers],
+            r,
+        }
+    }
+
+    /// Process the arrival of worker `i`'s gradient.  Returns `true` iff
+    /// the step is applied (`γ_k = γ`), updating all virtual delays.
+    pub fn observe(&mut self, i: usize) -> bool {
+        let applied = self.delays[i] < self.r;
+        if applied {
+            for (j, d) in self.delays.iter_mut().enumerate() {
+                if j != i {
+                    *d += 1;
+                }
+            }
+        }
+        self.delays[i] = 0;
+        applied
+    }
+
+    pub fn delay(&self, worker: usize) -> u64 {
+        self.delays[worker]
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::testkit;
+
+    /// Algorithm 4's explicit bookkeeping: per-worker start iterate,
+    /// global iterate counter.  This is what the simulator's driver does.
+    struct Explicit {
+        start_k: Vec<u64>,
+        k: u64,
+        r: u64,
+    }
+
+    impl Explicit {
+        fn new(n: usize, r: u64) -> Self {
+            Self {
+                start_k: vec![0; n],
+                k: 0,
+                r,
+            }
+        }
+
+        fn observe(&mut self, i: usize) -> bool {
+            let delay = self.k - self.start_k[i];
+            let applied = delay < self.r;
+            if applied {
+                self.k += 1;
+            }
+            // worker restarts at the (possibly advanced) current iterate
+            self.start_k[i] = self.k;
+            applied
+        }
+    }
+
+    #[test]
+    fn rule5_equivalent_to_algorithm4_bookkeeping() {
+        testkit::check("eq(5) ≡ Alg 4", |g| {
+            let n = g.usize_in(1, 12);
+            let r = g.usize_in(1, 8) as u64;
+            let mut virt = VirtualDelayTracker::new(n, r);
+            let mut expl = Explicit::new(n, r);
+            for _ in 0..400 {
+                let i = g.usize_in(0, n - 1);
+                let a = virt.observe(i);
+                let b = expl.observe(i);
+                assert_eq!(a, b, "divergence at worker {i} (n={n}, R={r})");
+                // invariant: virtual delay == explicit staleness
+                for w in 0..n {
+                    assert_eq!(virt.delay(w), expl.k - expl.start_k[w]);
+                }
+            }
+        });
+    }
+
+    #[test]
+    fn single_worker_never_blocked() {
+        // one worker always has delay 0 → plain SGD regardless of R
+        let mut t = VirtualDelayTracker::new(1, 1);
+        for _ in 0..10 {
+            assert!(t.observe(0));
+        }
+    }
+
+    #[test]
+    fn delays_grow_only_on_applied_steps() {
+        let mut t = VirtualDelayTracker::new(2, 2);
+        assert!(t.observe(0)); // worker 1's delay → 1
+        assert_eq!(t.delay(1), 1);
+        assert!(t.observe(0)); // worker 1's delay → 2
+        assert_eq!(t.delay(1), 2);
+        // worker 1 now at the threshold: ignored, delays frozen
+        assert!(!t.observe(1));
+        assert_eq!(t.delay(1), 0); // its own delay resets
+        assert_eq!(t.delay(0), 0); // worker 0 untouched (third case)
+    }
+}

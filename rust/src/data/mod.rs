@@ -1,0 +1,244 @@
+//! Synthetic MNIST-like dataset (DESIGN.md substitution: no network access,
+//! so LeCun et al.'s files cannot be downloaded).
+//!
+//! Ten deterministic 28×28 class templates are drawn once from a seeded
+//! PRNG and smoothed into blobby strokes; each sample is its class template
+//! plus pixel noise and a random brightness jitter, clamped to `[0, 1]`.
+//! What the §G.1 experiment needs from MNIST — a 10-class image
+//! classification task on 784-dim inputs where a small ReLU MLP separates
+//! classes at high accuracy after a few hundred SGD steps — is preserved.
+
+use crate::prng::Prng;
+
+pub const IMG_SIDE: usize = 28;
+pub const IMG_PIXELS: usize = IMG_SIDE * IMG_SIDE;
+pub const N_CLASSES: usize = 10;
+
+/// An in-memory labelled image dataset (row-major `n × 784`, f32 pixels).
+#[derive(Clone, Debug)]
+pub struct Dataset {
+    pub images: Vec<f32>,
+    pub labels: Vec<u8>,
+}
+
+impl Dataset {
+    pub fn len(&self) -> usize {
+        self.labels.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.labels.is_empty()
+    }
+
+    pub fn image(&self, i: usize) -> &[f32] {
+        &self.images[i * IMG_PIXELS..(i + 1) * IMG_PIXELS]
+    }
+
+    /// Split into (train, test) by a deterministic shuffled index.
+    pub fn split(&self, test_frac: f64, seed: u64) -> (Dataset, Dataset) {
+        let n = self.len();
+        let n_test = ((n as f64) * test_frac).round() as usize;
+        let mut idx: Vec<usize> = (0..n).collect();
+        Prng::seed_from_u64(seed).shuffle(&mut idx);
+        let build = |ids: &[usize]| {
+            let mut images = Vec::with_capacity(ids.len() * IMG_PIXELS);
+            let mut labels = Vec::with_capacity(ids.len());
+            for &i in ids {
+                images.extend_from_slice(self.image(i));
+                labels.push(self.labels[i]);
+            }
+            Dataset { images, labels }
+        };
+        (build(&idx[n_test..]), build(&idx[..n_test]))
+    }
+
+    /// Sample a batch of `b` examples into caller buffers:
+    /// `xb` (`b × 784`) and `yb` one-hot (`b × 10`).
+    pub fn sample_batch(&self, b: usize, rng: &mut Prng, xb: &mut [f32], yb: &mut [f32]) {
+        debug_assert_eq!(xb.len(), b * IMG_PIXELS);
+        debug_assert_eq!(yb.len(), b * N_CLASSES);
+        yb.fill(0.0);
+        for j in 0..b {
+            let i = rng.usize_below(self.len());
+            xb[j * IMG_PIXELS..(j + 1) * IMG_PIXELS].copy_from_slice(self.image(i));
+            yb[j * N_CLASSES + self.labels[i] as usize] = 1.0;
+        }
+    }
+
+    /// Fill a batch with examples `start..start+b` (wrapping) — the
+    /// deterministic path used for evaluation.
+    pub fn fill_batch_at(&self, start: usize, b: usize, xb: &mut [f32], yb: &mut [f32]) {
+        yb.fill(0.0);
+        for j in 0..b {
+            let i = (start + j) % self.len();
+            xb[j * IMG_PIXELS..(j + 1) * IMG_PIXELS].copy_from_slice(self.image(i));
+            yb[j * N_CLASSES + self.labels[i] as usize] = 1.0;
+        }
+    }
+}
+
+/// Deterministic class templates: sparse random strokes blurred twice.
+fn class_templates(seed: u64) -> Vec<Vec<f32>> {
+    let mut rng = Prng::seed_from_u64(seed ^ 0xD16E57);
+    (0..N_CLASSES)
+        .map(|_| {
+            let mut img = vec![0.0f32; IMG_PIXELS];
+            // random walk "strokes" from a few anchor points
+            for _ in 0..4 {
+                let mut r = rng.usize_in(4, IMG_SIDE - 5);
+                let mut c = rng.usize_in(4, IMG_SIDE - 5);
+                for _ in 0..40 {
+                    img[r * IMG_SIDE + c] = 1.0;
+                    match rng.usize_below(4) {
+                        0 if r + 1 < IMG_SIDE - 2 => r += 1,
+                        1 if r > 2 => r -= 1,
+                        2 if c + 1 < IMG_SIDE - 2 => c += 1,
+                        _ if c > 2 => c -= 1,
+                        _ => {}
+                    }
+                }
+            }
+            // two box-blur passes to make smooth digit-ish blobs
+            for _ in 0..2 {
+                let mut out = vec![0.0f32; IMG_PIXELS];
+                for r in 1..IMG_SIDE - 1 {
+                    for c in 1..IMG_SIDE - 1 {
+                        let mut s = 0.0;
+                        for dr in 0..3 {
+                            for dc in 0..3 {
+                                s += img[(r + dr - 1) * IMG_SIDE + (c + dc - 1)];
+                            }
+                        }
+                        out[r * IMG_SIDE + c] = s / 9.0;
+                    }
+                }
+                img = out;
+            }
+            // normalize peak to 1
+            let peak = img.iter().cloned().fold(0.0f32, f32::max).max(1e-6);
+            for p in img.iter_mut() {
+                *p /= peak;
+            }
+            img
+        })
+        .collect()
+}
+
+/// Generate `n` samples (balanced classes, shuffled) with the given pixel
+/// noise level.
+pub fn synthetic_mnist(n: usize, noise: f64, seed: u64) -> Dataset {
+    let templates = class_templates(seed);
+    let mut rng = Prng::seed_from_u64(seed);
+    let mut images = Vec::with_capacity(n * IMG_PIXELS);
+    let mut labels = Vec::with_capacity(n);
+    for i in 0..n {
+        let cls = i % N_CLASSES;
+        let brightness = rng.f64_in(0.7, 1.3) as f32;
+        let tpl = &templates[cls];
+        for &p in tpl.iter() {
+            let v = p * brightness + rng.normal(0.0, noise) as f32;
+            images.push(v.clamp(0.0, 1.0));
+        }
+        labels.push(cls as u8);
+    }
+    // shuffle samples
+    let mut idx: Vec<usize> = (0..n).collect();
+    rng.shuffle(&mut idx);
+    let mut ds = Dataset {
+        images: Vec::with_capacity(n * IMG_PIXELS),
+        labels: Vec::with_capacity(n),
+    };
+    let tmp = Dataset { images, labels };
+    for &i in &idx {
+        ds.images.extend_from_slice(tmp.image(i));
+        ds.labels.push(tmp.labels[i]);
+    }
+    ds
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn generates_requested_size_and_balance() {
+        let ds = synthetic_mnist(200, 0.1, 3);
+        assert_eq!(ds.len(), 200);
+        assert_eq!(ds.images.len(), 200 * IMG_PIXELS);
+        let mut counts = [0usize; N_CLASSES];
+        for &l in &ds.labels {
+            counts[l as usize] += 1;
+        }
+        assert!(counts.iter().all(|&c| c == 20), "{counts:?}");
+    }
+
+    #[test]
+    fn pixels_in_unit_range() {
+        let ds = synthetic_mnist(50, 0.3, 4);
+        assert!(ds.images.iter().all(|&p| (0.0..=1.0).contains(&p)));
+    }
+
+    #[test]
+    fn deterministic_per_seed() {
+        let a = synthetic_mnist(30, 0.1, 5);
+        let b = synthetic_mnist(30, 0.1, 5);
+        assert_eq!(a.images, b.images);
+        assert_eq!(a.labels, b.labels);
+        let c = synthetic_mnist(30, 0.1, 6);
+        assert_ne!(a.images, c.images);
+    }
+
+    #[test]
+    fn classes_are_separable_by_template_distance() {
+        // nearest-template classification should beat chance by a lot —
+        // the dataset must be learnable.
+        let seed = 7;
+        let ds = synthetic_mnist(300, 0.15, seed);
+        let templates = class_templates(seed);
+        let mut correct = 0;
+        for i in 0..ds.len() {
+            let img = ds.image(i);
+            let (mut best, mut best_d) = (0usize, f32::INFINITY);
+            for (c, t) in templates.iter().enumerate() {
+                let d: f32 = img
+                    .iter()
+                    .zip(t)
+                    .map(|(a, b)| (a - b) * (a - b))
+                    .sum();
+                if d < best_d {
+                    best_d = d;
+                    best = c;
+                }
+            }
+            if best == ds.labels[i] as usize {
+                correct += 1;
+            }
+        }
+        let acc = correct as f64 / ds.len() as f64;
+        assert!(acc > 0.8, "nearest-template accuracy {acc}");
+    }
+
+    #[test]
+    fn split_partitions() {
+        let ds = synthetic_mnist(100, 0.1, 8);
+        let (tr, te) = ds.split(0.2, 1);
+        assert_eq!(tr.len(), 80);
+        assert_eq!(te.len(), 20);
+        assert_eq!(tr.images.len(), 80 * IMG_PIXELS);
+    }
+
+    #[test]
+    fn batches_have_valid_onehot() {
+        let ds = synthetic_mnist(64, 0.1, 9);
+        let mut rng = Prng::seed_from_u64(0);
+        let b = 16;
+        let mut xb = vec![0.0; b * IMG_PIXELS];
+        let mut yb = vec![0.0; b * N_CLASSES];
+        ds.sample_batch(b, &mut rng, &mut xb, &mut yb);
+        for j in 0..b {
+            let row = &yb[j * N_CLASSES..(j + 1) * N_CLASSES];
+            assert_eq!(row.iter().filter(|&&v| v == 1.0).count(), 1);
+            assert_eq!(row.iter().filter(|&&v| v == 0.0).count(), N_CLASSES - 1);
+        }
+    }
+}

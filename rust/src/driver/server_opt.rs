@@ -1,0 +1,131 @@
+//! Server-side update rules (§6 future-work direction).
+//!
+//! The paper applies plain SGD steps at the server; practical parameter
+//! servers often run a stateful optimizer over the incoming (stochastic,
+//! possibly stale) gradients.  [`ServerOpt`] abstracts the update
+//! `x ← update(x, g, γ)` so any scheduler can be combined with heavy-ball
+//! momentum or Adam without touching the scheduling logic.
+//!
+//! The DriverConfig default is [`ServerOpt::Sgd`], which reproduces the
+//! paper's algorithms exactly.
+
+use crate::linalg::axpy;
+
+/// A server-side first-order update rule.
+#[derive(Clone, Debug, PartialEq)]
+pub enum ServerOpt {
+    /// `x ← x − γ g` (the paper's update).
+    Sgd,
+    /// Heavy-ball: `v ← β v + g ; x ← x − γ v`.
+    Momentum { beta: f64 },
+    /// Adam (bias-corrected).
+    Adam { beta1: f64, beta2: f64, eps: f64 },
+}
+
+impl Default for ServerOpt {
+    fn default() -> Self {
+        ServerOpt::Sgd
+    }
+}
+
+/// Instantiated optimizer state (allocated lazily for stateless SGD).
+#[derive(Clone, Debug)]
+pub struct ServerOptState {
+    rule: ServerOpt,
+    m: Vec<f64>,
+    v: Vec<f64>,
+    t: u64,
+}
+
+impl ServerOptState {
+    pub fn new(rule: ServerOpt, dim: usize) -> Self {
+        let needs = !matches!(rule, ServerOpt::Sgd);
+        let is_adam = matches!(rule, ServerOpt::Adam { .. });
+        Self {
+            rule,
+            m: if needs { vec![0.0; dim] } else { Vec::new() },
+            v: if is_adam { vec![0.0; dim] } else { Vec::new() },
+            t: 0,
+        }
+    }
+
+    pub fn rule(&self) -> &ServerOpt {
+        &self.rule
+    }
+
+    /// Apply one update `x ← update(x, g, γ)`.
+    pub fn apply(&mut self, x: &mut [f64], g: &[f64], gamma: f64) {
+        match self.rule {
+            ServerOpt::Sgd => axpy(-gamma, g, x),
+            ServerOpt::Momentum { beta } => {
+                for (mi, gi) in self.m.iter_mut().zip(g) {
+                    *mi = beta * *mi + gi;
+                }
+                axpy(-gamma, &self.m, x);
+            }
+            ServerOpt::Adam { beta1, beta2, eps } => {
+                self.t += 1;
+                let bc1 = 1.0 - beta1.powi(self.t as i32);
+                let bc2 = 1.0 - beta2.powi(self.t as i32);
+                for i in 0..x.len() {
+                    self.m[i] = beta1 * self.m[i] + (1.0 - beta1) * g[i];
+                    self.v[i] = beta2 * self.v[i] + (1.0 - beta2) * g[i] * g[i];
+                    let mhat = self.m[i] / bc1;
+                    let vhat = self.v[i] / bc2;
+                    x[i] -= gamma * mhat / (vhat.sqrt() + eps);
+                }
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::opt::{Problem, QuadraticProblem};
+
+    fn optimize(rule: ServerOpt, gamma: f64, iters: usize) -> f64 {
+        let p = QuadraticProblem::paper(32);
+        let mut x = p.init_point();
+        let mut g = vec![0.0; 32];
+        let mut opt = ServerOptState::new(rule, 32);
+        for _ in 0..iters {
+            p.value_grad(&x, &mut g);
+            opt.apply(&mut x, &g, gamma);
+        }
+        p.value(&x) - p.f_star().unwrap()
+    }
+
+    #[test]
+    fn sgd_matches_axpy() {
+        let mut x = vec![1.0, 2.0];
+        let g = vec![0.5, -0.5];
+        let mut opt = ServerOptState::new(ServerOpt::Sgd, 2);
+        opt.apply(&mut x, &g, 0.1);
+        assert_eq!(x, vec![0.95, 2.05]);
+    }
+
+    #[test]
+    fn momentum_accelerates_ill_conditioned_quadratic() {
+        let plain = optimize(ServerOpt::Sgd, 0.5, 400);
+        let heavy = optimize(ServerOpt::Momentum { beta: 0.9 }, 0.15, 400);
+        assert!(heavy < 0.5 * plain, "momentum {heavy} vs sgd {plain}");
+    }
+
+    #[test]
+    fn adam_converges() {
+        let gap = optimize(
+            ServerOpt::Adam { beta1: 0.9, beta2: 0.999, eps: 1e-8 },
+            0.05,
+            2000,
+        );
+        assert!(gap < 1e-3, "adam gap {gap}");
+    }
+
+    #[test]
+    fn momentum_zero_beta_equals_sgd() {
+        let a = optimize(ServerOpt::Sgd, 0.3, 100);
+        let b = optimize(ServerOpt::Momentum { beta: 0.0 }, 0.3, 100);
+        assert!((a - b).abs() < 1e-12);
+    }
+}

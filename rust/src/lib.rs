@@ -1,0 +1,41 @@
+//! # Ringmaster ASGD
+//!
+//! Production-grade reproduction of *“Ringmaster ASGD: The First Asynchronous
+//! SGD with Optimal Time Complexity”* (Maranjyan, Tyurin, Richtárik — ICML
+//! 2025), built as a three-layer Rust + JAX + Pallas stack:
+//!
+//! * **Layer 3 (this crate)** — the paper's coordination contribution: the
+//!   Ringmaster ASGD scheduler ([`coordinator::RingmasterScheduler`],
+//!   Algorithms 4 & 5) plus every baseline it is compared against
+//!   (Asynchronous SGD / Delay-Adaptive ASGD, Rennala SGD, Naive Optimal
+//!   ASGD, synchronous Minibatch SGD), a discrete-event cluster simulator
+//!   implementing the paper's *fixed*, *random* and *universal* computation
+//!   models ([`sim`]), the closed-form time-complexity theory ([`complexity`]),
+//!   a wall-clock thread-pool executor ([`exec`]), and the config / CLI /
+//!   metrics plumbing of a deployable framework.
+//! * **Layer 2 (python/compile/model.py)** — the experimental objectives
+//!   (§G quadratic, §G.1 MLP) in JAX, AOT-lowered once to HLO text.
+//! * **Layer 1 (python/compile/kernels/)** — Pallas kernels for the compute
+//!   hot-spots (tridiagonal stencil matvec, tiled MXU matmul).
+//!
+//! The [`runtime`] module loads the AOT artifacts through the PJRT C API
+//! (`xla` crate) so the training hot path never touches Python.
+
+pub mod bench_util;
+pub mod cli;
+pub mod complexity;
+pub mod config;
+pub mod coordinator;
+pub mod data;
+pub mod driver;
+pub mod exec;
+pub mod experiments;
+pub mod linalg;
+pub mod metrics;
+pub mod opt;
+pub mod prng;
+pub mod runtime;
+pub mod sim;
+pub mod testkit;
+pub mod train;
+pub mod util;

@@ -1,0 +1,247 @@
+//! Minimal dense linear algebra used by the native (non-PJRT) problems.
+//!
+//! Nothing exotic: BLAS-1 vector kernels, plus a constant-band tridiagonal
+//! matrix type with matvec and a Thomas-algorithm solve (used to compute the
+//! §G quadratic's exact minimizer `x* = A^{-1} b` and optimum `f*`).
+//!
+//! These are hot-path routines for the simulation studies (a Figure-2 run
+//! evaluates millions of `A x - b` gradients), so the matvec is written to
+//! auto-vectorize.
+
+/// Dot product.
+#[inline]
+pub fn dot(a: &[f64], b: &[f64]) -> f64 {
+    debug_assert_eq!(a.len(), b.len());
+    let mut acc = 0.0;
+    for i in 0..a.len() {
+        acc += a[i] * b[i];
+    }
+    acc
+}
+
+/// `y += alpha * x`.
+#[inline]
+pub fn axpy(alpha: f64, x: &[f64], y: &mut [f64]) {
+    debug_assert_eq!(x.len(), y.len());
+    for i in 0..x.len() {
+        y[i] += alpha * x[i];
+    }
+}
+
+/// `x *= alpha`.
+#[inline]
+pub fn scale(alpha: f64, x: &mut [f64]) {
+    for v in x.iter_mut() {
+        *v *= alpha;
+    }
+}
+
+/// Squared Euclidean norm.
+#[inline]
+pub fn nrm2_sq(x: &[f64]) -> f64 {
+    dot(x, x)
+}
+
+/// Euclidean norm.
+#[inline]
+pub fn nrm2(x: &[f64]) -> f64 {
+    nrm2_sq(x).sqrt()
+}
+
+/// `out = a - b` elementwise.
+pub fn sub(a: &[f64], b: &[f64], out: &mut [f64]) {
+    debug_assert_eq!(a.len(), b.len());
+    debug_assert_eq!(a.len(), out.len());
+    for i in 0..a.len() {
+        out[i] = a[i] - b[i];
+    }
+}
+
+/// Constant-band (Toeplitz) tridiagonal matrix
+/// `A = tridiag(lo, di, up)` of dimension `d`.
+///
+/// The paper's §G matrix is `TridiagToeplitz::new(d, -0.25, 0.5, -0.25)`.
+#[derive(Clone, Debug, PartialEq)]
+pub struct TridiagToeplitz {
+    pub d: usize,
+    pub lo: f64,
+    pub di: f64,
+    pub up: f64,
+}
+
+impl TridiagToeplitz {
+    pub fn new(d: usize, lo: f64, di: f64, up: f64) -> Self {
+        Self { d, lo, di, up }
+    }
+
+    /// The §G matrix `(1/4) tridiag(-1, 2, -1)`.
+    pub fn paper(d: usize) -> Self {
+        Self::new(d, -0.25, 0.5, -0.25)
+    }
+
+    /// `out = A x`. Hot path of the native quadratic gradient.
+    pub fn matvec(&self, x: &[f64], out: &mut [f64]) {
+        let d = self.d;
+        debug_assert_eq!(x.len(), d);
+        debug_assert_eq!(out.len(), d);
+        if d == 0 {
+            return;
+        }
+        if d == 1 {
+            out[0] = self.di * x[0];
+            return;
+        }
+        let (lo, di, up) = (self.lo, self.di, self.up);
+        out[0] = di * x[0] + up * x[1];
+        for i in 1..d - 1 {
+            out[i] = lo * x[i - 1] + di * x[i] + up * x[i + 1];
+        }
+        out[d - 1] = lo * x[d - 2] + di * x[d - 1];
+    }
+
+    /// Solve `A x = rhs` by the Thomas algorithm. Requires `A` to be
+    /// nonsingular with nonzero pivots along the elimination (true for the
+    /// paper's diagonally-semi-dominant stencil).
+    pub fn solve(&self, rhs: &[f64]) -> Vec<f64> {
+        let d = self.d;
+        assert_eq!(rhs.len(), d);
+        if d == 0 {
+            return Vec::new();
+        }
+        let mut c_star = vec![0.0; d]; // modified super-diagonal
+        let mut d_star = vec![0.0; d]; // modified rhs
+        let mut denom = self.di;
+        assert!(denom.abs() > 1e-300, "singular pivot");
+        c_star[0] = self.up / denom;
+        d_star[0] = rhs[0] / denom;
+        for i in 1..d {
+            denom = self.di - self.lo * c_star[i - 1];
+            assert!(denom.abs() > 1e-300, "singular pivot at {i}");
+            c_star[i] = self.up / denom;
+            d_star[i] = (rhs[i] - self.lo * d_star[i - 1]) / denom;
+        }
+        let mut x = vec![0.0; d];
+        x[d - 1] = d_star[d - 1];
+        for i in (0..d - 1).rev() {
+            x[i] = d_star[i] - c_star[i] * x[i + 1];
+        }
+        x
+    }
+
+    /// Largest eigenvalue (exact closed form for symmetric Toeplitz
+    /// tridiagonal with `lo == up`):
+    /// `λ_max = di + 2*lo*cos(pi*d/(d+1))` … for `lo = up < 0` this is
+    /// `di + 2*|lo|*cos(pi/(d+1))`-adjacent; we compute the max over k.
+    pub fn eig_max(&self) -> f64 {
+        assert!(
+            (self.lo - self.up).abs() < 1e-15,
+            "closed-form eigenvalues need symmetry"
+        );
+        let d = self.d as f64;
+        let mut best = f64::NEG_INFINITY;
+        for k in 1..=self.d {
+            let lam = self.di
+                + 2.0 * self.lo * (std::f64::consts::PI * k as f64 / (d + 1.0)).cos();
+            best = best.max(lam);
+        }
+        best
+    }
+
+    /// Materialize as a dense row-major matrix (test-only; O(d^2)).
+    pub fn to_dense(&self) -> Vec<Vec<f64>> {
+        let mut m = vec![vec![0.0; self.d]; self.d];
+        for i in 0..self.d {
+            m[i][i] = self.di;
+            if i > 0 {
+                m[i][i - 1] = self.lo;
+            }
+            if i + 1 < self.d {
+                m[i][i + 1] = self.up;
+            }
+        }
+        m
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::prng::Prng;
+
+    fn dense_matvec(m: &[Vec<f64>], x: &[f64]) -> Vec<f64> {
+        m.iter().map(|row| dot(row, x)).collect()
+    }
+
+    #[test]
+    fn blas1_basics() {
+        let a = [1.0, 2.0, 3.0];
+        let b = [4.0, 5.0, 6.0];
+        assert_eq!(dot(&a, &b), 32.0);
+        let mut y = b;
+        axpy(2.0, &a, &mut y);
+        assert_eq!(y, [6.0, 9.0, 12.0]);
+        scale(0.5, &mut y);
+        assert_eq!(y, [3.0, 4.5, 6.0]);
+        assert_eq!(nrm2_sq(&a), 14.0);
+        let mut out = [0.0; 3];
+        sub(&b, &a, &mut out);
+        assert_eq!(out, [3.0, 3.0, 3.0]);
+    }
+
+    #[test]
+    fn matvec_matches_dense() {
+        let mut rng = Prng::seed_from_u64(1);
+        for d in [1usize, 2, 3, 7, 100] {
+            let a = TridiagToeplitz::new(d, -0.3, 0.9, -0.2);
+            let x: Vec<f64> = (0..d).map(|_| rng.normal(0.0, 1.0)).collect();
+            let mut out = vec![0.0; d];
+            a.matvec(&x, &mut out);
+            let want = dense_matvec(&a.to_dense(), &x);
+            for (g, w) in out.iter().zip(&want) {
+                assert!((g - w).abs() < 1e-12);
+            }
+        }
+    }
+
+    #[test]
+    fn solve_round_trips() {
+        let mut rng = Prng::seed_from_u64(2);
+        for d in [1usize, 2, 5, 64, 500] {
+            let a = TridiagToeplitz::paper(d);
+            let x: Vec<f64> = (0..d).map(|_| rng.normal(0.0, 1.0)).collect();
+            let mut rhs = vec![0.0; d];
+            a.matvec(&x, &mut rhs);
+            let got = a.solve(&rhs);
+            for (g, w) in got.iter().zip(&x) {
+                assert!((g - w).abs() < 1e-8, "d={d}");
+            }
+        }
+    }
+
+    #[test]
+    fn paper_matrix_eig_max_below_one() {
+        // L = λ_max(A) < 1 for A = (1/4)tridiag(-1,2,-1): λ = 0.5 + 0.5cos(θ) ≤ 1.
+        for d in [2usize, 10, 1729] {
+            let l = TridiagToeplitz::paper(d).eig_max();
+            assert!(l < 1.0 && l > 0.5, "d={d} λmax={l}");
+        }
+    }
+
+    #[test]
+    fn eig_max_matches_power_iteration() {
+        let d = 60;
+        let a = TridiagToeplitz::paper(d);
+        let mut rng = Prng::seed_from_u64(3);
+        let mut v: Vec<f64> = (0..d).map(|_| rng.normal(0.0, 1.0)).collect();
+        let mut w = vec![0.0; d];
+        let mut lam = 0.0;
+        for _ in 0..4000 {
+            a.matvec(&v, &mut w);
+            lam = nrm2(&w);
+            for (vi, wi) in v.iter_mut().zip(&w) {
+                *vi = wi / lam;
+            }
+        }
+        assert!((lam - a.eig_max()).abs() < 1e-6, "power {lam} closed {}", a.eig_max());
+    }
+}

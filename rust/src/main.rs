@@ -1,0 +1,544 @@
+//! `ringmaster` — the framework launcher.
+//!
+//! Subcommands (all experiment knobs overridable with `--key value`; a
+//! `--config file.toml` provides file-level defaults):
+//!
+//! ```text
+//! ringmaster run         one scheduler on the §G quadratic
+//! ringmaster compare     all schedulers head-to-head (tuned)
+//! ringmaster complexity  print the closed-form theory for a τ profile
+//! ringmaster table1      Table 1 reproduction
+//! ringmaster fig1        Figure 1 (n=10000 ASGD slowdown)
+//! ringmaster fig2        Figure 2 (d=1729, n=6174 quadratic)
+//! ringmaster fig3        Figure 3 (MLP on synthetic-MNIST, PJRT)
+//! ringmaster train       end-to-end MLP training via PJRT artifacts
+//! ringmaster exec-demo   wall-clock (threaded) executor demo
+//! ```
+
+use std::path::PathBuf;
+
+use anyhow::{bail, Result};
+
+use ringmaster::cli::Args;
+use ringmaster::complexity::{self, Constants};
+use ringmaster::config::ConfigMap;
+use ringmaster::coordinator::SchedulerKind;
+use ringmaster::driver::{Driver, DriverConfig};
+use ringmaster::experiments::{
+    self, paper_rb_grid, paper_stepsize_grid, standard_profiles, QuadExpConfig,
+};
+use ringmaster::metrics::{ascii_plot, write_curves_csv};
+use ringmaster::opt::{Problem, QuadraticProblem};
+use ringmaster::sim::ComputeModel;
+use ringmaster::util::fmt_secs;
+
+fn main() {
+    let args = match Args::from_env() {
+        Ok(a) => a,
+        Err(e) => {
+            eprintln!("error: {e}");
+            std::process::exit(2);
+        }
+    };
+    if args.flag("help") || args.subcommand.is_none() {
+        print_help();
+        return;
+    }
+    let result = dispatch(&args);
+    if let Err(e) = result {
+        eprintln!("error: {e:#}");
+        std::process::exit(1);
+    }
+}
+
+fn print_help() {
+    println!(
+        "ringmaster — Ringmaster ASGD framework (ICML 2025 reproduction)\n\n\
+         usage: ringmaster <subcommand> [--key value ...]\n\n\
+         subcommands:\n\
+           run          one scheduler on the §G quadratic\n\
+                        --scheduler ringmaster|asgd|delay-adaptive|rennala|naive|minibatch\n\
+                        --n 64 --d 256 --gamma 0.2 --r 0 (0=theory) --cancel\n\
+           compare      all schedulers, tuned over the paper's stepsize grid\n\
+           complexity   closed-form theory for a τ profile (--profile linear|sqrt|equal)\n\
+           table1       Table 1: theory + measured ratios\n\
+           fig1         Figure 1: ASGD slowdown at n=10000\n\
+           fig2         Figure 2: quadratic d=1729 n=6174 (use --small for a quick pass)\n\
+           fig3         Figure 3: MLP on synthetic MNIST via PJRT artifacts\n\
+           train        end-to-end PJRT MLP training (single-stream SGD)\n\
+           exec-demo    wall-clock threaded executor demo\n\n\
+         common flags: --seed N --csv-out path.csv --plot --config file.toml"
+    );
+}
+
+fn load_config(args: &Args) -> Result<ConfigMap> {
+    let mut cfg = match args.get("config") {
+        Some(path) => ConfigMap::load(&PathBuf::from(path)).map_err(|e| anyhow::anyhow!("{e}"))?,
+        None => ConfigMap::default(),
+    };
+    args.apply_overrides(&mut cfg);
+    Ok(cfg)
+}
+
+fn dispatch(args: &Args) -> Result<()> {
+    match args.subcommand.as_deref().unwrap() {
+        "run" => cmd_run(args),
+        "compare" => cmd_compare(args),
+        "complexity" => cmd_complexity(args),
+        "table1" => cmd_table1(args),
+        "fig1" => cmd_fig1(args),
+        "fig2" => cmd_fig2(args),
+        "fig3" => cmd_fig3(args),
+        "train" => cmd_train(args),
+        "exec-demo" => cmd_exec_demo(args),
+        other => bail!("unknown subcommand '{other}' (try --help)"),
+    }
+}
+
+fn model_from_args(args: &Args, n: usize) -> Result<ComputeModel> {
+    Ok(match args.str_or("model", "paper") {
+        "paper" => ComputeModel::random_paper(n),
+        "linear" => ComputeModel::fixed_linear(n),
+        "sqrt" => ComputeModel::fixed_sqrt(n),
+        "equal" => ComputeModel::fixed_equal(n, args.f64_or("tau", 1.0)?),
+        other => bail!("unknown --model '{other}'"),
+    })
+}
+
+fn scheduler_from_args(args: &Args, cfg: &QuadExpConfig, eps: f64) -> Result<SchedulerKind> {
+    let c = cfg.constants(eps);
+    let gamma_theory = complexity::theorem_stepsize(complexity::default_r(c.sigma_sq, c.eps), c);
+    let gamma = args.f64_or("gamma", gamma_theory)?;
+    let r = match args.usize_or("r", 0)? as u64 {
+        0 => complexity::default_r(c.sigma_sq, c.eps),
+        r => r,
+    };
+    Ok(match args.str_or("scheduler", "ringmaster") {
+        "ringmaster" => SchedulerKind::Ringmaster {
+            r,
+            gamma,
+            cancel: !args.flag("no-cancel"),
+        },
+        "asgd" => SchedulerKind::Asgd { gamma },
+        "delay-adaptive" => SchedulerKind::DelayAdaptive { gamma },
+        "rennala" => SchedulerKind::Rennala {
+            b: args.usize_or("b", r as usize)? as u64,
+            gamma,
+        },
+        "naive" => {
+            let taus: Vec<f64> = (1..=cfg.n_workers).map(|i| i as f64).collect();
+            SchedulerKind::Naive {
+                m_star: complexity::naive_m_star(&taus, c.sigma_sq, c.eps),
+                gamma,
+            }
+        }
+        "minibatch" => SchedulerKind::Minibatch {
+            m: cfg.n_workers,
+            gamma,
+        },
+        other => bail!("unknown --scheduler '{other}'"),
+    })
+}
+
+fn cmd_run(args: &Args) -> Result<()> {
+    let _cfg_file = load_config(args)?;
+    let mut cfg = QuadExpConfig::small();
+    cfg.d = args.usize_or("d", 256)?;
+    cfg.n_workers = args.usize_or("n", 64)?;
+    cfg.noise_sigma = args.f64_or("noise", 0.01)?;
+    cfg.seed = args.usize_or("seed", 0)? as u64;
+    cfg.max_iters = args.usize_or("max-iters", 200_000)? as u64;
+    cfg.target_gap = Some(args.f64_or("target-gap", 1e-8)?);
+    let eps = args.f64_or("eps", 1e-4)?;
+    let model = model_from_args(args, cfg.n_workers)?;
+    let kind = scheduler_from_args(args, &cfg, eps)?;
+
+    println!("running {} on quadratic d={} n={} ...", kind.name(), cfg.d, cfg.n_workers);
+    let rec = experiments::run_quadratic(&cfg, model, &kind);
+    println!(
+        "  iters={} sim_time={} applied={} accumulated={} discarded={} cancelled={}",
+        rec.iters,
+        fmt_secs(rec.sim_time),
+        rec.applied,
+        rec.accumulated,
+        rec.discarded,
+        rec.cluster.cancellations
+    );
+    println!(
+        "  final: f-f*={:.3e}  ‖∇f‖²={:.3e}  time-to-target={}",
+        rec.final_gap,
+        rec.final_gradnorm_sq,
+        rec.time_to_target().map(fmt_secs).unwrap_or("—".into())
+    );
+    if args.flag("plot") {
+        print!("{}", ascii_plot(&[&rec.gap_curve], 72, 18));
+    }
+    if let Some(path) = args.get("csv-out") {
+        write_curves_csv(&PathBuf::from(path), &[&rec.gap_curve])?;
+        println!("  wrote {path}");
+    }
+    Ok(())
+}
+
+fn cmd_compare(args: &Args) -> Result<()> {
+    let mut cfg = QuadExpConfig::small();
+    cfg.d = args.usize_or("d", 256)?;
+    cfg.n_workers = args.usize_or("n", 64)?;
+    cfg.noise_sigma = args.f64_or("noise", 0.01)?;
+    cfg.seed = args.usize_or("seed", 0)? as u64;
+    cfg.max_iters = args.usize_or("max-iters", 300_000)? as u64;
+    cfg.target_gap = Some(args.f64_or("target-gap", 1e-7)?);
+    let eps = args.f64_or("eps", 1e-4)?;
+    let c = cfg.constants(eps);
+    let model = model_from_args(args, cfg.n_workers)?;
+    let grid = paper_stepsize_grid();
+    let r = complexity::default_r(c.sigma_sq, c.eps);
+    let b = r.max(1);
+    let taus_sorted = {
+        let mut t = model.tau_means();
+        t.sort_by(|a, b| a.partial_cmp(b).unwrap());
+        t
+    };
+    let m_star = complexity::naive_m_star(&taus_sorted, c.sigma_sq, c.eps);
+
+    let families: Vec<(&str, Box<dyn Fn(f64) -> SchedulerKind>)> = vec![
+        (
+            "ringmaster",
+            Box::new(move |g| SchedulerKind::Ringmaster {
+                r,
+                gamma: g,
+                cancel: true,
+            }),
+        ),
+        ("asgd", Box::new(|g| SchedulerKind::Asgd { gamma: g })),
+        (
+            "delay-adaptive",
+            Box::new(|g| SchedulerKind::DelayAdaptive { gamma: g }),
+        ),
+        (
+            "rennala",
+            Box::new(move |g| SchedulerKind::Rennala { b, gamma: g }),
+        ),
+        (
+            "naive",
+            Box::new(move |g| SchedulerKind::Naive {
+                m_star,
+                gamma: g,
+            }),
+        ),
+    ];
+    let mut table = ringmaster::bench_util::Table::new(&[
+        "scheduler",
+        "γ*",
+        "time-to-target",
+        "final f-f*",
+        "iters",
+        "discarded",
+    ]);
+    for (name, make) in families {
+        let (gamma, rec) = experiments::tune_stepsize(&cfg, &model, &grid, make.as_ref());
+        table.row(&[
+            name.to_string(),
+            format!("{gamma:.4}"),
+            rec.time_to_target().map(fmt_secs).unwrap_or("—".into()),
+            format!("{:.2e}", rec.final_gap),
+            rec.iters.to_string(),
+            rec.discarded.to_string(),
+        ]);
+    }
+    table.print();
+    Ok(())
+}
+
+fn cmd_complexity(args: &Args) -> Result<()> {
+    let n = args.usize_or("n", 6174)?;
+    let d = args.usize_or("d", 1729)?;
+    let noise = args.f64_or("noise", 0.01)?;
+    let eps = args.f64_or("eps", 1e-4)?;
+    let p = QuadraticProblem::paper(d);
+    let c = Constants::new(
+        p.smoothness().unwrap(),
+        p.delta(),
+        d as f64 * noise * noise,
+        eps,
+    );
+    println!("constants: L={:.4} Δ={:.4e} σ²={:.4e} ε={:.1e}", c.l, c.delta, c.sigma_sq, c.eps);
+    let mut table = ringmaster::bench_util::Table::new(&[
+        "τ profile",
+        "T_A (eq.4)",
+        "T_R=lower (eq.3)",
+        "speedup",
+        "m*",
+        "R (eq.9)",
+        "R refined (§4.1)",
+    ]);
+    for (name, taus) in standard_profiles(n) {
+        let (tr, m) = complexity::t_optimal(&taus, c);
+        let ta = complexity::t_asgd(&taus, c);
+        table.row(&[
+            name,
+            format!("{ta:.3e}"),
+            format!("{tr:.3e}"),
+            format!("{:.1}x", ta / tr),
+            m.to_string(),
+            complexity::default_r(c.sigma_sq, c.eps).to_string(),
+            complexity::refined_r(&taus, c.sigma_sq, c.eps).to_string(),
+        ]);
+    }
+    table.print();
+    Ok(())
+}
+
+fn cmd_table1(_args: &Args) -> Result<()> {
+    println!("(see `cargo bench --bench table1` for the measured version)");
+    cmd_complexity(_args)
+}
+
+fn cmd_fig1(args: &Args) -> Result<()> {
+    let small = args.flag("small");
+    let (n, iters) = if small { (500, 60_000) } else { (10_000, 400_000) };
+    let mut cfg = QuadExpConfig {
+        d: args.usize_or("d", 200)?,
+        n_workers: args.usize_or("n", n)?,
+        noise_sigma: 0.01,
+        seed: args.usize_or("seed", 0)? as u64,
+        max_iters: args.usize_or("max-iters", iters)? as u64,
+        max_time: f64::INFINITY,
+        target_gap: Some(1e-7),
+        record_every: 500,
+    };
+    cfg.n_workers = cfg.n_workers.max(2);
+    let model = ComputeModel::random_paper(cfg.n_workers);
+    let eps = 1e-4;
+    let c = cfg.constants(eps);
+    let r = complexity::default_r(c.sigma_sq, c.eps);
+    let kinds = [
+        SchedulerKind::Asgd {
+            gamma: complexity::theorem_stepsize(r, c),
+        },
+        SchedulerKind::Ringmaster {
+            r,
+            gamma: complexity::theorem_stepsize(r, c),
+            cancel: true,
+        },
+    ];
+    let mut curves = Vec::new();
+    for kind in &kinds {
+        println!("fig1: running {} (n={}) ...", kind.name(), cfg.n_workers);
+        let rec = experiments::run_quadratic(&cfg, model.clone(), kind);
+        println!(
+            "  t-target={}  final gap={:.2e}",
+            rec.time_to_target().map(fmt_secs).unwrap_or("—".into()),
+            rec.final_gap
+        );
+        curves.push(rec.gap_curve);
+    }
+    if args.flag("plot") {
+        let refs: Vec<&_> = curves.iter().collect();
+        print!("{}", ascii_plot(&refs, 72, 18));
+    }
+    if let Some(path) = args.get("csv-out") {
+        let refs: Vec<&_> = curves.iter().collect();
+        write_curves_csv(&PathBuf::from(path), &refs)?;
+        println!("wrote {path}");
+    }
+    Ok(())
+}
+
+fn cmd_fig2(args: &Args) -> Result<()> {
+    // full paper scale by default; --small for a quick pass
+    let small = args.flag("small");
+    let mut cfg = if small {
+        let mut c = QuadExpConfig::small();
+        c.n_workers = 128;
+        c.max_iters = 150_000;
+        c
+    } else {
+        QuadExpConfig::default()
+    };
+    cfg.seed = args.usize_or("seed", 0)? as u64;
+    cfg.target_gap = Some(args.f64_or("target-gap", if small { 1e-7 } else { 1e-6 })?);
+    let model = ComputeModel::random_paper(cfg.n_workers);
+    let eps = args.f64_or("eps", 1e-4)?;
+    let c = cfg.constants(eps);
+    let grid = paper_stepsize_grid();
+    let rb = paper_rb_grid(cfg.n_workers);
+    println!(
+        "fig2: d={} n={} σ_coord={} (σ²={:.3e}) R/B grid {:?}",
+        cfg.d, cfg.n_workers, cfg.noise_sigma, c.sigma_sq, rb
+    );
+
+    let mut curves = Vec::new();
+    // Ringmaster & Rennala: tune both stepsize and R/B (paper protocol)
+    for (family, is_ringmaster) in [("ringmaster", true), ("rennala", false)] {
+        let mut best: Option<(u64, f64, ringmaster::driver::RunRecord)> = None;
+        for &rb_val in &rb {
+            let (gamma, rec) = experiments::tune_stepsize(&cfg, &model, &grid, |g| {
+                if is_ringmaster {
+                    SchedulerKind::Ringmaster {
+                        r: rb_val,
+                        gamma: g,
+                        cancel: true,
+                    }
+                } else {
+                    SchedulerKind::Rennala { b: rb_val, gamma: g }
+                }
+            });
+            let better = match &best {
+                None => true,
+                Some((_, _, b)) => match (rec.time_to_target(), b.time_to_target()) {
+                    (Some(a), Some(bt)) => a < bt,
+                    (Some(_), None) => true,
+                    _ => false,
+                },
+            };
+            if better {
+                best = Some((rb_val, gamma, rec));
+            }
+        }
+        let (rb_best, gamma, mut rec) = best.unwrap();
+        println!(
+            "  {family}: best R/B={rb_best} γ={gamma:.4} t-target={}",
+            rec.time_to_target().map(fmt_secs).unwrap_or("—".into())
+        );
+        rec.gap_curve.name = family.to_string();
+        curves.push(rec.gap_curve);
+    }
+    // Delay-adaptive ASGD: tune stepsize only
+    let (gamma, mut rec) = experiments::tune_stepsize(&cfg, &model, &grid, |g| {
+        SchedulerKind::DelayAdaptive { gamma: g }
+    });
+    println!(
+        "  delay-adaptive: γ={gamma:.4} t-target={}",
+        rec.time_to_target().map(fmt_secs).unwrap_or("—".into())
+    );
+    rec.gap_curve.name = "delay-adaptive-asgd".into();
+    curves.push(rec.gap_curve);
+
+    if args.flag("plot") {
+        let refs: Vec<&_> = curves.iter().collect();
+        print!("{}", ascii_plot(&refs, 72, 18));
+    }
+    if let Some(path) = args.get("csv-out") {
+        let refs: Vec<&_> = curves.iter().collect();
+        write_curves_csv(&PathBuf::from(path), &refs)?;
+        println!("wrote {path}");
+    }
+    Ok(())
+}
+
+fn cmd_fig3(args: &Args) -> Result<()> {
+    use ringmaster::data::synthetic_mnist;
+    use ringmaster::train::MlpProblem;
+
+    let n_workers = args.usize_or("n", 64)?;
+    let max_iters = args.usize_or("max-iters", 600)? as u64;
+    let n_data = args.usize_or("n-data", 2000)?;
+    let seed = args.usize_or("seed", 0)? as u64;
+    let gamma = args.f64_or("gamma", 0.1)?;
+    let r = args.usize_or("r", 16)? as u64;
+
+    let ds = synthetic_mnist(n_data, 0.15, seed);
+    let (train, eval) = ds.split(0.2, seed);
+    let model = ComputeModel::random_paper(n_workers);
+    let kinds = [
+        SchedulerKind::Ringmaster { r, gamma, cancel: true },
+        SchedulerKind::DelayAdaptive { gamma },
+        SchedulerKind::Rennala { b: r, gamma },
+    ];
+    let mut curves = Vec::new();
+    for kind in &kinds {
+        let problem = MlpProblem::load_default(train.clone(), eval.clone())?;
+        let dcfg = DriverConfig {
+            seed,
+            max_iters,
+            record_every: 25,
+            ..Default::default()
+        };
+        let mut driver = Driver::new(problem, model.clone(), dcfg);
+        let mut sched = kind.build();
+        println!("fig3: running {} ...", sched.name());
+        let rec = driver.run(sched.as_mut());
+        let acc = driver.problem.accuracy(&rec.x_final)?;
+        println!(
+            "  iters={} sim_time={} eval-loss={:.4} eval-acc={:.1}%",
+            rec.iters,
+            fmt_secs(rec.sim_time),
+            rec.final_gap,
+            100.0 * acc
+        );
+        curves.push(rec.gap_curve);
+    }
+    if let Some(path) = args.get("csv-out") {
+        let refs: Vec<&_> = curves.iter().collect();
+        write_curves_csv(&PathBuf::from(path), &refs)?;
+        println!("wrote {path}");
+    }
+    Ok(())
+}
+
+fn cmd_train(args: &Args) -> Result<()> {
+    use ringmaster::data::synthetic_mnist;
+    use ringmaster::train::MlpProblem;
+
+    let steps = args.usize_or("steps", 400)? as u64;
+    let seed = args.usize_or("seed", 0)? as u64;
+    let gamma = args.f64_or("gamma", 0.2)?;
+    let ds = synthetic_mnist(args.usize_or("n-data", 2000)?, 0.15, seed);
+    let (train, eval) = ds.split(0.2, seed);
+    let problem = MlpProblem::load_default(train, eval)?;
+    println!(
+        "train: MLP dims {:?} ({} params), batch {} — {} steps of SGD via PJRT",
+        problem.dims, problem.param_count, problem.batch, steps
+    );
+    // single fast worker = plain SGD through the full artifact stack
+    let dcfg = DriverConfig {
+        seed,
+        max_iters: steps,
+        record_every: 20,
+        ..Default::default()
+    };
+    let mut driver = Driver::new(problem, ComputeModel::fixed_equal(1, 1.0), dcfg);
+    let mut sched = SchedulerKind::Ringmaster { r: 1, gamma, cancel: false }.build();
+    let rec = driver.run(sched.as_mut());
+    for (t, v) in rec.gap_curve.t.iter().zip(&rec.gap_curve.v) {
+        println!("  step~{t:>6.0}  eval-loss {v:.4}");
+    }
+    let acc = driver.problem.accuracy(&rec.x_final)?;
+    println!("final eval accuracy: {:.1}%", 100.0 * acc);
+    Ok(())
+}
+
+fn cmd_exec_demo(args: &Args) -> Result<()> {
+    use ringmaster::exec::{run_wallclock, ExecConfig};
+
+    let n = args.usize_or("n", 8)?;
+    let d = args.usize_or("d", 64)?;
+    let iters = args.usize_or("max-iters", 2000)? as u64;
+    let problem = QuadraticProblem::paper(d);
+    let model = ComputeModel::fixed_linear(n);
+    let cfg = ExecConfig {
+        time_scale: args.f64_or("time-scale", 2e-4)?,
+        max_iters: iters,
+        noise_sigma: 0.01,
+        seed: args.usize_or("seed", 0)? as u64,
+        ..Default::default()
+    };
+    for kind in [
+        SchedulerKind::Ringmaster { r: n as u64, gamma: 0.2, cancel: true },
+        SchedulerKind::Asgd { gamma: 0.1 },
+    ] {
+        let mut sched = kind.build();
+        let rec = run_wallclock(&problem, &model, sched.as_mut(), &cfg);
+        println!(
+            "exec {}: iters={} wall={:?} f={:.4e} ‖∇f‖²={:.3e} discarded={}",
+            sched.name(),
+            rec.iters,
+            rec.wall,
+            rec.final_value,
+            rec.final_gradnorm_sq,
+            rec.discarded
+        );
+    }
+    Ok(())
+}

@@ -1,0 +1,284 @@
+//! Metrics: time-series recording, summary statistics, CSV/JSON export and
+//! quick ASCII plotting for terminal inspection.
+//!
+//! A [`Curve`] records `(simulated time, value)` pairs — e.g. `f(x^k) − f*`
+//! against the cluster clock — with optional decimation so multi-million-
+//! iteration runs stay memory-bounded.
+
+pub mod trace;
+
+pub use trace::{Span, SpanOutcome, Trace};
+
+use std::fs::File;
+use std::io::{BufWriter, Write as _};
+use std::path::Path;
+
+use crate::util::json::{arr_f64, obj, write as json_write, Json};
+
+/// A recorded `(t, value)` time series with bounded memory.
+///
+/// When the number of points exceeds `2 * target_points`, every other point
+/// is dropped and the recording stride doubles — a standard streaming
+/// decimation that preserves curve shape.
+#[derive(Clone, Debug)]
+pub struct Curve {
+    pub name: String,
+    pub t: Vec<f64>,
+    pub v: Vec<f64>,
+    target_points: usize,
+    stride: u64,
+    counter: u64,
+}
+
+impl Curve {
+    pub fn new(name: impl Into<String>) -> Self {
+        Self::with_capacity(name, 4096)
+    }
+
+    pub fn with_capacity(name: impl Into<String>, target_points: usize) -> Self {
+        Self {
+            name: name.into(),
+            t: Vec::new(),
+            v: Vec::new(),
+            target_points: target_points.max(16),
+            stride: 1,
+            counter: 0,
+        }
+    }
+
+    /// Record a point (subject to the current decimation stride).
+    pub fn push(&mut self, t: f64, v: f64) {
+        if self.counter % self.stride == 0 {
+            self.t.push(t);
+            self.v.push(v);
+            if self.t.len() >= 2 * self.target_points {
+                self.decimate();
+            }
+        }
+        self.counter += 1;
+    }
+
+    /// Record unconditionally (used for final points).
+    pub fn push_always(&mut self, t: f64, v: f64) {
+        self.t.push(t);
+        self.v.push(v);
+    }
+
+    fn decimate(&mut self) {
+        let keep = |xs: &mut Vec<f64>| {
+            let mut i = 0;
+            xs.retain(|_| {
+                let k = i % 2 == 0;
+                i += 1;
+                k
+            });
+        };
+        keep(&mut self.t);
+        keep(&mut self.v);
+        self.stride *= 2;
+    }
+
+    pub fn len(&self) -> usize {
+        self.t.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.t.is_empty()
+    }
+
+    pub fn last(&self) -> Option<(f64, f64)> {
+        match (self.t.last(), self.v.last()) {
+            (Some(&t), Some(&v)) => Some((t, v)),
+            _ => None,
+        }
+    }
+
+    /// First time at which the value drops to or below `threshold`.
+    pub fn first_time_below(&self, threshold: f64) -> Option<f64> {
+        self.t
+            .iter()
+            .zip(&self.v)
+            .find(|(_, &v)| v <= threshold)
+            .map(|(&t, _)| t)
+    }
+
+    pub fn to_json(&self) -> Json {
+        obj(vec![
+            ("name", Json::Str(self.name.clone())),
+            ("t", arr_f64(&self.t)),
+            ("v", arr_f64(&self.v)),
+        ])
+    }
+}
+
+/// Write several curves to one CSV: `t,<name1>` blocks stacked long-form
+/// (`series,t,value` rows) — trivially consumable by pandas/gnuplot.
+pub fn write_curves_csv(path: &Path, curves: &[&Curve]) -> std::io::Result<()> {
+    if let Some(parent) = path.parent() {
+        std::fs::create_dir_all(parent)?;
+    }
+    let mut w = BufWriter::new(File::create(path)?);
+    writeln!(w, "series,t,value")?;
+    for c in curves {
+        for (t, v) in c.t.iter().zip(&c.v) {
+            writeln!(w, "{},{t},{v}", c.name)?;
+        }
+    }
+    Ok(())
+}
+
+/// Write curves as a JSON document.
+pub fn write_curves_json(path: &Path, curves: &[&Curve]) -> std::io::Result<()> {
+    if let Some(parent) = path.parent() {
+        std::fs::create_dir_all(parent)?;
+    }
+    let doc = Json::Arr(curves.iter().map(|c| c.to_json()).collect());
+    std::fs::write(path, json_write(&doc))
+}
+
+/// Summary statistics of a sample.
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub struct Summary {
+    pub n: usize,
+    pub mean: f64,
+    pub min: f64,
+    pub max: f64,
+    pub p50: f64,
+    pub p90: f64,
+}
+
+impl Summary {
+    pub fn of(xs: &[f64]) -> Option<Summary> {
+        if xs.is_empty() {
+            return None;
+        }
+        let mut sorted = xs.to_vec();
+        sorted.sort_by(|a, b| a.partial_cmp(b).unwrap());
+        let q = |p: f64| sorted[((sorted.len() - 1) as f64 * p).round() as usize];
+        Some(Summary {
+            n: xs.len(),
+            mean: xs.iter().sum::<f64>() / xs.len() as f64,
+            min: sorted[0],
+            max: *sorted.last().unwrap(),
+            p50: q(0.5),
+            p90: q(0.9),
+        })
+    }
+}
+
+/// Render a log-y ASCII plot of curves for quick terminal inspection.
+pub fn ascii_plot(curves: &[&Curve], width: usize, height: usize) -> String {
+    let (mut t_max, mut v_min, mut v_max) = (0.0f64, f64::INFINITY, f64::NEG_INFINITY);
+    for c in curves {
+        for (&t, &v) in c.t.iter().zip(&c.v) {
+            if v > 0.0 {
+                v_min = v_min.min(v);
+                v_max = v_max.max(v);
+            }
+            t_max = t_max.max(t);
+        }
+    }
+    if !v_min.is_finite() || v_min <= 0.0 || t_max <= 0.0 || v_max <= v_min {
+        return String::from("(nothing to plot)\n");
+    }
+    let (lv_min, lv_max) = (v_min.ln(), v_max.ln());
+    let mut grid = vec![vec![b' '; width]; height];
+    for (ci, c) in curves.iter().enumerate() {
+        let ch = b"*+ox#@"[ci % 6];
+        for (&t, &v) in c.t.iter().zip(&c.v) {
+            if v <= 0.0 {
+                continue;
+            }
+            let xi = ((t / t_max) * (width - 1) as f64).round() as usize;
+            let yi = (((v.ln() - lv_min) / (lv_max - lv_min)) * (height - 1) as f64).round()
+                as usize;
+            grid[height - 1 - yi][xi.min(width - 1)] = ch;
+        }
+    }
+    let mut out = String::new();
+    out.push_str(&format!("log(value): {v_max:.3e} (top) .. {v_min:.3e} (bottom)\n"));
+    for row in grid {
+        out.push('|');
+        out.push_str(std::str::from_utf8(&row).unwrap());
+        out.push('\n');
+    }
+    out.push('+');
+    out.push_str(&"-".repeat(width));
+    out.push_str(&format!("  t: 0 .. {:.3}\n", t_max));
+    for (ci, c) in curves.iter().enumerate() {
+        out.push_str(&format!("  '{}' = {}\n", b"*+ox#@"[ci % 6] as char, c.name));
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn curve_records_and_finds_threshold() {
+        let mut c = Curve::new("loss");
+        for i in 0..100 {
+            c.push(i as f64, 100.0 - i as f64);
+        }
+        assert_eq!(c.first_time_below(50.0), Some(50.0));
+        assert_eq!(c.first_time_below(-1.0), None);
+        assert_eq!(c.last(), Some((99.0, 1.0)));
+    }
+
+    #[test]
+    fn curve_decimates_but_keeps_shape() {
+        let mut c = Curve::with_capacity("big", 64);
+        for i in 0..100_000 {
+            c.push(i as f64, (100_000 - i) as f64);
+        }
+        assert!(c.len() <= 160, "len={}", c.len());
+        // still monotone decreasing
+        assert!(c.v.windows(2).all(|w| w[0] >= w[1]));
+        // spans the full range
+        assert_eq!(c.t[0], 0.0);
+        assert!(*c.t.last().unwrap() > 90_000.0);
+    }
+
+    #[test]
+    fn summary_quantiles() {
+        let xs: Vec<f64> = (1..=100).map(|i| i as f64).collect();
+        let s = Summary::of(&xs).unwrap();
+        assert_eq!(s.n, 100);
+        assert_eq!(s.min, 1.0);
+        assert_eq!(s.max, 100.0);
+        assert!((s.mean - 50.5).abs() < 1e-12);
+        assert!((s.p50 - 50.0).abs() <= 1.0);
+        assert!((s.p90 - 90.0).abs() <= 1.0);
+        assert!(Summary::of(&[]).is_none());
+    }
+
+    #[test]
+    fn csv_and_json_outputs() {
+        let dir = std::env::temp_dir().join("ringmaster_metrics_test");
+        let mut c = Curve::new("a");
+        c.push(0.0, 1.0);
+        c.push(1.0, 0.5);
+        let csv_path = dir.join("curves.csv");
+        write_curves_csv(&csv_path, &[&c]).unwrap();
+        let text = std::fs::read_to_string(&csv_path).unwrap();
+        assert!(text.starts_with("series,t,value\n"));
+        assert!(text.contains("a,1,0.5"));
+        let json_path = dir.join("curves.json");
+        write_curves_json(&json_path, &[&c]).unwrap();
+        let doc = crate::util::json::parse(&std::fs::read_to_string(&json_path).unwrap()).unwrap();
+        assert_eq!(doc.at(0).get("name").as_str(), Some("a"));
+        std::fs::remove_dir_all(&dir).ok();
+    }
+
+    #[test]
+    fn ascii_plot_renders() {
+        let mut c = Curve::new("loss");
+        for i in 1..50 {
+            c.push(i as f64, 1.0 / i as f64);
+        }
+        let plot = ascii_plot(&[&c], 40, 10);
+        assert!(plot.contains('*'));
+        assert!(plot.contains("loss"));
+    }
+}

@@ -1,0 +1,184 @@
+//! Per-worker execution traces: what each worker was doing, when, and what
+//! became of its gradient — the observability layer of the framework.
+//!
+//! Recording is opt-in (`DriverConfig::record_trace`), ring-buffered to a
+//! bounded number of spans, and exports both a utilization summary and a
+//! Chrome-trace-style CSV (`worker,start,end,outcome,start_k`).
+
+use std::collections::VecDeque;
+use std::io::Write as _;
+use std::path::Path;
+
+/// What happened to one assignment.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum SpanOutcome {
+    /// Gradient delivered and applied as a step.
+    Applied,
+    /// Gradient delivered and accumulated into a batch.
+    Accumulated,
+    /// Gradient delivered but ignored (Algorithm 4's else-branch; Rennala's
+    /// stale drop).
+    Discarded,
+    /// Computation stopped by Algorithm 5 before completion.
+    Cancelled,
+}
+
+impl SpanOutcome {
+    pub fn as_str(&self) -> &'static str {
+        match self {
+            SpanOutcome::Applied => "applied",
+            SpanOutcome::Accumulated => "accumulated",
+            SpanOutcome::Discarded => "discarded",
+            SpanOutcome::Cancelled => "cancelled",
+        }
+    }
+}
+
+/// One worker-assignment span.
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub struct Span {
+    pub worker: usize,
+    pub start: f64,
+    pub end: f64,
+    pub start_k: u64,
+    pub outcome: SpanOutcome,
+}
+
+/// Bounded trace recorder.
+#[derive(Clone, Debug)]
+pub struct Trace {
+    spans: VecDeque<Span>,
+    cap: usize,
+    n_workers: usize,
+    /// running totals, never truncated
+    pub busy_time: Vec<f64>,
+    pub useful_time: Vec<f64>,
+    dropped: u64,
+}
+
+impl Trace {
+    pub fn new(n_workers: usize, cap: usize) -> Self {
+        Self {
+            spans: VecDeque::new(),
+            cap: cap.max(16),
+            n_workers,
+            busy_time: vec![0.0; n_workers],
+            useful_time: vec![0.0; n_workers],
+            dropped: 0,
+        }
+    }
+
+    pub fn record(&mut self, span: Span) {
+        debug_assert!(span.worker < self.n_workers);
+        debug_assert!(span.end >= span.start);
+        let dt = span.end - span.start;
+        self.busy_time[span.worker] += dt;
+        if matches!(span.outcome, SpanOutcome::Applied | SpanOutcome::Accumulated) {
+            self.useful_time[span.worker] += dt;
+        }
+        if self.spans.len() == self.cap {
+            self.spans.pop_front();
+            self.dropped += 1;
+        }
+        self.spans.push_back(span);
+    }
+
+    pub fn spans(&self) -> impl Iterator<Item = &Span> {
+        self.spans.iter()
+    }
+
+    pub fn len(&self) -> usize {
+        self.spans.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.spans.is_empty()
+    }
+
+    pub fn dropped(&self) -> u64 {
+        self.dropped
+    }
+
+    /// Fraction of each worker's busy time that produced a *used* gradient
+    /// (applied or accumulated) — the waste metric of §3.6.
+    pub fn efficiency(&self, horizon: f64) -> Vec<f64> {
+        let _ = horizon;
+        self.busy_time
+            .iter()
+            .zip(&self.useful_time)
+            .map(|(&b, &u)| if b > 0.0 { u / b } else { 0.0 })
+            .collect()
+    }
+
+    /// CSV export: `worker,start,end,start_k,outcome`.
+    pub fn write_csv(&self, path: &Path) -> std::io::Result<()> {
+        if let Some(parent) = path.parent() {
+            std::fs::create_dir_all(parent)?;
+        }
+        let mut w = std::io::BufWriter::new(std::fs::File::create(path)?);
+        writeln!(w, "worker,start,end,start_k,outcome")?;
+        for s in &self.spans {
+            writeln!(
+                w,
+                "{},{},{},{},{}",
+                s.worker,
+                s.start,
+                s.end,
+                s.start_k,
+                s.outcome.as_str()
+            )?;
+        }
+        Ok(())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn span(worker: usize, start: f64, end: f64, outcome: SpanOutcome) -> Span {
+        Span {
+            worker,
+            start,
+            end,
+            start_k: 0,
+            outcome,
+        }
+    }
+
+    #[test]
+    fn accumulates_busy_and_useful_time() {
+        let mut t = Trace::new(2, 100);
+        t.record(span(0, 0.0, 2.0, SpanOutcome::Applied));
+        t.record(span(0, 2.0, 3.0, SpanOutcome::Discarded));
+        t.record(span(1, 0.0, 4.0, SpanOutcome::Cancelled));
+        assert_eq!(t.busy_time, vec![3.0, 4.0]);
+        assert_eq!(t.useful_time, vec![2.0, 0.0]);
+        let eff = t.efficiency(4.0);
+        assert!((eff[0] - 2.0 / 3.0).abs() < 1e-12);
+        assert_eq!(eff[1], 0.0);
+    }
+
+    #[test]
+    fn ring_buffer_caps_spans_but_not_totals() {
+        let mut t = Trace::new(1, 16);
+        for i in 0..100 {
+            t.record(span(0, i as f64, i as f64 + 1.0, SpanOutcome::Applied));
+        }
+        assert_eq!(t.len(), 16);
+        assert_eq!(t.dropped(), 84);
+        assert_eq!(t.busy_time[0], 100.0); // totals keep counting
+    }
+
+    #[test]
+    fn csv_round_trip() {
+        let mut t = Trace::new(2, 8);
+        t.record(span(1, 1.5, 2.5, SpanOutcome::Accumulated));
+        let path = std::env::temp_dir().join("ringmaster_trace_test.csv");
+        t.write_csv(&path).unwrap();
+        let body = std::fs::read_to_string(&path).unwrap();
+        assert!(body.starts_with("worker,start,end,start_k,outcome"));
+        assert!(body.contains("1,1.5,2.5,0,accumulated"));
+        std::fs::remove_file(path).ok();
+    }
+}

@@ -1,0 +1,182 @@
+//! Optimization problems: the objectives the schedulers are run against.
+//!
+//! Two layers of abstraction:
+//!
+//! * [`Problem`] — a deterministic objective with exact value/gradient
+//!   (the `f` of the paper).
+//! * [`StochasticProblem`] — what the driver consumes: a source of
+//!   *stochastic* gradients (Assumption 1.3) plus a deterministic
+//!   evaluation path for recording `f(x^k) − f*` and `‖∇f(x^k)‖²`.
+//!
+//! [`Noisy`] lifts any `Problem` to a `StochasticProblem` by adding
+//! i.i.d. Gaussian noise `ξ ~ N(0, noise_sigma² I)` — exactly the paper's
+//! §G construction `∇f(x, ξ) = ∇f(x) + ξ`.  PJRT-backed problems
+//! (`opt::pjrt`, [`crate::train`]) implement `StochasticProblem` directly
+//! with minibatch sampling.
+
+pub mod logistic;
+pub mod pjrt;
+pub mod quadratic;
+
+pub use logistic::LogisticProblem;
+pub use pjrt::PjrtQuadratic;
+pub use quadratic::QuadraticProblem;
+
+use crate::prng::Prng;
+
+/// A deterministic differentiable objective.
+pub trait Problem {
+    fn dim(&self) -> usize;
+
+    /// Exact `f(x)` and `∇f(x)` (gradient written into `grad`).
+    fn value_grad(&self, x: &[f64], grad: &mut [f64]) -> f64;
+
+    /// Exact `f(x)` only (default: via `value_grad`).
+    fn value(&self, x: &[f64]) -> f64 {
+        let mut g = vec![0.0; self.dim()];
+        self.value_grad(x, &mut g)
+    }
+
+    /// Known optimum `f* = inf f`, if available (Assumption 1.2's `f^inf`).
+    fn f_star(&self) -> Option<f64> {
+        None
+    }
+
+    /// Known smoothness constant `L` (Assumption 1.1), if available.
+    fn smoothness(&self) -> Option<f64> {
+        None
+    }
+
+    /// Starting point `x^0`.
+    fn init_point(&self) -> Vec<f64> {
+        vec![0.0; self.dim()]
+    }
+}
+
+/// A source of stochastic gradients plus an exact evaluation path.
+pub trait StochasticProblem {
+    fn dim(&self) -> usize;
+
+    /// Draw a stochastic gradient `∇f(x; ξ)` into `grad` and return a
+    /// cheap scalar associated with the draw (typically `f(x)` or the
+    /// minibatch loss — used for diagnostics only).
+    fn stoch_grad(&mut self, x: &[f64], rng: &mut Prng, grad: &mut [f64]) -> f64;
+
+    /// Exact (or best-effort deterministic) `f(x)` and `∇f(x)` for curve
+    /// recording and ε-stationarity checks.
+    fn eval_value_grad(&mut self, x: &[f64], grad: &mut [f64]) -> f64;
+
+    fn f_star(&self) -> Option<f64> {
+        None
+    }
+
+    fn smoothness(&self) -> Option<f64> {
+        None
+    }
+
+    /// Total gradient-noise second moment `σ² ≥ E‖∇f(x;ξ) − ∇f(x)‖²`
+    /// (Assumption 1.3), if known. Drives the theory-side `R` and `γ`.
+    fn sigma_sq(&self) -> Option<f64> {
+        None
+    }
+
+    fn init_point(&self) -> Vec<f64>;
+}
+
+/// Additive-Gaussian-noise lift: `∇f(x, ξ) = ∇f(x) + ξ`, `ξ ~ N(0, s² I)`.
+pub struct Noisy<P: Problem> {
+    pub inner: P,
+    /// Per-coordinate noise standard deviation `s` (the paper's §G uses
+    /// `s = 0.01`); the Assumption-1.3 constant is `σ² = d·s²`.
+    pub noise_sigma: f64,
+}
+
+impl<P: Problem> Noisy<P> {
+    pub fn new(inner: P, noise_sigma: f64) -> Self {
+        assert!(noise_sigma >= 0.0);
+        Self { inner, noise_sigma }
+    }
+}
+
+impl<P: Problem> StochasticProblem for Noisy<P> {
+    fn dim(&self) -> usize {
+        self.inner.dim()
+    }
+
+    fn stoch_grad(&mut self, x: &[f64], rng: &mut Prng, grad: &mut [f64]) -> f64 {
+        let v = self.inner.value_grad(x, grad);
+        if self.noise_sigma > 0.0 {
+            for g in grad.iter_mut() {
+                *g += rng.normal(0.0, self.noise_sigma);
+            }
+        }
+        v
+    }
+
+    fn eval_value_grad(&mut self, x: &[f64], grad: &mut [f64]) -> f64 {
+        self.inner.value_grad(x, grad)
+    }
+
+    fn f_star(&self) -> Option<f64> {
+        self.inner.f_star()
+    }
+
+    fn smoothness(&self) -> Option<f64> {
+        self.inner.smoothness()
+    }
+
+    fn sigma_sq(&self) -> Option<f64> {
+        Some(self.dim() as f64 * self.noise_sigma * self.noise_sigma)
+    }
+
+    fn init_point(&self) -> Vec<f64> {
+        self.inner.init_point()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::linalg::nrm2_sq;
+
+    #[test]
+    fn noisy_wrapper_is_unbiased_with_right_variance() {
+        let mut p = Noisy::new(QuadraticProblem::paper(8), 0.5);
+        let x = vec![0.3; 8];
+        let mut exact = vec![0.0; 8];
+        p.eval_value_grad(&x, &mut exact);
+
+        let mut rng = Prng::seed_from_u64(4);
+        let trials = 20_000;
+        let mut mean = vec![0.0; 8];
+        let mut sq_dev = 0.0;
+        let mut g = vec![0.0; 8];
+        for _ in 0..trials {
+            p.stoch_grad(&x, &mut rng, &mut g);
+            for i in 0..8 {
+                mean[i] += g[i];
+            }
+            let dev: Vec<f64> = g.iter().zip(&exact).map(|(a, b)| a - b).collect();
+            sq_dev += nrm2_sq(&dev);
+        }
+        for (m, e) in mean.iter().zip(&exact) {
+            assert!((m / trials as f64 - e).abs() < 0.02);
+        }
+        let emp_sigma_sq = sq_dev / trials as f64;
+        let theory = p.sigma_sq().unwrap(); // d * s^2 = 8 * 0.25 = 2
+        assert!((emp_sigma_sq - theory).abs() / theory < 0.05);
+    }
+
+    #[test]
+    fn zero_noise_is_exact() {
+        let mut p = Noisy::new(QuadraticProblem::paper(4), 0.0);
+        let x = vec![1.0, -1.0, 2.0, 0.0];
+        let mut rng = Prng::seed_from_u64(0);
+        let mut a = vec![0.0; 4];
+        let mut b = vec![0.0; 4];
+        let va = p.stoch_grad(&x, &mut rng, &mut a);
+        let vb = p.eval_value_grad(&x, &mut b);
+        assert_eq!(a, b);
+        assert_eq!(va, vb);
+    }
+}

@@ -1,0 +1,104 @@
+//! PJRT-backed quadratic: the §G objective evaluated through the compiled
+//! JAX/Pallas artifact instead of the native stencil.
+//!
+//! Functionally identical to [`super::QuadraticProblem`] (the integration
+//! suite asserts agreement to f32 precision); exists so the *full* paper
+//! pipeline — Pallas kernel → HLO → PJRT — can carry the simulation
+//! studies end-to-end, and so the perf pass can compare native vs PJRT
+//! gradient cost.
+
+use anyhow::{anyhow, Result};
+
+use crate::linalg::TridiagToeplitz;
+use crate::runtime::PjrtRuntime;
+
+use super::Problem;
+
+/// `f(x) = ½xᵀAx − bᵀx` with `(value, grad)` computed by the
+/// `quad_vg_d{d}` artifact (Pallas tridiagonal kernel inside).
+pub struct PjrtQuadratic {
+    runtime: std::cell::RefCell<PjrtRuntime>,
+    entry: String,
+    d: usize,
+    f_star: f64,
+    l_smooth: f64,
+    /// Reusable f32 staging buffer for the iterate.
+    scratch: std::cell::RefCell<Vec<f32>>,
+}
+
+impl PjrtQuadratic {
+    /// Load the artifact for dimension `d` from `runtime`'s manifest.
+    pub fn new(mut runtime: PjrtRuntime, d: usize) -> Result<Self> {
+        let entry = format!("quad_vg_d{d}");
+        let ent = runtime.manifest().entry(&entry)?.clone();
+        let meta = &ent.meta;
+        let (lo, di, up) = (
+            meta.get("lo").as_f64().ok_or_else(|| anyhow!("meta.lo"))?,
+            meta.get("di").as_f64().ok_or_else(|| anyhow!("meta.di"))?,
+            meta.get("up").as_f64().ok_or_else(|| anyhow!("meta.up"))?,
+        );
+        // Exact theory constants from the band structure (native solve).
+        let a = TridiagToeplitz::new(d, lo, di, up);
+        let mut b = vec![0.0; d];
+        b[0] = -0.25;
+        let x_star = a.solve(&b);
+        let f_star = -0.5 * crate::linalg::dot(&b, &x_star);
+        let l_smooth = a.eig_max();
+        runtime.warmup(&entry)?;
+        Ok(Self {
+            runtime: std::cell::RefCell::new(runtime),
+            entry,
+            d,
+            f_star,
+            l_smooth,
+            scratch: std::cell::RefCell::new(vec![0.0; d]),
+        })
+    }
+
+    /// Convenience: load from the default artifacts directory.
+    pub fn load_default(d: usize) -> Result<Self> {
+        Self::new(PjrtRuntime::load_default()?, d)
+    }
+
+    /// Access the underlying runtime (e.g. to share it with other problems).
+    pub fn runtime(&self) -> std::cell::RefMut<'_, PjrtRuntime> {
+        self.runtime.borrow_mut()
+    }
+}
+
+impl Problem for PjrtQuadratic {
+    fn dim(&self) -> usize {
+        self.d
+    }
+
+    fn value_grad(&self, x: &[f64], grad: &mut [f64]) -> f64 {
+        let mut xf = self.scratch.borrow_mut();
+        for (o, &v) in xf.iter_mut().zip(x) {
+            *o = v as f32;
+        }
+        // RefCell: the driver is single-threaded; the only mutation is
+        // the (already-warmed) executable-cache lookup.
+        let results = self
+            .runtime
+            .borrow_mut()
+            .execute_f32(&self.entry, &[&xf])
+            .expect("pjrt execution failed");
+        let value = results[0][0] as f64;
+        for (g, &v) in grad.iter_mut().zip(&results[1]) {
+            *g = v as f64;
+        }
+        value
+    }
+
+    fn f_star(&self) -> Option<f64> {
+        Some(self.f_star)
+    }
+
+    fn smoothness(&self) -> Option<f64> {
+        Some(self.l_smooth)
+    }
+
+    fn init_point(&self) -> Vec<f64> {
+        vec![0.0; self.d]
+    }
+}

@@ -1,0 +1,184 @@
+//! The paper's §G quadratic: `f(x) = ½ xᵀA x − bᵀx` with
+//! `A = (1/4) tridiag(-1, 2, -1)` and `b = (1/4)(-1, 0, …, 0)`.
+//!
+//! Everything is exact: the gradient is a tridiagonal stencil, the
+//! minimizer comes from a Thomas solve, and `L = λ_max(A)` has a closed
+//! form — so the theory-side constants (`Δ`, `L`, `σ²`) used by the
+//! complexity calculators are not estimates.
+
+use crate::linalg::{dot, TridiagToeplitz};
+
+use super::Problem;
+
+/// Convex quadratic with constant-band tridiagonal Hessian.
+#[derive(Clone, Debug)]
+pub struct QuadraticProblem {
+    pub a: TridiagToeplitz,
+    pub b: Vec<f64>,
+    f_star: f64,
+    l_smooth: f64,
+    /// Scratch-free: matvec writes into caller-provided buffers.
+    x_star: Vec<f64>,
+}
+
+impl QuadraticProblem {
+    /// Generic constructor (computes `x* = A⁻¹ b`, `f* = −½ bᵀx*`, `L`).
+    pub fn new(a: TridiagToeplitz, b: Vec<f64>) -> Self {
+        assert_eq!(a.d, b.len());
+        let x_star = a.solve(&b);
+        let f_star = -0.5 * dot(&b, &x_star);
+        let l_smooth = a.eig_max();
+        Self {
+            a,
+            b,
+            f_star,
+            l_smooth,
+            x_star,
+        }
+    }
+
+    /// The paper's §G instance of dimension `d` (paper: `d = 1729`).
+    pub fn paper(d: usize) -> Self {
+        let mut b = vec![0.0; d];
+        b[0] = -0.25;
+        Self::new(TridiagToeplitz::paper(d), b)
+    }
+
+    /// Exact minimizer.
+    pub fn x_star(&self) -> &[f64] {
+        &self.x_star
+    }
+
+    /// `Δ = f(x⁰) − f*` from the all-zeros start (Assumption 1.2).
+    pub fn delta(&self) -> f64 {
+        // f(0) = 0
+        -self.f_star
+    }
+}
+
+impl Problem for QuadraticProblem {
+    fn dim(&self) -> usize {
+        self.a.d
+    }
+
+    fn value_grad(&self, x: &[f64], grad: &mut [f64]) -> f64 {
+        // grad = A x − b ; f = ½ x·(A x) − b·x = ½ x·(grad + b) − b·x
+        self.a.matvec(x, grad);
+        let x_ax = dot(x, grad);
+        let bx = dot(&self.b, x);
+        for (g, bi) in grad.iter_mut().zip(&self.b) {
+            *g -= bi;
+        }
+        0.5 * x_ax - bx
+    }
+
+    fn value(&self, x: &[f64]) -> f64 {
+        let mut ax = vec![0.0; x.len()];
+        self.a.matvec(x, &mut ax);
+        0.5 * dot(x, &ax) - dot(&self.b, x)
+    }
+
+    fn f_star(&self) -> Option<f64> {
+        Some(self.f_star)
+    }
+
+    fn smoothness(&self) -> Option<f64> {
+        Some(self.l_smooth)
+    }
+
+    fn init_point(&self) -> Vec<f64> {
+        vec![0.0; self.dim()]
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::linalg::{axpy, nrm2, nrm2_sq};
+
+    #[test]
+    fn gradient_vanishes_at_x_star() {
+        let p = QuadraticProblem::paper(101);
+        let mut g = vec![0.0; 101];
+        let v = p.value_grad(p.x_star(), &mut g);
+        assert!(nrm2(&g) < 1e-10);
+        assert!((v - p.f_star().unwrap()).abs() < 1e-12);
+    }
+
+    #[test]
+    fn f_star_is_global_min_nearby() {
+        let p = QuadraticProblem::paper(30);
+        let mut rng = crate::prng::Prng::seed_from_u64(1);
+        let fs = p.f_star().unwrap();
+        for _ in 0..50 {
+            let mut x = p.x_star().to_vec();
+            for xi in x.iter_mut() {
+                *xi += rng.normal(0.0, 0.3);
+            }
+            assert!(p.value(&x) >= fs - 1e-12);
+        }
+    }
+
+    #[test]
+    fn value_grad_consistent_with_finite_differences() {
+        let p = QuadraticProblem::paper(12);
+        let mut rng = crate::prng::Prng::seed_from_u64(2);
+        let x: Vec<f64> = (0..12).map(|_| rng.normal(0.0, 1.0)).collect();
+        let mut g = vec![0.0; 12];
+        p.value_grad(&x, &mut g);
+        let h = 1e-6;
+        for i in 0..12 {
+            let mut xp = x.clone();
+            xp[i] += h;
+            let mut xm = x.clone();
+            xm[i] -= h;
+            let fd = (p.value(&xp) - p.value(&xm)) / (2.0 * h);
+            assert!((fd - g[i]).abs() < 1e-5, "coord {i}: {fd} vs {}", g[i]);
+        }
+    }
+
+    #[test]
+    fn descent_with_gradient_step() {
+        let p = QuadraticProblem::paper(64);
+        let l = p.smoothness().unwrap();
+        let mut x = vec![0.0; 64];
+        let mut g = vec![0.0; 64];
+        let mut prev = p.value(&x);
+        for _ in 0..100 {
+            p.value_grad(&x, &mut g);
+            axpy(-1.0 / l, &g, &mut x);
+            let v = p.value(&x);
+            assert!(v <= prev + 1e-14);
+            prev = v;
+        }
+        // gradient norm shrinks
+        p.value_grad(&x, &mut g);
+        assert!(nrm2_sq(&g) < 0.25 * 0.0625); // well below ‖∇f(0)‖² = ‖b‖²
+    }
+
+    #[test]
+    fn smoothness_bounds_gradient_lipschitz() {
+        let p = QuadraticProblem::paper(40);
+        let l = p.smoothness().unwrap();
+        let mut rng = crate::prng::Prng::seed_from_u64(3);
+        for _ in 0..20 {
+            let x: Vec<f64> = (0..40).map(|_| rng.normal(0.0, 1.0)).collect();
+            let y: Vec<f64> = (0..40).map(|_| rng.normal(0.0, 1.0)).collect();
+            let mut gx = vec![0.0; 40];
+            let mut gy = vec![0.0; 40];
+            p.value_grad(&x, &mut gx);
+            p.value_grad(&y, &mut gy);
+            let diff_g: Vec<f64> = gx.iter().zip(&gy).map(|(a, b)| a - b).collect();
+            let diff_x: Vec<f64> = x.iter().zip(&y).map(|(a, b)| a - b).collect();
+            assert!(nrm2(&diff_g) <= l * nrm2(&diff_x) + 1e-10);
+        }
+    }
+
+    #[test]
+    fn delta_matches_paper_construction() {
+        let p = QuadraticProblem::paper(1729);
+        // f(0) = 0, so Δ = −f*; must be strictly positive and finite.
+        assert!(p.delta() > 0.0 && p.delta().is_finite());
+        assert_eq!(p.value(&vec![0.0; 1729]), 0.0);
+    }
+}

@@ -1,0 +1,114 @@
+//! Reusable distribution objects for worker-compute-time models.
+//!
+//! The paper's experiments draw per-gradient computation times from several
+//! shapes (constant, linear-in-index, `i + |N(0, i)|`, heavy-tailed).  A
+//! [`TimeDist`] packages one such shape so compute models ([`crate::sim`])
+//! can sample it per completion.
+
+use super::Prng;
+
+/// A distribution over per-gradient computation *durations* (seconds > 0).
+#[derive(Clone, Debug, PartialEq)]
+pub enum TimeDist {
+    /// Always exactly `tau`.
+    Constant(f64),
+    /// `base + |N(0, sigma^2)|` — the paper's §G model with
+    /// `base = i`, `sigma = sqrt(i)`.
+    ShiftedHalfNormal { base: f64, sigma: f64 },
+    /// Exponential with the given mean (memoryless stragglers).
+    Exponential { mean: f64 },
+    /// Log-normal (heavy-tail stragglers; Dean & Barroso 2013).
+    LogNormal { mu: f64, sigma: f64 },
+    /// Uniform in `[lo, hi)`.
+    Uniform { lo: f64, hi: f64 },
+}
+
+impl TimeDist {
+    /// Draw one duration. Guaranteed strictly positive.
+    pub fn sample(&self, rng: &mut Prng) -> f64 {
+        let t = match *self {
+            TimeDist::Constant(tau) => tau,
+            TimeDist::ShiftedHalfNormal { base, sigma } => base + rng.normal(0.0, sigma).abs(),
+            TimeDist::Exponential { mean } => rng.exponential(1.0 / mean),
+            TimeDist::LogNormal { mu, sigma } => rng.lognormal(mu, sigma),
+            TimeDist::Uniform { lo, hi } => rng.f64_in(lo, hi),
+        };
+        t.max(1e-12)
+    }
+
+    /// Expected value (exact where closed-form, used for τ̄ estimates).
+    pub fn mean(&self) -> f64 {
+        match *self {
+            TimeDist::Constant(tau) => tau,
+            TimeDist::ShiftedHalfNormal { base, sigma } => {
+                base + sigma * (2.0 / std::f64::consts::PI).sqrt()
+            }
+            TimeDist::Exponential { mean } => mean,
+            TimeDist::LogNormal { mu, sigma } => (mu + 0.5 * sigma * sigma).exp(),
+            TimeDist::Uniform { lo, hi } => 0.5 * (lo + hi),
+        }
+    }
+
+    /// An upper bound on the duration, where one exists (`None` for
+    /// unbounded distributions).  This is the `τ_i` of the paper's *fixed
+    /// computation model* (eq. 1): "worker i takes **no more than** τ_i".
+    pub fn upper_bound(&self) -> Option<f64> {
+        match *self {
+            TimeDist::Constant(tau) => Some(tau),
+            TimeDist::Uniform { hi, .. } => Some(hi),
+            _ => None,
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn empirical_mean(d: &TimeDist, n: usize) -> f64 {
+        let mut rng = Prng::seed_from_u64(99);
+        (0..n).map(|_| d.sample(&mut rng)).sum::<f64>() / n as f64
+    }
+
+    #[test]
+    fn constant_is_constant() {
+        let d = TimeDist::Constant(3.5);
+        let mut rng = Prng::seed_from_u64(1);
+        for _ in 0..10 {
+            assert_eq!(d.sample(&mut rng), 3.5);
+        }
+        assert_eq!(d.mean(), 3.5);
+        assert_eq!(d.upper_bound(), Some(3.5));
+    }
+
+    #[test]
+    fn shifted_half_normal_mean_matches_closed_form() {
+        let d = TimeDist::ShiftedHalfNormal { base: 4.0, sigma: 2.0 };
+        let m = empirical_mean(&d, 200_000);
+        assert!((m - d.mean()).abs() < 0.02, "emp {m} vs {}", d.mean());
+    }
+
+    #[test]
+    fn samples_always_positive() {
+        let dists = [
+            TimeDist::ShiftedHalfNormal { base: 0.0, sigma: 1.0 },
+            TimeDist::Exponential { mean: 0.1 },
+            TimeDist::LogNormal { mu: -2.0, sigma: 1.0 },
+            TimeDist::Uniform { lo: 0.0, hi: 1.0 },
+        ];
+        let mut rng = Prng::seed_from_u64(5);
+        for d in &dists {
+            for _ in 0..1000 {
+                assert!(d.sample(&mut rng) > 0.0);
+            }
+        }
+    }
+
+    #[test]
+    fn exponential_and_lognormal_means() {
+        let e = TimeDist::Exponential { mean: 2.0 };
+        assert!((empirical_mean(&e, 200_000) - 2.0).abs() < 0.02);
+        let l = TimeDist::LogNormal { mu: 0.0, sigma: 0.5 };
+        assert!((empirical_mean(&l, 400_000) - l.mean()).abs() < 0.02);
+    }
+}

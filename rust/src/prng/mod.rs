@@ -1,0 +1,336 @@
+//! Deterministic pseudo-random substrate (no external `rand` available).
+//!
+//! * [`SplitMix64`] — seed expander / stream splitter.
+//! * [`Xoshiro256pp`] — main generator (xoshiro256++, Blackman & Vigna).
+//! * [`Prng`] — convenience façade with distributions: uniform, Gaussian
+//!   (ziggurat; polar Box–Muller retained as cross-check), exponential,
+//!   log-normal.
+//!
+//! Every stochastic component of the framework (worker compute times,
+//! gradient noise, data generation, property tests) draws from a [`Prng`]
+//! derived from an explicit seed, so all experiments are bit-reproducible.
+
+mod distributions;
+mod ziggurat;
+
+pub use distributions::*;
+pub use ziggurat::gaussian_ziggurat;
+
+/// SplitMix64: tiny, full-period seed expander.
+///
+/// Used to derive the state of [`Xoshiro256pp`] from a single `u64` seed
+/// and to split independent child streams (per worker, per component).
+#[derive(Clone, Debug)]
+pub struct SplitMix64 {
+    state: u64,
+}
+
+impl SplitMix64 {
+    pub fn new(seed: u64) -> Self {
+        Self { state: seed }
+    }
+
+    #[inline]
+    pub fn next_u64(&mut self) -> u64 {
+        self.state = self.state.wrapping_add(0x9E3779B97F4A7C15);
+        let mut z = self.state;
+        z = (z ^ (z >> 30)).wrapping_mul(0xBF58476D1CE4E5B9);
+        z = (z ^ (z >> 27)).wrapping_mul(0x94D049BB133111EB);
+        z ^ (z >> 31)
+    }
+}
+
+/// xoshiro256++ — fast, high-quality 64-bit generator (period 2^256 − 1).
+#[derive(Clone, Debug)]
+pub struct Xoshiro256pp {
+    s: [u64; 4],
+}
+
+impl Xoshiro256pp {
+    /// Seed via SplitMix64 as recommended by the xoshiro authors.
+    pub fn seed_from_u64(seed: u64) -> Self {
+        let mut sm = SplitMix64::new(seed);
+        let mut s = [0u64; 4];
+        for slot in s.iter_mut() {
+            *slot = sm.next_u64();
+        }
+        // all-zero state is invalid (fixed point); SplitMix64 cannot emit
+        // four consecutive zeros for any seed, but stay defensive.
+        if s == [0, 0, 0, 0] {
+            s[0] = 0x9E3779B97F4A7C15;
+        }
+        Self { s }
+    }
+
+    #[inline]
+    pub fn next_u64(&mut self) -> u64 {
+        let [s0, s1, s2, s3] = self.s;
+        let result = s0
+            .wrapping_add(s3)
+            .rotate_left(23)
+            .wrapping_add(s0);
+        let t = s1 << 17;
+        let mut s = [s0, s1, s2, s3];
+        s[2] ^= s[0];
+        s[3] ^= s[1];
+        s[1] ^= s[2];
+        s[0] ^= s[3];
+        s[2] ^= t;
+        s[3] = s[3].rotate_left(45);
+        self.s = s;
+        result
+    }
+}
+
+/// The framework-wide RNG façade: xoshiro256++ core + distribution helpers.
+#[derive(Clone, Debug)]
+pub struct Prng {
+    core: Xoshiro256pp,
+    /// Cached second output of the polar Box–Muller transform
+    /// (`gaussian_polar` only; the ziggurat path never uses it).
+    gauss_spare: Option<f64>,
+}
+
+impl Prng {
+    pub fn seed_from_u64(seed: u64) -> Self {
+        Self {
+            core: Xoshiro256pp::seed_from_u64(seed),
+            gauss_spare: None,
+        }
+    }
+
+    /// Derive an independent child stream, e.g. one per simulated worker.
+    ///
+    /// Children are decorrelated by hashing `(parent seed draw, index)`
+    /// through SplitMix64.
+    pub fn split(&mut self, index: u64) -> Prng {
+        let mut sm = SplitMix64::new(self.next_u64() ^ index.wrapping_mul(0xA24BAED4963EE407));
+        Prng::seed_from_u64(sm.next_u64())
+    }
+
+    #[inline]
+    pub fn next_u64(&mut self) -> u64 {
+        self.core.next_u64()
+    }
+
+    /// Uniform in `[0, 1)` with 53-bit resolution.
+    #[inline]
+    pub fn f64(&mut self) -> f64 {
+        (self.next_u64() >> 11) as f64 * (1.0 / (1u64 << 53) as f64)
+    }
+
+    /// Uniform in `[lo, hi)`.
+    #[inline]
+    pub fn f64_in(&mut self, lo: f64, hi: f64) -> f64 {
+        lo + (hi - lo) * self.f64()
+    }
+
+    /// Uniform integer in `[0, n)` via Lemire's rejection-free-ish method.
+    #[inline]
+    pub fn usize_below(&mut self, n: usize) -> usize {
+        debug_assert!(n > 0);
+        // 128-bit multiply-shift; bias < 2^-64, irrelevant for simulation.
+        ((self.next_u64() as u128 * n as u128) >> 64) as usize
+    }
+
+    /// Uniform integer in `[lo, hi]` (inclusive).
+    #[inline]
+    pub fn usize_in(&mut self, lo: usize, hi: usize) -> usize {
+        lo + self.usize_below(hi - lo + 1)
+    }
+
+    pub fn bool(&mut self, p_true: f64) -> bool {
+        self.f64() < p_true
+    }
+
+    /// Standard normal N(0,1) — ziggurat (see [`gaussian_ziggurat`]);
+    /// ~6x faster than the polar method on the noise-vector hot path.
+    #[inline]
+    pub fn gaussian(&mut self) -> f64 {
+        ziggurat::gaussian_ziggurat(self)
+    }
+
+    /// Polar Box–Muller — retained as a statistical cross-check for the
+    /// ziggurat (and for callers that want a table-free sampler).
+    pub fn gaussian_polar(&mut self) -> f64 {
+        if let Some(s) = self.gauss_spare.take() {
+            return s;
+        }
+        loop {
+            let u = 2.0 * self.f64() - 1.0;
+            let v = 2.0 * self.f64() - 1.0;
+            let s = u * u + v * v;
+            if s > 0.0 && s < 1.0 {
+                let m = (-2.0 * s.ln() / s).sqrt();
+                self.gauss_spare = Some(v * m);
+                return u * m;
+            }
+        }
+    }
+
+    /// N(mu, sigma^2).
+    #[inline]
+    pub fn normal(&mut self, mu: f64, sigma: f64) -> f64 {
+        mu + sigma * self.gaussian()
+    }
+
+    /// Exponential with rate `lambda` (mean `1/lambda`).
+    pub fn exponential(&mut self, lambda: f64) -> f64 {
+        debug_assert!(lambda > 0.0);
+        // 1 - f64() is in (0, 1], so ln() is finite.
+        -(1.0 - self.f64()).ln() / lambda
+    }
+
+    /// Log-normal: exp(N(mu, sigma^2)).
+    pub fn lognormal(&mut self, mu: f64, sigma: f64) -> f64 {
+        self.normal(mu, sigma).exp()
+    }
+
+    /// Fisher–Yates shuffle.
+    pub fn shuffle<T>(&mut self, xs: &mut [T]) {
+        for i in (1..xs.len()).rev() {
+            let j = self.usize_below(i + 1);
+            xs.swap(i, j);
+        }
+    }
+
+    /// Fill a slice with i.i.d. N(mu, sigma^2) draws.
+    pub fn fill_normal(&mut self, out: &mut [f64], mu: f64, sigma: f64) {
+        for o in out.iter_mut() {
+            *o = self.normal(mu, sigma);
+        }
+    }
+
+    /// Fill an `f32` slice with i.i.d. N(mu, sigma^2) draws.
+    pub fn fill_normal_f32(&mut self, out: &mut [f32], mu: f64, sigma: f64) {
+        for o in out.iter_mut() {
+            *o = self.normal(mu, sigma) as f32;
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn deterministic_given_seed() {
+        let mut a = Prng::seed_from_u64(42);
+        let mut b = Prng::seed_from_u64(42);
+        for _ in 0..1000 {
+            assert_eq!(a.next_u64(), b.next_u64());
+        }
+    }
+
+    #[test]
+    fn different_seeds_differ() {
+        let mut a = Prng::seed_from_u64(1);
+        let mut b = Prng::seed_from_u64(2);
+        let same = (0..64).filter(|_| a.next_u64() == b.next_u64()).count();
+        assert!(same < 4);
+    }
+
+    #[test]
+    fn split_streams_are_decorrelated() {
+        let mut root = Prng::seed_from_u64(7);
+        let mut c1 = root.split(0);
+        let mut c2 = root.split(1);
+        let n = 4096;
+        let xs: Vec<f64> = (0..n).map(|_| c1.f64() - 0.5).collect();
+        let ys: Vec<f64> = (0..n).map(|_| c2.f64() - 0.5).collect();
+        let corr: f64 = xs.iter().zip(&ys).map(|(x, y)| x * y).sum::<f64>() / n as f64;
+        assert!(corr.abs() < 0.01, "corr = {corr}");
+    }
+
+    #[test]
+    fn uniform_mean_and_range() {
+        let mut r = Prng::seed_from_u64(3);
+        let n = 100_000;
+        let mut sum = 0.0;
+        for _ in 0..n {
+            let x = r.f64();
+            assert!((0.0..1.0).contains(&x));
+            sum += x;
+        }
+        let mean = sum / n as f64;
+        assert!((mean - 0.5).abs() < 0.01, "mean = {mean}");
+    }
+
+    #[test]
+    fn gaussian_moments() {
+        let mut r = Prng::seed_from_u64(11);
+        let n = 200_000;
+        let (mut m1, mut m2) = (0.0, 0.0);
+        for _ in 0..n {
+            let x = r.gaussian();
+            m1 += x;
+            m2 += x * x;
+        }
+        m1 /= n as f64;
+        m2 /= n as f64;
+        assert!(m1.abs() < 0.01, "mean = {m1}");
+        assert!((m2 - 1.0).abs() < 0.02, "var = {m2}");
+    }
+
+    #[test]
+    fn exponential_mean() {
+        let mut r = Prng::seed_from_u64(13);
+        let lambda = 2.5;
+        let n = 200_000;
+        let mean: f64 = (0..n).map(|_| r.exponential(lambda)).sum::<f64>() / n as f64;
+        assert!((mean - 1.0 / lambda).abs() < 0.01, "mean = {mean}");
+    }
+
+    #[test]
+    fn usize_below_bounds_and_coverage() {
+        let mut r = Prng::seed_from_u64(17);
+        let mut seen = [false; 10];
+        for _ in 0..1000 {
+            let k = r.usize_below(10);
+            assert!(k < 10);
+            seen[k] = true;
+        }
+        assert!(seen.iter().all(|&s| s));
+    }
+
+    #[test]
+    fn shuffle_is_permutation() {
+        let mut r = Prng::seed_from_u64(19);
+        let mut v: Vec<usize> = (0..100).collect();
+        r.shuffle(&mut v);
+        let mut sorted = v.clone();
+        sorted.sort_unstable();
+        assert_eq!(sorted, (0..100).collect::<Vec<_>>());
+        assert_ne!(v, (0..100).collect::<Vec<_>>()); // astronomically unlikely
+    }
+
+    #[test]
+    fn ziggurat_and_polar_agree_on_quantiles() {
+        // same distribution from two independent samplers: compare a few
+        // empirical quantiles
+        let mut a = Prng::seed_from_u64(100);
+        let mut b = Prng::seed_from_u64(200);
+        let n = 200_000;
+        let mut xs: Vec<f64> = (0..n).map(|_| a.gaussian()).collect();
+        let mut ys: Vec<f64> = (0..n).map(|_| b.gaussian_polar()).collect();
+        xs.sort_by(|p, q| p.partial_cmp(q).unwrap());
+        ys.sort_by(|p, q| p.partial_cmp(q).unwrap());
+        for q in [0.01, 0.1, 0.25, 0.5, 0.75, 0.9, 0.99] {
+            let i = ((n - 1) as f64 * q) as usize;
+            assert!(
+                (xs[i] - ys[i]).abs() < 0.03,
+                "quantile {q}: ziggurat {} vs polar {}",
+                xs[i],
+                ys[i]
+            );
+        }
+    }
+
+    #[test]
+    fn normal_scaling() {
+        let mut r = Prng::seed_from_u64(23);
+        let n = 100_000;
+        let mean: f64 = (0..n).map(|_| r.normal(3.0, 0.5)).sum::<f64>() / n as f64;
+        assert!((mean - 3.0).abs() < 0.02);
+    }
+}

@@ -1,0 +1,150 @@
+//! Ziggurat sampler for the standard normal (Doornik's ZIGNOR layout,
+//! 128 blocks) — the §Perf replacement for polar Box–Muller.
+//!
+//! The driver materializes a d-dimensional noise vector per *delivered*
+//! gradient (the paper's `ξ ~ N(0, s²I)`); at d = 1729 the polar method's
+//! `ln`/`sqrt` per sample dominated the whole event loop.  The ziggurat
+//! accepts ~98.5% of draws with one table lookup, one compare and one
+//! multiply.
+//!
+//! Tables are computed once at first use (`OnceLock`) from the standard
+//! constants `R = 3.442619855899`, `V = 9.91256303526217e-3`.
+
+use std::sync::OnceLock;
+
+use super::Prng;
+
+const C: usize = 128;
+const R: f64 = 3.442619855899;
+const V: f64 = 9.91256303526217e-3;
+
+struct Tables {
+    /// Block x-coordinates, `x[0] = V/f(R)` (base), `x[C] = 0`.
+    x: [f64; C + 1],
+    /// Acceptance ratios `x[i+1]/x[i]`.
+    ratio: [f64; C],
+}
+
+fn tables() -> &'static Tables {
+    static TABLES: OnceLock<Tables> = OnceLock::new();
+    TABLES.get_or_init(|| {
+        let mut x = [0.0; C + 1];
+        let mut f = (-0.5 * R * R).exp();
+        x[0] = V / f;
+        x[1] = R;
+        x[C] = 0.0;
+        for i in 2..C {
+            x[i] = (-2.0 * (V / x[i - 1] + f).ln()).sqrt();
+            f = (-0.5 * x[i] * x[i]).exp();
+        }
+        let mut ratio = [0.0; C];
+        for i in 0..C {
+            ratio[i] = x[i + 1] / x[i];
+        }
+        Tables { x, ratio }
+    })
+}
+
+/// Tail sampler: N(0,1) conditioned on |x| > R (Marsaglia's method).
+#[inline]
+fn tail(rng: &mut Prng, negative: bool) -> f64 {
+    loop {
+        // 1 - f64() ∈ (0, 1] keeps ln finite
+        let x = (1.0 - rng.f64()).ln() / R;
+        let y = (1.0 - rng.f64()).ln();
+        if -2.0 * y >= x * x {
+            return if negative { x - R } else { R - x };
+        }
+    }
+}
+
+/// One standard-normal draw.
+#[inline]
+pub fn gaussian_ziggurat(rng: &mut Prng) -> f64 {
+    let t = tables();
+    loop {
+        let bits = rng.next_u64();
+        let i = (bits & 0x7F) as usize; // 7 bits: block index
+        // 53-bit uniform in [-1, 1)
+        let u = ((bits >> 11) as f64) * (2.0 / (1u64 << 53) as f64) - 1.0;
+        if u.abs() < t.ratio[i] {
+            return u * t.x[i]; // fast path: ~98.5%
+        }
+        if i == 0 {
+            return tail(rng, u < 0.0);
+        }
+        let x = u * t.x[i];
+        // wedge: accept with prob (f(x) - f(x[i])) / (f(x[i+1]) - f(x[i]))
+        let f0 = (-0.5 * (t.x[i] * t.x[i] - x * x)).exp();
+        let f1 = (-0.5 * (t.x[i + 1] * t.x[i + 1] - x * x)).exp();
+        if f1 + rng.f64() * (f0 - f1) < 1.0 {
+            return x;
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn tables_are_monotone_decreasing() {
+        let t = tables();
+        for i in 1..C {
+            assert!(t.x[i] > t.x[i + 1], "x[{i}]");
+            assert!((0.0..1.0).contains(&t.ratio[i]));
+        }
+        assert!((t.x[1] - R).abs() < 1e-15);
+        assert_eq!(t.x[C], 0.0);
+    }
+
+    #[test]
+    fn moments_match_standard_normal() {
+        let mut rng = Prng::seed_from_u64(42);
+        let n = 400_000;
+        let (mut m1, mut m2, mut m3, mut m4) = (0.0, 0.0, 0.0, 0.0);
+        for _ in 0..n {
+            let x = gaussian_ziggurat(&mut rng);
+            m1 += x;
+            m2 += x * x;
+            m3 += x * x * x;
+            m4 += x * x * x * x;
+        }
+        let nf = n as f64;
+        assert!((m1 / nf).abs() < 0.01, "mean {}", m1 / nf);
+        assert!((m2 / nf - 1.0).abs() < 0.01, "var {}", m2 / nf);
+        assert!((m3 / nf).abs() < 0.03, "skew {}", m3 / nf);
+        assert!((m4 / nf - 3.0).abs() < 0.08, "kurtosis {}", m4 / nf);
+    }
+
+    #[test]
+    fn tail_probabilities() {
+        // P(|X| > 2) ≈ 0.0455, P(|X| > 3.5) ≈ 4.65e-4 — the ziggurat's
+        // wedge/tail paths must reproduce these, not just the fast path.
+        let mut rng = Prng::seed_from_u64(7);
+        let n = 1_000_000;
+        let (mut gt2, mut gt35) = (0usize, 0usize);
+        for _ in 0..n {
+            let x = gaussian_ziggurat(&mut rng).abs();
+            if x > 2.0 {
+                gt2 += 1;
+            }
+            if x > 3.5 {
+                gt35 += 1;
+            }
+        }
+        let p2 = gt2 as f64 / n as f64;
+        let p35 = gt35 as f64 / n as f64;
+        assert!((p2 - 0.0455).abs() < 0.002, "P(|X|>2) = {p2}");
+        assert!((p35 - 4.65e-4).abs() < 1.5e-4, "P(|X|>3.5) = {p35}");
+    }
+
+    #[test]
+    fn symmetric() {
+        let mut rng = Prng::seed_from_u64(9);
+        let n = 200_000;
+        let neg = (0..n).filter(|_| gaussian_ziggurat(&mut rng) < 0.0).count();
+        let frac = neg as f64 / n as f64;
+        assert!((frac - 0.5).abs() < 0.005, "negative fraction {frac}");
+    }
+}

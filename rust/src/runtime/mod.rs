@@ -1,0 +1,301 @@
+//! PJRT artifact runtime — the bridge from the AOT-compiled JAX/Pallas
+//! layers into the Rust hot path.
+//!
+//! `make artifacts` produces `artifacts/*.hlo.txt` plus `manifest.json`
+//! (see `python/compile/aot.py`).  [`PjrtRuntime`] loads the manifest,
+//! compiles each HLO module once on the PJRT CPU client (`xla` crate) and
+//! caches the loaded executables; [`PjrtRuntime::execute_f32`] then runs an
+//! entry with plain `f32` buffers.
+//!
+//! Interchange is HLO *text* — jax ≥ 0.5 emits `HloModuleProto`s with
+//! 64-bit instruction ids that xla_extension 0.5.1 rejects; the text parser
+//! reassigns ids (see `/opt/xla-example/README.md`).
+
+use std::collections::HashMap;
+use std::path::{Path, PathBuf};
+
+use anyhow::{anyhow, bail, Context, Result};
+
+use crate::util::json::{parse as json_parse, Json};
+
+/// Shape + dtype of one argument/result.
+#[derive(Clone, Debug, PartialEq)]
+pub struct TensorSpec {
+    pub shape: Vec<usize>,
+    pub dtype: String,
+}
+
+impl TensorSpec {
+    pub fn element_count(&self) -> usize {
+        self.shape.iter().product()
+    }
+
+    fn from_json(j: &Json) -> Result<Self> {
+        let shape = j
+            .get("shape")
+            .as_arr()
+            .ok_or_else(|| anyhow!("spec missing shape"))?
+            .iter()
+            .map(|d| d.as_usize().ok_or_else(|| anyhow!("bad dim")))
+            .collect::<Result<Vec<_>>>()?;
+        let dtype = j
+            .get("dtype")
+            .as_str()
+            .ok_or_else(|| anyhow!("spec missing dtype"))?
+            .to_string();
+        Ok(Self { shape, dtype })
+    }
+}
+
+/// One manifest entry: an AOT-lowered computation.
+#[derive(Clone, Debug)]
+pub struct ArtifactEntry {
+    pub name: String,
+    pub file: String,
+    pub args: Vec<TensorSpec>,
+    pub results: Vec<TensorSpec>,
+    pub meta: Json,
+}
+
+/// The parsed `artifacts/manifest.json`.
+#[derive(Clone, Debug)]
+pub struct Manifest {
+    pub dir: PathBuf,
+    pub entries: Vec<ArtifactEntry>,
+}
+
+impl Manifest {
+    pub fn load(dir: &Path) -> Result<Manifest> {
+        let path = dir.join("manifest.json");
+        let text = std::fs::read_to_string(&path)
+            .with_context(|| format!("reading {} (run `make artifacts`)", path.display()))?;
+        let doc = json_parse(&text).map_err(|e| anyhow!("{e}"))?;
+        let entries = doc
+            .get("entries")
+            .as_arr()
+            .ok_or_else(|| anyhow!("manifest missing entries"))?
+            .iter()
+            .map(|e| {
+                Ok(ArtifactEntry {
+                    name: e
+                        .get("name")
+                        .as_str()
+                        .ok_or_else(|| anyhow!("entry missing name"))?
+                        .to_string(),
+                    file: e
+                        .get("file")
+                        .as_str()
+                        .ok_or_else(|| anyhow!("entry missing file"))?
+                        .to_string(),
+                    args: e
+                        .get("args")
+                        .as_arr()
+                        .unwrap_or(&[])
+                        .iter()
+                        .map(TensorSpec::from_json)
+                        .collect::<Result<Vec<_>>>()?,
+                    results: e
+                        .get("results")
+                        .as_arr()
+                        .unwrap_or(&[])
+                        .iter()
+                        .map(TensorSpec::from_json)
+                        .collect::<Result<Vec<_>>>()?,
+                    meta: e.get("meta").clone(),
+                })
+            })
+            .collect::<Result<Vec<_>>>()?;
+        Ok(Manifest {
+            dir: dir.to_path_buf(),
+            entries,
+        })
+    }
+
+    pub fn entry(&self, name: &str) -> Result<&ArtifactEntry> {
+        self.entries
+            .iter()
+            .find(|e| e.name == name)
+            .ok_or_else(|| {
+                anyhow!(
+                    "artifact '{name}' not in manifest (have: {})",
+                    self.entries
+                        .iter()
+                        .map(|e| e.name.as_str())
+                        .collect::<Vec<_>>()
+                        .join(", ")
+                )
+            })
+    }
+
+    /// Default artifact dir: `$RINGMASTER_ARTIFACTS` or `./artifacts`.
+    pub fn default_dir() -> PathBuf {
+        std::env::var("RINGMASTER_ARTIFACTS")
+            .map(PathBuf::from)
+            .unwrap_or_else(|_| PathBuf::from("artifacts"))
+    }
+}
+
+/// PJRT CPU client + compiled-executable cache.
+pub struct PjrtRuntime {
+    client: xla::PjRtClient,
+    manifest: Manifest,
+    cache: HashMap<String, xla::PjRtLoadedExecutable>,
+}
+
+impl PjrtRuntime {
+    /// Load the manifest and create the PJRT CPU client.
+    pub fn load(dir: &Path) -> Result<Self> {
+        let manifest = Manifest::load(dir)?;
+        let client = xla::PjRtClient::cpu().map_err(|e| anyhow!("pjrt cpu client: {e:?}"))?;
+        Ok(Self {
+            client,
+            manifest,
+            cache: HashMap::new(),
+        })
+    }
+
+    /// Load from the default artifact directory.
+    pub fn load_default() -> Result<Self> {
+        Self::load(&Manifest::default_dir())
+    }
+
+    pub fn manifest(&self) -> &Manifest {
+        &self.manifest
+    }
+
+    pub fn platform(&self) -> String {
+        self.client.platform_name()
+    }
+
+    /// Compile (or fetch the cached) executable for a manifest entry.
+    fn executable(&mut self, name: &str) -> Result<&xla::PjRtLoadedExecutable> {
+        if !self.cache.contains_key(name) {
+            let entry = self.manifest.entry(name)?.clone();
+            let path = self.manifest.dir.join(&entry.file);
+            let proto = xla::HloModuleProto::from_text_file(
+                path.to_str().ok_or_else(|| anyhow!("non-utf8 path"))?,
+            )
+            .map_err(|e| anyhow!("parsing {}: {e:?}", path.display()))?;
+            let comp = xla::XlaComputation::from_proto(&proto);
+            let exe = self
+                .client
+                .compile(&comp)
+                .map_err(|e| anyhow!("compiling {name}: {e:?}"))?;
+            self.cache.insert(name.to_string(), exe);
+        }
+        Ok(&self.cache[name])
+    }
+
+    /// Pre-compile an entry (so first-call latency is off the hot path).
+    pub fn warmup(&mut self, name: &str) -> Result<()> {
+        self.executable(name).map(|_| ())
+    }
+
+    /// Execute an entry with `f32` inputs; returns one `Vec<f32>` per
+    /// result (scalars come back as length-1 vectors).
+    pub fn execute_f32(&mut self, name: &str, inputs: &[&[f32]]) -> Result<Vec<Vec<f32>>> {
+        let entry = self.manifest.entry(name)?.clone();
+        if inputs.len() != entry.args.len() {
+            bail!(
+                "{name}: expected {} inputs, got {}",
+                entry.args.len(),
+                inputs.len()
+            );
+        }
+        let mut literals = Vec::with_capacity(inputs.len());
+        for (buf, spec) in inputs.iter().zip(&entry.args) {
+            if spec.dtype != "float32" {
+                bail!("{name}: only float32 args supported, got {}", spec.dtype);
+            }
+            if buf.len() != spec.element_count() {
+                bail!(
+                    "{name}: arg size mismatch: {} vs expected {:?}",
+                    buf.len(),
+                    spec.shape
+                );
+            }
+            let lit = xla::Literal::vec1(buf);
+            let dims: Vec<i64> = spec.shape.iter().map(|&d| d as i64).collect();
+            let lit = lit
+                .reshape(&dims)
+                .map_err(|e| anyhow!("reshape {:?}: {e:?}", spec.shape))?;
+            literals.push(lit);
+        }
+        let exe = self.executable(name)?;
+        let result = exe
+            .execute::<xla::Literal>(&literals)
+            .map_err(|e| anyhow!("executing {name}: {e:?}"))?;
+        let tuple = result[0][0]
+            .to_literal_sync()
+            .map_err(|e| anyhow!("sync {name}: {e:?}"))?;
+        // aot.py lowers with return_tuple=True
+        let parts = tuple
+            .to_tuple()
+            .map_err(|e| anyhow!("untuple {name}: {e:?}"))?;
+        if parts.len() != entry.results.len() {
+            bail!(
+                "{name}: expected {} results, got {}",
+                entry.results.len(),
+                parts.len()
+            );
+        }
+        parts
+            .into_iter()
+            .zip(&entry.results)
+            .map(|(lit, spec)| {
+                let v = lit
+                    .to_vec::<f32>()
+                    .map_err(|e| anyhow!("read {name} result: {e:?}"))?;
+                if v.len() != spec.element_count().max(1) {
+                    bail!(
+                        "{name}: result size mismatch {} vs {:?}",
+                        v.len(),
+                        spec.shape
+                    );
+                }
+                Ok(v)
+            })
+            .collect()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    // Runtime round-trip tests against real artifacts live in
+    // rust/tests/pjrt_roundtrip.rs (they need `make artifacts` output).
+    // Here: manifest parsing against a synthetic manifest.
+
+    #[test]
+    fn manifest_parses_and_looks_up() {
+        let dir = std::env::temp_dir().join("ringmaster_manifest_test");
+        std::fs::create_dir_all(&dir).unwrap();
+        std::fs::write(
+            dir.join("manifest.json"),
+            r#"{"format_version": 1, "entries": [
+                {"name": "q", "file": "q.hlo.txt",
+                 "args": [{"shape": [4], "dtype": "float32"}],
+                 "results": [{"shape": [], "dtype": "float32"},
+                              {"shape": [4], "dtype": "float32"}],
+                 "meta": {"kind": "quadratic", "d": 4}}
+            ]}"#,
+        )
+        .unwrap();
+        let m = Manifest::load(&dir).unwrap();
+        assert_eq!(m.entries.len(), 1);
+        let e = m.entry("q").unwrap();
+        assert_eq!(e.args[0].shape, vec![4]);
+        assert_eq!(e.args[0].element_count(), 4);
+        assert_eq!(e.results[0].element_count(), 1); // scalar
+        assert_eq!(e.meta.get("kind").as_str(), Some("quadratic"));
+        assert!(m.entry("nope").is_err());
+        std::fs::remove_dir_all(&dir).ok();
+    }
+
+    #[test]
+    fn missing_manifest_is_a_clear_error() {
+        let err = Manifest::load(Path::new("/definitely/not/here")).unwrap_err();
+        assert!(format!("{err:#}").contains("make artifacts"));
+    }
+}

@@ -1,0 +1,165 @@
+//! Communication-cost extension of the computation models (§6 future work;
+//! cf. Shadowheart SGD, Tyurin et al. 2024b).
+//!
+//! The paper's models charge only *computation* time per stochastic
+//! gradient.  In federated settings the upload of the gradient to the
+//! server (and the download of the fresh iterate) can dominate.
+//! [`CommModel`] composes per-worker up/down link costs on top of any
+//! [`ComputeModel`]: one gradient's end-to-end latency becomes
+//!
+//! ```text
+//! duration = download(x^k) + compute(∇f) + upload(g)
+//! ```
+//!
+//! with each leg drawn from its own [`TimeDist`].  Because the composition
+//! happens inside `ComputeModel::duration`'s contract (a single positive
+//! duration per assignment), every scheduler and every theorem-check in
+//! the suite runs unchanged on communication-heavy clusters.
+
+use crate::prng::{Prng, TimeDist};
+
+use super::ComputeModel;
+
+/// Per-worker link costs.
+#[derive(Clone, Debug, PartialEq)]
+pub struct LinkCost {
+    /// Server → worker model download (seconds per iterate).
+    pub down: TimeDist,
+    /// Worker → server gradient upload (seconds per gradient).
+    pub up: TimeDist,
+}
+
+impl LinkCost {
+    pub fn free() -> Self {
+        Self {
+            down: TimeDist::Constant(1e-12),
+            up: TimeDist::Constant(1e-12),
+        }
+    }
+
+    pub fn symmetric(dist: TimeDist) -> Self {
+        Self {
+            down: dist.clone(),
+            up: dist,
+        }
+    }
+}
+
+/// A compute model with per-worker communication legs.
+#[derive(Clone, Debug, PartialEq)]
+pub struct CommModel {
+    pub compute: ComputeModel,
+    pub links: Vec<LinkCost>,
+}
+
+impl CommModel {
+    pub fn new(compute: ComputeModel, links: Vec<LinkCost>) -> Self {
+        assert_eq!(compute.n_workers(), links.len());
+        Self { compute, links }
+    }
+
+    /// Uniform link cost across all workers.
+    pub fn uniform(compute: ComputeModel, link: LinkCost) -> Self {
+        let n = compute.n_workers();
+        Self::new(compute, vec![link; n])
+    }
+
+    /// End-to-end duration: download + compute + upload.
+    pub fn duration(&self, worker: usize, now: f64, rng: &mut Prng) -> f64 {
+        let down = self.links[worker].down.sample(rng);
+        let compute = self.compute.duration(worker, now + down, rng);
+        let up = self.links[worker].up.sample(rng);
+        down + compute + up
+    }
+
+    /// Flatten into a plain [`ComputeModel`] usable by [`super::Cluster`]:
+    /// only possible for distributional (non-universal) compute, where the
+    /// three legs can be fused into one per-gradient draw.
+    pub fn into_compute_model(self) -> ComputeModel {
+        match self.compute {
+            ComputeModel::Universal { .. } => {
+                panic!(
+                    "universal-model compute cannot be fused with links; \
+                     drive CommModel::duration directly"
+                )
+            }
+            compute => ComputeModel::WithComm {
+                inner: Box::new(compute),
+                links: self.links,
+            },
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn duration_adds_three_legs_constant() {
+        let m = CommModel::uniform(
+            ComputeModel::fixed_equal(2, 3.0),
+            LinkCost {
+                down: TimeDist::Constant(0.5),
+                up: TimeDist::Constant(0.25),
+            },
+        );
+        let mut rng = Prng::seed_from_u64(0);
+        let d = m.duration(0, 0.0, &mut rng);
+        assert!((d - 3.75).abs() < 1e-12);
+    }
+
+    #[test]
+    fn free_links_change_nothing() {
+        let base = ComputeModel::fixed_linear(3);
+        let m = CommModel::uniform(base.clone(), LinkCost::free());
+        let mut rng = Prng::seed_from_u64(1);
+        for w in 0..3 {
+            let d0 = base.duration(w, 0.0, &mut rng);
+            let d1 = m.duration(w, 0.0, &mut rng);
+            assert!((d0 - d1).abs() < 1e-9, "worker {w}: {d0} vs {d1}");
+        }
+    }
+
+    #[test]
+    fn fused_model_runs_in_cluster() {
+        use crate::sim::Cluster;
+        use std::sync::Arc;
+        let m = CommModel::uniform(
+            ComputeModel::fixed_equal(2, 1.0),
+            LinkCost::symmetric(TimeDist::Constant(0.5)),
+        )
+        .into_compute_model();
+        let mut c = Cluster::new(m, 2, 3);
+        let x = Arc::new(vec![]);
+        c.assign(0, 0, &x);
+        c.assign(1, 0, &x);
+        // 0.5 + 1.0 + 0.5 = 2.0 per gradient
+        let a = c.next_arrival().unwrap();
+        assert!((a.time - 2.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn random_links_increase_mean_latency() {
+        let base = ComputeModel::fixed_equal(1, 1.0);
+        let m = CommModel::uniform(
+            base,
+            LinkCost::symmetric(TimeDist::Exponential { mean: 2.0 }),
+        );
+        let mut rng = Prng::seed_from_u64(5);
+        let n = 50_000;
+        let mean: f64 = (0..n).map(|_| m.duration(0, 0.0, &mut rng)).sum::<f64>() / n as f64;
+        // 1.0 compute + 2 × exp(mean 2) = 5.0
+        assert!((mean - 5.0).abs() < 0.1, "mean {mean}");
+    }
+
+    #[test]
+    #[should_panic(expected = "universal-model compute cannot be fused")]
+    fn universal_cannot_fuse() {
+        CommModel::uniform(
+            ComputeModel::universal_from_taus(&[1.0]),
+            LinkCost::free(),
+        )
+        .into_compute_model();
+    }
+}

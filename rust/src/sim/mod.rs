@@ -1,0 +1,456 @@
+//! Discrete-event cluster simulator.
+//!
+//! The paper's claims are statements about *time complexity under a
+//! computation-time model* — exactly what a discrete-event simulation
+//! executes. This module provides:
+//!
+//! * [`EventQueue`] — a deterministic priority queue over simulated seconds;
+//! * [`ComputeModel`] — the paper's three computation-time regimes:
+//!   the **fixed computation model** (eq. 1–2), the **random** per-gradient
+//!   model of §G (`τ_i = i + |N(0, i)|`), and the **universal computation
+//!   model** (§5, eq. 12) with arbitrary power functions `v_i(t)`;
+//! * [`Cluster`] — `n` workers with assignment generations (supporting
+//!   Algorithm 5's *calculation stops* via lazy event invalidation), the
+//!   stale-assignment index that makes threshold cancellation O(1)
+//!   amortized, and **lazy gradient semantics**: an assignment stores a
+//!   shared snapshot (`Arc`) of the iterate; the stochastic gradient is
+//!   only *materialized by the driver when the arrival is delivered*, so
+//!   cancelled computations cost O(1) instead of O(d) — the single biggest
+//!   hot-path win of the §Perf pass (see EXPERIMENTS.md).
+
+mod comm;
+mod model;
+mod queue;
+
+pub use comm::{CommModel, LinkCost};
+pub use model::{ComputeModel, PowerFn};
+pub use queue::{EventQueue, OrdF64};
+
+use std::sync::Arc;
+
+use crate::prng::Prng;
+
+/// A gradient arrival popped from the simulation.
+#[derive(Clone, Debug, PartialEq)]
+pub struct Arrival {
+    pub worker: usize,
+    /// Iterate index the gradient was computed at (`k - δ^k` in the paper).
+    pub start_k: u64,
+    /// Simulated time of arrival (seconds).
+    pub time: f64,
+}
+
+#[derive(Clone, Debug)]
+struct WorkerState {
+    /// Assignment generation; events from older generations are stale.
+    gen: u64,
+    /// Iterate index of the current computation's starting point.
+    start_k: u64,
+    /// Whether the worker currently has an assignment in flight.
+    busy: bool,
+    /// Simulated time the current assignment started (for tracing).
+    assign_time: f64,
+    /// Shared snapshot of the iterate the worker is computing at.
+    point: Arc<Vec<f64>>,
+    rng: Prng,
+}
+
+/// The simulated cluster: workers + event queue + compute model.
+pub struct Cluster {
+    workers: Vec<WorkerState>,
+    queue: EventQueue<(usize, u64)>,
+    model: ComputeModel,
+    now: f64,
+    /// `start_k → workers` index for Algorithm 5's threshold cancellation.
+    /// Keys are pushed in nondecreasing `start_k` order and consumed from
+    /// the front, so a bucket deque beats a BTreeMap; drained buckets are
+    /// recycled through `free_bufs` to keep the hot loop allocation-free.
+    stale_queue: std::collections::VecDeque<(u64, Vec<usize>)>,
+    free_bufs: Vec<Vec<usize>>,
+    /// Whether to maintain `by_start_k` (only schedulers that cancel need
+    /// it; without cancellation it would grow with every assignment).
+    track_stale: bool,
+    /// Counters.
+    pub stats: ClusterStats,
+}
+
+/// Aggregate simulation counters.
+#[derive(Clone, Copy, Debug, Default, PartialEq)]
+pub struct ClusterStats {
+    pub assignments: u64,
+    pub arrivals: u64,
+    pub cancellations: u64,
+}
+
+impl Cluster {
+    /// Create a cluster of `n` workers.
+    pub fn new(model: ComputeModel, n: usize, seed: u64) -> Self {
+        assert!(n > 0, "cluster needs at least one worker");
+        assert_eq!(model.n_workers(), n, "model/worker count mismatch");
+        let mut root = Prng::seed_from_u64(seed);
+        let empty = Arc::new(Vec::new());
+        let workers = (0..n)
+            .map(|i| WorkerState {
+                gen: 0,
+                start_k: 0,
+                busy: false,
+                assign_time: 0.0,
+                point: empty.clone(),
+                rng: root.split(i as u64),
+            })
+            .collect();
+        Self {
+            workers,
+            queue: EventQueue::new(),
+            model,
+            now: 0.0,
+            stale_queue: std::collections::VecDeque::new(),
+            free_bufs: Vec::new(),
+            track_stale: false,
+            stats: ClusterStats::default(),
+        }
+    }
+
+    /// Enable the stale-assignment index (required before using
+    /// [`Cluster::cancel_stale`], i.e. for Algorithm 5).
+    pub fn set_track_stale(&mut self, on: bool) {
+        self.track_stale = on;
+    }
+
+    pub fn n_workers(&self) -> usize {
+        self.workers.len()
+    }
+
+    pub fn now(&self) -> f64 {
+        self.now
+    }
+
+    pub fn model(&self) -> &ComputeModel {
+        &self.model
+    }
+
+    /// Snapshot of the point the worker's current (or last delivered)
+    /// computation started at.
+    pub fn point(&self, worker: usize) -> &Arc<Vec<f64>> {
+        &self.workers[worker].point
+    }
+
+    /// The worker's private random stream (sample draws happen here so
+    /// runs are reproducible regardless of delivery interleavings).
+    pub fn worker_rng(&mut self, worker: usize) -> &mut Prng {
+        &mut self.workers[worker].rng
+    }
+
+    pub fn is_busy(&self, worker: usize) -> bool {
+        self.workers[worker].busy
+    }
+
+    pub fn start_k(&self, worker: usize) -> u64 {
+        self.workers[worker].start_k
+    }
+
+    /// Simulated time the worker's current (or last delivered) assignment
+    /// began — the span start for tracing.
+    pub fn assign_time(&self, worker: usize) -> f64 {
+        self.workers[worker].assign_time
+    }
+
+    /// Assign `worker` to start computing a stochastic gradient at iterate
+    /// `start_k`, whose parameter snapshot is `point`.
+    ///
+    /// O(1): clones the `Arc`, draws the completion time, pushes one event.
+    /// The gradient itself is *not* computed here — the driver materializes
+    /// it on delivery, so work cancelled by Algorithm 5 costs nothing.
+    pub fn assign(&mut self, worker: usize, start_k: u64, point: &Arc<Vec<f64>>) {
+        let now = self.now;
+        let w = &mut self.workers[worker];
+        debug_assert!(!w.busy, "worker {worker} is already busy");
+        w.gen += 1;
+        w.start_k = start_k;
+        w.busy = true;
+        w.assign_time = now;
+        w.point = point.clone();
+        let dt = self.model.duration(worker, now, &mut w.rng);
+        debug_assert!(dt > 0.0);
+        self.queue.push(now + dt, (worker, w.gen));
+        if self.track_stale {
+            match self.stale_queue.back_mut() {
+                Some((k, bucket)) if *k == start_k => bucket.push(worker),
+                back => {
+                    debug_assert!(
+                        back.as_ref().map_or(true, |(k, _)| *k < start_k),
+                        "assignments must arrive in nondecreasing start_k order"
+                    );
+                    let mut bucket = self.free_bufs.pop().unwrap_or_default();
+                    bucket.push(worker);
+                    self.stale_queue.push_back((start_k, bucket));
+                }
+            }
+        }
+        self.stats.assignments += 1;
+    }
+
+    /// Pop the next *valid* gradient arrival, advancing simulated time.
+    /// Returns `None` when no computation is in flight.
+    pub fn next_arrival(&mut self) -> Option<Arrival> {
+        while let Some((t, (worker, gen))) = self.queue.pop() {
+            let w = &mut self.workers[worker];
+            if w.gen != gen || !w.busy {
+                continue; // stale event from a cancelled assignment
+            }
+            w.busy = false;
+            self.now = t;
+            self.stats.arrivals += 1;
+            return Some(Arrival {
+                worker,
+                start_k: w.start_k,
+                time: t,
+            });
+        }
+        None
+    }
+
+    /// Algorithm 5: stop every in-flight computation whose start iterate is
+    /// `<= threshold_k` and reassign it at `new_k` with snapshot `point`.
+    ///
+    /// Amortized cost is O(#cancelled): the `by_start_k` index is consumed
+    /// monotonically, and each reassignment is O(1) (lazy gradients).
+    pub fn cancel_stale(&mut self, threshold_k: u64, new_k: u64, point: &Arc<Vec<f64>>) {
+        self.cancel_stale_collect(threshold_k, new_k, point, None);
+    }
+
+    /// [`Cluster::cancel_stale`] variant that reports each cancelled
+    /// assignment as `(worker, assign_time, start_k)` for trace recording.
+    pub fn cancel_stale_collect(
+        &mut self,
+        threshold_k: u64,
+        new_k: u64,
+        point: &Arc<Vec<f64>>,
+        mut collect: Option<&mut Vec<(usize, f64, u64)>>,
+    ) {
+        debug_assert!(self.track_stale, "enable set_track_stale first");
+        // Consume all buckets with start_k <= threshold_k.
+        while let Some(&(bucket_k, _)) = self.stale_queue.front() {
+            if bucket_k > threshold_k {
+                break;
+            }
+            let (_, mut workers) = self.stale_queue.pop_front().unwrap();
+            for i in 0..workers.len() {
+                let worker = workers[i];
+                let w = &self.workers[worker];
+                // Bucket entries are not removed on normal arrival, so skip
+                // workers that have since finished or been reassigned.
+                if !w.busy || w.start_k != bucket_k {
+                    continue;
+                }
+                if let Some(out) = collect.as_deref_mut() {
+                    out.push((worker, w.assign_time, w.start_k));
+                }
+                self.cancel(worker);
+                self.assign(worker, new_k, point);
+                self.stats.cancellations += 1;
+            }
+            workers.clear();
+            self.free_bufs.push(workers);
+        }
+    }
+
+    /// Invalidate a worker's current assignment (its completion event
+    /// becomes stale and will be skipped by `next_arrival`).
+    fn cancel(&mut self, worker: usize) {
+        let w = &mut self.workers[worker];
+        debug_assert!(w.busy);
+        w.busy = false;
+        w.gen += 1;
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn pt(vals: &[f64]) -> Arc<Vec<f64>> {
+        Arc::new(vals.to_vec())
+    }
+
+    fn fixed_cluster(taus: &[f64]) -> Cluster {
+        Cluster::new(
+            ComputeModel::Fixed {
+                taus: taus.to_vec(),
+            },
+            taus.len(),
+            7,
+        )
+    }
+
+    #[test]
+    fn arrivals_ordered_by_time_fixed_model() {
+        let mut c = fixed_cluster(&[3.0, 1.0, 2.0]);
+        let x0 = pt(&[0.0]);
+        for w in 0..3 {
+            c.assign(w, 0, &x0);
+        }
+        let a1 = c.next_arrival().unwrap();
+        let a2 = c.next_arrival().unwrap();
+        let a3 = c.next_arrival().unwrap();
+        assert_eq!((a1.worker, a1.time), (1, 1.0));
+        assert_eq!((a2.worker, a2.time), (2, 2.0));
+        assert_eq!((a3.worker, a3.time), (0, 3.0));
+        assert!(c.next_arrival().is_none());
+        assert_eq!(c.stats.arrivals, 3);
+    }
+
+    #[test]
+    fn reassignment_accumulates_time() {
+        let mut c = fixed_cluster(&[2.0]);
+        c.assign(0, 0, &pt(&[]));
+        let a = c.next_arrival().unwrap();
+        assert_eq!(a.time, 2.0);
+        c.assign(0, 1, &pt(&[]));
+        let a = c.next_arrival().unwrap();
+        assert_eq!(a.time, 4.0);
+        assert_eq!(a.start_k, 1);
+    }
+
+    #[test]
+    fn cancellation_invalidates_event_and_restarts() {
+        let mut c = fixed_cluster(&[10.0, 1.0]);
+        c.set_track_stale(true);
+        c.assign(0, 0, &pt(&[])); // slow, will be cancelled
+        c.assign(1, 0, &pt(&[]));
+        let a = c.next_arrival().unwrap();
+        assert_eq!(a.worker, 1); // t = 1
+        // cancel worker 0 (start_k=0 <= 0) and restart at iterate 5
+        c.cancel_stale(0, 5, &pt(&[9.0]));
+        assert_eq!(c.stats.cancellations, 1);
+        assert_eq!(c.start_k(0), 5);
+        assert_eq!(**c.point(0), vec![9.0]);
+        // worker 0's completion is now at t = 1 + 10 = 11, not 10
+        let a = c.next_arrival().unwrap();
+        assert_eq!((a.worker, a.start_k), (0, 5));
+        assert!((a.time - 11.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn cancel_stale_skips_fresh_assignments() {
+        let mut c = fixed_cluster(&[5.0, 5.0]);
+        c.set_track_stale(true);
+        c.assign(0, 0, &pt(&[]));
+        c.assign(1, 3, &pt(&[]));
+        c.cancel_stale(2, 7, &pt(&[])); // only worker 0 is stale
+        assert_eq!(c.stats.cancellations, 1);
+        assert_eq!(c.start_k(0), 7);
+        assert_eq!(c.start_k(1), 3);
+    }
+
+    #[test]
+    fn snapshot_shared_not_copied() {
+        let mut c = fixed_cluster(&[1.0, 1.0]);
+        let x = pt(&[1.0, 2.0, 3.0]);
+        c.assign(0, 0, &x);
+        c.assign(1, 0, &x);
+        assert!(Arc::ptr_eq(c.point(0), &x));
+        assert!(Arc::ptr_eq(c.point(0), c.point(1)));
+        // 2 assignments + the caller's handle
+        assert_eq!(Arc::strong_count(&x), 3);
+    }
+
+    #[test]
+    fn deterministic_under_seed() {
+        let run = |seed| {
+            let mut c = Cluster::new(ComputeModel::random_paper(4), 4, seed);
+            let x = pt(&[0.0]);
+            for w in 0..4 {
+                c.assign(w, 0, &x);
+            }
+            let mut times = Vec::new();
+            for _ in 0..16 {
+                let a = c.next_arrival().unwrap();
+                times.push((a.worker, a.time));
+                c.assign(a.worker, 0, &x);
+            }
+            times
+        };
+        assert_eq!(run(9), run(9));
+        assert_ne!(run(9), run(10));
+    }
+
+    #[test]
+    fn worker_rng_streams_are_stable() {
+        let mut c = fixed_cluster(&[1.0, 1.0]);
+        let a = c.worker_rng(0).next_u64();
+        let b = c.worker_rng(1).next_u64();
+        assert_ne!(a, b);
+    }
+
+    #[test]
+    #[should_panic(expected = "model/worker count mismatch")]
+    fn model_size_checked() {
+        Cluster::new(ComputeModel::fixed_equal(3, 1.0), 4, 0);
+    }
+
+    #[test]
+    fn arrival_times_nondecreasing_under_random_churn() {
+        // property: however assignments and cancellations interleave,
+        // simulated time never goes backwards
+        crate::testkit::check("sim time monotone", |g| {
+            let n = g.usize_in(1, 12);
+            let model = match g.usize_in(0, 2) {
+                0 => ComputeModel::fixed_linear(n),
+                1 => ComputeModel::random_paper(n),
+                _ => ComputeModel::universal_from_taus(
+                    &g.tau_profile(n, 0.1, 10.0),
+                ),
+            };
+            let mut c = Cluster::new(model, n, g.rng.next_u64());
+            c.set_track_stale(true);
+            let x = pt(&[]);
+            let mut k = 0u64;
+            for w in 0..n {
+                c.assign(w, 0, &x);
+            }
+            let mut last_t = 0.0f64;
+            for _ in 0..200 {
+                let Some(a) = c.next_arrival() else { break };
+                assert!(a.time >= last_t, "{} < {last_t}", a.time);
+                assert!(a.start_k <= k);
+                last_t = a.time;
+                if g.bool() {
+                    k += 1;
+                    if k >= 3 && g.bool() {
+                        c.cancel_stale(k - 3, k, &x);
+                    }
+                }
+                c.assign(a.worker, k, &x);
+            }
+        });
+    }
+
+    #[test]
+    fn stats_accounting_is_consistent() {
+        crate::testkit::check("assignments = arrivals + busy + cancelled", |g| {
+            let n = g.usize_in(1, 8);
+            let mut c = Cluster::new(ComputeModel::random_paper(n), n, g.rng.next_u64());
+            c.set_track_stale(true);
+            let x = pt(&[]);
+            for w in 0..n {
+                c.assign(w, 0, &x);
+            }
+            let mut k = 0u64;
+            for _ in 0..100 {
+                let a = c.next_arrival().unwrap();
+                k += 1;
+                if k > 2 {
+                    c.cancel_stale(k - 2, k, &x);
+                }
+                c.assign(a.worker, k, &x);
+            }
+            // every assignment either arrived, is still busy, or was cancelled
+            let busy = (0..n).filter(|&w| c.is_busy(w)).count() as u64;
+            assert_eq!(
+                c.stats.assignments,
+                c.stats.arrivals + busy + c.stats.cancellations
+            );
+        });
+    }
+}

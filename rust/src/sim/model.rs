@@ -1,0 +1,503 @@
+//! The paper's computation-time models.
+//!
+//! * **Fixed computation model** (§2, eq. 1–2): worker `i` takes at most
+//!   `τ_i` seconds per stochastic gradient — here exactly `τ_i`,
+//!   the worst case the bounds are stated against.
+//! * **Random model** (§G): per-gradient durations drawn from a
+//!   [`TimeDist`], e.g. the paper's `τ_i = i + |N(0, i)|`.
+//! * **Universal computation model** (§5, eq. 12): worker `i` has a power
+//!   function `v_i(t) ≥ 0`; the number of gradients computed in `[T0, T1]`
+//!   is `⌊∫ v_i⌋`.  A single gradient started at `t0` completes at the
+//!   smallest `T` with `∫_{t0}^{T} v_i = 1`, which [`PowerFn::invert_work`]
+//!   solves in closed form per piecewise segment.
+
+use crate::prng::{Prng, TimeDist};
+
+/// A worker's computation-power function `v(t)` (universal model, §5).
+///
+/// All variants are piecewise-constant or piecewise-linear, so work
+/// integrals invert exactly (no numerical quadrature on the hot path).
+#[derive(Clone, Debug, PartialEq)]
+pub enum PowerFn {
+    /// `v(t) = rate` — reduces the universal model to the fixed model with
+    /// `τ = 1/rate` (Lemma 5.1's consistency case).
+    Constant { rate: f64 },
+    /// Duty cycle: `rate` for the first `on_frac·period` of each period,
+    /// `0` otherwise (downtime / disconnections, shifted by `phase`).
+    DutyCycle {
+        rate: f64,
+        period: f64,
+        on_frac: f64,
+        phase: f64,
+    },
+    /// Speed flip at `t_flip`: `rate_before` → `rate_after` (the §2.2
+    /// adversarial scenario that defeats Naive Optimal ASGD).
+    Flip {
+        rate_before: f64,
+        rate_after: f64,
+        t_flip: f64,
+    },
+    /// Linear ramp `v(t) = max(0, a + b·t)` (performance trends).
+    Ramp { a: f64, b: f64 },
+}
+
+impl PowerFn {
+    /// Evaluate `v(t)`.
+    pub fn eval(&self, t: f64) -> f64 {
+        match *self {
+            PowerFn::Constant { rate } => rate,
+            PowerFn::DutyCycle {
+                rate,
+                period,
+                on_frac,
+                phase,
+            } => {
+                let pos = (t + phase).rem_euclid(period);
+                if pos < on_frac * period {
+                    rate
+                } else {
+                    0.0
+                }
+            }
+            PowerFn::Flip {
+                rate_before,
+                rate_after,
+                t_flip,
+            } => {
+                if t < t_flip {
+                    rate_before
+                } else {
+                    rate_after
+                }
+            }
+            PowerFn::Ramp { a, b } => (a + b * t).max(0.0),
+        }
+    }
+
+    /// Work performed on `[t0, t1]`: `∫ v`.
+    pub fn work(&self, t0: f64, t1: f64) -> f64 {
+        debug_assert!(t1 >= t0);
+        match *self {
+            PowerFn::Constant { rate } => rate * (t1 - t0),
+            PowerFn::DutyCycle {
+                rate,
+                period,
+                on_frac,
+                phase,
+            } => {
+                // integrate the duty cycle exactly via whole periods + edges
+                let on = on_frac * period;
+                let f = |t: f64| -> f64 {
+                    // work on [ -phase, t ] in cycle coordinates
+                    let tt = t + phase;
+                    let full = (tt / period).floor();
+                    let rem = tt - full * period;
+                    rate * (full * on + rem.min(on))
+                };
+                f(t1) - f(t0)
+            }
+            PowerFn::Flip {
+                rate_before,
+                rate_after,
+                t_flip,
+            } => {
+                let before = (t1.min(t_flip) - t0).max(0.0) * rate_before;
+                let after = (t1 - t0.max(t_flip)).max(0.0) * rate_after;
+                before + after
+            }
+            PowerFn::Ramp { a, b } => {
+                // ∫ max(0, a + b t); handle the sign change analytically
+                let v0 = a + b * t0;
+                let v1 = a + b * t1;
+                if v0 >= 0.0 && v1 >= 0.0 {
+                    0.5 * (v0 + v1) * (t1 - t0)
+                } else if v0 < 0.0 && v1 < 0.0 {
+                    0.0
+                } else {
+                    let t_cross = -a / b;
+                    if b > 0.0 {
+                        0.5 * v1 * (t1 - t_cross)
+                    } else {
+                        0.5 * v0 * (t_cross - t0)
+                    }
+                }
+            }
+        }
+    }
+
+    /// Smallest `T ≥ t0` with `∫_{t0}^{T} v = units` (∞ if unreachable).
+    ///
+    /// Piecewise-exact: steps segment by segment, solving the final
+    /// partial segment in closed form.
+    pub fn invert_work(&self, t0: f64, units: f64) -> f64 {
+        debug_assert!(units > 0.0);
+        match *self {
+            PowerFn::Constant { rate } => {
+                if rate <= 0.0 {
+                    f64::INFINITY
+                } else {
+                    t0 + units / rate
+                }
+            }
+            PowerFn::DutyCycle {
+                rate,
+                period,
+                on_frac,
+                ..
+            } => {
+                if rate <= 0.0 || on_frac <= 0.0 {
+                    return f64::INFINITY;
+                }
+                let per_period = rate * on_frac * period;
+                // upper bound: enough whole periods to deliver the work from
+                // any phase, then bisect (work() is exact and monotone).
+                let k = (units / per_period).ceil() + 2.0;
+                let hi = t0 + k * period;
+                debug_assert!(self.work(t0, hi) >= units);
+                self.bisect_work(t0, units, t0, hi)
+            }
+            PowerFn::Flip {
+                rate_before,
+                rate_after,
+                t_flip,
+            } => {
+                if t0 < t_flip {
+                    let w_before = rate_before * (t_flip - t0);
+                    if w_before >= units {
+                        if rate_before <= 0.0 {
+                            return f64::INFINITY;
+                        }
+                        return t0 + units / rate_before;
+                    }
+                    if rate_after <= 0.0 {
+                        return f64::INFINITY;
+                    }
+                    t_flip + (units - w_before) / rate_after
+                } else {
+                    if rate_after <= 0.0 {
+                        return f64::INFINITY;
+                    }
+                    t0 + units / rate_after
+                }
+            }
+            PowerFn::Ramp { a, b } => {
+                // Solve 0.5 b (T^2 - s^2) + a (T - s) = units on the active part.
+                let s = if a + b * t0 < 0.0 {
+                    if b <= 0.0 {
+                        return f64::INFINITY;
+                    }
+                    -a / b // activity starts here
+                } else {
+                    t0
+                };
+                if b == 0.0 {
+                    return if a <= 0.0 { f64::INFINITY } else { s + units / a };
+                }
+                if b < 0.0 {
+                    let t_end = -a / b; // activity stops here
+                    let max_work = self.work(s, t_end.max(s));
+                    if max_work < units {
+                        return f64::INFINITY;
+                    }
+                }
+                // quadratic: (b/2) T^2 + a T - [(b/2) s^2 + a s + units] = 0
+                let c = -(0.5 * b * s * s + a * s + units);
+                let disc = a * a - 4.0 * (0.5 * b) * c;
+                if disc < 0.0 {
+                    return f64::INFINITY;
+                }
+                let sq = disc.sqrt();
+                let r1 = (-a + sq) / b;
+                let r2 = (-a - sq) / b;
+                let mut best = f64::INFINITY;
+                for r in [r1, r2] {
+                    if r >= s - 1e-12 && r < best {
+                        best = r;
+                    }
+                }
+                best
+            }
+        }
+    }
+
+    /// Bisection fallback used only by pathological duty-cycle alignments.
+    fn bisect_work(&self, t0: f64, units: f64, mut lo: f64, mut hi: f64) -> f64 {
+        for _ in 0..200 {
+            let mid = 0.5 * (lo + hi);
+            if self.work(t0, mid) < units {
+                lo = mid;
+            } else {
+                hi = mid;
+            }
+        }
+        hi
+    }
+}
+
+/// Per-worker computation-time regime for the whole cluster.
+#[derive(Clone, Debug, PartialEq)]
+pub enum ComputeModel {
+    /// Fixed computation model (eq. 1–2): exactly `τ_i` per gradient.
+    Fixed { taus: Vec<f64> },
+    /// Per-gradient random durations (§G experiments).
+    Random { dists: Vec<TimeDist> },
+    /// Universal computation model (§5): power functions `v_i(t)`.
+    Universal { powers: Vec<PowerFn> },
+    /// Any distributional model wrapped with per-worker up/down link costs
+    /// (built via [`super::CommModel::into_compute_model`]).
+    WithComm {
+        inner: Box<ComputeModel>,
+        links: Vec<super::LinkCost>,
+    },
+}
+
+impl ComputeModel {
+    pub fn n_workers(&self) -> usize {
+        match self {
+            ComputeModel::Fixed { taus } => taus.len(),
+            ComputeModel::Random { dists } => dists.len(),
+            ComputeModel::Universal { powers } => powers.len(),
+            ComputeModel::WithComm { links, .. } => links.len(),
+        }
+    }
+
+    /// Duration of one gradient for `worker` starting at time `now`.
+    pub fn duration(&self, worker: usize, now: f64, rng: &mut Prng) -> f64 {
+        match self {
+            ComputeModel::Fixed { taus } => taus[worker],
+            ComputeModel::Random { dists } => dists[worker].sample(rng),
+            ComputeModel::Universal { powers } => {
+                let done = powers[worker].invert_work(now, 1.0);
+                (done - now).max(1e-12)
+            }
+            ComputeModel::WithComm { inner, links } => {
+                let down = links[worker].down.sample(rng);
+                let compute = inner.duration(worker, now + down, rng);
+                let up = links[worker].up.sample(rng);
+                down + compute + up
+            }
+        }
+    }
+
+    /// `τ_i` upper bounds where defined (`None` entries for unbounded
+    /// distributions).  Used by the complexity calculators and by
+    /// Naive Optimal ASGD's `m*` selection.
+    pub fn tau_bounds(&self) -> Vec<Option<f64>> {
+        match self {
+            ComputeModel::Fixed { taus } => taus.iter().map(|&t| Some(t)).collect(),
+            ComputeModel::Random { dists } => dists.iter().map(|d| d.upper_bound()).collect(),
+            ComputeModel::Universal { .. } => vec![None; self.n_workers()],
+            ComputeModel::WithComm { inner, links } => inner
+                .tau_bounds()
+                .iter()
+                .zip(links)
+                .map(|(b, l)| match (b, l.down.upper_bound(), l.up.upper_bound()) {
+                    (Some(b), Some(d), Some(u)) => Some(b + d + u),
+                    _ => None,
+                })
+                .collect(),
+        }
+    }
+
+    /// Expected per-gradient durations (means for random; exact for fixed).
+    pub fn tau_means(&self) -> Vec<f64> {
+        match self {
+            ComputeModel::Fixed { taus } => taus.clone(),
+            ComputeModel::Random { dists } => dists.iter().map(|d| d.mean()).collect(),
+            ComputeModel::Universal { powers } => powers
+                .iter()
+                .map(|p| {
+                    let r = p.eval(0.0);
+                    if r > 0.0 {
+                        1.0 / r
+                    } else {
+                        f64::INFINITY
+                    }
+                })
+                .collect(),
+            ComputeModel::WithComm { inner, links } => inner
+                .tau_means()
+                .iter()
+                .zip(links)
+                .map(|(m, l)| m + l.down.mean() + l.up.mean())
+                .collect(),
+        }
+    }
+
+    // ---- constructors for the paper's standard profiles ----
+
+    /// All workers equal: `τ_i = tau`.
+    pub fn fixed_equal(n: usize, tau: f64) -> Self {
+        ComputeModel::Fixed {
+            taus: vec![tau; n],
+        }
+    }
+
+    /// `τ_i = i` (1-based) — linear heterogeneity.
+    pub fn fixed_linear(n: usize) -> Self {
+        ComputeModel::Fixed {
+            taus: (1..=n).map(|i| i as f64).collect(),
+        }
+    }
+
+    /// `τ_i = sqrt(i)` — the §2/§E worked example.
+    pub fn fixed_sqrt(n: usize) -> Self {
+        ComputeModel::Fixed {
+            taus: (1..=n).map(|i| (i as f64).sqrt()).collect(),
+        }
+    }
+
+    /// The §G experimental model: `τ_i = i + |η_i|`, `η_i ~ N(0, i)`
+    /// redrawn per gradient.
+    pub fn random_paper(n: usize) -> Self {
+        ComputeModel::Random {
+            dists: (1..=n)
+                .map(|i| TimeDist::ShiftedHalfNormal {
+                    base: i as f64,
+                    sigma: (i as f64).sqrt(),
+                })
+                .collect(),
+        }
+    }
+
+    /// Universal-model wrapper of the fixed model: `v_i = 1/τ_i`.
+    pub fn universal_from_taus(taus: &[f64]) -> Self {
+        ComputeModel::Universal {
+            powers: taus
+                .iter()
+                .map(|&t| PowerFn::Constant { rate: 1.0 / t })
+                .collect(),
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::testkit;
+
+    #[test]
+    fn constant_power_matches_fixed() {
+        let p = PowerFn::Constant { rate: 0.5 };
+        assert!((p.invert_work(3.0, 1.0) - 5.0).abs() < 1e-12);
+        assert!((p.work(0.0, 4.0) - 2.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn flip_inversion() {
+        let p = PowerFn::Flip {
+            rate_before: 1.0,
+            rate_after: 0.25,
+            t_flip: 2.0,
+        };
+        // 1 unit before flip
+        assert!((p.invert_work(0.0, 1.0) - 1.0).abs() < 1e-12);
+        // straddles the flip: 2 units = 2 before + (1/0.25)=4 after? no:
+        // work(0,2)=2; need 3 → 2 + (3-2)/0.25 = 2+4 = 6
+        assert!((p.invert_work(0.0, 3.0) - 6.0).abs() < 1e-12);
+        // dead after flip
+        let dead = PowerFn::Flip {
+            rate_before: 1.0,
+            rate_after: 0.0,
+            t_flip: 2.0,
+        };
+        assert_eq!(dead.invert_work(0.0, 3.0), f64::INFINITY);
+    }
+
+    #[test]
+    fn duty_cycle_work_and_inversion() {
+        let p = PowerFn::DutyCycle {
+            rate: 2.0,
+            period: 10.0,
+            on_frac: 0.5,
+            phase: 0.0,
+        };
+        // on for [0,5): work(0,5)=10, off [5,10): work(5,10)=0
+        assert!((p.work(0.0, 5.0) - 10.0).abs() < 1e-12);
+        assert!((p.work(5.0, 10.0)).abs() < 1e-12);
+        assert!((p.work(0.0, 20.0) - 20.0).abs() < 1e-12);
+        // starting inside the off-phase waits for the next period
+        let t = p.invert_work(6.0, 1.0);
+        assert!((t - 10.5).abs() < 1e-9, "t={t}");
+    }
+
+    #[test]
+    fn ramp_inversion_consistency() {
+        let p = PowerFn::Ramp { a: 0.0, b: 1.0 };
+        // ∫_0^T t dt = T²/2 = 1 → T = sqrt(2)
+        assert!((p.invert_work(0.0, 1.0) - 2f64.sqrt()).abs() < 1e-9);
+        // decaying ramp that can never deliver the work
+        let dying = PowerFn::Ramp { a: 1.0, b: -1.0 };
+        // max work = 0.5
+        assert_eq!(dying.invert_work(0.0, 1.0), f64::INFINITY);
+        assert!((dying.invert_work(0.0, 0.375) - 0.5).abs() < 1e-9);
+    }
+
+    #[test]
+    fn invert_work_property_all_powerfns() {
+        testkit::check("invert_work is the inverse of work", |g| {
+            let p = match g.usize_in(0, 3) {
+                0 => PowerFn::Constant {
+                    rate: g.f64_in(0.1, 5.0),
+                },
+                1 => PowerFn::DutyCycle {
+                    rate: g.f64_in(0.5, 3.0),
+                    period: g.f64_in(1.0, 20.0),
+                    on_frac: g.f64_in(0.2, 0.9),
+                    phase: g.f64_in(0.0, 5.0),
+                },
+                2 => PowerFn::Flip {
+                    rate_before: g.f64_in(0.1, 2.0),
+                    rate_after: g.f64_in(0.1, 2.0),
+                    t_flip: g.f64_in(0.0, 10.0),
+                },
+                _ => PowerFn::Ramp {
+                    a: g.f64_in(0.1, 2.0),
+                    b: g.f64_in(0.0, 0.5),
+                },
+            };
+            let t0 = g.f64_in(0.0, 15.0);
+            let units = g.f64_in(0.1, 5.0);
+            let t = p.invert_work(t0, units);
+            assert!(t.is_finite(), "{p:?}");
+            assert!(t >= t0);
+            let w = p.work(t0, t);
+            assert!(
+                (w - units).abs() < 1e-6,
+                "{p:?} t0={t0} units={units} T={t} work={w}"
+            );
+        });
+    }
+
+    #[test]
+    fn universal_reduces_to_fixed() {
+        // Lemma 5.1 consistency: v_i = 1/τ_i behaves like the fixed model.
+        let taus = vec![1.0, 2.0, 4.0];
+        let fixed = ComputeModel::Fixed { taus: taus.clone() };
+        let uni = ComputeModel::universal_from_taus(&taus);
+        let mut rng = crate::prng::Prng::seed_from_u64(0);
+        for w in 0..3 {
+            for now in [0.0, 1.3, 77.7] {
+                let df = fixed.duration(w, now, &mut rng);
+                let du = uni.duration(w, now, &mut rng);
+                assert!((df - du).abs() < 1e-9, "w={w} now={now}: {df} vs {du}");
+            }
+        }
+    }
+
+    #[test]
+    fn paper_profiles() {
+        let m = ComputeModel::fixed_sqrt(4);
+        assert_eq!(
+            m.tau_bounds(),
+            vec![Some(1.0), Some(2f64.sqrt()), Some(3f64.sqrt()), Some(2.0)]
+        );
+        let r = ComputeModel::random_paper(3);
+        assert_eq!(r.n_workers(), 3);
+        // means increase with index
+        let means = r.tau_means();
+        assert!(means[0] < means[1] && means[1] < means[2]);
+        // unbounded distributions have no τ bound
+        assert_eq!(r.tau_bounds(), vec![None, None, None]);
+    }
+}

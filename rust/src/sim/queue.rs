@@ -1,0 +1,173 @@
+//! Deterministic event queue over simulated time.
+//!
+//! A thin wrapper around `BinaryHeap` with (a) a total order on `f64`
+//! timestamps via `total_cmp` and (b) a monotone sequence number breaking
+//! ties in insertion order, so simulations are bit-reproducible regardless
+//! of heap internals.  Payloads are stored inline in the heap entries
+//! (they do not participate in the ordering), keeping pops to a single
+//! cache line — this queue sits on the innermost simulator loop.
+
+use std::cmp::Ordering;
+use std::collections::BinaryHeap;
+
+/// Totally-ordered `f64` (NaN-free by construction in the simulator).
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub struct OrdF64(pub f64);
+
+impl Eq for OrdF64 {}
+
+impl PartialOrd for OrdF64 {
+    fn partial_cmp(&self, other: &Self) -> Option<Ordering> {
+        Some(self.cmp(other))
+    }
+}
+
+impl Ord for OrdF64 {
+    fn cmp(&self, other: &Self) -> Ordering {
+        self.0.total_cmp(&other.0)
+    }
+}
+
+/// Min-heap entry: ordered by `(time, seq)` only; payload rides along.
+#[derive(Debug)]
+struct Entry<T> {
+    t: OrdF64,
+    seq: u64,
+    payload: T,
+}
+
+impl<T> PartialEq for Entry<T> {
+    fn eq(&self, other: &Self) -> bool {
+        self.t == other.t && self.seq == other.seq
+    }
+}
+
+impl<T> Eq for Entry<T> {}
+
+impl<T> PartialOrd for Entry<T> {
+    fn partial_cmp(&self, other: &Self) -> Option<Ordering> {
+        Some(self.cmp(other))
+    }
+}
+
+impl<T> Ord for Entry<T> {
+    fn cmp(&self, other: &Self) -> Ordering {
+        // reversed: BinaryHeap is a max-heap, we want earliest-first
+        (other.t, other.seq).cmp(&(self.t, self.seq))
+    }
+}
+
+/// Min-priority queue of `(time, payload)` events.
+#[derive(Debug)]
+pub struct EventQueue<T> {
+    heap: BinaryHeap<Entry<T>>,
+    seq: u64,
+}
+
+impl<T> EventQueue<T> {
+    pub fn new() -> Self {
+        Self {
+            heap: BinaryHeap::new(),
+            seq: 0,
+        }
+    }
+
+    pub fn len(&self) -> usize {
+        self.heap.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.heap.is_empty()
+    }
+
+    /// Schedule `payload` at absolute time `t`.
+    #[inline]
+    pub fn push(&mut self, t: f64, payload: T) {
+        debug_assert!(t.is_finite(), "event time must be finite, got {t}");
+        self.heap.push(Entry {
+            t: OrdF64(t),
+            seq: self.seq,
+            payload,
+        });
+        self.seq += 1;
+    }
+
+    /// Pop the earliest event (FIFO among equal timestamps).
+    #[inline]
+    pub fn pop(&mut self) -> Option<(f64, T)> {
+        self.heap.pop().map(|e| (e.t.0, e.payload))
+    }
+
+    /// Earliest pending timestamp.
+    pub fn peek_time(&self) -> Option<f64> {
+        self.heap.peek().map(|e| e.t.0)
+    }
+}
+
+impl<T> Default for EventQueue<T> {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn pops_in_time_order() {
+        let mut q = EventQueue::new();
+        q.push(3.0, "c");
+        q.push(1.0, "a");
+        q.push(2.0, "b");
+        assert_eq!(q.peek_time(), Some(1.0));
+        assert_eq!(q.pop(), Some((1.0, "a")));
+        assert_eq!(q.pop(), Some((2.0, "b")));
+        assert_eq!(q.pop(), Some((3.0, "c")));
+        assert_eq!(q.pop(), None);
+    }
+
+    #[test]
+    fn fifo_among_ties() {
+        let mut q = EventQueue::new();
+        for i in 0..100 {
+            q.push(1.0, i);
+        }
+        for i in 0..100 {
+            assert_eq!(q.pop(), Some((1.0, i)));
+        }
+    }
+
+    #[test]
+    fn interleaved_push_pop_cycles() {
+        let mut q = EventQueue::new();
+        for round in 0..50u64 {
+            for i in 0..8u64 {
+                q.push(round as f64 + i as f64 * 0.1, (round, i));
+            }
+            for i in 0..8u64 {
+                let (_, p) = q.pop().unwrap();
+                assert_eq!(p, (round, i));
+            }
+        }
+        assert!(q.is_empty());
+    }
+
+    #[test]
+    fn ordf64_total_order() {
+        assert!(OrdF64(1.0) < OrdF64(2.0));
+        assert!(OrdF64(-0.0) <= OrdF64(0.0));
+        assert!(OrdF64(f64::INFINITY) > OrdF64(1e300));
+    }
+
+    #[test]
+    fn negative_and_subnormal_times() {
+        let mut q = EventQueue::new();
+        q.push(0.0, 1);
+        q.push(-1.0, 0);
+        q.push(1e-308, 2);
+        assert_eq!(q.pop().unwrap().1, 0);
+        assert_eq!(q.pop().unwrap().1, 1);
+        assert_eq!(q.pop().unwrap().1, 2);
+    }
+}

@@ -1,0 +1,107 @@
+//! Property-testing substrate (no `proptest` in the offline environment).
+//!
+//! A property is a closure over a [`Gen`]; [`check`] runs it across many
+//! seeded cases and reports the first failing seed, so failures are
+//! reproducible by construction (`RINGMASTER_PROP_SEED` pins the base seed,
+//! `RINGMASTER_PROP_CASES` the case count).
+
+use crate::prng::Prng;
+
+/// Seeded random-input generator handed to property closures.
+pub struct Gen {
+    pub rng: Prng,
+    /// Case index (0-based) — handy for size-scaling inputs.
+    pub case: usize,
+}
+
+impl Gen {
+    pub fn usize_in(&mut self, lo: usize, hi: usize) -> usize {
+        self.rng.usize_in(lo, hi)
+    }
+
+    pub fn f64_in(&mut self, lo: f64, hi: f64) -> f64 {
+        self.rng.f64_in(lo, hi)
+    }
+
+    pub fn bool(&mut self) -> bool {
+        self.rng.bool(0.5)
+    }
+
+    pub fn pick<'a, T>(&mut self, xs: &'a [T]) -> &'a T {
+        &xs[self.rng.usize_below(xs.len())]
+    }
+
+    pub fn vec_f64(&mut self, len: usize, lo: f64, hi: f64) -> Vec<f64> {
+        (0..len).map(|_| self.f64_in(lo, hi)).collect()
+    }
+
+    /// Sorted strictly-positive durations — a random τ profile.
+    pub fn tau_profile(&mut self, n: usize, lo: f64, hi: f64) -> Vec<f64> {
+        let mut taus = self.vec_f64(n, lo.max(1e-6), hi);
+        taus.sort_by(|a, b| a.partial_cmp(b).unwrap());
+        taus
+    }
+}
+
+fn env_u64(name: &str, default: u64) -> u64 {
+    std::env::var(name)
+        .ok()
+        .and_then(|v| v.parse().ok())
+        .unwrap_or(default)
+}
+
+/// Run `prop` across `cases` seeded generators; panic with the failing seed.
+pub fn check<F: FnMut(&mut Gen)>(name: &str, mut prop: F) {
+    let base_seed = env_u64("RINGMASTER_PROP_SEED", 0x5EED_CAFE);
+    let cases = env_u64("RINGMASTER_PROP_CASES", 64) as usize;
+    for case in 0..cases {
+        let seed = base_seed.wrapping_add(case as u64).wrapping_mul(0x9E3779B97F4A7C15);
+        let mut g = Gen {
+            rng: Prng::seed_from_u64(seed),
+            case,
+        };
+        let result = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| prop(&mut g)));
+        if let Err(payload) = result {
+            let msg = payload
+                .downcast_ref::<String>()
+                .map(|s| s.as_str())
+                .or_else(|| payload.downcast_ref::<&str>().copied())
+                .unwrap_or("<non-string panic>");
+            panic!(
+                "property '{name}' failed on case {case} \
+                 (rerun with RINGMASTER_PROP_SEED={base_seed}): {msg}"
+            );
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn check_passes_trivial_property() {
+        check("sum-commutes", |g| {
+            let a = g.f64_in(-10.0, 10.0);
+            let b = g.f64_in(-10.0, 10.0);
+            assert_eq!(a + b, b + a);
+        });
+    }
+
+    #[test]
+    #[should_panic(expected = "property 'always-fails'")]
+    fn check_reports_failures() {
+        check("always-fails", |_| panic!("boom"));
+    }
+
+    #[test]
+    fn tau_profile_is_sorted_positive() {
+        check("tau-profile", |g| {
+            let n = g.usize_in(1, 50);
+            let taus = g.tau_profile(n, 0.1, 100.0);
+            assert_eq!(taus.len(), n);
+            assert!(taus.windows(2).all(|w| w[0] <= w[1]));
+            assert!(taus.iter().all(|&t| t > 0.0));
+        });
+    }
+}

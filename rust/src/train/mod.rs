@@ -1,0 +1,219 @@
+//! MLP training harness over the PJRT artifacts — the §G.1 workload.
+//!
+//! [`MlpProblem`] implements [`StochasticProblem`]: a stochastic gradient
+//! is the compiled `mlp_step_*` artifact (loss + full parameter gradient,
+//! Pallas matmul kernels inside) evaluated on a random minibatch;
+//! evaluation runs the same artifact over a fixed deterministic slice of
+//! the eval split.  Parameters live as one flat `f64` vector on the server,
+//! staged to `f32` at the PJRT boundary — so every scheduler from
+//! [`crate::coordinator`] drives neural-network training unchanged.
+
+use anyhow::{anyhow, Result};
+
+use crate::data::{Dataset, IMG_PIXELS, N_CLASSES};
+use crate::opt::StochasticProblem;
+use crate::prng::Prng;
+use crate::runtime::PjrtRuntime;
+
+/// Layer layout parsed from the artifact manifest meta.
+#[derive(Clone, Debug, PartialEq)]
+pub struct LayerLayout {
+    pub in_dim: usize,
+    pub out_dim: usize,
+    pub w_offset: usize,
+    pub b_offset: usize,
+}
+
+/// Neural-network training problem backed by `mlp_step_*` artifacts.
+pub struct MlpProblem {
+    runtime: PjrtRuntime,
+    step_entry: String,
+    eval_entry: String,
+    pub dims: Vec<usize>,
+    pub layout: Vec<LayerLayout>,
+    pub param_count: usize,
+    pub batch: usize,
+    train: Dataset,
+    eval: Dataset,
+    /// Number of deterministic eval batches averaged per evaluation.
+    eval_batches: usize,
+    init_seed: u64,
+    // staging buffers
+    pf32: Vec<f32>,
+    xb: Vec<f32>,
+    yb: Vec<f32>,
+}
+
+impl MlpProblem {
+    /// Load from a runtime whose manifest carries `mlp_step_{tag}` /
+    /// `mlp_eval_{tag}` entries, with the given train/eval data.
+    pub fn new(mut runtime: PjrtRuntime, train: Dataset, eval: Dataset) -> Result<Self> {
+        let step = runtime
+            .manifest()
+            .entries
+            .iter()
+            .find(|e| e.name.starts_with("mlp_step_"))
+            .ok_or_else(|| anyhow!("no mlp_step_* artifact (run `make artifacts`)"))?
+            .clone();
+        let eval_entry = step.name.replace("mlp_step_", "mlp_eval_");
+        let meta = &step.meta;
+        let dims: Vec<usize> = meta
+            .get("dims")
+            .as_arr()
+            .ok_or_else(|| anyhow!("meta.dims"))?
+            .iter()
+            .map(|d| d.as_usize().unwrap_or(0))
+            .collect();
+        let batch = meta
+            .get("batch")
+            .as_usize()
+            .ok_or_else(|| anyhow!("meta.batch"))?;
+        let param_count = meta
+            .get("param_count")
+            .as_usize()
+            .ok_or_else(|| anyhow!("meta.param_count"))?;
+        let layout = meta
+            .get("layout")
+            .as_arr()
+            .ok_or_else(|| anyhow!("meta.layout"))?
+            .iter()
+            .map(|l| LayerLayout {
+                in_dim: l.get("in_dim").as_usize().unwrap_or(0),
+                out_dim: l.get("out_dim").as_usize().unwrap_or(0),
+                w_offset: l.get("w_offset").as_usize().unwrap_or(0),
+                b_offset: l.get("b_offset").as_usize().unwrap_or(0),
+            })
+            .collect::<Vec<_>>();
+        assert_eq!(dims[0], IMG_PIXELS, "artifact input dim vs dataset");
+        assert_eq!(*dims.last().unwrap(), N_CLASSES);
+        runtime.warmup(&step.name)?;
+        Ok(Self {
+            runtime,
+            step_entry: step.name.clone(),
+            eval_entry,
+            pf32: vec![0.0; param_count],
+            xb: vec![0.0; batch * IMG_PIXELS],
+            yb: vec![0.0; batch * N_CLASSES],
+            dims,
+            layout,
+            param_count,
+            batch,
+            train,
+            eval,
+            eval_batches: 4,
+            init_seed: 0xF17,
+        })
+    }
+
+    pub fn load_default(train: Dataset, eval: Dataset) -> Result<Self> {
+        Self::new(PjrtRuntime::load_default()?, train, eval)
+    }
+
+    pub fn set_init_seed(&mut self, seed: u64) {
+        self.init_seed = seed;
+    }
+
+    pub fn set_eval_batches(&mut self, n: usize) {
+        self.eval_batches = n.max(1);
+    }
+
+    /// One artifact call: `(loss, grad)` on the batch currently staged in
+    /// `self.xb/self.yb`.
+    fn step_on_staged(&mut self, x: &[f64], grad: &mut [f64]) -> f64 {
+        for (o, &v) in self.pf32.iter_mut().zip(x) {
+            *o = v as f32;
+        }
+        let results = self
+            .runtime
+            .execute_f32(&self.step_entry, &[&self.pf32, &self.xb, &self.yb])
+            .expect("mlp_step execution failed");
+        let loss = results[0][0] as f64;
+        for (g, &v) in grad.iter_mut().zip(&results[1]) {
+            *g = v as f64;
+        }
+        loss
+    }
+
+    /// Classification accuracy on the eval split (via `mlp_eval_*`).
+    pub fn accuracy(&mut self, x: &[f64]) -> Result<f64> {
+        for (o, &v) in self.pf32.iter_mut().zip(x) {
+            *o = v as f32;
+        }
+        let b = self.batch;
+        let n = self.eval.len().min(self.eval_batches * b);
+        let mut correct = 0usize;
+        let mut seen = 0usize;
+        let mut start = 0;
+        while seen < n {
+            self.eval.fill_batch_at(start, b, &mut self.xb, &mut self.yb);
+            let logits = &self
+                .runtime
+                .execute_f32(&self.eval_entry, &[&self.pf32, &self.xb])?[0];
+            let take = b.min(n - seen);
+            for j in 0..take {
+                let row = &logits[j * N_CLASSES..(j + 1) * N_CLASSES];
+                let pred = row
+                    .iter()
+                    .enumerate()
+                    .max_by(|a, b| a.1.partial_cmp(b.1).unwrap())
+                    .unwrap()
+                    .0;
+                let label = self.eval.labels[(start + j) % self.eval.len()] as usize;
+                if pred == label {
+                    correct += 1;
+                }
+            }
+            seen += take;
+            start += b;
+        }
+        Ok(correct as f64 / seen as f64)
+    }
+}
+
+impl StochasticProblem for MlpProblem {
+    fn dim(&self) -> usize {
+        self.param_count
+    }
+
+    fn stoch_grad(&mut self, x: &[f64], rng: &mut Prng, grad: &mut [f64]) -> f64 {
+        let b = self.batch;
+        // disjoint field borrows: dataset read, staging buffers written
+        self.train.sample_batch(b, rng, &mut self.xb, &mut self.yb);
+        self.step_on_staged(x, grad)
+    }
+
+    fn eval_value_grad(&mut self, x: &[f64], grad: &mut [f64]) -> f64 {
+        // deterministic average over fixed eval batches
+        let b = self.batch;
+        let nb = self.eval_batches;
+        let mut loss_sum = 0.0;
+        grad.fill(0.0);
+        let mut gtmp = vec![0.0; grad.len()];
+        for i in 0..nb {
+            self.eval.fill_batch_at(i * b, b, &mut self.xb, &mut self.yb);
+            loss_sum += self.step_on_staged(x, &mut gtmp);
+            for (g, &t) in grad.iter_mut().zip(&gtmp) {
+                *g += t;
+            }
+        }
+        let inv = 1.0 / nb as f64;
+        for g in grad.iter_mut() {
+            *g *= inv;
+        }
+        loss_sum * inv
+    }
+
+    fn init_point(&self) -> Vec<f64> {
+        // Glorot-uniform per layer, biases zero — from the manifest layout.
+        let mut rng = Prng::seed_from_u64(self.init_seed);
+        let mut p = vec![0.0; self.param_count];
+        for l in &self.layout {
+            let limit = (6.0 / (l.in_dim + l.out_dim) as f64).sqrt();
+            for i in 0..(l.in_dim * l.out_dim) {
+                p[l.w_offset + i] = rng.f64_in(-limit, limit);
+            }
+            // biases already zero
+        }
+        p
+    }
+}

@@ -1,0 +1,47 @@
+//! Small shared utilities: a minimal JSON value + parser/writer (used for
+//! the artifact manifest and metrics output) and misc helpers.
+
+pub mod json;
+
+/// Format seconds compactly for human-readable logs (`1.23s`, `4.5ms`, `2m03s`).
+pub fn fmt_secs(s: f64) -> String {
+    if !s.is_finite() {
+        return format!("{s}");
+    }
+    if s >= 120.0 {
+        let m = (s / 60.0).floor() as u64;
+        format!("{m}m{:04.1}s", s - 60.0 * m as f64)
+    } else if s >= 1.0 {
+        format!("{s:.3}s")
+    } else if s >= 1e-3 {
+        format!("{:.3}ms", s * 1e3)
+    } else {
+        format!("{:.3}µs", s * 1e6)
+    }
+}
+
+/// Integer ceiling division.
+#[inline]
+pub fn div_ceil(a: u64, b: u64) -> u64 {
+    (a + b - 1) / b
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn fmt_secs_ranges() {
+        assert_eq!(fmt_secs(125.0), "2m05.0s");
+        assert_eq!(fmt_secs(1.5), "1.500s");
+        assert_eq!(fmt_secs(0.0025), "2.500ms");
+        assert_eq!(fmt_secs(2.5e-6), "2.500µs");
+    }
+
+    #[test]
+    fn div_ceil_cases() {
+        assert_eq!(div_ceil(10, 3), 4);
+        assert_eq!(div_ceil(9, 3), 3);
+        assert_eq!(div_ceil(1, 100), 1);
+    }
+}

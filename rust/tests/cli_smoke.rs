@@ -1,0 +1,111 @@
+//! End-to-end CLI tests: run the actual `ringmaster` binary the way a user
+//! would and check its output contract.
+
+use std::process::Command;
+
+fn run(args: &[&str]) -> (String, String, bool) {
+    let out = Command::new(env!("CARGO_BIN_EXE_ringmaster"))
+        .args(args)
+        .output()
+        .expect("binary runs");
+    (
+        String::from_utf8_lossy(&out.stdout).into_owned(),
+        String::from_utf8_lossy(&out.stderr).into_owned(),
+        out.status.success(),
+    )
+}
+
+#[test]
+fn help_lists_subcommands() {
+    let (stdout, _, ok) = run(&["--help"]);
+    assert!(ok);
+    for sub in ["run", "compare", "complexity", "fig1", "fig2", "fig3", "train"] {
+        assert!(stdout.contains(sub), "help missing '{sub}'");
+    }
+}
+
+#[test]
+fn no_args_prints_help() {
+    let (stdout, _, ok) = run(&[]);
+    assert!(ok);
+    assert!(stdout.contains("usage:"));
+}
+
+#[test]
+fn unknown_subcommand_fails_cleanly() {
+    let (_, stderr, ok) = run(&["frobnicate"]);
+    assert!(!ok);
+    assert!(stderr.contains("unknown subcommand"));
+}
+
+#[test]
+fn bad_option_value_fails_cleanly() {
+    let (_, stderr, ok) = run(&["run", "--d", "not-a-number"]);
+    assert!(!ok);
+    assert!(stderr.contains("--d"));
+}
+
+#[test]
+fn complexity_prints_theory_table() {
+    let (stdout, _, ok) = run(&["complexity", "--n", "64", "--d", "64"]);
+    assert!(ok, "{stdout}");
+    assert!(stdout.contains("T_A (eq.4)"));
+    assert!(stdout.contains("linear (τ_i=i)"));
+    assert!(stdout.contains("R (eq.9)"));
+}
+
+#[test]
+fn run_subcommand_reports_convergence_and_writes_csv() {
+    let csv = std::env::temp_dir().join("ringmaster_cli_run.csv");
+    let csv_s = csv.to_str().unwrap();
+    let (stdout, stderr, ok) = run(&[
+        "run",
+        "--scheduler", "ringmaster",
+        "--model", "linear",
+        "--d", "16",
+        "--n", "16",
+        "--r", "8",
+        "--gamma", "0.05",
+        "--max-iters", "30000",
+        "--target-gap", "1e-4",
+        "--csv-out", csv_s,
+    ]);
+    assert!(ok, "stdout: {stdout}\nstderr: {stderr}");
+    assert!(stdout.contains("time-to-target"));
+    let body = std::fs::read_to_string(&csv).unwrap();
+    assert!(body.starts_with("series,t,value"));
+    assert!(body.lines().count() > 10);
+    std::fs::remove_file(&csv).ok();
+}
+
+#[test]
+fn run_all_scheduler_flavors() {
+    for sched in ["asgd", "delay-adaptive", "rennala", "naive", "minibatch"] {
+        let (stdout, stderr, ok) = run(&[
+            "run",
+            "--scheduler", sched,
+            "--model", "linear",
+            "--d", "16",
+            "--n", "8",
+            "--gamma", "0.05",
+            "--max-iters", "4000",
+            "--target-gap", "1e-12", // effectively: run the budget out
+        ]);
+        assert!(ok, "{sched}: {stdout}\n{stderr}");
+        assert!(stdout.contains("final:"), "{sched}");
+    }
+}
+
+#[test]
+fn exec_demo_runs_real_threads() {
+    let (stdout, stderr, ok) = run(&[
+        "exec-demo",
+        "--n", "4",
+        "--d", "16",
+        "--max-iters", "200",
+        "--time-scale", "1e-4",
+    ]);
+    assert!(ok, "{stdout}\n{stderr}");
+    assert!(stdout.contains("exec ringmaster"));
+    assert!(stdout.contains("exec asgd"));
+}

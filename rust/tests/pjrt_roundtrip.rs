@@ -1,0 +1,130 @@
+//! PJRT runtime integration: load the real AOT artifacts, execute them,
+//! and verify against the native implementations.
+//!
+//! These tests need `make artifacts` output; they fail with a clear
+//! message when the artifacts are missing (the Makefile's `test` target
+//! builds artifacts first).
+
+use ringmaster::data::synthetic_mnist;
+use ringmaster::linalg::nrm2;
+use ringmaster::opt::{PjrtQuadratic, Problem, QuadraticProblem};
+use ringmaster::prng::Prng;
+use ringmaster::runtime::{Manifest, PjrtRuntime};
+use ringmaster::train::MlpProblem;
+
+fn have_artifacts() -> bool {
+    Manifest::default_dir().join("manifest.json").exists()
+}
+
+macro_rules! require_artifacts {
+    () => {
+        if !have_artifacts() {
+            panic!(
+                "artifacts/manifest.json missing — run `make artifacts` before `cargo test`"
+            );
+        }
+    };
+}
+
+#[test]
+fn manifest_has_expected_entries() {
+    require_artifacts!();
+    let m = Manifest::load(&Manifest::default_dir()).unwrap();
+    let names: Vec<&str> = m.entries.iter().map(|e| e.name.as_str()).collect();
+    assert!(names.iter().any(|n| n.starts_with("quad_vg_d")), "{names:?}");
+    assert!(names.iter().any(|n| n.starts_with("mlp_step_")), "{names:?}");
+    assert!(names.iter().any(|n| n.starts_with("mlp_eval_")), "{names:?}");
+}
+
+#[test]
+fn pjrt_quadratic_matches_native_gradient() {
+    require_artifacts!();
+    let d = 64;
+    let pjrt = PjrtQuadratic::load_default(d).expect("load artifact");
+    let native = QuadraticProblem::paper(d);
+    let mut rng = Prng::seed_from_u64(5);
+    for trial in 0..10 {
+        let x: Vec<f64> = (0..d).map(|_| rng.normal(0.0, 1.0)).collect();
+        let mut g_p = vec![0.0; d];
+        let mut g_n = vec![0.0; d];
+        let v_p = pjrt.value_grad(&x, &mut g_p);
+        let v_n = native.value_grad(&x, &mut g_n);
+        assert!(
+            (v_p - v_n).abs() < 1e-4 * (1.0 + v_n.abs()),
+            "trial {trial}: value {v_p} vs {v_n}"
+        );
+        let diff: Vec<f64> = g_p.iter().zip(&g_n).map(|(a, b)| a - b).collect();
+        assert!(
+            nrm2(&diff) < 1e-4 * (1.0 + nrm2(&g_n)),
+            "trial {trial}: grad mismatch {}",
+            nrm2(&diff)
+        );
+    }
+    assert_eq!(pjrt.f_star(), native.f_star());
+}
+
+#[test]
+fn pjrt_quadratic_paper_dimension_loads() {
+    require_artifacts!();
+    let d = 1729;
+    let pjrt = PjrtQuadratic::load_default(d).expect("paper-scale artifact");
+    let x = vec![0.1; d];
+    let mut g = vec![0.0; d];
+    let v = pjrt.value_grad(&x, &mut g);
+    assert!(v.is_finite());
+    assert!(g.iter().all(|gi| gi.is_finite()));
+}
+
+#[test]
+fn runtime_rejects_bad_inputs() {
+    require_artifacts!();
+    let mut rt = PjrtRuntime::load_default().unwrap();
+    // wrong arity
+    assert!(rt.execute_f32("quad_vg_d64", &[]).is_err());
+    // wrong size
+    let wrong = vec![0.0f32; 3];
+    assert!(rt.execute_f32("quad_vg_d64", &[&wrong]).is_err());
+    // unknown entry
+    assert!(rt.execute_f32("nope", &[]).is_err());
+}
+
+#[test]
+fn mlp_gradient_is_a_descent_direction_and_loss_decreases() {
+    require_artifacts!();
+    let ds = synthetic_mnist(400, 0.15, 11);
+    let (train, eval) = ds.split(0.25, 11);
+    let mut p = MlpProblem::load_default(train, eval).unwrap();
+    use ringmaster::opt::StochasticProblem;
+    let x0 = p.init_point();
+    let mut g = vec![0.0; p.dim()];
+    let l0 = p.eval_value_grad(&x0, &mut g);
+    assert!(l0.is_finite() && l0 > 0.0);
+    // step along −g must reduce the (deterministic) eval loss
+    let mut x1 = x0.clone();
+    ringmaster::linalg::axpy(-0.1, &g, &mut x1);
+    let mut g1 = vec![0.0; p.dim()];
+    let l1 = p.eval_value_grad(&x1, &mut g1);
+    assert!(l1 < l0, "eval loss must drop: {l0} -> {l1}");
+}
+
+#[test]
+fn mlp_sgd_improves_accuracy_over_init() {
+    require_artifacts!();
+    use ringmaster::opt::StochasticProblem;
+    let ds = synthetic_mnist(600, 0.15, 13);
+    let (train, eval) = ds.split(0.25, 13);
+    let mut p = MlpProblem::load_default(train, eval).unwrap();
+    let mut x = p.init_point();
+    let acc0 = p.accuracy(&x).unwrap();
+    let mut rng = Prng::seed_from_u64(1);
+    let mut g = vec![0.0; p.dim()];
+    for _ in 0..60 {
+        p.stoch_grad(&x.clone(), &mut rng, &mut g);
+        ringmaster::linalg::axpy(-0.2, &g, &mut x);
+    }
+    let acc1 = p.accuracy(&x).unwrap();
+    assert!(
+        acc1 > acc0 + 0.2 || acc1 > 0.9,
+        "accuracy should improve a lot: {acc0:.2} -> {acc1:.2}"
+    );
+}

@@ -1,0 +1,239 @@
+//! Cross-module integration: the paper's qualitative claims at test scale.
+//!
+//! * Ringmaster beats classic ASGD in time-to-target on heterogeneous
+//!   clusters (the headline).
+//! * Ringmaster is competitive with Rennala (both optimal; paper Fig. 2
+//!   has Ringmaster winning).
+//! * Naive Optimal ASGD matches Ringmaster under the *fixed* model it was
+//!   designed for, but collapses under the §2.2 speed flip.
+//! * Synchronous minibatch pays the straggler tax.
+//! * Wall-clock executor and DES agree on count-level behaviour.
+//!
+//! Test-scale parameters are chosen so the ill-conditioned §G quadratic
+//! (κ ~ d²) converges within the budget: d = 16 (κ ≈ 115), per-coordinate
+//! noise 0.01 (stochastic gap floor ≈ γ·d·s²/4 ≈ 1e-5), target gap 1e-4.
+
+use ringmaster::complexity;
+use ringmaster::coordinator::SchedulerKind;
+use ringmaster::driver::{Driver, DriverConfig};
+use ringmaster::exec::{run_wallclock, ExecConfig};
+use ringmaster::experiments::{run_quadratic, QuadExpConfig};
+use ringmaster::opt::{Noisy, Problem, QuadraticProblem};
+use ringmaster::sim::{ComputeModel, PowerFn};
+
+const D: usize = 16;
+const N: usize = 64;
+const R: u64 = 16;
+const GAMMA_RING: f64 = 0.03; // ≈ 1/(2RL)
+const GAMMA_ASGD: f64 = 1.0 / 128.0; // ≈ 1/(2nL), the classical analyses' choice
+
+fn base_cfg() -> QuadExpConfig {
+    QuadExpConfig {
+        d: D,
+        n_workers: N,
+        noise_sigma: 0.01,
+        seed: 0,
+        max_iters: 400_000,
+        max_time: f64::INFINITY,
+        target_gap: Some(1e-4),
+        record_every: 100,
+    }
+}
+
+#[test]
+fn ringmaster_beats_asgd_on_heterogeneous_cluster() {
+    let cfg = base_cfg();
+    let model = ComputeModel::fixed_linear(N);
+    let t_ring = run_quadratic(
+        &cfg,
+        model.clone(),
+        &SchedulerKind::Ringmaster { r: R, gamma: GAMMA_RING, cancel: true },
+    )
+    .time_to_target()
+    .expect("ringmaster must converge");
+    let t_asgd = run_quadratic(&cfg, model, &SchedulerKind::Asgd { gamma: GAMMA_ASGD })
+        .time_to_target()
+        .unwrap_or(f64::INFINITY);
+    assert!(
+        t_asgd / t_ring > 1.5,
+        "expected ≥1.5x speedup over classic ASGD, got ring={t_ring} asgd={t_asgd}"
+    );
+}
+
+#[test]
+fn ringmaster_competitive_with_rennala() {
+    let cfg = base_cfg();
+    let model = ComputeModel::fixed_linear(N);
+    let t_ring = run_quadratic(
+        &cfg,
+        model.clone(),
+        &SchedulerKind::Ringmaster { r: R, gamma: GAMMA_RING, cancel: true },
+    )
+    .time_to_target()
+    .unwrap();
+    // Rennala applies the batch average, so its tuned stepsize is ≈ B×larger
+    let t_renn = run_quadratic(
+        &cfg,
+        model,
+        &SchedulerKind::Rennala { b: R, gamma: 0.4 },
+    )
+    .time_to_target()
+    .unwrap_or(f64::INFINITY);
+    assert!(
+        t_ring <= 2.0 * t_renn,
+        "both optimal — ringmaster {t_ring} vs rennala {t_renn}"
+    );
+}
+
+#[test]
+fn naive_matches_ringmaster_on_fixed_model() {
+    let cfg = base_cfg();
+    let c = cfg.constants(1e-4);
+    let taus: Vec<f64> = (1..=N).map(|i| i as f64).collect();
+    let m_star = complexity::naive_m_star(&taus, c.sigma_sq, c.eps);
+    let model = ComputeModel::Fixed { taus };
+    // Theorem 2.1: naive is optimal when speeds are static
+    let gamma_naive = (1.0 / (2.0 * m_star as f64)).min(0.1);
+    let t_naive = run_quadratic(&cfg, model.clone(), &SchedulerKind::Naive { m_star, gamma: gamma_naive })
+        .time_to_target()
+        .expect("naive converges on the model it was designed for");
+    let t_ring = run_quadratic(
+        &cfg,
+        model,
+        &SchedulerKind::Ringmaster { r: R, gamma: GAMMA_RING, cancel: true },
+    )
+    .time_to_target()
+    .unwrap();
+    assert!(
+        t_naive < 3.0 * t_ring && t_ring < 3.0 * t_naive,
+        "both near-optimal on fixed model: naive {t_naive} vs ringmaster {t_ring}"
+    );
+}
+
+#[test]
+fn naive_collapses_under_speed_flip() {
+    // §2.2: half the cluster is fast before t_flip, the other half after.
+    let n = 16;
+    let d = 32;
+    let t_flip = 300.0;
+    let budget = 3000.0;
+    let powers: Vec<PowerFn> = (0..n)
+        .map(|i| {
+            if i < n / 2 {
+                PowerFn::Flip { rate_before: 1.0, rate_after: 0.01, t_flip }
+            } else {
+                PowerFn::Flip { rate_before: 0.01, rate_after: 1.0, t_flip }
+            }
+        })
+        .collect();
+    let taus_init: Vec<f64> = (0..n).map(|i| if i < n / 2 { 1.0 } else { 100.0 }).collect();
+    let sigma_sq = d as f64 * 1e-4;
+    let m_flip = complexity::naive_m_star(&taus_init, sigma_sq, 1e-4);
+    assert!(m_flip <= n / 2, "naive should commit to the initially-fast half");
+
+    let run_flip = |kind: SchedulerKind| {
+        let problem = Noisy::new(QuadraticProblem::paper(d), 0.01);
+        let dcfg = DriverConfig {
+            seed: 0,
+            max_time: budget,
+            max_iters: 10_000_000,
+            record_every: 100,
+            ..Default::default()
+        };
+        let mut driver = Driver::new(
+            problem,
+            ComputeModel::Universal { powers: powers.clone() },
+            dcfg,
+        );
+        let mut sched = kind.build();
+        driver.run(sched.as_mut())
+    };
+    let ring = run_flip(SchedulerKind::Ringmaster { r: 8, gamma: 0.06, cancel: true });
+    let naive = run_flip(SchedulerKind::Naive { m_star: m_flip, gamma: 0.06 });
+    assert!(
+        ring.final_gap < 0.5 * naive.final_gap,
+        "flip should cripple naive: ringmaster gap {:.3e} vs naive {:.3e}",
+        ring.final_gap,
+        naive.final_gap
+    );
+    assert!(
+        ring.iters > naive.iters,
+        "ringmaster keeps updating on the newly-fast half: {} vs {}",
+        ring.iters,
+        naive.iters
+    );
+}
+
+#[test]
+fn minibatch_slower_than_async_on_stragglers() {
+    let cfg = base_cfg();
+    // one catastrophic straggler: τ_n = 1000 s
+    let mut taus: Vec<f64> = (1..=N).map(|i| i as f64).collect();
+    *taus.last_mut().unwrap() = 1000.0;
+    let model = ComputeModel::Fixed { taus };
+    let t_ring = run_quadratic(
+        &cfg,
+        model.clone(),
+        &SchedulerKind::Ringmaster { r: R, gamma: GAMMA_RING, cancel: true },
+    )
+    .time_to_target()
+    .unwrap();
+    let t_mb = run_quadratic(
+        &cfg,
+        model,
+        &SchedulerKind::Minibatch { m: N, gamma: 1.0 },
+    )
+    .time_to_target()
+    .unwrap_or(f64::INFINITY);
+    assert!(
+        t_mb > 3.0 * t_ring,
+        "sync minibatch must pay the straggler: {t_mb} vs {t_ring}"
+    );
+}
+
+#[test]
+fn wallclock_and_sim_agree_on_dynamics() {
+    // same scheduler + model in both engines: Algorithm-1 ASGD applies
+    // every gradient in both; iterate counts hit the budget in both; and
+    // the wall-clock run converges on the same objective.
+    let d = 8;
+    let problem = QuadraticProblem::paper(d);
+    let model = ComputeModel::fixed_linear(4);
+    let iters = 300u64;
+
+    let mut sim_driver = Driver::new(
+        Noisy::new(QuadraticProblem::paper(d), 0.0),
+        model.clone(),
+        DriverConfig {
+            seed: 1,
+            max_iters: iters,
+            record_every: 50,
+            ..Default::default()
+        },
+    );
+    let mut s1 = SchedulerKind::Asgd { gamma: 0.2 }.build();
+    let sim_rec = sim_driver.run(s1.as_mut());
+
+    let mut s2 = SchedulerKind::Asgd { gamma: 0.2 }.build();
+    let wall_rec = run_wallclock(
+        &problem,
+        &model,
+        s2.as_mut(),
+        &ExecConfig {
+            time_scale: 2e-4,
+            max_iters: iters,
+            noise_sigma: 0.0,
+            seed: 1,
+            ..Default::default()
+        },
+    );
+    assert_eq!(sim_rec.iters, iters);
+    assert_eq!(wall_rec.iters, iters);
+    assert_eq!(sim_rec.discarded, 0);
+    assert_eq!(wall_rec.discarded, 0);
+    // both descend to a similar neighbourhood (not bitwise — thread timing
+    // reorders arrivals — but same count of applied noise-free gradients)
+    let f0 = problem.value(&problem.init_point()) - problem.f_star().unwrap();
+    assert!(sim_rec.final_gap < 0.5 * f0);
+    assert!(wall_rec.final_value - problem.f_star().unwrap() < 0.5 * f0);
+}

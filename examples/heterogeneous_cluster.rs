@@ -55,7 +55,7 @@ fn main() {
                 r: rb_val,
                 gamma: g,
                 cancel: true,
-            }) as Box<dyn Fn(u64, f64) -> SchedulerKind>,
+            }) as Box<dyn Fn(u64, f64) -> SchedulerKind + Sync>,
         ),
         (
             "rennala",

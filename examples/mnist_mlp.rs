@@ -17,7 +17,7 @@ use ringmaster::sim::ComputeModel;
 use ringmaster::train::MlpProblem;
 use ringmaster::util::fmt_secs;
 
-fn main() -> anyhow::Result<()> {
+fn main() -> ringmaster::util::error::Result<()> {
     let steps: u64 = std::env::var("MNIST_STEPS")
         .ok()
         .and_then(|s| s.parse().ok())
@@ -69,12 +69,12 @@ fn main() -> anyhow::Result<()> {
         100.0 * acc
     );
     let first = rec.gap_curve.v.first().copied().unwrap_or(f64::NAN);
-    anyhow::ensure!(
+    ringmaster::ensure!(
         rec.final_gap < first,
         "training must reduce the eval loss ({first} -> {})",
         rec.final_gap
     );
-    anyhow::ensure!(acc > 0.5, "accuracy should beat chance by 5x, got {acc}");
+    ringmaster::ensure!(acc > 0.5, "accuracy should beat chance by 5x, got {acc}");
     println!("OK — full stack (Pallas → HLO → PJRT → Ringmaster) verified.");
     Ok(())
 }

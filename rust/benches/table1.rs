@@ -9,12 +9,17 @@
 //! measured time tracks T_A, Ringmaster's tracks T_R, and the speedup
 //! T_A/T_R shows up in the measurements (who wins, by roughly what factor).
 //!
+//! The (profile × scheduler) measurement grid is assembled up front and
+//! fanned across the engine's sweep pool (`engine::sweep`), so the bench
+//! uses every core instead of running the 12 simulations serially.
+//!
 //! Quick scale: n=256.  RINGMASTER_BENCH_SCALE=full: n=6174.
 
 use ringmaster::bench_util::{bench_scale, Scale, Table};
 use ringmaster::complexity::{self};
 use ringmaster::coordinator::SchedulerKind;
-use ringmaster::experiments::{run_quadratic, standard_profiles, QuadExpConfig};
+use ringmaster::engine::sweep::SweepJob;
+use ringmaster::experiments::{standard_profiles, sweep_quadratic, QuadExpConfig};
 use ringmaster::sim::ComputeModel;
 use ringmaster::util::fmt_secs;
 
@@ -59,9 +64,38 @@ fn main() {
         "theory T_A/T_R",
     ]);
 
-    for (name, taus) in standard_profiles(n) {
-        let (t_r, m_star) = complexity::t_optimal(&taus, c);
-        let t_a = complexity::t_asgd(&taus, c);
+    // assemble the full measurement grid, then run it in parallel.
+    // Table 1's rows are *worst-case guarantees under each analysis's
+    // prescribed stepsize*: γ_A ≈ 1/(2nL) for classic ASGD (it must
+    // survive delays up to n), γ ≈ 1/(2RL) for Ringmaster (Thm 4.1),
+    // γ ≈ 1/(2m*L) for Naive Optimal ASGD on its m* workers.
+    let profiles = standard_profiles(n);
+    let mut jobs: Vec<SweepJob> = Vec::new();
+    for (name, taus) in &profiles {
+        let model = ComputeModel::Fixed { taus: taus.clone() };
+        let gamma_asgd = 1.0 / (2.0 * n as f64 * c.l);
+        let m_star_naive = complexity::naive_m_star(taus, c.sigma_sq, c.eps);
+        let gamma_naive = 1.0 / (2.0 * m_star_naive as f64 * c.l);
+        for kind in [
+            SchedulerKind::Asgd { gamma: gamma_asgd },
+            SchedulerKind::Naive { m_star: m_star_naive, gamma: gamma_naive },
+            SchedulerKind::Ringmaster { r, gamma, cancel: true },
+        ] {
+            jobs.push(SweepJob {
+                label: name.clone(),
+                kind,
+                model: model.clone(),
+                seed: 0,
+            });
+        }
+    }
+    let results = sweep_quadratic(&base, &jobs);
+
+    // results come back in job order, tagged with their profile label and
+    // scheduler kind — attribute by tag, not by position
+    for (name, taus) in &profiles {
+        let (t_r, m_star) = complexity::t_optimal(taus, c);
+        let t_a = complexity::t_asgd(taus, c);
         theory.row(&[
             name.clone(),
             format!("{t_a:.3e}"),
@@ -71,25 +105,22 @@ fn main() {
             r.to_string(),
         ]);
 
-        let model = ComputeModel::Fixed { taus: taus.clone() };
-        // Table 1's rows are *worst-case guarantees under each analysis's
-        // prescribed stepsize*: γ_A ≈ 1/(2nL) for classic ASGD (it must
-        // survive delays up to n), γ ≈ 1/(2RL) for Ringmaster (Thm 4.1),
-        // γ ≈ 1/(2m*L) for Naive Optimal ASGD on its m* workers.
-        let gamma_asgd = 1.0 / (2.0 * n as f64 * c.l);
-        let m_star_naive = complexity::naive_m_star(&taus, c.sigma_sq, c.eps);
-        let gamma_naive = 1.0 / (2.0 * m_star_naive as f64 * c.l);
-        let run = |kind: SchedulerKind| run_quadratic(&base, model.clone(), &kind).time_to_target();
-        let t_asgd_meas = run(SchedulerKind::Asgd { gamma: gamma_asgd });
-        let t_naive_meas = run(SchedulerKind::Naive { m_star: m_star_naive, gamma: gamma_naive });
-        let t_ring_meas = run(SchedulerKind::Ringmaster { r, gamma, cancel: true });
+        let time_of = |pred: fn(&SchedulerKind) -> bool| {
+            results
+                .iter()
+                .find(|res| res.label == *name && pred(&res.kind))
+                .and_then(|res| res.record.time_to_target())
+        };
+        let t_asgd_meas = time_of(|k| matches!(k, SchedulerKind::Asgd { .. }));
+        let t_naive_meas = time_of(|k| matches!(k, SchedulerKind::Naive { .. }));
+        let t_ring_meas = time_of(|k| matches!(k, SchedulerKind::Ringmaster { .. }));
         let ratio = match (t_asgd_meas, t_ring_meas) {
             (Some(a), Some(b)) => format!("{:.1}x", a / b),
             _ => "—".into(),
         };
         let f = |t: Option<f64>| t.map(fmt_secs).unwrap_or("> budget".into());
         measured.row(&[
-            name,
+            name.clone(),
             f(t_asgd_meas),
             f(t_naive_meas),
             f(t_ring_meas),

@@ -1,116 +1,21 @@
-//! The experiment driver: executes a [`Scheduler`] against a simulated
-//! [`Cluster`] and a [`StochasticProblem`] until a stopping condition.
+//! The simulation driver — a thin facade over the unified [`crate::engine`].
 //!
-//! The driver owns the parameter vector `x^k`, the server-side batch
-//! accumulator (for Rennala/minibatch), curve recording, and the
-//! stopping logic; the scheduler owns only the *decision rule* — exactly
-//! the separation between a parameter server's state and its policy.
+//! [`Driver`] binds a [`Scheduler`] to a simulated [`Cluster`] (via
+//! [`SimSource`]) and a [`StochasticProblem`]; the server-policy loop
+//! itself — Decision application, batch accumulator, Algorithm 5
+//! cancellation, reassignment, stopping — lives in [`crate::engine::run`]
+//! and is shared verbatim with the wall-clock path ([`crate::exec`]), so
+//! the two substrates cannot drift.
+//!
+//! The driver owns the problem and rebuilds the cluster from the same seed
+//! on every run, so a `Driver` can be reused across schedulers.
 
-mod server_opt;
+pub use crate::engine::{DriverConfig, RunRecord, ServerOpt, ServerOptState};
 
-pub use server_opt::{ServerOpt, ServerOptState};
-
-use std::sync::Arc;
-
-use crate::coordinator::{Decision, Scheduler};
-use crate::linalg::nrm2_sq;
-use crate::metrics::{Curve, Span, SpanOutcome, Trace};
+use crate::coordinator::Scheduler;
+use crate::engine::SimSource;
 use crate::opt::StochasticProblem;
-use crate::sim::{Cluster, ClusterStats, ComputeModel};
-
-/// Stopping conditions + recording knobs.
-#[derive(Clone, Debug)]
-pub struct DriverConfig {
-    /// RNG seed (cluster event times, gradient noise, data sampling).
-    pub seed: u64,
-    /// Stop when the recorded `‖∇f(x^k)‖² ≤ eps` (the paper's
-    /// ε-stationarity target). `None` disables.
-    pub eps: Option<f64>,
-    /// Stop when the recorded `f(x^k) − f* ≤ target_gap`. `None` disables
-    /// (requires the problem to know `f*`).
-    pub target_gap: Option<f64>,
-    /// Simulated-seconds budget.
-    pub max_time: f64,
-    /// Iterate-update budget.
-    pub max_iters: u64,
-    /// Evaluate + record every this many iterate updates.
-    pub record_every: u64,
-    /// Also record the timestamp of *every* iterate update (needed by the
-    /// Lemma 4.1 window checks; memory O(iters), so off by default).
-    pub record_update_times: bool,
-    /// Record per-worker execution spans (bounded ring buffer + running
-    /// utilization totals). Off by default.
-    pub record_trace: bool,
-    /// Server-side update rule (default: the paper's plain SGD step).
-    pub server_opt: ServerOpt,
-}
-
-impl Default for DriverConfig {
-    fn default() -> Self {
-        Self {
-            seed: 0,
-            eps: None,
-            target_gap: None,
-            max_time: f64::INFINITY,
-            max_iters: 1_000_000,
-            record_every: 100,
-            record_update_times: false,
-            record_trace: false,
-            server_opt: ServerOpt::Sgd,
-        }
-    }
-}
-
-/// Everything a run produces.
-#[derive(Clone, Debug)]
-pub struct RunRecord {
-    pub scheduler: String,
-    /// `f(x^k) − f*` (or raw `f` when `f*` unknown) vs simulated time.
-    pub gap_curve: Curve,
-    /// `‖∇f(x^k)‖²` vs simulated time.
-    pub gradnorm_curve: Curve,
-    /// First simulated time with `‖∇f‖² ≤ eps` (if `eps` was set and hit).
-    pub time_to_eps: Option<f64>,
-    /// Total iterate updates performed.
-    pub iters: u64,
-    /// Total simulated seconds elapsed.
-    pub sim_time: f64,
-    /// Gradients applied (steps) / accumulated / discarded.
-    pub applied: u64,
-    pub accumulated: u64,
-    pub discarded: u64,
-    pub cluster: ClusterStats,
-    /// Timestamps of iterate updates (when `record_update_times`).
-    pub update_times: Vec<f64>,
-    /// Per-worker execution trace (when `record_trace`).
-    pub trace: Option<Trace>,
-    /// Final iterate.
-    pub x_final: Vec<f64>,
-    pub final_gap: f64,
-    pub final_gradnorm_sq: f64,
-    /// The `target_gap` this run was configured with (for time-to-target).
-    pub gap_target: Option<f64>,
-    /// Whether the run was aborted by the divergence guard.
-    pub diverged: bool,
-}
-
-impl RunRecord {
-    /// Maximum duration of any `r` consecutive iterate updates — the
-    /// quantity Lemma 4.1 bounds by `t(R)`.  Requires `record_update_times`.
-    pub fn max_window_time(&self, r: usize) -> Option<f64> {
-        if self.update_times.len() < r || r == 0 {
-            return None;
-        }
-        let mut worst: f64 = 0.0;
-        // window [i, i+r): time from the update *before* the window starts
-        // (or 0) to the last update of the window
-        for i in 0..=(self.update_times.len() - r) {
-            let start = if i == 0 { 0.0 } else { self.update_times[i - 1] };
-            worst = worst.max(self.update_times[i + r - 1] - start);
-        }
-        Some(worst)
-    }
-}
+use crate::sim::ComputeModel;
 
 /// Drives one scheduler over one cluster model and one problem.
 pub struct Driver<P: StochasticProblem> {
@@ -131,249 +36,11 @@ impl<P: StochasticProblem> Driver<P> {
     /// Run to completion, returning the record. The driver can be reused;
     /// every run rebuilds the cluster from the same seed.
     pub fn run(&mut self, sched: &mut dyn Scheduler) -> RunRecord {
-        let dim = self.problem.dim();
-        let n = self.model.n_workers();
-        let mut cluster = Cluster::new(self.model.clone(), n, self.cfg.seed);
-        cluster.set_track_stale(sched.cancel_threshold(u64::MAX).is_some());
-
-        let problem = &mut self.problem;
-        let f_star = problem.f_star();
-        let mut x = problem.init_point();
-        // shared snapshot of x^k handed to workers at assignment; refreshed
-        // lazily after every iterate update (lazy-gradient protocol: workers
-        // carry the snapshot, the gradient is materialized on delivery)
-        let mut snap: Arc<Vec<f64>> = Arc::new(x.clone());
-        let mut snap_fresh = true;
-        let mut grad_buf = vec![0.0; dim];
-        let mut acc = vec![0.0; dim];
-        let mut server = ServerOptState::new(self.cfg.server_opt.clone(), dim);
-        let mut trace = self
-            .cfg
-            .record_trace
-            .then(|| Trace::new(n, 65_536));
-        let mut cancel_spans: Vec<(usize, f64, u64)> = Vec::new();
-        let mut acc_count = 0u64;
-        let mut k = 0u64;
-
-        let mut gap_curve = Curve::new(sched.name());
-        let mut gradnorm_curve = Curve::new(sched.name());
-        let mut update_times = Vec::new();
-        let mut applied = 0u64;
-        let mut accumulated = 0u64;
-        let mut discarded = 0u64;
-        let mut time_to_eps: Option<f64> = None;
-
-        // initial record at t = 0
-        let record =
-            |x: &[f64], t: f64, problem: &mut P, gap_c: &mut Curve, gn_c: &mut Curve| -> (f64, f64) {
-                let mut g = vec![0.0; x.len()];
-                let v = problem.eval_value_grad(x, &mut g);
-                let gap = f_star.map(|fs| v - fs).unwrap_or(v);
-                let gn = nrm2_sq(&g);
-                gap_c.push_always(t, gap);
-                gn_c.push_always(t, gn);
-                (gap, gn)
-            };
-        let (mut last_gap, mut last_gn) =
-            record(&x, 0.0, &mut *problem, &mut gap_curve, &mut gradnorm_curve);
-
-        // initial assignments: active subset or everyone, at x^0
-        let active: Vec<usize> = match sched.active_workers() {
-            Some(ws) => ws.to_vec(),
-            None => (0..n).collect(),
-        };
-        for &w in &active {
-            cluster.assign(w, 0, &snap);
-        }
-        let mut idle: Vec<usize> = Vec::new();
-
-        let stop_hit = |gap: f64, gn: f64, cfg: &DriverConfig| -> bool {
-            if let Some(eps) = cfg.eps {
-                if gn <= eps {
-                    return true;
-                }
-            }
-            if let Some(tg) = cfg.target_gap {
-                if gap <= tg {
-                    return true;
-                }
-            }
-            false
-        };
-        let mut done = stop_hit(last_gap, last_gn, &self.cfg);
-        let mut diverged = false;
-        let initial_gap = last_gap.abs().max(1.0);
-
-        while !done {
-            let Some(arrival) = cluster.next_arrival() else {
-                break; // nothing in flight (can't happen with reassignment)
-            };
-            if arrival.time > self.cfg.max_time || k >= self.cfg.max_iters {
-                break;
-            }
-            let delay = k - arrival.start_k;
-            let worker = arrival.worker;
-            let mut stepped = false;
-
-            let decision = sched.on_arrival(worker, delay);
-            // materialize the stochastic gradient only when it is used —
-            // Discard skips the O(d) work entirely
-            if !matches!(decision, Decision::Discard) {
-                let point = cluster.point(worker).clone();
-                let rng = cluster.worker_rng(worker);
-                problem.stoch_grad(&point, rng, &mut grad_buf);
-            }
-            match decision {
-                Decision::Step { gamma } => {
-                    server.apply(&mut x, &grad_buf, gamma);
-                    k += 1;
-                    applied += 1;
-                    stepped = true;
-                }
-                Decision::Accumulate { flush_gamma } => {
-                    for (a, gi) in acc.iter_mut().zip(&grad_buf) {
-                        *a += gi;
-                    }
-                    acc_count += 1;
-                    accumulated += 1;
-                    if let Some(gamma) = flush_gamma {
-                        let inv = 1.0 / acc_count as f64;
-                        crate::linalg::scale(inv, &mut acc);
-                        server.apply(&mut x, &acc, gamma);
-                        acc.fill(0.0);
-                        acc_count = 0;
-                        k += 1;
-                        stepped = true;
-                    }
-                }
-                Decision::Discard => {
-                    discarded += 1;
-                }
-            }
-            if let Some(tr) = trace.as_mut() {
-                tr.record(Span {
-                    worker,
-                    start: cluster.assign_time(worker),
-                    end: arrival.time,
-                    start_k: arrival.start_k,
-                    outcome: match decision {
-                        Decision::Step { .. } => SpanOutcome::Applied,
-                        Decision::Accumulate { .. } => SpanOutcome::Accumulated,
-                        Decision::Discard => SpanOutcome::Discarded,
-                    },
-                });
-            }
-            if stepped {
-                snap_fresh = false; // x^k moved; next assignment resnapshots
-            }
-
-            // reassign the arriving worker (or park it until the round ends)
-            if sched.reassign_after_arrival() {
-                if !snap_fresh {
-                    snap = Arc::new(x.clone());
-                    snap_fresh = true;
-                }
-                cluster.assign(worker, k, &snap);
-            } else {
-                idle.push(worker);
-            }
-
-            if stepped {
-                if self.cfg.record_update_times {
-                    update_times.push(arrival.time);
-                }
-                if !snap_fresh {
-                    snap = Arc::new(x.clone());
-                    snap_fresh = true;
-                }
-                // Algorithm 5: stop computations that just became too stale
-                if let Some(threshold) = sched.cancel_threshold(k) {
-                    if let Some(tr) = trace.as_mut() {
-                        cancel_spans.clear();
-                        cluster.cancel_stale_collect(
-                            threshold,
-                            k,
-                            &snap,
-                            Some(&mut cancel_spans),
-                        );
-                        for &(w, t0, sk) in &cancel_spans {
-                            tr.record(Span {
-                                worker: w,
-                                start: t0,
-                                end: arrival.time,
-                                start_k: sk,
-                                outcome: SpanOutcome::Cancelled,
-                            });
-                        }
-                    } else {
-                        cluster.cancel_stale(threshold, k, &snap);
-                    }
-                }
-                // synchronous schedulers: restart the round for idle workers
-                for w in idle.drain(..) {
-                    cluster.assign(w, k, &snap);
-                }
-                if k % self.cfg.record_every == 0 {
-                    let (gap, gn) = record(
-                        &x,
-                        arrival.time,
-                        &mut *problem,
-                        &mut gap_curve,
-                        &mut gradnorm_curve,
-                    );
-                    last_gap = gap;
-                    last_gn = gn;
-                    // divergence guard: an unstable stepsize blows the gap
-                    // up by many orders of magnitude — stop early instead
-                    // of burning the whole iteration budget on a dead run.
-                    if !gap.is_finite() || gap > 1e9 * initial_gap {
-                        diverged = true;
-                        break;
-                    }
-                    if time_to_eps.is_none() {
-                        if let Some(eps) = self.cfg.eps {
-                            if gn <= eps {
-                                time_to_eps = Some(arrival.time);
-                            }
-                        }
-                    }
-                    done = stop_hit(gap, gn, &self.cfg);
-                }
-            }
-        }
-
-        // final evaluation
-        let final_t = cluster.now();
-        let (final_gap, final_gn) =
-            record(&x, final_t, &mut *problem, &mut gap_curve, &mut gradnorm_curve);
-        if time_to_eps.is_none() {
-            if let Some(eps) = self.cfg.eps {
-                if final_gn <= eps {
-                    time_to_eps = Some(final_t);
-                }
-            }
-        }
-        let _ = (last_gap, last_gn);
-
-        RunRecord {
-            scheduler: sched.name(),
-            gap_curve,
-            gradnorm_curve,
-            time_to_eps,
-            iters: k,
-            sim_time: final_t,
-            applied,
-            accumulated,
-            discarded,
-            cluster: cluster.stats,
-            update_times,
-            trace,
-            x_final: x,
-            final_gap,
-            final_gradnorm_sq: final_gn,
-            gap_target: self.cfg.target_gap,
-            diverged,
-        }
+        let mut source = SimSource::new(self.model.clone(), self.cfg.seed);
+        // the stale-assignment index is only worth maintaining for
+        // schedulers that cancel (Algorithm 5)
+        source.set_track_stale(sched.cancel_threshold(u64::MAX).is_some());
+        crate::engine::run(&mut self.problem, &mut source, sched, &self.cfg)
     }
 }
 
@@ -414,6 +81,8 @@ mod tests {
         assert!(rec.time_to_eps.is_some(), "final ‖∇f‖² = {}", rec.final_gradnorm_sq);
         assert!(rec.final_gradnorm_sq <= 1e-6);
         assert!(rec.iters > 0);
+        // simulated runs carry no wall-clock duration
+        assert!(rec.wall.is_none());
         // the gap shrank essentially monotonically over the run
         let first = rec.gap_curve.v[0];
         assert!(rec.final_gap < 0.01 * first);
@@ -536,33 +205,6 @@ mod tests {
         };
         assert_eq!(go(42), go(42));
         assert_ne!(go(42).2, go(43).2);
-    }
-
-    #[test]
-    fn max_window_time_computation() {
-        let rec = RunRecord {
-            scheduler: "t".into(),
-            gap_curve: Curve::new("t"),
-            gradnorm_curve: Curve::new("t"),
-            time_to_eps: None,
-            iters: 4,
-            sim_time: 10.0,
-            applied: 4,
-            accumulated: 0,
-            discarded: 0,
-            cluster: ClusterStats::default(),
-            update_times: vec![1.0, 2.0, 7.0, 8.0],
-            trace: None,
-            x_final: vec![],
-            final_gap: 0.0,
-            final_gradnorm_sq: 0.0,
-            gap_target: None,
-            diverged: false,
-        };
-        // windows of 2: [0→2]=2, [1→7]=6, [2→8]=6  (from predecessor)
-        assert_eq!(rec.max_window_time(2), Some(6.0));
-        assert_eq!(rec.max_window_time(4), Some(8.0));
-        assert_eq!(rec.max_window_time(5), None);
     }
 
     #[test]

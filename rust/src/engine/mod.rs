@@ -1,0 +1,487 @@
+//! The backend-agnostic execution engine — **one** parameter-server loop
+//! for both execution substrates.
+//!
+//! Historically the repo validated the paper's claims on two independent
+//! substrates that each reimplemented the full server policy loop: the
+//! discrete-event simulator (`driver`) and the wall-clock thread pool
+//! (`exec`). The two copies could silently drift, and the wall-clock path
+//! was a second-class citizen (no curves, no [`ServerOpt`], no
+//! ε-stationarity stopping). This module collapses them:
+//!
+//! * [`GradientSource`] — the substrate abstraction. Exactly two
+//!   implementations: [`SimSource`] (wraps [`crate::sim::Cluster`],
+//!   simulated clock, lazy gradient materialization) and [`ThreadSource`]
+//!   (one OS thread per worker over an mpsc channel, wall clock, atomic
+//!   generation-based cancellation — Algorithm 5's calculation stops as
+//!   real concurrency).
+//! * [`run`] — the authoritative server loop: applies [`Decision`]s
+//!   through [`ServerOptState`], owns the batch accumulator
+//!   (Rennala/Minibatch/Buffered), Algorithm 5 cancellation, reassignment,
+//!   curve/trace recording, and stopping logic. Every
+//!   [`crate::coordinator::SchedulerKind`] therefore behaves identically
+//!   on both substrates *by construction*.
+//! * [`sweep`] — a scoped-thread-pool fan-out for (scheduler × compute
+//!   model × seed) grids on top of the unified engine.
+//!
+//! `driver::Driver::run` and `exec::run_wallclock` are thin shims over
+//! this module; both return the unified [`RunRecord`].
+
+mod server_opt;
+mod sim_source;
+pub mod sweep;
+mod thread_source;
+
+pub use server_opt::{ServerOpt, ServerOptState};
+pub use sim_source::SimSource;
+pub use thread_source::{ThreadPoolConfig, ThreadSource, WallclockEval};
+
+use std::sync::Arc;
+use std::time::Duration;
+
+use crate::coordinator::{Decision, Scheduler};
+use crate::linalg::nrm2_sq;
+use crate::metrics::{Curve, Span, SpanOutcome, Trace};
+use crate::opt::StochasticProblem;
+use crate::sim::ClusterStats;
+
+/// Stopping conditions + recording knobs (historically `DriverConfig`; the
+/// name is kept because every experiment entry point constructs it).
+#[derive(Clone, Debug)]
+pub struct DriverConfig {
+    /// RNG seed (cluster event times, gradient noise, data sampling).
+    pub seed: u64,
+    /// Stop when the recorded `‖∇f(x^k)‖² ≤ eps` (the paper's
+    /// ε-stationarity target). `None` disables.
+    pub eps: Option<f64>,
+    /// Stop when the recorded `f(x^k) − f* ≤ target_gap`. `None` disables
+    /// (requires the problem to know `f*`).
+    pub target_gap: Option<f64>,
+    /// Clock budget, in the source's own seconds (simulated seconds for
+    /// [`SimSource`]; [`ThreadSource`] enforces its wall budget itself).
+    pub max_time: f64,
+    /// Iterate-update budget.
+    pub max_iters: u64,
+    /// Evaluate + record every this many iterate updates.
+    pub record_every: u64,
+    /// Also record the timestamp of *every* iterate update (needed by the
+    /// Lemma 4.1 window checks; memory O(iters), so off by default).
+    pub record_update_times: bool,
+    /// Record per-worker execution spans (bounded ring buffer + running
+    /// utilization totals). Off by default.
+    pub record_trace: bool,
+    /// Server-side update rule (default: the paper's plain SGD step).
+    pub server_opt: ServerOpt,
+}
+
+impl Default for DriverConfig {
+    fn default() -> Self {
+        Self {
+            seed: 0,
+            eps: None,
+            target_gap: None,
+            max_time: f64::INFINITY,
+            max_iters: 1_000_000,
+            record_every: 100,
+            record_update_times: false,
+            record_trace: false,
+            server_opt: ServerOpt::Sgd,
+        }
+    }
+}
+
+/// Everything a run produces, on either substrate.
+#[derive(Clone, Debug)]
+pub struct RunRecord {
+    pub scheduler: String,
+    /// `f(x^k) − f*` (or raw `f` when `f*` unknown) vs source time.
+    pub gap_curve: Curve,
+    /// `‖∇f(x^k)‖²` vs source time.
+    pub gradnorm_curve: Curve,
+    /// First source time with `‖∇f‖² ≤ eps` (if `eps` was set and hit).
+    pub time_to_eps: Option<f64>,
+    /// Total iterate updates performed.
+    pub iters: u64,
+    /// Total source seconds elapsed (simulated seconds for [`SimSource`],
+    /// wall seconds for [`ThreadSource`]).
+    pub sim_time: f64,
+    /// Gradients applied (steps) / accumulated / discarded.
+    pub applied: u64,
+    pub accumulated: u64,
+    pub discarded: u64,
+    pub cluster: ClusterStats,
+    /// Timestamps of iterate updates (when `record_update_times`).
+    pub update_times: Vec<f64>,
+    /// Per-worker execution trace (when `record_trace`).
+    pub trace: Option<Trace>,
+    /// Final iterate.
+    pub x_final: Vec<f64>,
+    pub final_gap: f64,
+    pub final_gradnorm_sq: f64,
+    /// The `target_gap` this run was configured with (for time-to-target).
+    pub gap_target: Option<f64>,
+    /// Whether the run was aborted by the divergence guard.
+    pub diverged: bool,
+    /// Wall-clock duration — `Some` only for [`ThreadSource`] runs.
+    pub wall: Option<Duration>,
+}
+
+impl RunRecord {
+    /// Maximum duration of any `r` consecutive iterate updates — the
+    /// quantity Lemma 4.1 bounds by `t(R)`.  Requires `record_update_times`.
+    pub fn max_window_time(&self, r: usize) -> Option<f64> {
+        if self.update_times.len() < r || r == 0 {
+            return None;
+        }
+        let mut worst: f64 = 0.0;
+        // window [i, i+r): time from the update *before* the window starts
+        // (or 0) to the last update of the window
+        for i in 0..=(self.update_times.len() - r) {
+            let start = if i == 0 { 0.0 } else { self.update_times[i - 1] };
+            worst = worst.max(self.update_times[i + r - 1] - start);
+        }
+        Some(worst)
+    }
+}
+
+/// A gradient delivery popped from a [`GradientSource`].
+#[derive(Clone, Debug, PartialEq)]
+pub struct Delivery {
+    pub worker: usize,
+    /// Iterate index the gradient was computed at (`k − δ^k` in the paper).
+    pub start_k: u64,
+    /// Source time of delivery (simulated or wall seconds).
+    pub time: f64,
+}
+
+/// An execution substrate: something that turns worker assignments into
+/// gradient deliveries on some clock.
+///
+/// The engine owns the *policy* (what to do with a delivery); the source
+/// owns the *mechanism* (when deliveries happen and where the stochastic
+/// gradient comes from). `P` is the problem type the engine evaluates and —
+/// for the simulator's lazy-gradient protocol — materializes gradients
+/// from; [`ThreadSource`] ignores it because its workers computed the
+/// gradient concurrently on real threads.
+pub trait GradientSource<P: StochasticProblem + ?Sized> {
+    fn n_workers(&self) -> usize;
+
+    /// Start `worker` computing a stochastic gradient at iterate `start_k`
+    /// whose parameter snapshot is `point`.
+    fn assign(&mut self, worker: usize, start_k: u64, point: &Arc<Vec<f64>>);
+
+    /// Block until the next *valid* delivery (stale/cancelled computations
+    /// are skipped). `None` when nothing is in flight or the source's own
+    /// budget is exhausted.
+    fn next_delivery(&mut self) -> Option<Delivery>;
+
+    /// Write the delivered stochastic gradient into `out`. Only called when
+    /// the scheduler's decision consumes it — a `Discard` skips the O(d)
+    /// work entirely on the simulator.
+    fn materialize(&mut self, problem: &mut P, delivery: &Delivery, out: &mut [f64]);
+
+    /// Source time the worker's current (or just-delivered) assignment
+    /// began — the span start for tracing.
+    fn assign_time(&self, worker: usize) -> f64;
+
+    /// Algorithm 5: stop every in-flight computation whose start iterate is
+    /// `≤ threshold_k` and reassign it at `new_k` with snapshot `point`.
+    /// When `collect` is given, report each cancelled assignment as
+    /// `(worker, assign_time, start_k)` for trace recording.
+    fn cancel_stale(
+        &mut self,
+        threshold_k: u64,
+        new_k: u64,
+        point: &Arc<Vec<f64>>,
+        collect: Option<&mut Vec<(usize, f64, u64)>>,
+    );
+
+    /// Current source time.
+    fn now(&self) -> f64;
+
+    /// Assignment/arrival/cancellation counters.
+    fn stats(&self) -> ClusterStats;
+
+    /// Wall-clock duration so far (`None` for simulated sources).
+    fn wall(&self) -> Option<Duration> {
+        None
+    }
+}
+
+/// Run `sched` against `source` and `problem` until a stopping condition —
+/// the single authoritative parameter-server loop.
+pub fn run<P, S>(
+    problem: &mut P,
+    source: &mut S,
+    sched: &mut dyn Scheduler,
+    cfg: &DriverConfig,
+) -> RunRecord
+where
+    P: StochasticProblem + ?Sized,
+    S: GradientSource<P> + ?Sized,
+{
+    let dim = problem.dim();
+    let n = source.n_workers();
+    let f_star = problem.f_star();
+    let mut x = problem.init_point();
+    // shared snapshot of x^k handed to workers at assignment; refreshed
+    // lazily after every iterate update (lazy-gradient protocol: workers
+    // carry the snapshot, the gradient is materialized on delivery)
+    let mut snap: Arc<Vec<f64>> = Arc::new(x.clone());
+    let mut snap_fresh = true;
+    let mut grad_buf = vec![0.0; dim];
+    let mut acc = vec![0.0; dim];
+    let mut server = ServerOptState::new(cfg.server_opt.clone(), dim);
+    let mut trace = cfg.record_trace.then(|| Trace::new(n, 65_536));
+    let mut cancel_spans: Vec<(usize, f64, u64)> = Vec::new();
+    let mut acc_count = 0u64;
+    let mut k = 0u64;
+
+    let mut gap_curve = Curve::new(sched.name());
+    let mut gradnorm_curve = Curve::new(sched.name());
+    let mut update_times = Vec::new();
+    let mut applied = 0u64;
+    let mut accumulated = 0u64;
+    let mut discarded = 0u64;
+    let mut time_to_eps: Option<f64> = None;
+
+    // initial record at t = 0
+    let record =
+        |x: &[f64], t: f64, problem: &mut P, gap_c: &mut Curve, gn_c: &mut Curve| -> (f64, f64) {
+            let mut g = vec![0.0; x.len()];
+            let v = problem.eval_value_grad(x, &mut g);
+            let gap = f_star.map(|fs| v - fs).unwrap_or(v);
+            let gn = nrm2_sq(&g);
+            gap_c.push_always(t, gap);
+            gn_c.push_always(t, gn);
+            (gap, gn)
+        };
+    let (mut last_gap, mut last_gn) =
+        record(&x, 0.0, &mut *problem, &mut gap_curve, &mut gradnorm_curve);
+
+    // initial assignments: active subset or everyone, at x^0
+    let active: Vec<usize> = match sched.active_workers() {
+        Some(ws) => ws.to_vec(),
+        None => (0..n).collect(),
+    };
+    for &w in &active {
+        source.assign(w, 0, &snap);
+    }
+    let mut idle: Vec<usize> = Vec::new();
+
+    let stop_hit = |gap: f64, gn: f64, cfg: &DriverConfig| -> bool {
+        if let Some(eps) = cfg.eps {
+            if gn <= eps {
+                return true;
+            }
+        }
+        if let Some(tg) = cfg.target_gap {
+            if gap <= tg {
+                return true;
+            }
+        }
+        false
+    };
+    let mut done = stop_hit(last_gap, last_gn, cfg);
+    let mut diverged = false;
+    let initial_gap = last_gap.abs().max(1.0);
+
+    while !done {
+        let Some(arrival) = source.next_delivery() else {
+            break; // nothing in flight or source budget exhausted
+        };
+        if arrival.time > cfg.max_time || k >= cfg.max_iters {
+            break;
+        }
+        let delay = k - arrival.start_k;
+        let worker = arrival.worker;
+        let mut stepped = false;
+
+        let decision = sched.on_arrival(worker, delay);
+        // materialize the stochastic gradient only when it is used —
+        // Discard skips the O(d) work entirely (on the simulator)
+        if !matches!(decision, Decision::Discard) {
+            source.materialize(&mut *problem, &arrival, &mut grad_buf);
+        }
+        match decision {
+            Decision::Step { gamma } => {
+                server.apply(&mut x, &grad_buf, gamma);
+                k += 1;
+                applied += 1;
+                stepped = true;
+            }
+            Decision::Accumulate { flush_gamma } => {
+                for (a, gi) in acc.iter_mut().zip(&grad_buf) {
+                    *a += gi;
+                }
+                acc_count += 1;
+                accumulated += 1;
+                if let Some(gamma) = flush_gamma {
+                    // average in place — no clone of the accumulator on
+                    // the hot path
+                    let inv = 1.0 / acc_count as f64;
+                    crate::linalg::scale(inv, &mut acc);
+                    server.apply(&mut x, &acc, gamma);
+                    acc.fill(0.0);
+                    acc_count = 0;
+                    k += 1;
+                    stepped = true;
+                }
+            }
+            Decision::Discard => {
+                discarded += 1;
+            }
+        }
+        if let Some(tr) = trace.as_mut() {
+            tr.record(Span {
+                worker,
+                start: source.assign_time(worker),
+                end: arrival.time,
+                start_k: arrival.start_k,
+                outcome: match decision {
+                    Decision::Step { .. } => SpanOutcome::Applied,
+                    Decision::Accumulate { .. } => SpanOutcome::Accumulated,
+                    Decision::Discard => SpanOutcome::Discarded,
+                },
+            });
+        }
+        if stepped {
+            snap_fresh = false; // x^k moved; next assignment resnapshots
+        }
+
+        // reassign the arriving worker (or park it until the round ends)
+        if sched.reassign_after_arrival() {
+            if !snap_fresh {
+                snap = Arc::new(x.clone());
+                snap_fresh = true;
+            }
+            source.assign(worker, k, &snap);
+        } else {
+            idle.push(worker);
+        }
+
+        if stepped {
+            if cfg.record_update_times {
+                update_times.push(arrival.time);
+            }
+            if !snap_fresh {
+                snap = Arc::new(x.clone());
+                snap_fresh = true;
+            }
+            // Algorithm 5: stop computations that just became too stale
+            if let Some(threshold) = sched.cancel_threshold(k) {
+                if let Some(tr) = trace.as_mut() {
+                    cancel_spans.clear();
+                    source.cancel_stale(threshold, k, &snap, Some(&mut cancel_spans));
+                    for &(w, t0, sk) in &cancel_spans {
+                        tr.record(Span {
+                            worker: w,
+                            start: t0,
+                            end: arrival.time,
+                            start_k: sk,
+                            outcome: SpanOutcome::Cancelled,
+                        });
+                    }
+                } else {
+                    source.cancel_stale(threshold, k, &snap, None);
+                }
+            }
+            // synchronous schedulers: restart the round for idle workers
+            for w in idle.drain(..) {
+                source.assign(w, k, &snap);
+            }
+            if k % cfg.record_every == 0 {
+                let (gap, gn) = record(
+                    &x,
+                    arrival.time,
+                    &mut *problem,
+                    &mut gap_curve,
+                    &mut gradnorm_curve,
+                );
+                last_gap = gap;
+                last_gn = gn;
+                // divergence guard: an unstable stepsize blows the gap
+                // up by many orders of magnitude — stop early instead
+                // of burning the whole iteration budget on a dead run.
+                if !gap.is_finite() || gap > 1e9 * initial_gap {
+                    diverged = true;
+                    break;
+                }
+                if time_to_eps.is_none() {
+                    if let Some(eps) = cfg.eps {
+                        if gn <= eps {
+                            time_to_eps = Some(arrival.time);
+                        }
+                    }
+                }
+                done = stop_hit(gap, gn, cfg);
+            }
+        }
+    }
+
+    // final evaluation
+    let final_t = source.now();
+    let (final_gap, final_gn) =
+        record(&x, final_t, &mut *problem, &mut gap_curve, &mut gradnorm_curve);
+    if time_to_eps.is_none() {
+        if let Some(eps) = cfg.eps {
+            if final_gn <= eps {
+                time_to_eps = Some(final_t);
+            }
+        }
+    }
+    let _ = (last_gap, last_gn);
+
+    RunRecord {
+        scheduler: sched.name(),
+        gap_curve,
+        gradnorm_curve,
+        time_to_eps,
+        iters: k,
+        sim_time: final_t,
+        applied,
+        accumulated,
+        discarded,
+        cluster: source.stats(),
+        update_times,
+        trace,
+        x_final: x,
+        final_gap,
+        final_gradnorm_sq: final_gn,
+        gap_target: cfg.target_gap,
+        diverged,
+        wall: source.wall(),
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn max_window_time_computation() {
+        let rec = RunRecord {
+            scheduler: "t".into(),
+            gap_curve: Curve::new("t"),
+            gradnorm_curve: Curve::new("t"),
+            time_to_eps: None,
+            iters: 4,
+            sim_time: 10.0,
+            applied: 4,
+            accumulated: 0,
+            discarded: 0,
+            cluster: ClusterStats::default(),
+            update_times: vec![1.0, 2.0, 7.0, 8.0],
+            trace: None,
+            x_final: vec![],
+            final_gap: 0.0,
+            final_gradnorm_sq: 0.0,
+            gap_target: None,
+            diverged: false,
+            wall: None,
+        };
+        // windows of 2: [0→2]=2, [1→7]=6, [2→8]=6  (from predecessor)
+        assert_eq!(rec.max_window_time(2), Some(6.0));
+        assert_eq!(rec.max_window_time(4), Some(8.0));
+        assert_eq!(rec.max_window_time(5), None);
+    }
+}

@@ -1,0 +1,91 @@
+//! [`SimSource`] — the discrete-event simulator as a [`GradientSource`].
+//!
+//! A thin adapter over [`Cluster`]: deliveries are simulated-time arrivals,
+//! and gradients follow the lazy protocol — the assignment stores only an
+//! `Arc` snapshot of the iterate, and the stochastic gradient is drawn from
+//! the worker's private RNG stream *at delivery*, so work cancelled by
+//! Algorithm 5 costs O(1) instead of O(d).
+
+use std::sync::Arc;
+
+use super::{Delivery, GradientSource};
+use crate::opt::StochasticProblem;
+use crate::sim::{Cluster, ClusterStats, ComputeModel};
+
+/// Simulated-clock gradient source.
+pub struct SimSource {
+    cluster: Cluster,
+}
+
+impl SimSource {
+    /// Build a fresh cluster for `model` from `seed`.
+    pub fn new(model: ComputeModel, seed: u64) -> Self {
+        let n = model.n_workers();
+        Self {
+            cluster: Cluster::new(model, n, seed),
+        }
+    }
+
+    /// Wrap an already-configured cluster.
+    pub fn from_cluster(cluster: Cluster) -> Self {
+        Self { cluster }
+    }
+
+    /// Enable the stale-assignment index (required for Algorithm 5).
+    pub fn set_track_stale(&mut self, on: bool) {
+        self.cluster.set_track_stale(on);
+    }
+
+    pub fn cluster(&self) -> &Cluster {
+        &self.cluster
+    }
+}
+
+impl<P: StochasticProblem + ?Sized> GradientSource<P> for SimSource {
+    fn n_workers(&self) -> usize {
+        self.cluster.n_workers()
+    }
+
+    fn assign(&mut self, worker: usize, start_k: u64, point: &Arc<Vec<f64>>) {
+        self.cluster.assign(worker, start_k, point);
+    }
+
+    fn next_delivery(&mut self) -> Option<Delivery> {
+        self.cluster.next_arrival().map(|a| Delivery {
+            worker: a.worker,
+            start_k: a.start_k,
+            time: a.time,
+        })
+    }
+
+    fn materialize(&mut self, problem: &mut P, delivery: &Delivery, out: &mut [f64]) {
+        // sample draws come from the worker's private stream so runs are
+        // reproducible regardless of delivery interleavings
+        let point = self.cluster.point(delivery.worker).clone();
+        let rng = self.cluster.worker_rng(delivery.worker);
+        problem.stoch_grad(&point, rng, out);
+    }
+
+    fn assign_time(&self, worker: usize) -> f64 {
+        self.cluster.assign_time(worker)
+    }
+
+    fn cancel_stale(
+        &mut self,
+        threshold_k: u64,
+        new_k: u64,
+        point: &Arc<Vec<f64>>,
+        collect: Option<&mut Vec<(usize, f64, u64)>>,
+    ) {
+        self.cluster
+            .cancel_stale_collect(threshold_k, new_k, point, collect);
+    }
+
+    fn now(&self) -> f64 {
+        self.cluster.now()
+    }
+
+    fn stats(&self) -> ClusterStats {
+        self.cluster.stats
+    }
+}

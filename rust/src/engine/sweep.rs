@@ -1,0 +1,196 @@
+//! Parallel sweep runner: fan (scheduler × compute model × seed) grids
+//! across a scoped thread pool.
+//!
+//! Every run through the unified engine is self-contained (its own
+//! problem, cluster and RNG streams, all derived from an explicit seed),
+//! so grid points are embarrassingly parallel and bit-identical to their
+//! serial counterparts. [`parallel_map`] is the primitive; [`SweepJob`] /
+//! [`run_sweep`] layer a labelled grid on top. Used by
+//! `experiments::tune_stepsize`, `experiments::sweep_quadratic`, the
+//! paper-table benches and the CLI.
+
+use std::sync::atomic::{AtomicUsize, Ordering};
+use std::sync::Mutex;
+
+use super::RunRecord;
+use crate::coordinator::SchedulerKind;
+use crate::sim::ComputeModel;
+
+/// Worker-thread count: `RINGMASTER_SWEEP_THREADS` or the machine's
+/// available parallelism.
+pub fn sweep_threads() -> usize {
+    std::env::var("RINGMASTER_SWEEP_THREADS")
+        .ok()
+        .and_then(|s| s.parse::<usize>().ok())
+        .filter(|&n| n > 0)
+        .unwrap_or_else(|| {
+            std::thread::available_parallelism()
+                .map(|n| n.get())
+                .unwrap_or(1)
+        })
+}
+
+/// Apply `f` to every item on a scoped work-stealing thread pool,
+/// preserving input order in the output.
+///
+/// Falls back to a serial loop for single-item/single-thread cases, so the
+/// result is identical either way (`f` must be deterministic per item, which
+/// every seeded engine run is).
+pub fn parallel_map<T, R, F>(items: &[T], f: F) -> Vec<R>
+where
+    T: Sync,
+    R: Send,
+    F: Fn(usize, &T) -> R + Sync,
+{
+    let threads = sweep_threads().min(items.len());
+    if threads <= 1 {
+        return items.iter().enumerate().map(|(i, t)| f(i, t)).collect();
+    }
+    let next = AtomicUsize::new(0);
+    let slots: Vec<Mutex<Option<R>>> = items.iter().map(|_| Mutex::new(None)).collect();
+    std::thread::scope(|scope| {
+        for _ in 0..threads {
+            scope.spawn(|| loop {
+                let i = next.fetch_add(1, Ordering::Relaxed);
+                if i >= items.len() {
+                    break;
+                }
+                let r = f(i, &items[i]);
+                *slots[i].lock().unwrap() = Some(r);
+            });
+        }
+    });
+    slots
+        .into_iter()
+        .map(|m| {
+            m.into_inner()
+                .unwrap()
+                .expect("sweep worker filled every slot")
+        })
+        .collect()
+}
+
+/// One grid point: which scheduler, on which cluster, from which seed.
+#[derive(Clone, Debug)]
+pub struct SweepJob {
+    /// Free-form label (e.g. the τ-profile name) carried to the result.
+    pub label: String,
+    pub kind: SchedulerKind,
+    pub model: ComputeModel,
+    pub seed: u64,
+}
+
+/// One completed grid point.
+#[derive(Clone, Debug)]
+pub struct SweepResult {
+    pub label: String,
+    pub kind: SchedulerKind,
+    pub seed: u64,
+    pub record: RunRecord,
+}
+
+/// Build the full (scheduler × model × seed) cross product.
+pub fn grid(
+    kinds: &[SchedulerKind],
+    models: &[(String, ComputeModel)],
+    seeds: &[u64],
+) -> Vec<SweepJob> {
+    let mut jobs = Vec::with_capacity(kinds.len() * models.len() * seeds.len());
+    for (label, model) in models {
+        for kind in kinds {
+            for &seed in seeds {
+                jobs.push(SweepJob {
+                    label: label.clone(),
+                    kind: kind.clone(),
+                    model: model.clone(),
+                    seed,
+                });
+            }
+        }
+    }
+    jobs
+}
+
+/// Execute every job in parallel through `run` (typically a closure over
+/// `experiments::run_quadratic` or a custom engine invocation), preserving
+/// job order.
+pub fn run_sweep<F>(jobs: &[SweepJob], run: F) -> Vec<SweepResult>
+where
+    F: Fn(&SweepJob) -> RunRecord + Sync,
+{
+    parallel_map(jobs, |_, job| SweepResult {
+        label: job.label.clone(),
+        kind: job.kind.clone(),
+        seed: job.seed,
+        record: run(job),
+    })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn parallel_map_preserves_order() {
+        let items: Vec<usize> = (0..64).collect();
+        let out = parallel_map(&items, |i, &x| {
+            assert_eq!(i, x);
+            x * x
+        });
+        assert_eq!(out, (0..64).map(|x| x * x).collect::<Vec<_>>());
+    }
+
+    #[test]
+    fn parallel_map_handles_small_inputs() {
+        let empty: Vec<u32> = Vec::new();
+        assert!(parallel_map(&empty, |_, &x| x).is_empty());
+        assert_eq!(parallel_map(&[7u32], |_, &x| x + 1), vec![8]);
+    }
+
+    #[test]
+    fn grid_is_full_cross_product() {
+        let kinds = vec![
+            SchedulerKind::Asgd { gamma: 0.1 },
+            SchedulerKind::Rennala { b: 2, gamma: 0.1 },
+        ];
+        let models = vec![
+            ("a".to_string(), ComputeModel::fixed_equal(2, 1.0)),
+            ("b".to_string(), ComputeModel::fixed_linear(2)),
+        ];
+        let jobs = grid(&kinds, &models, &[0, 1, 2]);
+        assert_eq!(jobs.len(), 12);
+        assert_eq!(jobs[0].label, "a");
+        assert_eq!(jobs.last().unwrap().label, "b");
+    }
+
+    #[test]
+    fn parallel_matches_serial_engine_runs() {
+        use crate::driver::{Driver, DriverConfig};
+        let run_one = |seed: u64| {
+            let mut d = Driver::new(
+                crate::opt::Noisy::new(crate::opt::QuadraticProblem::paper(8), 0.01),
+                ComputeModel::fixed_linear(4),
+                DriverConfig {
+                    seed,
+                    max_iters: 300,
+                    record_every: 100,
+                    ..Default::default()
+                },
+            );
+            let mut s = SchedulerKind::Ringmaster {
+                r: 4,
+                gamma: 0.2,
+                cancel: true,
+            }
+            .build();
+            d.run(s.as_mut())
+        };
+        let seeds: Vec<u64> = (0..8).collect();
+        let par = parallel_map(&seeds, |_, &s| run_one(s));
+        for (seed, rec) in seeds.iter().zip(&par) {
+            let serial = run_one(*seed);
+            assert_eq!(serial.iters, rec.iters);
+            assert_eq!(serial.x_final, rec.x_final, "seed {seed} diverged across pool");
+        }
+    }
+}

@@ -1,0 +1,308 @@
+//! [`ThreadSource`] — real concurrency as a [`GradientSource`].
+//!
+//! One OS thread per (active) worker, a server-side mpsc delivery channel,
+//! compute times realized as sleeps scaled by `time_scale`, and Algorithm
+//! 5's calculation stops implemented with atomic assignment generations: a
+//! worker whose generation moved on while it slept discards the assignment
+//! *before* computing the gradient — the honest analogue of killing the
+//! computation, and the same per-worker RNG stream shape as the simulator
+//! (duration draw at assignment; gradient noise only if the computation
+//! survives to delivery).
+//!
+//! Unlike [`super::SimSource`], the gradient cannot be materialized lazily
+//! by the server — the whole point is that workers compute concurrently —
+//! so `materialize` just hands over the gradient that arrived with the
+//! delivery message.
+
+use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
+use std::sync::mpsc;
+use std::sync::Arc;
+use std::thread;
+use std::time::{Duration, Instant};
+
+use super::{Delivery, GradientSource};
+use crate::opt::{Problem, StochasticProblem};
+use crate::prng::Prng;
+use crate::sim::{ClusterStats, ComputeModel};
+
+/// Wall-clock substrate knobs (the engine-level subset of
+/// [`crate::exec::ExecConfig`]).
+#[derive(Clone, Debug)]
+pub struct ThreadPoolConfig {
+    /// Wall seconds per simulated second (e.g. `1e-3` ⇒ τ=1 ↦ 1 ms sleep).
+    pub time_scale: f64,
+    /// Hard wall-clock cap; `next_delivery` returns `None` past it.
+    pub max_wall: Duration,
+    pub seed: u64,
+    /// Per-coordinate gradient noise (the §G `ξ`).
+    pub noise_sigma: f64,
+}
+
+impl Default for ThreadPoolConfig {
+    fn default() -> Self {
+        Self {
+            time_scale: 1e-3,
+            max_wall: Duration::from_secs(30),
+            seed: 0,
+            noise_sigma: 0.0,
+        }
+    }
+}
+
+/// An assignment handed to a worker thread: (start_k, generation, snapshot).
+type Assignment = (u64, u64, Arc<Vec<f64>>);
+
+struct WorkerMsg {
+    worker: usize,
+    start_k: u64,
+    gen: u64,
+    grad: Vec<f64>,
+}
+
+/// Wall-clock gradient source over a scoped thread pool.
+///
+/// Construct with [`ThreadSource::spawn`] inside a [`std::thread::scope`],
+/// run the engine, then call [`ThreadSource::shutdown`] before the scope
+/// closes so worker threads unblock and join.
+pub struct ThreadSource {
+    mailboxes: Vec<mpsc::Sender<Assignment>>,
+    rx: mpsc::Receiver<WorkerMsg>,
+    gens: Arc<Vec<AtomicU64>>,
+    stop: Arc<AtomicBool>,
+    /// start_k of each worker's current assignment (server view).
+    start_ks: Vec<u64>,
+    busy: Vec<bool>,
+    assign_times: Vec<f64>,
+    active: Vec<usize>,
+    started: Instant,
+    max_wall: Duration,
+    stats: ClusterStats,
+    /// Gradient of the most recent valid delivery, awaiting `materialize`.
+    pending: Vec<f64>,
+}
+
+impl ThreadSource {
+    /// Spawn one worker thread per active worker inside `scope`.
+    ///
+    /// The problem must be `Sync` (workers evaluate gradients
+    /// concurrently); each assignment carries an `Arc` snapshot of the
+    /// iterate, matching Algorithms 1/4/5 where a worker computes at the
+    /// point it was handed.
+    pub fn spawn<'scope, 'env, P: Problem + Sync>(
+        scope: &'scope thread::Scope<'scope, 'env>,
+        problem: &'env P,
+        model: &ComputeModel,
+        active: &[usize],
+        cfg: &ThreadPoolConfig,
+    ) -> ThreadSource {
+        let n = model.n_workers();
+        let (tx, rx) = mpsc::channel::<WorkerMsg>();
+        let stop = Arc::new(AtomicBool::new(false));
+        // per-worker assignment generation (bumped to cancel, Algorithm 5)
+        let gens: Arc<Vec<AtomicU64>> = Arc::new((0..n).map(|_| AtomicU64::new(0)).collect());
+        let mut mailboxes: Vec<mpsc::Sender<Assignment>> = Vec::with_capacity(n);
+
+        let mut root_rng = Prng::seed_from_u64(cfg.seed);
+        for w in 0..n {
+            let (atx, arx) = mpsc::channel::<Assignment>();
+            mailboxes.push(atx);
+            // split for every worker — same stream layout as Cluster::new
+            let mut rng = root_rng.split(w as u64);
+            if !active.contains(&w) {
+                continue; // inactive workers get no thread
+            }
+            let tx = tx.clone();
+            let stop = stop.clone();
+            let gens = gens.clone();
+            let model = model.clone();
+            let noise = cfg.noise_sigma;
+            let scale = cfg.time_scale;
+            scope.spawn(move || {
+                let t0 = Instant::now();
+                while let Ok((start_k, gen, x)) = arx.recv() {
+                    if stop.load(Ordering::Relaxed) {
+                        break;
+                    }
+                    // realized compute time first — the simulator draws the
+                    // duration at assignment from the same worker stream,
+                    // even for work that is later cancelled
+                    let dt = model.duration(w, t0.elapsed().as_secs_f64() / scale, &mut rng);
+                    if gens[w].load(Ordering::Acquire) != gen {
+                        // superseded while still queued (a cancellation
+                        // already replaced this assignment): keep the
+                        // duration draw for stream parity but skip the
+                        // sleep, so a repeatedly-cancelled slow worker
+                        // drains its backlog instead of serially sleeping
+                        // through stale assignments
+                        continue;
+                    }
+                    thread::sleep(Duration::from_secs_f64(dt * scale));
+                    if gens[w].load(Ordering::Acquire) != gen {
+                        // cancelled mid-flight (Algorithm 5): like the
+                        // simulator's lazy protocol, the gradient — and its
+                        // noise draw — never happens
+                        continue;
+                    }
+                    let mut g = vec![0.0; x.len()];
+                    let _ = problem.value_grad(&x, &mut g);
+                    if noise > 0.0 {
+                        for gi in g.iter_mut() {
+                            *gi += rng.normal(0.0, noise);
+                        }
+                    }
+                    if tx
+                        .send(WorkerMsg {
+                            worker: w,
+                            start_k,
+                            gen,
+                            grad: g,
+                        })
+                        .is_err()
+                    {
+                        break;
+                    }
+                }
+            });
+        }
+        drop(tx);
+
+        ThreadSource {
+            mailboxes,
+            rx,
+            gens,
+            stop,
+            start_ks: vec![0; n],
+            busy: vec![false; n],
+            assign_times: vec![0.0; n],
+            active: active.to_vec(),
+            started: Instant::now(),
+            max_wall: cfg.max_wall,
+            stats: ClusterStats::default(),
+            pending: Vec::new(),
+        }
+    }
+
+    /// Unblock and release the worker threads (drop mailboxes, drain the
+    /// delivery channel). Must be called before the enclosing
+    /// `thread::scope` closes, or the scope would join forever.
+    pub fn shutdown(self) {
+        self.stop.store(true, Ordering::Relaxed);
+        drop(self.mailboxes); // workers' recv() fails → threads exit
+        while self.rx.try_recv().is_ok() {}
+    }
+}
+
+impl<P: StochasticProblem + ?Sized> GradientSource<P> for ThreadSource {
+    fn n_workers(&self) -> usize {
+        self.mailboxes.len()
+    }
+
+    fn assign(&mut self, worker: usize, start_k: u64, point: &Arc<Vec<f64>>) {
+        let gen = self.gens[worker].fetch_add(1, Ordering::AcqRel) + 1;
+        self.start_ks[worker] = start_k;
+        self.busy[worker] = true;
+        self.assign_times[worker] = self.started.elapsed().as_secs_f64();
+        self.stats.assignments += 1;
+        let _ = self.mailboxes[worker].send((start_k, gen, point.clone()));
+    }
+
+    fn next_delivery(&mut self) -> Option<Delivery> {
+        loop {
+            let elapsed = self.started.elapsed();
+            if elapsed >= self.max_wall {
+                return None;
+            }
+            let msg = match self.rx.recv_timeout(self.max_wall - elapsed) {
+                Ok(m) => m,
+                Err(_) => return None, // budget exhausted or pool gone
+            };
+            // stale by generation ⇒ a cancellation raced the send; drop
+            if self.gens[msg.worker].load(Ordering::Acquire) != msg.gen {
+                continue;
+            }
+            self.busy[msg.worker] = false;
+            self.stats.arrivals += 1;
+            self.pending = msg.grad;
+            return Some(Delivery {
+                worker: msg.worker,
+                start_k: msg.start_k,
+                time: self.started.elapsed().as_secs_f64(),
+            });
+        }
+    }
+
+    fn materialize(&mut self, _problem: &mut P, _delivery: &Delivery, out: &mut [f64]) {
+        // the worker thread already computed the gradient concurrently
+        out.copy_from_slice(&self.pending);
+    }
+
+    fn assign_time(&self, worker: usize) -> f64 {
+        self.assign_times[worker]
+    }
+
+    fn cancel_stale(
+        &mut self,
+        threshold_k: u64,
+        new_k: u64,
+        point: &Arc<Vec<f64>>,
+        mut collect: Option<&mut Vec<(usize, f64, u64)>>,
+    ) {
+        for i in 0..self.active.len() {
+            let w = self.active[i];
+            if !self.busy[w] || self.start_ks[w] > threshold_k {
+                continue;
+            }
+            if let Some(out) = collect.as_deref_mut() {
+                out.push((w, self.assign_times[w], self.start_ks[w]));
+            }
+            self.stats.cancellations += 1;
+            // bumping the generation invalidates the in-flight computation;
+            // the worker sees the new assignment next
+            <ThreadSource as GradientSource<P>>::assign(self, w, new_k, point);
+        }
+    }
+
+    fn now(&self) -> f64 {
+        self.started.elapsed().as_secs_f64()
+    }
+
+    fn stats(&self) -> ClusterStats {
+        self.stats
+    }
+
+    fn wall(&self) -> Option<Duration> {
+        Some(self.started.elapsed())
+    }
+}
+
+/// Server-side evaluation adapter for wall-clock runs: the engine needs a
+/// [`StochasticProblem`] for curve recording and stopping checks, but the
+/// stochastic gradients themselves are produced by the worker threads —
+/// so `stoch_grad` is unreachable here.
+pub struct WallclockEval<'a, P: Problem>(pub &'a P);
+
+impl<'a, P: Problem> StochasticProblem for WallclockEval<'a, P> {
+    fn dim(&self) -> usize {
+        self.0.dim()
+    }
+
+    fn stoch_grad(&mut self, _x: &[f64], _rng: &mut Prng, _grad: &mut [f64]) -> f64 {
+        unreachable!("ThreadSource materializes gradients on the worker threads")
+    }
+
+    fn eval_value_grad(&mut self, x: &[f64], grad: &mut [f64]) -> f64 {
+        self.0.value_grad(x, grad)
+    }
+
+    fn f_star(&self) -> Option<f64> {
+        self.0.f_star()
+    }
+
+    fn smoothness(&self) -> Option<f64> {
+        self.0.smoothness()
+    }
+
+    fn init_point(&self) -> Vec<f64> {
+        self.0.init_point()
+    }
+}

@@ -1,27 +1,27 @@
-//! Wall-clock executor: a real multi-threaded parameter server.
+//! Wall-clock executor — a thin facade over the unified [`crate::engine`].
 //!
-//! The discrete-event simulator ([`crate::sim`]) is the primary testbed
-//! (deterministic, scales to n = 10⁴), but the schedulers are also run
-//! against *real concurrency* here: one OS thread per worker, a server
-//! event loop over an mpsc channel, compute times realized as sleeps
-//! scaled by `time_scale`, and Algorithm 5's calculation stops implemented
-//! with atomic assignment generations (a worker whose generation moved on
-//! discards its result — the honest analogue of killing the computation).
+//! [`run_wallclock`] binds a [`Scheduler`] to real concurrency: one OS
+//! thread per worker ([`crate::engine::ThreadSource`]), compute times
+//! realized as sleeps scaled by `time_scale`, Algorithm 5's calculation
+//! stops via atomic assignment generations. The server-policy loop —
+//! Decision application, batch accumulator, cancellation, reassignment,
+//! curve recording, [`ServerOpt`] updates and ε-stationarity stopping — is
+//! [`crate::engine::run`], shared verbatim with the simulator, so every
+//! [`crate::coordinator::SchedulerKind`] behaves identically on both
+//! substrates by construction and returns the same unified [`RunRecord`]
+//! (`wall` set, times in wall seconds).
 //!
-//! Used by the integration suite to validate that simulated and wall-clock
-//! runs of the same configuration agree qualitatively, and by the
-//! `exec_demo` path of the CLI.
+//! Used by the integration suite (`tests/engine_parity.rs`) and by the
+//! CLI's `exec-demo` subcommand.
 
-use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
-use std::sync::mpsc;
-use std::sync::Arc;
 use std::thread;
-use std::time::{Duration, Instant};
+use std::time::Duration;
 
-use crate::coordinator::{Decision, Scheduler};
-use crate::linalg::{axpy, nrm2_sq};
+use crate::coordinator::Scheduler;
+use crate::engine::{
+    self, DriverConfig, RunRecord, ServerOpt, ThreadPoolConfig, ThreadSource, WallclockEval,
+};
 use crate::opt::Problem;
-use crate::prng::Prng;
 use crate::sim::ComputeModel;
 
 /// Wall-clock run configuration.
@@ -36,6 +36,12 @@ pub struct ExecConfig {
     pub seed: u64,
     /// Per-coordinate gradient noise (the §G `ξ`).
     pub noise_sigma: f64,
+    /// Evaluate + record curves every this many iterate updates.
+    pub record_every: u64,
+    /// ε-stationarity stop on the recorded `‖∇f‖²` (`None` disables).
+    pub eps: Option<f64>,
+    /// Server-side update rule (default: the paper's plain SGD step).
+    pub server_opt: ServerOpt,
 }
 
 impl Default for ExecConfig {
@@ -46,30 +52,15 @@ impl Default for ExecConfig {
             max_wall: Duration::from_secs(30),
             seed: 0,
             noise_sigma: 0.0,
+            record_every: 100,
+            eps: None,
+            server_opt: ServerOpt::Sgd,
         }
     }
 }
 
-/// Outcome of a wall-clock run.
-#[derive(Clone, Debug)]
-pub struct ExecRecord {
-    pub iters: u64,
-    pub applied: u64,
-    pub discarded: u64,
-    pub wall: Duration,
-    pub final_value: f64,
-    pub final_gradnorm_sq: f64,
-    pub x_final: Vec<f64>,
-}
-
-struct WorkerMsg {
-    worker: usize,
-    start_k: u64,
-    gen: u64,
-    grad: Vec<f64>,
-}
-
-/// Run `sched` against `problem` with real threads.
+/// Run `sched` against `problem` with real threads, through the unified
+/// engine loop.
 ///
 /// The problem must be `Sync` (workers evaluate gradients concurrently);
 /// the iterate is snapshotted per assignment, matching the semantics of
@@ -79,172 +70,42 @@ pub fn run_wallclock<P: Problem + Sync>(
     model: &ComputeModel,
     sched: &mut dyn Scheduler,
     cfg: &ExecConfig,
-) -> ExecRecord {
-    let n = model.n_workers();
-    let dim = problem.dim();
-    let (tx, rx) = mpsc::channel::<WorkerMsg>();
-    let stop = Arc::new(AtomicBool::new(false));
-    // per-worker assignment generation (bumped to cancel, Algorithm 5)
-    let gens: Arc<Vec<AtomicU64>> = Arc::new((0..n).map(|_| AtomicU64::new(0)).collect());
-    // per-worker assignment mailboxes
-    let mut mailboxes: Vec<mpsc::Sender<(u64, u64, Vec<f64>)>> = Vec::with_capacity(n);
-
+) -> RunRecord {
     let active: Vec<usize> = match sched.active_workers() {
         Some(ws) => ws.to_vec(),
-        None => (0..n).collect(),
+        None => (0..model.n_workers()).collect(),
     };
-
+    let pool_cfg = ThreadPoolConfig {
+        time_scale: cfg.time_scale,
+        max_wall: cfg.max_wall,
+        seed: cfg.seed,
+        noise_sigma: cfg.noise_sigma,
+    };
+    let driver_cfg = DriverConfig {
+        seed: cfg.seed,
+        eps: cfg.eps,
+        target_gap: None,
+        // the wall budget is enforced by the source itself
+        max_time: f64::INFINITY,
+        max_iters: cfg.max_iters,
+        record_every: cfg.record_every,
+        record_update_times: false,
+        record_trace: false,
+        server_opt: cfg.server_opt.clone(),
+    };
     thread::scope(|scope| {
-        let mut root_rng = Prng::seed_from_u64(cfg.seed);
-        for w in 0..n {
-            let (atx, arx) = mpsc::channel::<(u64, u64, Vec<f64>)>();
-            mailboxes.push(atx);
-            if !active.contains(&w) {
-                continue; // inactive workers get no thread
-            }
-            let tx = tx.clone();
-            let stop = stop.clone();
-            let gens = gens.clone();
-            let model = model.clone();
-            let mut rng = root_rng.split(w as u64);
-            let noise = cfg.noise_sigma;
-            let scale = cfg.time_scale;
-            scope.spawn(move || {
-                let t0 = Instant::now();
-                while let Ok((start_k, gen, x)) = arx.recv() {
-                    if stop.load(Ordering::Relaxed) {
-                        break;
-                    }
-                    // "compute" the stochastic gradient
-                    let mut g = vec![0.0; x.len()];
-                    let _ = problem.value_grad(&x, &mut g);
-                    for gi in g.iter_mut() {
-                        *gi += rng.normal(0.0, noise);
-                    }
-                    let dt = model.duration(w, t0.elapsed().as_secs_f64() / scale, &mut rng);
-                    thread::sleep(Duration::from_secs_f64(dt * scale));
-                    if gens[w].load(Ordering::Acquire) != gen {
-                        continue; // cancelled mid-flight (Algorithm 5)
-                    }
-                    if tx
-                        .send(WorkerMsg {
-                            worker: w,
-                            start_k,
-                            gen,
-                            grad: g,
-                        })
-                        .is_err()
-                    {
-                        break;
-                    }
-                }
-            });
-        }
-        drop(tx);
-
-        // ---- server loop ----
-        let started = Instant::now();
-        let mut x = problem.init_point();
-        let mut acc = vec![0.0; dim];
-        let mut acc_count = 0u64;
-        let mut k = 0u64;
-        let mut applied = 0u64;
-        let mut discarded = 0u64;
-        // start_k of each worker's current assignment (server view)
-        let mut start_ks = vec![0u64; n];
-        let mut idle: Vec<usize> = Vec::new();
-
-        let assign = |w: usize,
-                      k: u64,
-                      x: &[f64],
-                      gens: &[AtomicU64],
-                      mailboxes: &[mpsc::Sender<(u64, u64, Vec<f64>)>],
-                      start_ks: &mut [u64]| {
-            let gen = gens[w].fetch_add(1, Ordering::AcqRel) + 1;
-            start_ks[w] = k;
-            let _ = mailboxes[w].send((k, gen, x.to_vec()));
-        };
-
-        for &w in &active {
-            assign(w, 0, &x, &gens, &mailboxes, &mut start_ks);
-        }
-
-        while k < cfg.max_iters && started.elapsed() < cfg.max_wall {
-            let Ok(msg) = rx.recv_timeout(cfg.max_wall.saturating_sub(started.elapsed()))
-            else {
-                break;
-            };
-            // stale by generation ⇒ a cancellation raced the send; drop
-            if gens[msg.worker].load(Ordering::Acquire) != msg.gen {
-                continue;
-            }
-            let delay = k - msg.start_k;
-            let mut stepped = false;
-            match sched.on_arrival(msg.worker, delay) {
-                Decision::Step { gamma } => {
-                    axpy(-gamma, &msg.grad, &mut x);
-                    k += 1;
-                    applied += 1;
-                    stepped = true;
-                }
-                Decision::Accumulate { flush_gamma } => {
-                    for (a, g) in acc.iter_mut().zip(&msg.grad) {
-                        *a += g;
-                    }
-                    acc_count += 1;
-                    if let Some(gamma) = flush_gamma {
-                        axpy(-gamma / acc_count as f64, &acc.clone(), &mut x);
-                        acc.fill(0.0);
-                        acc_count = 0;
-                        k += 1;
-                        stepped = true;
-                    }
-                }
-                Decision::Discard => discarded += 1,
-            }
-            if sched.reassign_after_arrival() {
-                assign(msg.worker, k, &x, &gens, &mailboxes, &mut start_ks);
-            } else {
-                idle.push(msg.worker);
-            }
-            if stepped {
-                if let Some(threshold) = sched.cancel_threshold(k) {
-                    for &w in &active {
-                        if w != msg.worker && start_ks[w] <= threshold {
-                            assign(w, k, &x, &gens, &mailboxes, &mut start_ks);
-                        }
-                    }
-                }
-                for w in idle.drain(..) {
-                    assign(w, k, &x, &gens, &mailboxes, &mut start_ks);
-                }
-            }
-        }
-        stop.store(true, Ordering::Relaxed);
-        drop(mailboxes); // workers' recv() fails → threads exit
-        let wall = started.elapsed();
-        // drain any in-flight messages so senders don't block (unbounded
-        // channel: not strictly needed, but keeps shutdown prompt)
-        while rx.try_recv().is_ok() {}
-
-        let mut g = vec![0.0; dim];
-        let v = problem.value_grad(&x, &mut g);
-        ExecRecord {
-            iters: k,
-            applied,
-            discarded,
-            wall,
-            final_value: v,
-            final_gradnorm_sq: nrm2_sq(&g),
-            x_final: x,
-        }
+        let mut source = ThreadSource::spawn(scope, problem, model, &active, &pool_cfg);
+        let mut eval = WallclockEval(problem);
+        let rec = engine::run(&mut eval, &mut source, sched, &driver_cfg);
+        source.shutdown();
+        rec
     })
 }
 
 #[cfg(test)]
 mod tests {
     use super::*;
-    use crate::coordinator::{AsgdScheduler, RingmasterScheduler, StepsizeRule};
+    use crate::coordinator::{AsgdScheduler, RennalaScheduler, RingmasterScheduler, StepsizeRule};
     use crate::opt::QuadraticProblem;
 
     #[test]
@@ -260,8 +121,9 @@ mod tests {
         };
         let rec = run_wallclock(&problem, &model, &mut sched, &cfg);
         assert!(rec.iters > 100, "made progress: {} iters", rec.iters);
-        let f0 = problem.value(&problem.init_point());
-        assert!(rec.final_value < f0, "{} < {f0}", rec.final_value);
+        let first = rec.gap_curve.v[0];
+        assert!(rec.final_gap < first, "{} < {first}", rec.final_gap);
+        assert!(rec.wall.is_some(), "wall-clock runs must report a duration");
     }
 
     #[test]
@@ -291,5 +153,45 @@ mod tests {
         };
         let rec = run_wallclock(&problem, &model, &mut sched, &cfg);
         assert_eq!(rec.iters, 50);
+    }
+
+    #[test]
+    fn wallclock_rennala_accumulates_through_shared_engine() {
+        // batch accumulation used to be a second, drifting copy of the
+        // server loop; through the engine it is the same code as the
+        // simulator's, so the count invariants transfer.
+        let problem = QuadraticProblem::paper(8);
+        let model = ComputeModel::fixed_linear(4);
+        let mut sched = RennalaScheduler::new(3, 0.4);
+        let cfg = ExecConfig {
+            time_scale: 2e-4,
+            max_iters: 60,
+            noise_sigma: 1e-3,
+            ..Default::default()
+        };
+        let rec = run_wallclock(&problem, &model, &mut sched, &cfg);
+        assert_eq!(rec.accumulated, 3 * rec.iters);
+        assert!(rec.gap_curve.len() >= 2, "curves recorded on the wall path");
+    }
+
+    #[test]
+    fn wallclock_supports_server_optimizers() {
+        // ServerOpt was sim-only before the unification
+        let problem = QuadraticProblem::paper(8);
+        let model = ComputeModel::fixed_equal(3, 1.0);
+        let mut sched = RingmasterScheduler::new(3, 0.05, true);
+        let cfg = ExecConfig {
+            time_scale: 1e-4,
+            max_iters: 150,
+            server_opt: ServerOpt::Momentum { beta: 0.5 },
+            ..Default::default()
+        };
+        let rec = run_wallclock(&problem, &model, &mut sched, &cfg);
+        let first = rec.gap_curve.v[0];
+        assert!(
+            rec.final_gap < first,
+            "momentum run descends: {first} -> {}",
+            rec.final_gap
+        );
     }
 }

@@ -8,6 +8,7 @@
 use crate::complexity::{self, Constants};
 use crate::coordinator::SchedulerKind;
 use crate::driver::{Driver, DriverConfig, RunRecord};
+use crate::engine::sweep::{self, SweepJob, SweepResult};
 use crate::opt::{Noisy, Problem, QuadraticProblem};
 use crate::sim::ComputeModel;
 
@@ -91,6 +92,9 @@ pub fn run_quadratic(
 
 /// Tune a scheduler family over a stepsize grid (the paper's `{5^p}`),
 /// returning the best record by time-to-target (then by final gap).
+///
+/// The grid points run in parallel on the [`sweep`] thread pool; every run
+/// is seeded, so the selection is identical to the historical serial loop.
 pub fn tune_stepsize<F>(
     cfg: &QuadExpConfig,
     model: &ComputeModel,
@@ -98,23 +102,24 @@ pub fn tune_stepsize<F>(
     make: F,
 ) -> (f64, RunRecord)
 where
-    F: Fn(f64) -> SchedulerKind,
+    F: Fn(f64) -> SchedulerKind + Sync,
 {
     assert!(!grid.is_empty());
-    let mut best: Option<(f64, RunRecord)> = None;
-    for &gamma in grid {
-        let rec = run_quadratic(cfg, model.clone(), &make(gamma));
-        let score = |r: &RunRecord| -> (f64, f64) {
-            // lexicographic: time-to-target, then final gap; divergent runs
-            // (NaN/inf) sort last
-            let t = r.time_to_target().unwrap_or(f64::INFINITY);
-            let g = if r.final_gap.is_finite() {
-                r.final_gap
-            } else {
-                f64::INFINITY
-            };
-            (t, g)
+    let records =
+        sweep::parallel_map(grid, |_, &gamma| run_quadratic(cfg, model.clone(), &make(gamma)));
+    let score = |r: &RunRecord| -> (f64, f64) {
+        // lexicographic: time-to-target, then final gap; divergent runs
+        // (NaN/inf) sort last
+        let t = r.time_to_target().unwrap_or(f64::INFINITY);
+        let g = if r.final_gap.is_finite() {
+            r.final_gap
+        } else {
+            f64::INFINITY
         };
+        (t, g)
+    };
+    let mut best: Option<(f64, RunRecord)> = None;
+    for (&gamma, rec) in grid.iter().zip(records) {
         let better = match &best {
             None => true,
             Some((_, b)) => {
@@ -128,6 +133,19 @@ where
         }
     }
     best.unwrap()
+}
+
+/// Run a labelled (scheduler × model × seed) grid of §G-quadratic
+/// experiments in parallel, preserving job order in the results.
+///
+/// `cfg` provides the shared problem/budget knobs; each [`SweepJob`]
+/// overrides the seed and supplies the scheduler + compute model.
+pub fn sweep_quadratic(cfg: &QuadExpConfig, jobs: &[SweepJob]) -> Vec<SweepResult> {
+    sweep::run_sweep(jobs, |job| {
+        let mut c = cfg.clone();
+        c.seed = job.seed;
+        run_quadratic(&c, job.model.clone(), &job.kind)
+    })
 }
 
 impl RunRecord {
@@ -277,5 +295,30 @@ mod tests {
         assert_eq!(gamma, 0.2, "picked {gamma}");
         assert!(rec.final_gap < 1e-4);
         let _ = rec;
+    }
+
+    #[test]
+    fn sweep_quadratic_preserves_grid_order() {
+        let mut cfg = QuadExpConfig::small();
+        cfg.d = 16;
+        cfg.n_workers = 4;
+        cfg.noise_sigma = 0.001;
+        cfg.max_iters = 500;
+        let jobs = crate::engine::sweep::grid(
+            &[
+                SchedulerKind::Ringmaster { r: 4, gamma: 0.2, cancel: true },
+                SchedulerKind::Asgd { gamma: 0.1 },
+            ],
+            &[("linear".to_string(), ComputeModel::fixed_linear(4))],
+            &[0, 1],
+        );
+        let results = sweep_quadratic(&cfg, &jobs);
+        assert_eq!(results.len(), 4);
+        for (job, res) in jobs.iter().zip(&results) {
+            assert_eq!(job.seed, res.seed);
+            assert_eq!(job.kind.name(), res.kind.name());
+            assert_eq!(res.label, "linear");
+            assert!(res.record.iters > 0, "{} made no progress", res.kind.name());
+        }
     }
 }

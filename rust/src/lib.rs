@@ -8,18 +8,38 @@
 //!   Ringmaster ASGD scheduler ([`coordinator::RingmasterScheduler`],
 //!   Algorithms 4 & 5) plus every baseline it is compared against
 //!   (Asynchronous SGD / Delay-Adaptive ASGD, Rennala SGD, Naive Optimal
-//!   ASGD, synchronous Minibatch SGD), a discrete-event cluster simulator
-//!   implementing the paper's *fixed*, *random* and *universal* computation
-//!   models ([`sim`]), the closed-form time-complexity theory ([`complexity`]),
-//!   a wall-clock thread-pool executor ([`exec`]), and the config / CLI /
-//!   metrics plumbing of a deployable framework.
+//!   ASGD, synchronous Minibatch SGD), executed by a **single
+//!   backend-agnostic server loop** ([`engine`]) over two substrates —
+//!   a discrete-event cluster simulator implementing the paper's *fixed*,
+//!   *random* and *universal* computation models ([`sim`], via
+//!   [`engine::SimSource`]) and a real-thread wall-clock pool
+//!   ([`engine::ThreadSource`]) — with thin facades in [`driver`]
+//!   (simulation) and [`exec`] (wall clock), a parallel grid sweeper
+//!   ([`engine::sweep`]), the closed-form time-complexity theory
+//!   ([`complexity`]), and the config / CLI / metrics plumbing of a
+//!   deployable framework.
 //! * **Layer 2 (python/compile/model.py)** — the experimental objectives
 //!   (§G quadratic, §G.1 MLP) in JAX, AOT-lowered once to HLO text.
 //! * **Layer 1 (python/compile/kernels/)** — Pallas kernels for the compute
 //!   hot-spots (tridiagonal stencil matvec, tiled MXU matmul).
 //!
 //! The [`runtime`] module loads the AOT artifacts through the PJRT C API
-//! (`xla` crate) so the training hot path never touches Python.
+//! (`xla` crate, behind the `pjrt` cargo feature; a stub otherwise) so the
+//! training hot path never touches Python.
+//!
+//! ```text
+//!            Scheduler (policy)          coordinator::*
+//!                  │ Decision
+//!                  ▼
+//!            engine::run (one loop)      engine
+//!             │              │
+//!       SimSource      ThreadSource      engine::{sim_source,thread_source}
+//!       (sim clock)    (wall clock)
+//!             │              │
+//!        sim::Cluster   mpsc thread pool
+//!                  │
+//!             RunRecord (unified)
+//! ```
 
 pub mod bench_util;
 pub mod cli;
@@ -28,6 +48,7 @@ pub mod config;
 pub mod coordinator;
 pub mod data;
 pub mod driver;
+pub mod engine;
 pub mod exec;
 pub mod experiments;
 pub mod linalg;

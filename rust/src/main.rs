@@ -17,7 +17,8 @@
 
 use std::path::PathBuf;
 
-use anyhow::{bail, Result};
+use ringmaster::bail;
+use ringmaster::util::error::Result;
 
 use ringmaster::cli::Args;
 use ringmaster::complexity::{self, Constants};
@@ -73,7 +74,7 @@ fn print_help() {
 
 fn load_config(args: &Args) -> Result<ConfigMap> {
     let mut cfg = match args.get("config") {
-        Some(path) => ConfigMap::load(&PathBuf::from(path)).map_err(|e| anyhow::anyhow!("{e}"))?,
+        Some(path) => ConfigMap::load(&PathBuf::from(path)).map_err(|e| ringmaster::anyhow!("{e}"))?,
         None => ConfigMap::default(),
     };
     args.apply_overrides(&mut cfg);
@@ -201,7 +202,8 @@ fn cmd_compare(args: &Args) -> Result<()> {
     };
     let m_star = complexity::naive_m_star(&taus_sorted, c.sigma_sq, c.eps);
 
-    let families: Vec<(&str, Box<dyn Fn(f64) -> SchedulerKind>)> = vec![
+    // `Sync` so `tune_stepsize` can fan the stepsize grid across the sweep pool
+    let families: Vec<(&str, Box<dyn Fn(f64) -> SchedulerKind + Sync>)> = vec![
         (
             "ringmaster",
             Box::new(move |g| SchedulerKind::Ringmaster {
@@ -531,11 +533,11 @@ fn cmd_exec_demo(args: &Args) -> Result<()> {
         let mut sched = kind.build();
         let rec = run_wallclock(&problem, &model, sched.as_mut(), &cfg);
         println!(
-            "exec {}: iters={} wall={:?} f={:.4e} ‖∇f‖²={:.3e} discarded={}",
+            "exec {}: iters={} wall={:?} f-f*={:.4e} ‖∇f‖²={:.3e} discarded={}",
             sched.name(),
             rec.iters,
-            rec.wall,
-            rec.final_value,
+            rec.wall.unwrap_or_default(),
+            rec.final_gap,
             rec.final_gradnorm_sq,
             rec.discarded
         );

@@ -7,7 +7,8 @@
 //! studies end-to-end, and so the perf pass can compare native vs PJRT
 //! gradient cost.
 
-use anyhow::{anyhow, Result};
+use crate::anyhow;
+use crate::util::error::Result;
 
 use crate::linalg::TridiagToeplitz;
 use crate::runtime::PjrtRuntime;

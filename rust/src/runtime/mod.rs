@@ -10,11 +10,19 @@
 //! Interchange is HLO *text* — jax ≥ 0.5 emits `HloModuleProto`s with
 //! 64-bit instruction ids that xla_extension 0.5.1 rejects; the text parser
 //! reassigns ids (see `/opt/xla-example/README.md`).
+//!
+//! The `xla` crate is not vendored in the offline build environment, so the
+//! PJRT client is gated behind the `pjrt` cargo feature: without it (the
+//! default), [`Manifest`] parsing and every native code path still work,
+//! but [`PjrtRuntime::load`] fails with a clear error instead of executing
+//! artifacts.
 
+#[cfg(feature = "pjrt")]
 use std::collections::HashMap;
 use std::path::{Path, PathBuf};
 
-use anyhow::{anyhow, bail, Context, Result};
+use crate::util::error::{Context, Result};
+use crate::{anyhow, bail};
 
 use crate::util::json::{parse as json_parse, Json};
 
@@ -136,14 +144,23 @@ impl Manifest {
 }
 
 /// PJRT CPU client + compiled-executable cache.
+///
+/// Built without the `pjrt` cargo feature (the default — the offline
+/// environment vendors no `xla` crate) this is a stub: [`Manifest`]
+/// parsing works, but [`PjrtRuntime::load`] fails before any artifact can
+/// be executed. Enable the feature and vendor the `xla` crate
+/// (xla_extension 0.5.x) to restore the real backend.
 pub struct PjrtRuntime {
+    #[cfg(feature = "pjrt")]
     client: xla::PjRtClient,
     manifest: Manifest,
+    #[cfg(feature = "pjrt")]
     cache: HashMap<String, xla::PjRtLoadedExecutable>,
 }
 
 impl PjrtRuntime {
     /// Load the manifest and create the PJRT CPU client.
+    #[cfg(feature = "pjrt")]
     pub fn load(dir: &Path) -> Result<Self> {
         let manifest = Manifest::load(dir)?;
         let client = xla::PjRtClient::cpu().map_err(|e| anyhow!("pjrt cpu client: {e:?}"))?;
@@ -152,6 +169,16 @@ impl PjrtRuntime {
             manifest,
             cache: HashMap::new(),
         })
+    }
+
+    /// Stub: the manifest still parses, but there is no client to run it.
+    #[cfg(not(feature = "pjrt"))]
+    pub fn load(dir: &Path) -> Result<Self> {
+        let _manifest = Manifest::load(dir)?;
+        bail!(
+            "PJRT backend unavailable: ringmaster was built without the `pjrt` \
+             cargo feature (no vendored `xla` crate in this environment)"
+        )
     }
 
     /// Load from the default artifact directory.
@@ -163,11 +190,18 @@ impl PjrtRuntime {
         &self.manifest
     }
 
+    #[cfg(feature = "pjrt")]
     pub fn platform(&self) -> String {
         self.client.platform_name()
     }
 
+    #[cfg(not(feature = "pjrt"))]
+    pub fn platform(&self) -> String {
+        "stub (built without the pjrt feature)".to_string()
+    }
+
     /// Compile (or fetch the cached) executable for a manifest entry.
+    #[cfg(feature = "pjrt")]
     fn executable(&mut self, name: &str) -> Result<&xla::PjRtLoadedExecutable> {
         if !self.cache.contains_key(name) {
             let entry = self.manifest.entry(name)?.clone();
@@ -187,12 +221,27 @@ impl PjrtRuntime {
     }
 
     /// Pre-compile an entry (so first-call latency is off the hot path).
+    #[cfg(feature = "pjrt")]
     pub fn warmup(&mut self, name: &str) -> Result<()> {
         self.executable(name).map(|_| ())
     }
 
+    /// Stub: unreachable in practice ([`PjrtRuntime::load`] already fails).
+    #[cfg(not(feature = "pjrt"))]
+    pub fn warmup(&mut self, name: &str) -> Result<()> {
+        bail!("cannot warm up '{name}': built without the `pjrt` feature")
+    }
+
+    /// Stub: unreachable in practice ([`PjrtRuntime::load`] already fails).
+    #[cfg(not(feature = "pjrt"))]
+    pub fn execute_f32(&mut self, name: &str, inputs: &[&[f32]]) -> Result<Vec<Vec<f32>>> {
+        let _ = inputs;
+        bail!("cannot execute '{name}': built without the `pjrt` feature")
+    }
+
     /// Execute an entry with `f32` inputs; returns one `Vec<f32>` per
     /// result (scalars come back as length-1 vectors).
+    #[cfg(feature = "pjrt")]
     pub fn execute_f32(&mut self, name: &str, inputs: &[&[f32]]) -> Result<Vec<Vec<f32>>> {
         let entry = self.manifest.entry(name)?.clone();
         if inputs.len() != entry.args.len() {

@@ -8,7 +8,8 @@
 //! staged to `f32` at the PJRT boundary — so every scheduler from
 //! [`crate::coordinator`] drives neural-network training unchanged.
 
-use anyhow::{anyhow, Result};
+use crate::anyhow;
+use crate::util::error::Result;
 
 use crate::data::{Dataset, IMG_PIXELS, N_CLASSES};
 use crate::opt::StochasticProblem;

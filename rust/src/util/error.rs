@@ -1,0 +1,132 @@
+//! Minimal `anyhow`-compatible error plumbing.
+//!
+//! Exists because no `anyhow` is available in the offline build (the same
+//! reason `util::json` replaces `serde` and `bench_util` replaces
+//! `criterion`). Provides exactly the subset the framework uses: a
+//! string-backed [`Error`], [`Result`], the [`crate::anyhow!`],
+//! [`crate::bail!`] and [`crate::ensure!`] macros, and the [`Context`]
+//! extension trait for annotating fallible calls.
+
+use std::fmt;
+
+/// String-backed error value (this crate's `anyhow::Error`).
+pub struct Error {
+    msg: String,
+}
+
+impl Error {
+    pub fn msg(msg: impl fmt::Display) -> Self {
+        Error {
+            msg: msg.to_string(),
+        }
+    }
+}
+
+impl fmt::Display for Error {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        f.write_str(&self.msg)
+    }
+}
+
+impl fmt::Debug for Error {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        f.write_str(&self.msg)
+    }
+}
+
+// Like `anyhow`, `Error` deliberately does *not* implement
+// `std::error::Error`: that is what keeps this blanket conversion (and
+// therefore `?` on any std error type) coherent.
+impl<E: std::error::Error> From<E> for Error {
+    fn from(e: E) -> Self {
+        Error::msg(&e)
+    }
+}
+
+pub type Result<T, E = Error> = std::result::Result<T, E>;
+
+/// `.context(..)` / `.with_context(..)` on any displayable error.
+pub trait Context<T> {
+    fn context<C: fmt::Display>(self, ctx: C) -> Result<T>;
+    fn with_context<C: fmt::Display, F: FnOnce() -> C>(self, f: F) -> Result<T>;
+}
+
+impl<T, E: fmt::Display> Context<T> for std::result::Result<T, E> {
+    fn context<C: fmt::Display>(self, ctx: C) -> Result<T> {
+        self.map_err(|e| Error::msg(format!("{ctx}: {e}")))
+    }
+
+    fn with_context<C: fmt::Display, F: FnOnce() -> C>(self, f: F) -> Result<T> {
+        self.map_err(|e| Error::msg(format!("{}: {e}", f())))
+    }
+}
+
+/// Construct an [`Error`] from a format string.
+#[macro_export]
+macro_rules! anyhow {
+    ($($arg:tt)*) => {
+        $crate::util::error::Error::msg(format!($($arg)*))
+    };
+}
+
+/// Early-return an `Err` built from a format string.
+#[macro_export]
+macro_rules! bail {
+    ($($arg:tt)*) => {
+        return Err($crate::anyhow!($($arg)*))
+    };
+}
+
+/// `bail!` unless the condition holds.
+#[macro_export]
+macro_rules! ensure {
+    ($cond:expr, $($arg:tt)*) => {
+        if !($cond) {
+            $crate::bail!($($arg)*);
+        }
+    };
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn io_fail() -> Result<String> {
+        let s = std::fs::read_to_string("/definitely/not/here")
+            .with_context(|| "reading config".to_string())?;
+        Ok(s)
+    }
+
+    fn bails(x: i32) -> Result<i32> {
+        ensure!(x > 0, "x must be positive, got {x}");
+        if x > 100 {
+            bail!("x too large: {x}");
+        }
+        Ok(x)
+    }
+
+    #[test]
+    fn context_prepends_message() {
+        let err = io_fail().unwrap_err();
+        let s = format!("{err:#}");
+        assert!(s.starts_with("reading config:"), "{s}");
+    }
+
+    #[test]
+    fn question_mark_converts_std_errors() {
+        fn parse(s: &str) -> Result<u32> {
+            Ok(s.parse::<u32>()?)
+        }
+        assert_eq!(parse("42").unwrap(), 42);
+        assert!(parse("nope").is_err());
+    }
+
+    #[test]
+    fn macros_format_and_bail() {
+        assert_eq!(bails(5).unwrap(), 5);
+        assert_eq!(format!("{}", bails(-1).unwrap_err()), "x must be positive, got -1");
+        assert_eq!(format!("{}", bails(101).unwrap_err()), "x too large: 101");
+        let e = anyhow!("code {}", 7);
+        assert_eq!(e.to_string(), "code 7");
+    }
+}

@@ -1,6 +1,8 @@
 //! Small shared utilities: a minimal JSON value + parser/writer (used for
-//! the artifact manifest and metrics output) and misc helpers.
+//! the artifact manifest and metrics output), `anyhow`-style error
+//! plumbing, and misc helpers.
 
+pub mod error;
 pub mod json;
 
 /// Format seconds compactly for human-readable logs (`1.23s`, `4.5ms`, `2m03s`).

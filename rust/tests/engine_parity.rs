@@ -1,0 +1,243 @@
+//! Sim / wall-clock parity through the unified engine.
+//!
+//! The same (scheduler, compute model, seed) configuration is run through
+//! both [`GradientSource`] implementations — the discrete-event simulator
+//! (`Driver` → `SimSource`) and the real-thread pool (`run_wallclock` →
+//! `ThreadSource`) — and the runs must agree *qualitatively*: both descend,
+//! both respect the scheduler's accounting invariants, and Ringmaster's
+//! Lemma 4.1 delay bound (`δ < R` on every consumed gradient) holds on
+//! both substrates. Bitwise agreement is not expected: thread timing
+//! reorders arrivals.
+
+use ringmaster::coordinator::{Decision, Scheduler, SchedulerKind};
+use ringmaster::driver::{Driver, DriverConfig, RunRecord};
+use ringmaster::exec::{run_wallclock, ExecConfig};
+use ringmaster::opt::{Noisy, QuadraticProblem};
+use ringmaster::sim::ComputeModel;
+
+const D: usize = 8;
+const N: usize = 4;
+const NOISE: f64 = 1e-3;
+
+/// One representative configuration per `SchedulerKind` variant (all 7).
+fn all_seven_kinds() -> Vec<SchedulerKind> {
+    vec![
+        SchedulerKind::Ringmaster { r: 4, gamma: 0.3, cancel: true },
+        SchedulerKind::Asgd { gamma: 0.2 },
+        SchedulerKind::DelayAdaptive { gamma: 0.3 },
+        SchedulerKind::Rennala { b: 3, gamma: 0.4 },
+        SchedulerKind::Buffered { b: 3, gamma: 0.3 },
+        SchedulerKind::Naive { m_star: 2, gamma: 0.3 },
+        SchedulerKind::Minibatch { m: N, gamma: 0.5 },
+    ]
+}
+
+fn sim_run(sched: &mut dyn Scheduler, model: &ComputeModel, iters: u64, seed: u64) -> RunRecord {
+    let mut driver = Driver::new(
+        Noisy::new(QuadraticProblem::paper(D), NOISE),
+        model.clone(),
+        DriverConfig {
+            seed,
+            max_iters: iters,
+            record_every: 50,
+            ..Default::default()
+        },
+    );
+    driver.run(sched)
+}
+
+fn wall_run(sched: &mut dyn Scheduler, model: &ComputeModel, iters: u64, seed: u64) -> RunRecord {
+    let problem = QuadraticProblem::paper(D);
+    run_wallclock(
+        &problem,
+        model,
+        sched,
+        &ExecConfig {
+            time_scale: 2e-4,
+            max_iters: iters,
+            noise_sigma: NOISE,
+            seed,
+            record_every: 50,
+            ..Default::default()
+        },
+    )
+}
+
+#[test]
+fn all_seven_scheduler_kinds_descend_on_both_substrates() {
+    let model = ComputeModel::fixed_linear(N);
+    for kind in all_seven_kinds() {
+        let mut s1 = kind.build();
+        let sim = sim_run(s1.as_mut(), &model, 200, 1);
+        let mut s2 = kind.build();
+        let wall = wall_run(s2.as_mut(), &model, 200, 1);
+
+        for (name, rec) in [("sim", &sim), ("wall", &wall)] {
+            assert!(rec.iters > 0, "{}/{name}: no iterate updates", kind.name());
+            let first = rec.gap_curve.v[0];
+            assert!(
+                rec.final_gap < 0.9 * first,
+                "{}/{name}: no descent ({first} -> {})",
+                kind.name(),
+                rec.final_gap
+            );
+            assert!(!rec.diverged, "{}/{name} diverged", kind.name());
+        }
+        // substrate marker: only wall-clock runs carry a duration
+        assert!(sim.wall.is_none() && wall.wall.is_some(), "{}", kind.name());
+    }
+}
+
+type RunFn = fn(&mut dyn Scheduler, &ComputeModel, u64, u64) -> RunRecord;
+
+#[test]
+fn accounting_invariants_transfer_across_substrates() {
+    let model = ComputeModel::fixed_linear(N);
+
+    // ASGD applies every arrival on both substrates
+    for run in [sim_run as RunFn, wall_run] {
+        let mut s = SchedulerKind::Asgd { gamma: 0.2 }.build();
+        let rec = run(s.as_mut(), &model, 150, 2);
+        assert_eq!(rec.discarded, 0, "{}", rec.scheduler);
+        assert_eq!(rec.applied, rec.iters, "{}", rec.scheduler);
+        assert_eq!(rec.accumulated, 0, "{}", rec.scheduler);
+    }
+
+    // Rennala: exactly B zero-delay gradients per round, cross-round
+    // arrivals dropped — on both substrates, through the one accumulator
+    for run in [sim_run as RunFn, wall_run] {
+        let mut s = SchedulerKind::Rennala { b: 3, gamma: 0.4 }.build();
+        let rec = run(s.as_mut(), &model, 100, 3);
+        assert_eq!(rec.accumulated, 3 * rec.iters, "{}", rec.scheduler);
+        assert!(rec.discarded > 0, "{}: in-flight work must go stale", rec.scheduler);
+    }
+
+    // Buffered ASGD accepts any staleness: batches fill, nothing is dropped
+    for run in [sim_run as RunFn, wall_run] {
+        let mut s = SchedulerKind::Buffered { b: 3, gamma: 0.3 }.build();
+        let rec = run(s.as_mut(), &model, 100, 4);
+        assert_eq!(rec.accumulated, 3 * rec.iters, "{}", rec.scheduler);
+        assert_eq!(rec.discarded, 0, "{}", rec.scheduler);
+    }
+}
+
+/// Wraps a scheduler and records the largest delay whose gradient was
+/// actually consumed (stepped or accumulated) — the quantity Lemma 4.1 /
+/// Theorem 4.1 bound by `R` for Ringmaster ASGD.
+struct DelayProbe<S: Scheduler> {
+    inner: S,
+    max_used_delay: u64,
+}
+
+impl<S: Scheduler> DelayProbe<S> {
+    fn new(inner: S) -> Self {
+        Self {
+            inner,
+            max_used_delay: 0,
+        }
+    }
+}
+
+impl<S: Scheduler> Scheduler for DelayProbe<S> {
+    fn on_arrival(&mut self, worker: usize, delay: u64) -> Decision {
+        let d = self.inner.on_arrival(worker, delay);
+        if !matches!(d, Decision::Discard) {
+            self.max_used_delay = self.max_used_delay.max(delay);
+        }
+        d
+    }
+
+    fn active_workers(&self) -> Option<&[usize]> {
+        self.inner.active_workers()
+    }
+
+    fn cancel_threshold(&self, k: u64) -> Option<u64> {
+        self.inner.cancel_threshold(k)
+    }
+
+    fn reassign_after_arrival(&self) -> bool {
+        self.inner.reassign_after_arrival()
+    }
+
+    fn name(&self) -> String {
+        self.inner.name()
+    }
+}
+
+#[test]
+fn ringmaster_delay_bound_holds_on_both_substrates() {
+    // wider cluster than R so stale work genuinely exists
+    let n = 6;
+    let r = 3u64;
+    let model = ComputeModel::fixed_linear(n);
+    for cancel in [false, true] {
+        for (name, run) in [("sim", sim_run as RunFn), ("wall", wall_run)] {
+            let mut probe = DelayProbe::new(
+                ringmaster::coordinator::RingmasterScheduler::new(r, 0.2, cancel),
+            );
+            let rec = run(&mut probe, &model, 200, 5);
+            assert!(rec.iters > 0, "{name} cancel={cancel}");
+            assert!(
+                probe.max_used_delay < r,
+                "{name} cancel={cancel}: applied delay {} ≥ R={r}",
+                probe.max_used_delay
+            );
+            if cancel {
+                assert!(
+                    rec.cluster.cancellations > 0,
+                    "{name}: Algorithm 5 must stop stale computations (n={n} > R={r})"
+                );
+            } else {
+                assert!(
+                    rec.discarded > 0,
+                    "{name}: Algorithm 4 must discard stale arrivals (n={n} > R={r})"
+                );
+            }
+        }
+    }
+}
+
+#[test]
+fn noise_free_runs_agree_on_counts_and_neighborhood() {
+    // with σ = 0 both substrates apply the same number of exact gradients;
+    // arrival order differs (thread timing), but both must land in the
+    // same small neighbourhood of the optimum
+    let model = ComputeModel::fixed_linear(N);
+    let iters = 300u64;
+
+    let mut d = Driver::new(
+        Noisy::new(QuadraticProblem::paper(D), 0.0),
+        model.clone(),
+        DriverConfig {
+            seed: 1,
+            max_iters: iters,
+            record_every: 50,
+            ..Default::default()
+        },
+    );
+    let mut s1 = SchedulerKind::Asgd { gamma: 0.2 }.build();
+    let sim = d.run(s1.as_mut());
+
+    let problem = QuadraticProblem::paper(D);
+    let mut s2 = SchedulerKind::Asgd { gamma: 0.2 }.build();
+    let wall = run_wallclock(
+        &problem,
+        &model,
+        s2.as_mut(),
+        &ExecConfig {
+            time_scale: 2e-4,
+            max_iters: iters,
+            noise_sigma: 0.0,
+            seed: 1,
+            ..Default::default()
+        },
+    );
+
+    assert_eq!(sim.iters, iters);
+    assert_eq!(wall.iters, iters);
+    assert_eq!(sim.discarded, 0);
+    assert_eq!(wall.discarded, 0);
+    let f0 = sim.gap_curve.v[0];
+    assert!(sim.final_gap < 0.5 * f0);
+    assert!(wall.final_gap < 0.5 * f0);
+}

@@ -7,7 +7,9 @@
 //! * Naive Optimal ASGD matches Ringmaster under the *fixed* model it was
 //!   designed for, but collapses under the §2.2 speed flip.
 //! * Synchronous minibatch pays the straggler tax.
-//! * Wall-clock executor and DES agree on count-level behaviour.
+//!
+//! (Sim vs wall-clock parity through the unified engine lives in
+//! `tests/engine_parity.rs`.)
 //!
 //! Test-scale parameters are chosen so the ill-conditioned §G quadratic
 //! (κ ~ d²) converges within the budget: d = 16 (κ ≈ 115), per-coordinate
@@ -16,9 +18,8 @@
 use ringmaster::complexity;
 use ringmaster::coordinator::SchedulerKind;
 use ringmaster::driver::{Driver, DriverConfig};
-use ringmaster::exec::{run_wallclock, ExecConfig};
 use ringmaster::experiments::{run_quadratic, QuadExpConfig};
-use ringmaster::opt::{Noisy, Problem, QuadraticProblem};
+use ringmaster::opt::{Noisy, QuadraticProblem};
 use ringmaster::sim::{ComputeModel, PowerFn};
 
 const D: usize = 16;
@@ -191,49 +192,3 @@ fn minibatch_slower_than_async_on_stragglers() {
     );
 }
 
-#[test]
-fn wallclock_and_sim_agree_on_dynamics() {
-    // same scheduler + model in both engines: Algorithm-1 ASGD applies
-    // every gradient in both; iterate counts hit the budget in both; and
-    // the wall-clock run converges on the same objective.
-    let d = 8;
-    let problem = QuadraticProblem::paper(d);
-    let model = ComputeModel::fixed_linear(4);
-    let iters = 300u64;
-
-    let mut sim_driver = Driver::new(
-        Noisy::new(QuadraticProblem::paper(d), 0.0),
-        model.clone(),
-        DriverConfig {
-            seed: 1,
-            max_iters: iters,
-            record_every: 50,
-            ..Default::default()
-        },
-    );
-    let mut s1 = SchedulerKind::Asgd { gamma: 0.2 }.build();
-    let sim_rec = sim_driver.run(s1.as_mut());
-
-    let mut s2 = SchedulerKind::Asgd { gamma: 0.2 }.build();
-    let wall_rec = run_wallclock(
-        &problem,
-        &model,
-        s2.as_mut(),
-        &ExecConfig {
-            time_scale: 2e-4,
-            max_iters: iters,
-            noise_sigma: 0.0,
-            seed: 1,
-            ..Default::default()
-        },
-    );
-    assert_eq!(sim_rec.iters, iters);
-    assert_eq!(wall_rec.iters, iters);
-    assert_eq!(sim_rec.discarded, 0);
-    assert_eq!(wall_rec.discarded, 0);
-    // both descend to a similar neighbourhood (not bitwise — thread timing
-    // reorders arrivals — but same count of applied noise-free gradients)
-    let f0 = problem.value(&problem.init_point()) - problem.f_star().unwrap();
-    assert!(sim_rec.final_gap < 0.5 * f0);
-    assert!(wall_rec.final_value - problem.f_star().unwrap() < 0.5 * f0);
-}

@@ -8,6 +8,8 @@
 //! classification task on 784-dim inputs where a small ReLU MLP separates
 //! classes at high accuracy after a few hundred SGD steps — is preserved.
 
+pub mod partition;
+
 use crate::prng::Prng;
 
 pub const IMG_SIDE: usize = 28;
@@ -60,6 +62,28 @@ impl Dataset {
         yb.fill(0.0);
         for j in 0..b {
             let i = rng.usize_below(self.len());
+            xb[j * IMG_PIXELS..(j + 1) * IMG_PIXELS].copy_from_slice(self.image(i));
+            yb[j * N_CLASSES + self.labels[i] as usize] = 1.0;
+        }
+    }
+
+    /// Sample a batch of `b` examples drawn uniformly from the index
+    /// `pool` (a worker's shard) into caller buffers — the heterogeneous
+    /// counterpart of [`Dataset::sample_batch`].
+    pub fn sample_batch_from(
+        &self,
+        pool: &[u32],
+        b: usize,
+        rng: &mut Prng,
+        xb: &mut [f32],
+        yb: &mut [f32],
+    ) {
+        debug_assert!(!pool.is_empty());
+        debug_assert_eq!(xb.len(), b * IMG_PIXELS);
+        debug_assert_eq!(yb.len(), b * N_CLASSES);
+        yb.fill(0.0);
+        for j in 0..b {
+            let i = pool[rng.usize_below(pool.len())] as usize;
             xb[j * IMG_PIXELS..(j + 1) * IMG_PIXELS].copy_from_slice(self.image(i));
             yb[j * N_CLASSES + self.labels[i] as usize] = 1.0;
         }

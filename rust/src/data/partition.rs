@@ -1,0 +1,355 @@
+//! Per-worker data partitioners — the non-IID substrate.
+//!
+//! The paper's optimal-time-complexity claim assumes homogeneous data;
+//! Ringleader ASGD (Maranjyan & Richtárik 2025) shows the interesting
+//! regime is *data heterogeneity*, each worker sampling its own shard.
+//! This module turns a labelled dataset into per-worker shards under three
+//! regimes:
+//!
+//! * [`iid`] — shuffle and deal round-robin (the α = ∞ limit);
+//! * [`label_skew`] — per class, split the class's samples across workers
+//!   by proportions drawn from a `Dirichlet(α)`; small α concentrates each
+//!   class on few workers (the standard federated-learning skew knob);
+//! * [`quantity_skew`] — shard *sizes* drawn log-normally, contents IID.
+//!
+//! All partitioners are deterministic per seed, and every partition is a
+//! disjoint cover of `0..n` with no empty shard (rebalanced from the
+//! largest shard when a draw leaves one empty).
+
+use crate::prng::Prng;
+
+/// A disjoint cover of sample indices `0..n` by `n_shards` shards, shard
+/// `w` belonging to worker `w`.
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub struct Partition {
+    pub shards: Vec<Vec<u32>>,
+}
+
+impl Partition {
+    pub fn n_shards(&self) -> usize {
+        self.shards.len()
+    }
+
+    /// Total number of samples across all shards.
+    pub fn coverage(&self) -> usize {
+        self.shards.iter().map(|s| s.len()).sum()
+    }
+
+    pub fn shard_sizes(&self) -> Vec<usize> {
+        self.shards.iter().map(|s| s.len()).collect()
+    }
+
+    /// `true` iff the shards are pairwise disjoint and exactly cover
+    /// `0..n`.
+    pub fn is_disjoint_cover(&self, n: usize) -> bool {
+        let mut seen = vec![false; n];
+        for shard in &self.shards {
+            for &i in shard {
+                let i = i as usize;
+                if i >= n || seen[i] {
+                    return false;
+                }
+                seen[i] = true;
+            }
+        }
+        seen.iter().all(|&s| s)
+    }
+
+    /// Mean over shards of the largest single-class fraction — 1/C for a
+    /// perfectly balanced partition of C classes, → 1 as each shard
+    /// collapses onto one class. The monotone observable of Dirichlet-α
+    /// skew (lower α ⇒ higher concentration).
+    pub fn label_concentration(&self, labels: &[u8], n_classes: usize) -> f64 {
+        let mut total = 0.0;
+        let mut shards_counted = 0usize;
+        for shard in &self.shards {
+            if shard.is_empty() {
+                continue;
+            }
+            let mut counts = vec![0usize; n_classes];
+            for &i in shard {
+                counts[labels[i as usize] as usize] += 1;
+            }
+            let max = counts.iter().copied().max().unwrap_or(0);
+            total += max as f64 / shard.len() as f64;
+            shards_counted += 1;
+        }
+        if shards_counted == 0 {
+            0.0
+        } else {
+            total / shards_counted as f64
+        }
+    }
+}
+
+/// Shuffle `0..n` and deal round-robin: the homogeneous baseline (α = ∞).
+pub fn iid(n: usize, n_shards: usize, seed: u64) -> Partition {
+    assert!(n_shards > 0 && n >= n_shards, "need ≥ one sample per shard");
+    let mut idx: Vec<u32> = (0..n as u32).collect();
+    Prng::seed_from_u64(seed ^ 0x1D_5EED).shuffle(&mut idx);
+    let mut shards = vec![Vec::with_capacity(n / n_shards + 1); n_shards];
+    for (j, i) in idx.into_iter().enumerate() {
+        shards[j % n_shards].push(i);
+    }
+    Partition { shards }
+}
+
+/// Dirichlet-α label skew: for every class, draw worker proportions
+/// `p ~ Dirichlet(α, …, α)` and split that class's samples accordingly.
+/// `α = ∞` (or any non-finite α) degenerates to [`iid`].
+pub fn label_skew(
+    labels: &[u8],
+    n_classes: usize,
+    n_shards: usize,
+    alpha: f64,
+    seed: u64,
+) -> Partition {
+    let n = labels.len();
+    assert!(n_shards > 0 && n >= n_shards, "need ≥ one sample per shard");
+    if !alpha.is_finite() {
+        return iid(n, n_shards, seed);
+    }
+    assert!(alpha > 0.0, "Dirichlet α must be positive");
+    let mut rng = Prng::seed_from_u64(seed ^ 0xD1_81C4);
+    // class → its sample indices, shuffled so the within-class split is
+    // not order-correlated with generation
+    let mut by_class: Vec<Vec<u32>> = vec![Vec::new(); n_classes];
+    for (i, &l) in labels.iter().enumerate() {
+        by_class[l as usize].push(i as u32);
+    }
+    let mut shards: Vec<Vec<u32>> = vec![Vec::new(); n_shards];
+    for class_idx in by_class.iter_mut() {
+        if class_idx.is_empty() {
+            continue;
+        }
+        rng.shuffle(class_idx);
+        let p = dirichlet(&mut rng, alpha, n_shards);
+        // cumulative-proportion split (largest-remainder-free: cut points
+        // from the running sum keep the counts within ±1 of exact)
+        let m = class_idx.len();
+        let mut cum = 0.0;
+        let mut start = 0usize;
+        for (w, &pw) in p.iter().enumerate() {
+            cum += pw;
+            let end = if w + 1 == n_shards {
+                m
+            } else {
+                (cum * m as f64).round().min(m as f64) as usize
+            };
+            shards[w].extend_from_slice(&class_idx[start..end.max(start)]);
+            start = end.max(start);
+        }
+    }
+    rebalance_empty(&mut shards, &mut rng);
+    Partition { shards }
+}
+
+/// Quantity skew: shard sizes proportional to `LogNormal(0, sigma²)`
+/// weights (each shard keeps at least one sample), contents IID.
+pub fn quantity_skew(n: usize, n_shards: usize, sigma: f64, seed: u64) -> Partition {
+    assert!(n_shards > 0 && n >= n_shards, "need ≥ one sample per shard");
+    assert!(sigma >= 0.0);
+    let mut rng = Prng::seed_from_u64(seed ^ 0x0DD_512E);
+    let weights: Vec<f64> = (0..n_shards).map(|_| rng.lognormal(0.0, sigma)).collect();
+    let wsum: f64 = weights.iter().sum();
+    // one guaranteed sample per shard; distribute the rest by weight
+    let spare = n - n_shards;
+    let mut sizes: Vec<usize> = weights
+        .iter()
+        .map(|w| 1 + (w / wsum * spare as f64).floor() as usize)
+        .collect();
+    let mut assigned: usize = sizes.iter().sum();
+    // hand leftovers (flooring residue) to the heaviest shards first
+    let mut order: Vec<usize> = (0..n_shards).collect();
+    order.sort_by(|&a, &b| weights[b].partial_cmp(&weights[a]).unwrap());
+    let mut oi = 0;
+    while assigned < n {
+        sizes[order[oi % n_shards]] += 1;
+        assigned += 1;
+        oi += 1;
+    }
+    let mut idx: Vec<u32> = (0..n as u32).collect();
+    rng.shuffle(&mut idx);
+    let mut shards = Vec::with_capacity(n_shards);
+    let mut start = 0usize;
+    for &sz in &sizes {
+        shards.push(idx[start..start + sz].to_vec());
+        start += sz;
+    }
+    Partition { shards }
+}
+
+/// Move one sample from the largest shard into each empty shard so every
+/// worker can draw (extreme Dirichlet draws can starve a shard).
+fn rebalance_empty(shards: &mut [Vec<u32>], rng: &mut Prng) {
+    loop {
+        let Some(empty) = shards.iter().position(|s| s.is_empty()) else {
+            return;
+        };
+        let donor = (0..shards.len())
+            .max_by_key(|&w| shards[w].len())
+            .expect("at least one shard");
+        assert!(shards[donor].len() > 1, "not enough samples to cover shards");
+        let take = rng.usize_below(shards[donor].len());
+        let sample = shards[donor].swap_remove(take);
+        shards[empty].push(sample);
+    }
+}
+
+/// `Dirichlet(α, …, α)` over `k` coordinates via normalized Gamma draws.
+fn dirichlet(rng: &mut Prng, alpha: f64, k: usize) -> Vec<f64> {
+    let mut g: Vec<f64> = (0..k).map(|_| gamma(rng, alpha)).collect();
+    let s: f64 = g.iter().sum();
+    if s <= 0.0 || !s.is_finite() {
+        // pathological underflow (tiny α): fall back to a one-hot draw,
+        // which is the α → 0 limit anyway
+        let hot = rng.usize_below(k);
+        g.iter_mut().for_each(|v| *v = 0.0);
+        g[hot] = 1.0;
+        return g;
+    }
+    g.iter_mut().for_each(|v| *v /= s);
+    g
+}
+
+/// `Gamma(α, 1)` — Marsaglia–Tsang squeeze, with the `U^{1/α}` boost for
+/// `α < 1`.
+fn gamma(rng: &mut Prng, alpha: f64) -> f64 {
+    debug_assert!(alpha > 0.0);
+    if alpha < 1.0 {
+        let u = rng.f64().max(f64::MIN_POSITIVE);
+        return gamma(rng, alpha + 1.0) * u.powf(1.0 / alpha);
+    }
+    let d = alpha - 1.0 / 3.0;
+    let c = 1.0 / (9.0 * d).sqrt();
+    loop {
+        let x = rng.gaussian();
+        let v = 1.0 + c * x;
+        if v <= 0.0 {
+            continue;
+        }
+        let v3 = v * v * v;
+        let u = rng.f64();
+        if u < 1.0 - 0.0331 * (x * x) * (x * x) {
+            return d * v3;
+        }
+        if u > 0.0 && u.ln() < 0.5 * x * x + d * (1.0 - v3 + v3.ln()) {
+            return d * v3;
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::data::{synthetic_mnist, N_CLASSES};
+
+    #[test]
+    fn iid_is_disjoint_cover_and_balanced() {
+        let p = iid(103, 8, 1);
+        assert_eq!(p.n_shards(), 8);
+        assert!(p.is_disjoint_cover(103));
+        let sizes = p.shard_sizes();
+        assert!(sizes.iter().all(|&s| s == 12 || s == 13), "{sizes:?}");
+    }
+
+    #[test]
+    fn partitioners_are_deterministic_per_seed() {
+        let ds = synthetic_mnist(200, 0.1, 3);
+        for (a, b, c) in [
+            (iid(200, 6, 4), iid(200, 6, 4), iid(200, 6, 5)),
+            (
+                label_skew(&ds.labels, N_CLASSES, 6, 0.3, 4),
+                label_skew(&ds.labels, N_CLASSES, 6, 0.3, 4),
+                label_skew(&ds.labels, N_CLASSES, 6, 0.3, 5),
+            ),
+            (
+                quantity_skew(200, 6, 1.5, 4),
+                quantity_skew(200, 6, 1.5, 4),
+                quantity_skew(200, 6, 1.5, 5),
+            ),
+        ] {
+            assert_eq!(a, b, "same seed ⇒ same partition");
+            assert_ne!(a, c, "different seed ⇒ different partition");
+        }
+    }
+
+    #[test]
+    fn label_skew_is_disjoint_cover_without_empty_shards() {
+        let ds = synthetic_mnist(300, 0.1, 7);
+        for alpha in [0.05, 0.5, 5.0, f64::INFINITY] {
+            for seed in 0..5 {
+                let p = label_skew(&ds.labels, N_CLASSES, 10, alpha, seed);
+                assert!(p.is_disjoint_cover(300), "α={alpha} seed={seed}");
+                assert!(
+                    p.shards.iter().all(|s| !s.is_empty()),
+                    "α={alpha} seed={seed}: empty shard"
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn dirichlet_skew_is_monotone_in_alpha() {
+        // lower α ⇒ each shard dominated by fewer classes ⇒ higher mean
+        // max-class fraction. Averaged over seeds for robustness.
+        let ds = synthetic_mnist(400, 0.1, 11);
+        let conc = |alpha: f64| -> f64 {
+            (0..6)
+                .map(|seed| {
+                    label_skew(&ds.labels, N_CLASSES, 8, alpha, seed)
+                        .label_concentration(&ds.labels, N_CLASSES)
+                })
+                .sum::<f64>()
+                / 6.0
+        };
+        let lo = conc(0.05);
+        let mid = conc(1.0);
+        let hi = conc(100.0);
+        assert!(
+            lo > mid + 0.05 && mid > hi - 0.02,
+            "concentration not monotone: α=0.05 → {lo:.3}, α=1 → {mid:.3}, α=100 → {hi:.3}"
+        );
+        // extremes bracket the theoretical limits: 1/C ≤ conc ≤ 1
+        assert!(hi >= 1.0 / N_CLASSES as f64 - 1e-9 && lo <= 1.0 + 1e-9);
+        assert!(lo > 0.5, "α=0.05 should be near single-class shards, got {lo}");
+    }
+
+    #[test]
+    fn infinite_alpha_matches_iid() {
+        let ds = synthetic_mnist(120, 0.1, 2);
+        let a = label_skew(&ds.labels, N_CLASSES, 4, f64::INFINITY, 9);
+        let b = iid(120, 4, 9);
+        assert_eq!(a, b);
+    }
+
+    #[test]
+    fn quantity_skew_covers_and_skews() {
+        let p = quantity_skew(500, 10, 2.0, 3);
+        assert!(p.is_disjoint_cover(500));
+        assert!(p.shards.iter().all(|s| !s.is_empty()));
+        let sizes = p.shard_sizes();
+        let (min, max) = (
+            *sizes.iter().min().unwrap(),
+            *sizes.iter().max().unwrap(),
+        );
+        assert!(max >= 3 * min, "σ=2 lognormal should spread sizes: {sizes:?}");
+        // σ = 0 degenerates to near-equal sizes
+        let even = quantity_skew(500, 10, 0.0, 3);
+        let es = even.shard_sizes();
+        assert!(es.iter().all(|&s| s == 50), "{es:?}");
+    }
+
+    #[test]
+    fn gamma_sampler_has_right_mean() {
+        let mut rng = Prng::seed_from_u64(21);
+        for alpha in [0.2, 0.7, 1.0, 2.5, 9.0] {
+            let n = 40_000;
+            let mean: f64 = (0..n).map(|_| gamma(&mut rng, alpha)).sum::<f64>() / n as f64;
+            assert!(
+                (mean - alpha).abs() < 0.12 * alpha.max(0.5),
+                "Gamma({alpha}) empirical mean {mean}"
+            );
+        }
+    }
+}

@@ -14,6 +14,15 @@
 //!   (one OS thread per worker over an mpsc channel, wall clock, atomic
 //!   generation-based cancellation — Algorithm 5's calculation stops as
 //!   real concurrency).
+//! * **Worker data identity** — every delivery carries the worker that
+//!   produced it, and both sources route that identity into the gradient
+//!   draw ([`crate::opt::WorkerCtx`]): the simulator through
+//!   `StochasticProblem::stoch_grad` at materialization, the thread pool
+//!   through each worker thread's own [`GradSampler`] (its shard view for
+//!   heterogeneous runs). Draw randomness is keyed per assignment
+//!   ([`crate::prng::Prng::assignment_stream`]), so the two substrates
+//!   produce identical draws — and, in [`ThreadPoolConfig::deterministic`]
+//!   mode, bit-identical runs.
 //! * [`run`] — the authoritative server loop: applies [`Decision`]s
 //!   through [`ServerOptState`], owns the batch accumulator
 //!   (Rennala/Minibatch/Buffered), Algorithm 5 cancellation, reassignment,
@@ -33,7 +42,9 @@ mod thread_source;
 
 pub use server_opt::{ServerOpt, ServerOptState};
 pub use sim_source::SimSource;
-pub use thread_source::{ThreadPoolConfig, ThreadSource, WallclockEval};
+pub use thread_source::{
+    GradSampler, NoisySampler, ShardSampler, ThreadPoolConfig, ThreadSource, WallclockEval,
+};
 
 use std::sync::Arc;
 use std::time::Duration;
@@ -108,6 +119,10 @@ pub struct RunRecord {
     pub applied: u64,
     pub accumulated: u64,
     pub discarded: u64,
+    /// Per-worker count of *consumed* deliveries (stepped or accumulated)
+    /// — under data sharding this is exactly the shard-hit accounting, and
+    /// it is substrate-invariant for deterministic runs.
+    pub worker_hits: Vec<u64>,
     pub cluster: ClusterStats,
     /// Timestamps of iterate updates (when `record_update_times`).
     pub update_times: Vec<f64>,
@@ -176,7 +191,10 @@ pub trait GradientSource<P: StochasticProblem + ?Sized> {
 
     /// Write the delivered stochastic gradient into `out`. Only called when
     /// the scheduler's decision consumes it — a `Discard` skips the O(d)
-    /// work entirely on the simulator.
+    /// work entirely on the simulator. Skipping is sound because every
+    /// assignment draws from its own keyed stream
+    /// ([`crate::prng::Prng::assignment_stream`]): an unmaterialized
+    /// delivery cannot shift any later assignment's draws.
     fn materialize(&mut self, problem: &mut P, delivery: &Delivery, out: &mut [f64]);
 
     /// Source time the worker's current (or just-delivered) assignment
@@ -242,21 +260,39 @@ where
     let mut applied = 0u64;
     let mut accumulated = 0u64;
     let mut discarded = 0u64;
+    let mut worker_hits = vec![0u64; n];
     let mut time_to_eps: Option<f64> = None;
 
+    // reusable evaluation scratch — `record` runs every `record_every`
+    // updates, so a fresh O(d) allocation per record would be hot-path
+    // garbage on long runs
+    let mut eval_scratch = vec![0.0; dim];
+    fn record<P: StochasticProblem + ?Sized>(
+        x: &[f64],
+        t: f64,
+        problem: &mut P,
+        f_star: Option<f64>,
+        scratch: &mut [f64],
+        gap_c: &mut Curve,
+        gn_c: &mut Curve,
+    ) -> (f64, f64) {
+        let v = problem.eval_value_grad(x, scratch);
+        let gap = f_star.map(|fs| v - fs).unwrap_or(v);
+        let gn = nrm2_sq(scratch);
+        gap_c.push_always(t, gap);
+        gn_c.push_always(t, gn);
+        (gap, gn)
+    }
     // initial record at t = 0
-    let record =
-        |x: &[f64], t: f64, problem: &mut P, gap_c: &mut Curve, gn_c: &mut Curve| -> (f64, f64) {
-            let mut g = vec![0.0; x.len()];
-            let v = problem.eval_value_grad(x, &mut g);
-            let gap = f_star.map(|fs| v - fs).unwrap_or(v);
-            let gn = nrm2_sq(&g);
-            gap_c.push_always(t, gap);
-            gn_c.push_always(t, gn);
-            (gap, gn)
-        };
-    let (mut last_gap, mut last_gn) =
-        record(&x, 0.0, &mut *problem, &mut gap_curve, &mut gradnorm_curve);
+    let (mut last_gap, mut last_gn) = record(
+        &x,
+        0.0,
+        &mut *problem,
+        f_star,
+        &mut eval_scratch,
+        &mut gap_curve,
+        &mut gradnorm_curve,
+    );
 
     // initial assignments: active subset or everyone, at x^0
     let active: Vec<usize> = match sched.active_workers() {
@@ -301,6 +337,7 @@ where
         // Discard skips the O(d) work entirely (on the simulator)
         if !matches!(decision, Decision::Discard) {
             source.materialize(&mut *problem, &arrival, &mut grad_buf);
+            worker_hits[worker] += 1;
         }
         match decision {
             Decision::Step { gamma } => {
@@ -394,6 +431,8 @@ where
                     &x,
                     arrival.time,
                     &mut *problem,
+                    f_star,
+                    &mut eval_scratch,
                     &mut gap_curve,
                     &mut gradnorm_curve,
                 );
@@ -418,10 +457,20 @@ where
         }
     }
 
-    // final evaluation
-    let final_t = source.now();
-    let (final_gap, final_gn) =
-        record(&x, final_t, &mut *problem, &mut gap_curve, &mut gradnorm_curve);
+    // final evaluation — a delivery past `max_time` breaks the loop with
+    // `source.now()` beyond the budget, so clamp the final record to the
+    // configured horizon (curves stay monotone: every in-loop record
+    // happened at an arrival time ≤ max_time)
+    let final_t = source.now().min(cfg.max_time);
+    let (final_gap, final_gn) = record(
+        &x,
+        final_t,
+        &mut *problem,
+        f_star,
+        &mut eval_scratch,
+        &mut gap_curve,
+        &mut gradnorm_curve,
+    );
     if time_to_eps.is_none() {
         if let Some(eps) = cfg.eps {
             if final_gn <= eps {
@@ -441,6 +490,7 @@ where
         applied,
         accumulated,
         discarded,
+        worker_hits,
         cluster: source.stats(),
         update_times,
         trace,
@@ -469,6 +519,7 @@ mod tests {
             applied: 4,
             accumulated: 0,
             discarded: 0,
+            worker_hits: vec![],
             cluster: ClusterStats::default(),
             update_times: vec![1.0, 2.0, 7.0, 8.0],
             trace: None,
@@ -483,5 +534,83 @@ mod tests {
         assert_eq!(rec.max_window_time(2), Some(6.0));
         assert_eq!(rec.max_window_time(4), Some(8.0));
         assert_eq!(rec.max_window_time(5), None);
+    }
+
+    #[test]
+    fn final_record_is_clamped_to_max_time() {
+        // τ = 1,2,3,4: arrivals land on a lattice, so some delivery is
+        // guaranteed to overshoot a fractional budget — the final record
+        // must still be stamped inside it
+        use crate::coordinator::SchedulerKind;
+        use crate::driver::Driver;
+        use crate::opt::{Noisy, QuadraticProblem};
+        use crate::sim::ComputeModel;
+        let budget = 7.5;
+        let mut d = Driver::new(
+            Noisy::new(QuadraticProblem::paper(8), 0.001),
+            ComputeModel::fixed_linear(4),
+            DriverConfig {
+                seed: 2,
+                max_time: budget,
+                max_iters: 1_000_000,
+                record_every: 1,
+                ..Default::default()
+            },
+        );
+        let mut s = SchedulerKind::Asgd { gamma: 0.1 }.build();
+        let rec = d.run(s.as_mut());
+        assert!(rec.iters > 0, "budget admits work");
+        assert!(
+            rec.sim_time <= budget + 1e-12,
+            "sim_time {} exceeds max_time {budget}",
+            rec.sim_time
+        );
+        for curve in [&rec.gap_curve, &rec.gradnorm_curve] {
+            assert!(
+                curve.t.iter().all(|&t| t <= budget + 1e-12),
+                "record stamped past the budget: {:?}",
+                curve.t.last()
+            );
+            // timestamps stay monotone after the clamp
+            assert!(curve.t.windows(2).all(|w| w[0] <= w[1]));
+        }
+    }
+
+    #[test]
+    fn worker_hits_account_for_every_consumed_delivery() {
+        use crate::coordinator::SchedulerKind;
+        use crate::driver::Driver;
+        use crate::opt::{Noisy, QuadraticProblem};
+        use crate::sim::ComputeModel;
+        for kind in [
+            SchedulerKind::Ringmaster { r: 2, gamma: 0.2, cancel: false },
+            SchedulerKind::Rennala { b: 3, gamma: 0.3 },
+            SchedulerKind::Asgd { gamma: 0.1 },
+        ] {
+            let mut d = Driver::new(
+                Noisy::new(QuadraticProblem::paper(8), 0.001),
+                ComputeModel::fixed_linear(6),
+                DriverConfig {
+                    seed: 3,
+                    max_iters: 500,
+                    record_every: 100,
+                    ..Default::default()
+                },
+            );
+            let mut s = kind.build();
+            let rec = d.run(s.as_mut());
+            assert_eq!(rec.worker_hits.len(), 6);
+            assert_eq!(
+                rec.worker_hits.iter().sum::<u64>(),
+                rec.applied + rec.accumulated,
+                "{}: hits must equal consumed deliveries",
+                rec.scheduler
+            );
+            assert!(
+                rec.worker_hits.iter().any(|&h| h > 0),
+                "{}: someone must have delivered",
+                rec.scheduler
+            );
+        }
     }
 }

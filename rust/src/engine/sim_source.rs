@@ -2,14 +2,18 @@
 //!
 //! A thin adapter over [`Cluster`]: deliveries are simulated-time arrivals,
 //! and gradients follow the lazy protocol — the assignment stores only an
-//! `Arc` snapshot of the iterate, and the stochastic gradient is drawn from
-//! the worker's private RNG stream *at delivery*, so work cancelled by
-//! Algorithm 5 costs O(1) instead of O(d).
+//! `Arc` snapshot of the iterate, and the stochastic gradient is drawn
+//! *at delivery* from the assignment's private stream
+//! ([`crate::prng::Prng::assignment_stream`], keyed by worker identity and
+//! assignment ordinal), so work cancelled by Algorithm 5 costs O(1)
+//! instead of O(d) and cancelled/discarded assignments cannot shift any
+//! later assignment's draws.
 
 use std::sync::Arc;
 
 use super::{Delivery, GradientSource};
-use crate::opt::StochasticProblem;
+use crate::opt::{StochasticProblem, WorkerCtx};
+use crate::prng::Prng;
 use crate::sim::{Cluster, ClusterStats, ComputeModel};
 
 /// Simulated-clock gradient source.
@@ -59,11 +63,26 @@ impl<P: StochasticProblem + ?Sized> GradientSource<P> for SimSource {
     }
 
     fn materialize(&mut self, problem: &mut P, delivery: &Delivery, out: &mut [f64]) {
-        // sample draws come from the worker's private stream so runs are
-        // reproducible regardless of delivery interleavings
+        // sample draws come from the delivered assignment's private
+        // stream, keyed by (run seed, worker, assignment ordinal): the
+        // wall-clock substrate derives the identical stream on its worker
+        // threads, so sharded/noisy draws agree bit-for-bit across
+        // substrates, and skipping materialization (Discard) or
+        // cancelling an assignment cannot shift any later draw
         let point = self.cluster.point(delivery.worker).clone();
-        let rng = self.cluster.worker_rng(delivery.worker);
-        problem.stoch_grad(&point, rng, out);
+        let mut rng = Prng::assignment_stream(
+            self.cluster.data_seed(),
+            delivery.worker as u64,
+            self.cluster.assign_ordinal(delivery.worker),
+        );
+        problem.stoch_grad(
+            &point,
+            WorkerCtx {
+                worker: delivery.worker,
+                rng: &mut rng,
+            },
+            out,
+        );
     }
 
     fn assign_time(&self, worker: usize) -> f64 {

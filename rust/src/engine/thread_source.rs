@@ -5,9 +5,33 @@
 //! 5's calculation stops implemented with atomic assignment generations: a
 //! worker whose generation moved on while it slept discards the assignment
 //! *before* computing the gradient — the honest analogue of killing the
-//! computation, and the same per-worker RNG stream shape as the simulator
-//! (duration draw at assignment; gradient noise only if the computation
-//! survives to delivery).
+//! computation.
+//!
+//! ## Worker identity and randomness
+//!
+//! Each worker thread owns a [`GradSampler`] — its view of the data. For
+//! homogeneous problems that is [`NoisySampler`] (exact gradient plus §G
+//! Gaussian noise); for heterogeneous runs it is [`ShardSampler`], which
+//! owns the worker's shard of a finite-sum problem, so non-IID sampling
+//! happens with *real* concurrency on the worker's own thread. Timing
+//! draws come from the worker's sequential stream (same layout as
+//! [`crate::sim::Cluster`]); gradient draws come from the assignment's
+//! private stream ([`crate::prng::Prng::assignment_stream`]) — exactly the
+//! streams the simulator uses, which is what makes cross-substrate parity
+//! possible at all.
+//!
+//! ## Deterministic mode
+//!
+//! With [`ThreadPoolConfig::deterministic`] set, deliveries are released
+//! in **virtual-time order** using a conservative discrete-event protocol:
+//! each assignment carries its virtual start time, the worker reports its
+//! virtual completion time `vt = vt_start + duration`, and the server only
+//! delivers the earliest pending `vt` once every busy worker has reported
+//! (ties broken by assignment sequence, mirroring the simulator's event
+//! queue). Workers still compute concurrently on real threads — only the
+//! *release order* is serialized — and the resulting run is bit-identical
+//! to [`super::SimSource`] with the same seed (`tests/engine_parity.rs`
+//! asserts this for sharded Ringmaster/Rennala runs).
 //!
 //! Unlike [`super::SimSource`], the gradient cannot be materialized lazily
 //! by the server — the whole point is that workers compute concurrently —
@@ -21,7 +45,7 @@ use std::thread;
 use std::time::{Duration, Instant};
 
 use super::{Delivery, GradientSource};
-use crate::opt::{Problem, StochasticProblem};
+use crate::opt::{shard_draw, Problem, SampleProblem, StochasticProblem, WorkerCtx};
 use crate::prng::Prng;
 use crate::sim::{ClusterStats, ComputeModel};
 
@@ -34,8 +58,14 @@ pub struct ThreadPoolConfig {
     /// Hard wall-clock cap; `next_delivery` returns `None` past it.
     pub max_wall: Duration,
     pub seed: u64,
-    /// Per-coordinate gradient noise (the §G `ξ`).
+    /// Per-coordinate gradient noise (the §G `ξ`) for [`NoisySampler`]
+    /// pools built via [`ThreadSource::spawn`].
     pub noise_sigma: f64,
+    /// Release deliveries in virtual-time order (conservative protocol)
+    /// instead of raw wall-clock arrival order. Makes runs bit-identical
+    /// to the simulator at the cost of serializing delivery *release*
+    /// (worker computation still overlaps).
+    pub deterministic: bool,
 }
 
 impl Default for ThreadPoolConfig {
@@ -45,25 +75,81 @@ impl Default for ThreadPoolConfig {
             max_wall: Duration::from_secs(30),
             seed: 0,
             noise_sigma: 0.0,
+            deterministic: false,
         }
     }
 }
 
-/// An assignment handed to a worker thread: (start_k, generation, snapshot).
-type Assignment = (u64, u64, Arc<Vec<f64>>);
+/// A worker thread's private gradient oracle: how *this* worker turns a
+/// parameter snapshot into a stochastic gradient.
+///
+/// Implementations must draw only from the provided assignment stream so
+/// the draw is reproducible on the simulator substrate.
+pub trait GradSampler: Send {
+    fn sample(&mut self, x: &[f64], rng: &mut Prng, out: &mut [f64]);
+}
+
+/// Homogeneous sampler: exact gradient + i.i.d. Gaussian noise — the
+/// thread-substrate twin of [`crate::opt::Noisy`] (draw-for-draw
+/// identical).
+pub struct NoisySampler<'a, P: Problem + ?Sized> {
+    pub problem: &'a P,
+    pub noise_sigma: f64,
+}
+
+impl<'a, P: Problem + Sync + ?Sized> GradSampler for NoisySampler<'a, P> {
+    fn sample(&mut self, x: &[f64], rng: &mut Prng, out: &mut [f64]) {
+        let _ = self.problem.value_grad(x, out);
+        if self.noise_sigma > 0.0 {
+            for g in out.iter_mut() {
+                *g += rng.normal(0.0, self.noise_sigma);
+            }
+        }
+    }
+}
+
+/// Heterogeneous sampler: this worker's shard of a finite-sum problem.
+/// The draw is [`crate::opt::shard_draw`] — the same code path
+/// [`crate::opt::Sharded`] runs on the simulator substrate.
+pub struct ShardSampler<'a, P: SampleProblem + ?Sized> {
+    pub problem: &'a P,
+    /// The sample indices this worker owns.
+    pub shard: Vec<u32>,
+    pub batch: usize,
+}
+
+impl<'a, P: SampleProblem + Sync + ?Sized> GradSampler for ShardSampler<'a, P> {
+    fn sample(&mut self, x: &[f64], rng: &mut Prng, out: &mut [f64]) {
+        shard_draw(self.problem, &self.shard, self.batch, x, rng, out);
+    }
+}
+
+/// An assignment handed to a worker thread.
+struct Assignment {
+    start_k: u64,
+    gen: u64,
+    point: Arc<Vec<f64>>,
+    /// Virtual start time (used in deterministic mode and by
+    /// time-dependent compute models).
+    vt_start: f64,
+}
 
 struct WorkerMsg {
     worker: usize,
     start_k: u64,
     gen: u64,
+    /// Virtual completion time `vt_start + duration`.
+    vt: f64,
     grad: Vec<f64>,
 }
 
 /// Wall-clock gradient source over a scoped thread pool.
 ///
-/// Construct with [`ThreadSource::spawn`] inside a [`std::thread::scope`],
-/// run the engine, then call [`ThreadSource::shutdown`] before the scope
-/// closes so worker threads unblock and join.
+/// Construct with [`ThreadSource::spawn`] (homogeneous) or
+/// [`ThreadSource::spawn_with`] (arbitrary per-worker samplers) inside a
+/// [`std::thread::scope`], run the engine, then call
+/// [`ThreadSource::shutdown`] before the scope closes so worker threads
+/// unblock and join.
 pub struct ThreadSource {
     mailboxes: Vec<mpsc::Sender<Assignment>>,
     rx: mpsc::Receiver<WorkerMsg>,
@@ -79,15 +165,22 @@ pub struct ThreadSource {
     stats: ClusterStats,
     /// Gradient of the most recent valid delivery, awaiting `materialize`.
     pending: Vec<f64>,
+    // --- deterministic (virtual-time) mode state ---
+    deterministic: bool,
+    /// Virtual clock: vt of the last released delivery.
+    vnow: f64,
+    /// Global assignment sequence — the tie-breaker among equal vts,
+    /// mirroring the simulator's event-queue insertion order.
+    assign_seq: u64,
+    /// Per-worker sequence number of the current assignment.
+    seqs: Vec<u64>,
+    /// Per-worker buffered (not yet released) completion messages.
+    buffered: Vec<Option<WorkerMsg>>,
 }
 
 impl ThreadSource {
-    /// Spawn one worker thread per active worker inside `scope`.
-    ///
-    /// The problem must be `Sync` (workers evaluate gradients
-    /// concurrently); each assignment carries an `Arc` snapshot of the
-    /// iterate, matching Algorithms 1/4/5 where a worker computes at the
-    /// point it was handed.
+    /// Spawn a homogeneous pool: every worker computes exact gradients of
+    /// `problem` plus `cfg.noise_sigma` Gaussian noise (the §G setup).
     pub fn spawn<'scope, 'env, P: Problem + Sync>(
         scope: &'scope thread::Scope<'scope, 'env>,
         problem: &'env P,
@@ -95,7 +188,34 @@ impl ThreadSource {
         active: &[usize],
         cfg: &ThreadPoolConfig,
     ) -> ThreadSource {
+        let samplers: Vec<NoisySampler<'env, P>> = (0..model.n_workers())
+            .map(|_| NoisySampler {
+                problem,
+                noise_sigma: cfg.noise_sigma,
+            })
+            .collect();
+        Self::spawn_with(scope, samplers, model, active, cfg)
+    }
+
+    /// Spawn one worker thread per active worker inside `scope`, each
+    /// owning its entry of `samplers` (one per worker, active or not).
+    ///
+    /// Each assignment carries an `Arc` snapshot of the iterate, matching
+    /// Algorithms 1/4/5 where a worker computes at the point it was
+    /// handed; the sampler decides what "a stochastic gradient at that
+    /// point" means for this worker.
+    pub fn spawn_with<'scope, 'env, S>(
+        scope: &'scope thread::Scope<'scope, 'env>,
+        samplers: Vec<S>,
+        model: &ComputeModel,
+        active: &[usize],
+        cfg: &ThreadPoolConfig,
+    ) -> ThreadSource
+    where
+        S: GradSampler + 'env,
+    {
         let n = model.n_workers();
+        assert_eq!(samplers.len(), n, "one sampler per worker");
         let (tx, rx) = mpsc::channel::<WorkerMsg>();
         let stop = Arc::new(AtomicBool::new(false));
         // per-worker assignment generation (bumped to cancel, Algorithm 5)
@@ -103,10 +223,11 @@ impl ThreadSource {
         let mut mailboxes: Vec<mpsc::Sender<Assignment>> = Vec::with_capacity(n);
 
         let mut root_rng = Prng::seed_from_u64(cfg.seed);
-        for w in 0..n {
+        for (w, mut sampler) in samplers.into_iter().enumerate() {
             let (atx, arx) = mpsc::channel::<Assignment>();
             mailboxes.push(atx);
-            // split for every worker — same stream layout as Cluster::new
+            // timing stream: split for every worker — same layout as
+            // Cluster::new
             let mut rng = root_rng.split(w as u64);
             if !active.contains(&w) {
                 continue; // inactive workers get no thread
@@ -115,19 +236,30 @@ impl ThreadSource {
             let stop = stop.clone();
             let gens = gens.clone();
             let model = model.clone();
-            let noise = cfg.noise_sigma;
             let scale = cfg.time_scale;
+            let seed = cfg.seed;
+            let deterministic = cfg.deterministic;
             scope.spawn(move || {
                 let t0 = Instant::now();
-                while let Ok((start_k, gen, x)) = arx.recv() {
+                // per-worker assignment ordinal: one mailbox message per
+                // server-side assign, so this matches the simulator's
+                // per-worker assignment count exactly
+                let mut ordinal: u64 = 0;
+                while let Ok(a) = arx.recv() {
                     if stop.load(Ordering::Relaxed) {
                         break;
                     }
+                    ordinal += 1;
                     // realized compute time first — the simulator draws the
                     // duration at assignment from the same worker stream,
                     // even for work that is later cancelled
-                    let dt = model.duration(w, t0.elapsed().as_secs_f64() / scale, &mut rng);
-                    if gens[w].load(Ordering::Acquire) != gen {
+                    let now = if deterministic {
+                        a.vt_start
+                    } else {
+                        t0.elapsed().as_secs_f64() / scale
+                    };
+                    let dt = model.duration(w, now, &mut rng);
+                    if gens[w].load(Ordering::Acquire) != a.gen {
                         // superseded while still queued (a cancellation
                         // already replaced this assignment): keep the
                         // duration draw for stream parity but skip the
@@ -137,24 +269,22 @@ impl ThreadSource {
                         continue;
                     }
                     thread::sleep(Duration::from_secs_f64(dt * scale));
-                    if gens[w].load(Ordering::Acquire) != gen {
+                    if gens[w].load(Ordering::Acquire) != a.gen {
                         // cancelled mid-flight (Algorithm 5): like the
                         // simulator's lazy protocol, the gradient — and its
-                        // noise draw — never happens
+                        // draws — never happens; the assignment stream is
+                        // keyed by ordinal, so skipping it shifts nothing
                         continue;
                     }
-                    let mut g = vec![0.0; x.len()];
-                    let _ = problem.value_grad(&x, &mut g);
-                    if noise > 0.0 {
-                        for gi in g.iter_mut() {
-                            *gi += rng.normal(0.0, noise);
-                        }
-                    }
+                    let mut g = vec![0.0; a.point.len()];
+                    let mut draw = Prng::assignment_stream(seed, w as u64, ordinal);
+                    sampler.sample(&a.point, &mut draw, &mut g);
                     if tx
                         .send(WorkerMsg {
                             worker: w,
-                            start_k,
-                            gen,
+                            start_k: a.start_k,
+                            gen: a.gen,
+                            vt: a.vt_start + dt,
                             grad: g,
                         })
                         .is_err()
@@ -179,6 +309,11 @@ impl ThreadSource {
             max_wall: cfg.max_wall,
             stats: ClusterStats::default(),
             pending: Vec::new(),
+            deterministic: cfg.deterministic,
+            vnow: 0.0,
+            assign_seq: 0,
+            seqs: vec![0; n],
+            buffered: (0..n).map(|_| None).collect(),
         }
     }
 
@@ -189,6 +324,66 @@ impl ThreadSource {
         self.stop.store(true, Ordering::Relaxed);
         drop(self.mailboxes); // workers' recv() fails → threads exit
         while self.rx.try_recv().is_ok() {}
+    }
+
+    /// Deterministic delivery: wait until every busy worker's current
+    /// assignment has reported its virtual completion, then release the
+    /// earliest `(vt, assignment seq)` — the conservative discrete-event
+    /// pop. Identical ordering to the simulator's event queue whenever
+    /// virtual completion times are distinct (continuous-duration models).
+    fn next_delivery_deterministic(&mut self) -> Option<Delivery> {
+        loop {
+            let missing = self
+                .active
+                .iter()
+                .any(|&w| self.busy[w] && self.buffered[w].is_none());
+            if !missing {
+                break;
+            }
+            let elapsed = self.started.elapsed();
+            if elapsed >= self.max_wall {
+                return None;
+            }
+            let msg = match self.rx.recv_timeout(self.max_wall - elapsed) {
+                Ok(m) => m,
+                Err(_) => return None, // budget exhausted or pool gone
+            };
+            // stale by generation ⇒ a cancellation raced the send; drop
+            if self.gens[msg.worker].load(Ordering::Acquire) != msg.gen {
+                continue;
+            }
+            self.buffered[msg.worker] = Some(msg);
+        }
+        let mut best: Option<usize> = None;
+        for &w in &self.active {
+            if self.buffered[w].is_none() {
+                continue;
+            }
+            let better = match best {
+                None => true,
+                Some(b) => {
+                    let (mv, bv) = (
+                        self.buffered[w].as_ref().unwrap().vt,
+                        self.buffered[b].as_ref().unwrap().vt,
+                    );
+                    (mv, self.seqs[w]) < (bv, self.seqs[b])
+                }
+            };
+            if better {
+                best = Some(w);
+            }
+        }
+        let w = best?; // nothing in flight
+        let msg = self.buffered[w].take().expect("buffered message");
+        self.busy[w] = false;
+        self.stats.arrivals += 1;
+        self.vnow = msg.vt;
+        self.pending = msg.grad;
+        Some(Delivery {
+            worker: w,
+            start_k: msg.start_k,
+            time: msg.vt,
+        })
     }
 }
 
@@ -201,12 +396,27 @@ impl<P: StochasticProblem + ?Sized> GradientSource<P> for ThreadSource {
         let gen = self.gens[worker].fetch_add(1, Ordering::AcqRel) + 1;
         self.start_ks[worker] = start_k;
         self.busy[worker] = true;
-        self.assign_times[worker] = self.started.elapsed().as_secs_f64();
+        self.assign_times[worker] = if self.deterministic {
+            self.vnow
+        } else {
+            self.started.elapsed().as_secs_f64()
+        };
+        self.assign_seq += 1;
+        self.seqs[worker] = self.assign_seq;
+        self.buffered[worker] = None; // any buffered completion is stale now
         self.stats.assignments += 1;
-        let _ = self.mailboxes[worker].send((start_k, gen, point.clone()));
+        let _ = self.mailboxes[worker].send(Assignment {
+            start_k,
+            gen,
+            point: point.clone(),
+            vt_start: self.vnow,
+        });
     }
 
     fn next_delivery(&mut self) -> Option<Delivery> {
+        if self.deterministic {
+            return self.next_delivery_deterministic();
+        }
         loop {
             let elapsed = self.started.elapsed();
             if elapsed >= self.max_wall {
@@ -263,7 +473,11 @@ impl<P: StochasticProblem + ?Sized> GradientSource<P> for ThreadSource {
     }
 
     fn now(&self) -> f64 {
-        self.started.elapsed().as_secs_f64()
+        if self.deterministic {
+            self.vnow
+        } else {
+            self.started.elapsed().as_secs_f64()
+        }
     }
 
     fn stats(&self) -> ClusterStats {
@@ -279,14 +493,14 @@ impl<P: StochasticProblem + ?Sized> GradientSource<P> for ThreadSource {
 /// [`StochasticProblem`] for curve recording and stopping checks, but the
 /// stochastic gradients themselves are produced by the worker threads —
 /// so `stoch_grad` is unreachable here.
-pub struct WallclockEval<'a, P: Problem>(pub &'a P);
+pub struct WallclockEval<'a, P: Problem + ?Sized>(pub &'a P);
 
-impl<'a, P: Problem> StochasticProblem for WallclockEval<'a, P> {
+impl<'a, P: Problem + ?Sized> StochasticProblem for WallclockEval<'a, P> {
     fn dim(&self) -> usize {
         self.0.dim()
     }
 
-    fn stoch_grad(&mut self, _x: &[f64], _rng: &mut Prng, _grad: &mut [f64]) -> f64 {
+    fn stoch_grad(&mut self, _x: &[f64], _ctx: WorkerCtx<'_>, _grad: &mut [f64]) -> f64 {
         unreachable!("ThreadSource materializes gradients on the worker threads")
     }
 

@@ -18,10 +18,12 @@ use std::thread;
 use std::time::Duration;
 
 use crate::coordinator::Scheduler;
+use crate::data::partition::Partition;
 use crate::engine::{
-    self, DriverConfig, RunRecord, ServerOpt, ThreadPoolConfig, ThreadSource, WallclockEval,
+    self, DriverConfig, RunRecord, ServerOpt, ShardSampler, ThreadPoolConfig, ThreadSource,
+    WallclockEval,
 };
-use crate::opt::Problem;
+use crate::opt::{Problem, SampleProblem};
 use crate::sim::ComputeModel;
 
 /// Wall-clock run configuration.
@@ -40,6 +42,13 @@ pub struct ExecConfig {
     pub record_every: u64,
     /// ε-stationarity stop on the recorded `‖∇f‖²` (`None` disables).
     pub eps: Option<f64>,
+    /// Record per-worker execution spans (assignment → delivery /
+    /// cancellation) into [`RunRecord::trace`].
+    pub record_trace: bool,
+    /// Release deliveries in virtual-time order (conservative protocol) —
+    /// bit-identical to the simulator under the same seed. See
+    /// [`crate::engine::ThreadPoolConfig::deterministic`].
+    pub deterministic: bool,
     /// Server-side update rule (default: the paper's plain SGD step).
     pub server_opt: ServerOpt,
 }
@@ -54,8 +63,44 @@ impl Default for ExecConfig {
             noise_sigma: 0.0,
             record_every: 100,
             eps: None,
+            record_trace: false,
+            deterministic: false,
             server_opt: ServerOpt::Sgd,
         }
+    }
+}
+
+impl ExecConfig {
+    fn pool_config(&self) -> ThreadPoolConfig {
+        ThreadPoolConfig {
+            time_scale: self.time_scale,
+            max_wall: self.max_wall,
+            seed: self.seed,
+            noise_sigma: self.noise_sigma,
+            deterministic: self.deterministic,
+        }
+    }
+
+    fn driver_config(&self) -> DriverConfig {
+        DriverConfig {
+            seed: self.seed,
+            eps: self.eps,
+            target_gap: None,
+            // the wall budget is enforced by the source itself
+            max_time: f64::INFINITY,
+            max_iters: self.max_iters,
+            record_every: self.record_every,
+            record_update_times: false,
+            record_trace: self.record_trace,
+            server_opt: self.server_opt.clone(),
+        }
+    }
+}
+
+fn active_workers(sched: &dyn Scheduler, n: usize) -> Vec<usize> {
+    match sched.active_workers() {
+        Some(ws) => ws.to_vec(),
+        None => (0..n).collect(),
     }
 }
 
@@ -71,30 +116,59 @@ pub fn run_wallclock<P: Problem + Sync>(
     sched: &mut dyn Scheduler,
     cfg: &ExecConfig,
 ) -> RunRecord {
-    let active: Vec<usize> = match sched.active_workers() {
-        Some(ws) => ws.to_vec(),
-        None => (0..model.n_workers()).collect(),
-    };
-    let pool_cfg = ThreadPoolConfig {
-        time_scale: cfg.time_scale,
-        max_wall: cfg.max_wall,
-        seed: cfg.seed,
-        noise_sigma: cfg.noise_sigma,
-    };
-    let driver_cfg = DriverConfig {
-        seed: cfg.seed,
-        eps: cfg.eps,
-        target_gap: None,
-        // the wall budget is enforced by the source itself
-        max_time: f64::INFINITY,
-        max_iters: cfg.max_iters,
-        record_every: cfg.record_every,
-        record_update_times: false,
-        record_trace: false,
-        server_opt: cfg.server_opt.clone(),
-    };
+    let active = active_workers(sched, model.n_workers());
+    let pool_cfg = cfg.pool_config();
+    let driver_cfg = cfg.driver_config();
     thread::scope(|scope| {
         let mut source = ThreadSource::spawn(scope, problem, model, &active, &pool_cfg);
+        let mut eval = WallclockEval(problem);
+        let rec = engine::run(&mut eval, &mut source, sched, &driver_cfg);
+        source.shutdown();
+        rec
+    })
+}
+
+/// Run `sched` against a **data-sharded** finite-sum problem with real
+/// threads: worker `w`'s thread owns shard `w` of `partition` and samples
+/// `batch`-sized minibatches from it — heterogeneous sampling as real
+/// concurrency. The simulator twin is
+/// [`crate::opt::Sharded`] driven through [`crate::driver::Driver`]; with
+/// `cfg.deterministic` the two produce bit-identical trajectories and
+/// shard-hit accounting under the same seed.
+pub fn run_wallclock_sharded<P>(
+    problem: &P,
+    partition: &Partition,
+    batch: usize,
+    model: &ComputeModel,
+    sched: &mut dyn Scheduler,
+    cfg: &ExecConfig,
+) -> RunRecord
+where
+    P: SampleProblem + Sync,
+{
+    let n = model.n_workers();
+    assert!(batch > 0, "minibatch size must be at least 1");
+    assert_eq!(
+        partition.shards.len(),
+        n,
+        "partition must provide one shard per worker"
+    );
+    assert!(
+        partition.shards.iter().all(|s| !s.is_empty()),
+        "every worker needs a non-empty shard"
+    );
+    let active = active_workers(sched, n);
+    let pool_cfg = cfg.pool_config();
+    let driver_cfg = cfg.driver_config();
+    thread::scope(|scope| {
+        let samplers: Vec<ShardSampler<'_, P>> = (0..n)
+            .map(|w| ShardSampler {
+                problem,
+                shard: partition.shards[w].clone(),
+                batch,
+            })
+            .collect();
+        let mut source = ThreadSource::spawn_with(scope, samplers, model, &active, &pool_cfg);
         let mut eval = WallclockEval(problem);
         let rec = engine::run(&mut eval, &mut source, sched, &driver_cfg);
         source.shutdown();
@@ -172,6 +246,83 @@ mod tests {
         let rec = run_wallclock(&problem, &model, &mut sched, &cfg);
         assert_eq!(rec.accumulated, 3 * rec.iters);
         assert!(rec.gap_curve.len() >= 2, "curves recorded on the wall path");
+    }
+
+    #[test]
+    fn wallclock_trace_spans_respect_wall_budget() {
+        // record_trace surfaced through ExecConfig: per-worker busy totals
+        // must be bounded by the wall duration — the same invariant the
+        // simulator's spans satisfy against sim_time
+        let problem = QuadraticProblem::paper(12);
+        let model = ComputeModel::fixed_linear(3);
+        let mut sched = RingmasterScheduler::new(3, 0.2, true);
+        let cfg = ExecConfig {
+            time_scale: 2e-4,
+            max_iters: 150,
+            noise_sigma: 1e-3,
+            record_trace: true,
+            ..Default::default()
+        };
+        let rec = run_wallclock(&problem, &model, &mut sched, &cfg);
+        let trace = rec.trace.as_ref().expect("record_trace surfaces a trace");
+        let wall = rec.wall.unwrap().as_secs_f64();
+        assert!(!trace.is_empty(), "spans recorded");
+        for (w, &busy) in trace.busy_time.iter().enumerate() {
+            assert!(
+                busy <= wall + 1e-6,
+                "worker {w}: busy {busy:.4}s exceeds wall {wall:.4}s"
+            );
+        }
+        assert!(trace.busy_time.iter().any(|&b| b > 0.0));
+        for s in trace.spans() {
+            assert!(s.end >= s.start && s.end <= wall + 1e-6);
+        }
+
+        // the simulator invariant this mirrors: busy totals ≤ sim_time
+        let mut d = crate::driver::Driver::new(
+            crate::opt::Noisy::new(QuadraticProblem::paper(12), 1e-3),
+            model,
+            crate::driver::DriverConfig {
+                max_iters: 150,
+                record_trace: true,
+                ..Default::default()
+            },
+        );
+        let mut s2 = RingmasterScheduler::new(3, 0.2, true);
+        let sim = d.run(&mut s2);
+        let st = sim.trace.as_ref().unwrap();
+        for &busy in &st.busy_time {
+            assert!(busy <= sim.sim_time + 1e-9);
+        }
+    }
+
+    #[test]
+    fn wallclock_sharded_workers_sample_their_own_shards() {
+        use crate::data::{partition, synthetic_mnist};
+        use crate::opt::LogisticProblem;
+        let ds = synthetic_mnist(120, 0.15, 5);
+        let problem = LogisticProblem::from_dataset(&ds, 0.01);
+        let n = 3;
+        let part = partition::label_skew(&ds.labels, crate::data::N_CLASSES, n, 0.2, 9);
+        let model = ComputeModel::fixed_linear(n);
+        let mut sched = RingmasterScheduler::new(3, 0.02, true);
+        let cfg = ExecConfig {
+            time_scale: 2e-4,
+            max_iters: 120,
+            ..Default::default()
+        };
+        let rec = run_wallclock_sharded(&problem, &part, 4, &model, &mut sched, &cfg);
+        assert!(rec.iters > 0);
+        let first = rec.gap_curve.v[0];
+        assert!(
+            rec.final_gap < first,
+            "sharded wall-clock run descends: {first} -> {}",
+            rec.final_gap
+        );
+        assert_eq!(
+            rec.worker_hits.iter().sum::<u64>(),
+            rec.applied + rec.accumulated
+        );
     }
 
     #[test]

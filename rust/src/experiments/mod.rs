@@ -5,6 +5,8 @@
 //! experiment index) and returns structured results; printing/CSV output is
 //! layered on top so benches and the CLI stay in sync.
 
+pub mod heterogeneity;
+
 use crate::complexity::{self, Constants};
 use crate::coordinator::SchedulerKind;
 use crate::driver::{Driver, DriverConfig, RunRecord};

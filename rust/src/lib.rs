@@ -28,18 +28,29 @@
 //! training hot path never touches Python.
 //!
 //! ```text
-//!            Scheduler (policy)          coordinator::*
+//!            Scheduler (policy)            coordinator::*
 //!                  │ Decision
 //!                  ▼
-//!            engine::run (one loop)      engine
+//!            engine::run (one loop)        engine
 //!             │              │
-//!       SimSource      ThreadSource      engine::{sim_source,thread_source}
-//!       (sim clock)    (wall clock)
+//!       SimSource      ThreadSource        engine::{sim_source,thread_source}
+//!       (sim clock)    (wall / virtual clock)
 //!             │              │
-//!        sim::Cluster   mpsc thread pool
+//!        sim::Cluster   GradSampler per thread
+//!             │              │ (NoisySampler | ShardSampler)
+//!             └──── WorkerCtx ────┘        opt::{StochasticProblem, Sharded}
+//!          (worker id + per-assignment     prng::assignment_stream
+//!           draw stream, both substrates)
 //!                  │
-//!             RunRecord (unified)
+//!         data::partition shards           iid | Dirichlet-α | quantity skew
+//!                  │
+//!             RunRecord (unified, per-worker hit accounting)
 //! ```
+//!
+//! Data heterogeneity (Ringleader ASGD's regime) is first-class: worker
+//! identity flows from assignment to gradient draw on both substrates, so
+//! every scheduler can be studied under non-IID shards
+//! ([`experiments::heterogeneity`], CLI `sweep`).
 
 pub mod bench_util;
 pub mod cli;

@@ -13,12 +13,13 @@
 //! ringmaster fig3        Figure 3 (MLP on synthetic-MNIST, PJRT)
 //! ringmaster train       end-to-end MLP training via PJRT artifacts
 //! ringmaster exec-demo   wall-clock (threaded) executor demo
+//! ringmaster sweep       heterogeneity matrix (scheduler × α × seed) → CSV
 //! ```
 
 use std::path::PathBuf;
 
-use ringmaster::bail;
 use ringmaster::util::error::Result;
+use ringmaster::{bail, ensure};
 
 use ringmaster::cli::Args;
 use ringmaster::complexity::{self, Constants};
@@ -67,7 +68,10 @@ fn print_help() {
            fig2         Figure 2: quadratic d=1729 n=6174 (use --small for a quick pass)\n\
            fig3         Figure 3: MLP on synthetic MNIST via PJRT artifacts\n\
            train        end-to-end PJRT MLP training (single-stream SGD)\n\
-           exec-demo    wall-clock threaded executor demo\n\n\
+           exec-demo    wall-clock threaded executor demo\n\
+           sweep        data-heterogeneity scenario matrix → long-form CSV\n\
+                        --alpha 0.1,1.0,inf --seeds 0,1 --n 16 --n-data 400\n\
+                        --schedulers ringmaster,rennala,asgd --gamma 0.02\n\n\
          common flags: --seed N --csv-out path.csv --plot --config file.toml"
     );
 }
@@ -92,6 +96,7 @@ fn dispatch(args: &Args) -> Result<()> {
         "fig3" => cmd_fig3(args),
         "train" => cmd_train(args),
         "exec-demo" => cmd_exec_demo(args),
+        "sweep" => cmd_sweep(args),
         other => bail!("unknown subcommand '{other}' (try --help)"),
     }
 }
@@ -508,6 +513,96 @@ fn cmd_train(args: &Args) -> Result<()> {
     }
     let acc = driver.problem.accuracy(&rec.x_final)?;
     println!("final eval accuracy: {:.1}%", 100.0 * acc);
+    Ok(())
+}
+
+fn cmd_sweep(args: &Args) -> Result<()> {
+    use ringmaster::experiments::heterogeneity::{het_csv, heterogeneity_matrix, HetConfig};
+
+    // f64::from_str already accepts "inf"/"infinity" case-insensitively
+    let parse_alphas = |s: &str| -> Result<Vec<f64>> {
+        s.split(',')
+            .filter(|t| !t.is_empty())
+            .map(|t| {
+                t.trim()
+                    .parse::<f64>()
+                    .map_err(|_| ringmaster::anyhow!("--alpha expects numbers or 'inf', got '{t}'"))
+            })
+            .collect()
+    };
+    let parse_seeds = |s: &str| -> Result<Vec<u64>> {
+        s.split(',')
+            .filter(|t| !t.is_empty())
+            .map(|t| {
+                t.trim()
+                    .parse::<u64>()
+                    .map_err(|_| ringmaster::anyhow!("--seeds expects integers, got '{t}'"))
+            })
+            .collect()
+    };
+
+    let gamma = args.f64_or("gamma", 0.02)?;
+    let mut cfg = HetConfig::quick(gamma);
+    cfg.alphas = parse_alphas(args.str_or("alpha", "0.1,1.0,inf"))?;
+    cfg.seeds = parse_seeds(args.str_or("seeds", "0,1"))?;
+    cfg.n_workers = args.usize_or("n", cfg.n_workers)?;
+    cfg.n_data = args.usize_or("n-data", cfg.n_data)?;
+    cfg.batch = args.usize_or("batch", cfg.batch)?;
+    cfg.max_iters = args.usize_or("max-iters", cfg.max_iters as usize)? as u64;
+    // validate up front: the partition/sharding layers assert these, and
+    // a CLI typo should be an error message, not a panic
+    ensure!(
+        !cfg.alphas.is_empty() && !cfg.seeds.is_empty(),
+        "--alpha and --seeds must be non-empty lists"
+    );
+    ensure!(
+        cfg.alphas.iter().all(|&a| a > 0.0),
+        "--alpha values must be positive (use 'inf' for the IID limit)"
+    );
+    ensure!(cfg.n_workers > 0, "--n must be at least 1");
+    ensure!(
+        cfg.n_data >= cfg.n_workers,
+        "--n-data ({}) must be ≥ --n ({}) so every worker gets a shard",
+        cfg.n_data,
+        cfg.n_workers
+    );
+    ensure!(cfg.batch > 0, "--batch must be at least 1");
+
+    let r = args.usize_or("r", cfg.n_workers)? as u64;
+    let b = args.usize_or("b", (cfg.n_workers / 2).max(1))? as u64;
+    cfg.schedulers = args
+        .str_or("schedulers", "ringmaster,rennala,asgd")
+        .split(',')
+        .filter(|t| !t.is_empty())
+        .map(|name| {
+            Ok(match name.trim() {
+                "ringmaster" => SchedulerKind::Ringmaster { r, gamma, cancel: true },
+                "asgd" => SchedulerKind::Asgd { gamma },
+                "delay-adaptive" => SchedulerKind::DelayAdaptive { gamma },
+                "rennala" => SchedulerKind::Rennala { b, gamma },
+                "minibatch" => SchedulerKind::Minibatch { m: cfg.n_workers, gamma },
+                other => bail!("unknown scheduler '{other}' in --schedulers"),
+            })
+        })
+        .collect::<Result<Vec<_>>>()?;
+
+    eprintln!(
+        "sweep: {} schedulers × {} α × {} seeds = {} grid points (n={}, n-data={}, batch={})",
+        cfg.schedulers.len(),
+        cfg.alphas.len(),
+        cfg.seeds.len(),
+        cfg.schedulers.len() * cfg.alphas.len() * cfg.seeds.len(),
+        cfg.n_workers,
+        cfg.n_data,
+        cfg.batch
+    );
+    let cells = heterogeneity_matrix(&cfg);
+    let csv = het_csv(&cells);
+    if let Some(path) = args.get("csv-out") {
+        std::fs::write(path, &csv)?;
+        eprintln!("wrote {path}");
+    }
+    print!("{csv}");
     Ok(())
 }
 

@@ -8,21 +8,45 @@
 //!   *stochastic* gradients (Assumption 1.3) plus a deterministic
 //!   evaluation path for recording `f(x^k) − f*` and `‖∇f(x^k)‖²`.
 //!
+//! Every stochastic draw happens inside a [`WorkerCtx`]: the identity of
+//! the worker computing the gradient plus that assignment's private RNG
+//! stream. Homogeneous problems ignore the identity; heterogeneous ones
+//! ([`Sharded`], the shard-aware MLP in [`crate::train`]) route it to a
+//! per-worker data shard — the Ringleader-ASGD regime where each worker
+//! samples its own distribution.
+//!
 //! [`Noisy`] lifts any `Problem` to a `StochasticProblem` by adding
 //! i.i.d. Gaussian noise `ξ ~ N(0, noise_sigma² I)` — exactly the paper's
-//! §G construction `∇f(x, ξ) = ∇f(x) + ξ`.  PJRT-backed problems
-//! (`opt::pjrt`, [`crate::train`]) implement `StochasticProblem` directly
-//! with minibatch sampling.
+//! §G construction `∇f(x, ξ) = ∇f(x) + ξ`.  [`Sharded`] lifts any
+//! [`SampleProblem`] (finite-sum objective) to a worker-heterogeneous
+//! `StochasticProblem` over a [`crate::data::partition::Partition`].
+//! PJRT-backed problems (`opt::pjrt`, [`crate::train`]) implement
+//! `StochasticProblem` directly with minibatch sampling.
 
 pub mod logistic;
 pub mod pjrt;
 pub mod quadratic;
+pub mod sharded;
 
 pub use logistic::LogisticProblem;
 pub use pjrt::PjrtQuadratic;
 pub use quadratic::QuadraticProblem;
+pub use sharded::{shard_draw, SampleProblem, Sharded};
 
 use crate::prng::Prng;
+
+/// Identity + randomness of one stochastic-gradient draw.
+///
+/// `worker` is the stable worker index the delivery came from (the paper's
+/// `i`); `rng` is the *assignment-private* draw stream — derived from
+/// `(run seed, worker, assignment ordinal)` by both execution substrates
+/// (see [`crate::prng::Prng::assignment_stream`]), so the same assignment
+/// draws the same samples whether the gradient is materialized lazily by
+/// the simulator or computed concurrently on a worker thread.
+pub struct WorkerCtx<'a> {
+    pub worker: usize,
+    pub rng: &'a mut Prng,
+}
 
 /// A deterministic differentiable objective.
 pub trait Problem {
@@ -57,10 +81,13 @@ pub trait Problem {
 pub trait StochasticProblem {
     fn dim(&self) -> usize;
 
-    /// Draw a stochastic gradient `∇f(x; ξ)` into `grad` and return a
-    /// cheap scalar associated with the draw (typically `f(x)` or the
-    /// minibatch loss — used for diagnostics only).
-    fn stoch_grad(&mut self, x: &[f64], rng: &mut Prng, grad: &mut [f64]) -> f64;
+    /// Draw a stochastic gradient `∇f(x; ξ)` into `grad` for the worker
+    /// identified by `ctx` and return a cheap scalar associated with the
+    /// draw (typically `f(x)` or the minibatch loss — diagnostics only).
+    ///
+    /// Implementations must draw *only* from `ctx.rng` so that both
+    /// execution substrates reproduce the draw bit-for-bit.
+    fn stoch_grad(&mut self, x: &[f64], ctx: WorkerCtx<'_>, grad: &mut [f64]) -> f64;
 
     /// Exact (or best-effort deterministic) `f(x)` and `∇f(x)` for curve
     /// recording and ε-stationarity checks.
@@ -103,11 +130,11 @@ impl<P: Problem> StochasticProblem for Noisy<P> {
         self.inner.dim()
     }
 
-    fn stoch_grad(&mut self, x: &[f64], rng: &mut Prng, grad: &mut [f64]) -> f64 {
+    fn stoch_grad(&mut self, x: &[f64], ctx: WorkerCtx<'_>, grad: &mut [f64]) -> f64 {
         let v = self.inner.value_grad(x, grad);
         if self.noise_sigma > 0.0 {
             for g in grad.iter_mut() {
-                *g += rng.normal(0.0, self.noise_sigma);
+                *g += ctx.rng.normal(0.0, self.noise_sigma);
             }
         }
         v
@@ -152,7 +179,7 @@ mod tests {
         let mut sq_dev = 0.0;
         let mut g = vec![0.0; 8];
         for _ in 0..trials {
-            p.stoch_grad(&x, &mut rng, &mut g);
+            p.stoch_grad(&x, WorkerCtx { worker: 0, rng: &mut rng }, &mut g);
             for i in 0..8 {
                 mean[i] += g[i];
             }
@@ -174,9 +201,23 @@ mod tests {
         let mut rng = Prng::seed_from_u64(0);
         let mut a = vec![0.0; 4];
         let mut b = vec![0.0; 4];
-        let va = p.stoch_grad(&x, &mut rng, &mut a);
+        let va = p.stoch_grad(&x, WorkerCtx { worker: 0, rng: &mut rng }, &mut a);
         let vb = p.eval_value_grad(&x, &mut b);
         assert_eq!(a, b);
         assert_eq!(va, vb);
+    }
+
+    #[test]
+    fn noisy_ignores_worker_identity() {
+        // homogeneous problems must draw identically for any worker id
+        let x = vec![0.5; 4];
+        let mut a = vec![0.0; 4];
+        let mut b = vec![0.0; 4];
+        let mut p = Noisy::new(QuadraticProblem::paper(4), 0.1);
+        let mut r1 = Prng::seed_from_u64(9);
+        let mut r2 = Prng::seed_from_u64(9);
+        p.stoch_grad(&x, WorkerCtx { worker: 0, rng: &mut r1 }, &mut a);
+        p.stoch_grad(&x, WorkerCtx { worker: 7, rng: &mut r2 }, &mut b);
+        assert_eq!(a, b);
     }
 }

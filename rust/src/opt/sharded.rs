@@ -1,0 +1,240 @@
+//! [`Sharded`] — worker-heterogeneous data through any finite-sum problem.
+//!
+//! A [`SampleProblem`] is an objective of the form
+//! `f(x) = (1/n) Σ_i ℓ_i(x)` whose per-sample gradients can be drawn
+//! individually. [`Sharded`] owns a
+//! [`crate::data::partition::Partition`] of the sample indices and routes
+//! every stochastic-gradient draw through the delivering worker's shard:
+//! worker `w` only ever samples `ℓ_i` with `i ∈ shard_w` — the Ringleader
+//! ASGD heterogeneity regime, where the paper's homogeneity assumption is
+//! deliberately broken.
+//!
+//! The actual draw is [`shard_draw`], a free function shared bit-for-bit
+//! by both execution substrates: the simulator calls it through
+//! `Sharded::stoch_grad` when it lazily materializes a delivery, and the
+//! wall-clock pool's per-worker `ShardSampler` calls it on the worker's
+//! own thread. Combined with per-assignment RNG streams
+//! ([`crate::prng::Prng::assignment_stream`]) this makes sharded runs
+//! bitwise comparable across substrates (see `tests/engine_parity.rs`).
+
+use crate::data::partition::Partition;
+use crate::prng::Prng;
+
+use super::{Problem, StochasticProblem, WorkerCtx};
+
+/// A finite-sum objective `f(x) = (1/n) Σ_i ℓ_i(x)` with individually
+/// addressable sample gradients — the substrate for data sharding.
+pub trait SampleProblem: Problem {
+    fn n_samples(&self) -> usize;
+
+    /// Accumulate `weight · ∇ℓ_idx(x)` into `grad` and return the raw
+    /// sample loss `ℓ_idx(x)`. `grad` is *not* cleared.
+    fn sample_grad(&self, idx: usize, x: &[f64], weight: f64, grad: &mut [f64]) -> f64;
+}
+
+/// One minibatch draw from a shard: `batch` samples uniform-with-
+/// replacement from `shard`, averaged. Returns the minibatch loss.
+///
+/// This is the *single* implementation of heterogeneous sampling — the
+/// simulator and the thread pool must both call it (with the same
+/// assignment stream) for cross-substrate parity to hold.
+pub fn shard_draw<P: SampleProblem + ?Sized>(
+    problem: &P,
+    shard: &[u32],
+    batch: usize,
+    x: &[f64],
+    rng: &mut Prng,
+    grad: &mut [f64],
+) -> f64 {
+    debug_assert!(!shard.is_empty(), "worker shard must be non-empty");
+    debug_assert!(batch > 0);
+    grad.fill(0.0);
+    let w = 1.0 / batch as f64;
+    let mut loss = 0.0;
+    for _ in 0..batch {
+        let idx = shard[rng.usize_below(shard.len())] as usize;
+        loss += problem.sample_grad(idx, x, w, grad);
+    }
+    loss * w
+}
+
+/// Worker-sharded lift of a [`SampleProblem`]: worker `w`'s stochastic
+/// gradients are minibatches from shard `w`; evaluation stays the exact
+/// full-sum objective. Shard-hit accounting is the engine's job — every
+/// consumed draw lands in `RunRecord::worker_hits`, the single authority
+/// on both substrates.
+pub struct Sharded<P> {
+    pub problem: P,
+    shards: Vec<Vec<u32>>,
+    batch: usize,
+}
+
+impl<P: SampleProblem> Sharded<P> {
+    /// `partition` must cover `problem`'s samples with one non-empty shard
+    /// per worker.
+    pub fn new(problem: P, partition: Partition, batch: usize) -> Self {
+        assert!(batch > 0);
+        assert!(
+            partition.is_disjoint_cover(problem.n_samples()),
+            "partition must be a disjoint cover of the problem's samples"
+        );
+        assert!(
+            partition.shards.iter().all(|s| !s.is_empty()),
+            "every worker needs a non-empty shard"
+        );
+        Self {
+            problem,
+            shards: partition.shards,
+            batch,
+        }
+    }
+
+    pub fn n_workers(&self) -> usize {
+        self.shards.len()
+    }
+
+    pub fn batch(&self) -> usize {
+        self.batch
+    }
+
+    pub fn shards(&self) -> &[Vec<u32>] {
+        &self.shards
+    }
+}
+
+impl<P: SampleProblem> StochasticProblem for Sharded<P> {
+    fn dim(&self) -> usize {
+        self.problem.dim()
+    }
+
+    fn stoch_grad(&mut self, x: &[f64], ctx: WorkerCtx<'_>, grad: &mut [f64]) -> f64 {
+        assert!(
+            ctx.worker < self.shards.len(),
+            "worker {} has no shard (partition built for {} workers)",
+            ctx.worker,
+            self.shards.len()
+        );
+        shard_draw(
+            &self.problem,
+            &self.shards[ctx.worker],
+            self.batch,
+            x,
+            ctx.rng,
+            grad,
+        )
+    }
+
+    fn eval_value_grad(&mut self, x: &[f64], grad: &mut [f64]) -> f64 {
+        self.problem.value_grad(x, grad)
+    }
+
+    fn f_star(&self) -> Option<f64> {
+        self.problem.f_star()
+    }
+
+    fn smoothness(&self) -> Option<f64> {
+        self.problem.smoothness()
+    }
+
+    fn init_point(&self) -> Vec<f64> {
+        self.problem.init_point()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::opt::LogisticProblem;
+
+    /// d = 1 logistic with two pure blocks: samples 0..4 are (x=1, y=+1),
+    /// samples 4..8 are (x=1, y=−1). At w = 0 the sample gradient is
+    /// −y·σ(0)·x = ∓0.5, so the shard a draw came from is identifiable
+    /// from the gradient's sign.
+    fn two_block_problem() -> LogisticProblem {
+        let xs = vec![1.0; 8];
+        let ys = vec![1.0, 1.0, 1.0, 1.0, -1.0, -1.0, -1.0, -1.0];
+        LogisticProblem::new(xs, ys, 1, 0.0)
+    }
+
+    fn two_block_partition() -> Partition {
+        Partition {
+            shards: vec![vec![0, 1, 2, 3], vec![4, 5, 6, 7]],
+        }
+    }
+
+    #[test]
+    fn draws_are_routed_to_the_delivering_workers_shard() {
+        let mut p = Sharded::new(two_block_problem(), two_block_partition(), 3);
+        let x = vec![0.0];
+        let mut g = vec![0.0];
+        let mut rng = Prng::seed_from_u64(1);
+        p.stoch_grad(&x, WorkerCtx { worker: 0, rng: &mut rng }, &mut g);
+        assert!((g[0] + 0.5).abs() < 1e-12, "worker 0 samples y=+1: {}", g[0]);
+        p.stoch_grad(&x, WorkerCtx { worker: 1, rng: &mut rng }, &mut g);
+        assert!((g[0] - 0.5).abs() < 1e-12, "worker 1 samples y=−1: {}", g[0]);
+    }
+
+    #[test]
+    fn eval_is_the_exact_full_objective() {
+        let mut sharded = Sharded::new(two_block_problem(), two_block_partition(), 2);
+        let full = two_block_problem();
+        let x = vec![0.3];
+        let mut ga = vec![0.0];
+        let mut gb = vec![0.0];
+        let va = sharded.eval_value_grad(&x, &mut ga);
+        let vb = full.value_grad(&x, &mut gb);
+        assert_eq!(va, vb);
+        assert_eq!(ga, gb);
+    }
+
+    #[test]
+    fn iid_sharding_is_unbiased_for_the_full_gradient() {
+        let problem = LogisticProblem::synthetic(60, 4, 0.1, 0.05, 5);
+        let part = crate::data::partition::iid(60, 6, 2);
+        let mut sharded = Sharded::new(problem, part, 4);
+        let x = vec![0.2, -0.1, 0.05, 0.4];
+        let mut exact = vec![0.0; 4];
+        sharded.eval_value_grad(&x, &mut exact);
+        let mut rng = Prng::seed_from_u64(3);
+        let mut mean = vec![0.0; 4];
+        let mut g = vec![0.0; 4];
+        let trials = 30_000;
+        for t in 0..trials {
+            // cycle workers so the average covers every shard equally
+            sharded.stoch_grad(&x, WorkerCtx { worker: t % 6, rng: &mut rng }, &mut g);
+            for (m, &gi) in mean.iter_mut().zip(&g) {
+                *m += gi;
+            }
+        }
+        for (m, e) in mean.iter().zip(&exact) {
+            let avg = m / trials as f64;
+            assert!(
+                (avg - e).abs() < 0.02,
+                "sharded-IID mean gradient biased: {avg} vs {e}"
+            );
+        }
+    }
+
+    #[test]
+    fn shard_draw_minibatch_averages() {
+        // batch of b from a single-sample shard is exactly that sample's
+        // gradient, any b
+        let p = two_block_problem();
+        let shard = vec![0u32];
+        let mut rng = Prng::seed_from_u64(7);
+        let mut g = vec![0.0];
+        let loss = shard_draw(&p, &shard, 5, &[0.0], &mut rng, &mut g);
+        assert!((g[0] + 0.5).abs() < 1e-12);
+        // sample loss at w = 0 is log(1 + e⁰) = ln 2, any batch size
+        assert!((loss - 2f64.ln()).abs() < 1e-12, "loss {loss}");
+    }
+
+    #[test]
+    #[should_panic(expected = "has no shard")]
+    fn out_of_range_worker_panics() {
+        let mut p = Sharded::new(two_block_problem(), two_block_partition(), 1);
+        let mut rng = Prng::seed_from_u64(0);
+        let mut g = vec![0.0];
+        p.stoch_grad(&[0.0], WorkerCtx { worker: 2, rng: &mut rng }, &mut g);
+    }
+}

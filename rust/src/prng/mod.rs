@@ -108,6 +108,28 @@ impl Prng {
         Prng::seed_from_u64(sm.next_u64())
     }
 
+    /// The private draw stream of one worker **assignment**, keyed by
+    /// `(run seed, worker, per-worker assignment ordinal)`.
+    ///
+    /// Both execution substrates derive gradient-materialization
+    /// randomness (data sampling, gradient noise) from this stream rather
+    /// than from the worker's sequential timing stream. Counter-based
+    /// keying makes the draws *positionally independent*: an assignment
+    /// that is cancelled (and therefore never materialized) cannot shift
+    /// any later assignment's draws, so the simulator's lazy protocol and
+    /// the thread pool's eager computation stay bit-identical even when
+    /// they race Algorithm 5's calculation stops differently.
+    pub fn assignment_stream(seed: u64, worker: u64, ordinal: u64) -> Prng {
+        let mut sm = SplitMix64::new(
+            seed ^ worker
+                .wrapping_add(1)
+                .wrapping_mul(0x9E6C_63D0_4F9A_7B21),
+        );
+        let base = sm.next_u64();
+        let mut sm2 = SplitMix64::new(base ^ ordinal.wrapping_mul(0xA24B_AED4_963E_E407));
+        Prng::seed_from_u64(sm2.next_u64())
+    }
+
     #[inline]
     pub fn next_u64(&mut self) -> u64 {
         self.core.next_u64()
@@ -228,6 +250,25 @@ mod tests {
         let mut b = Prng::seed_from_u64(2);
         let same = (0..64).filter(|_| a.next_u64() == b.next_u64()).count();
         assert!(same < 4);
+    }
+
+    #[test]
+    fn assignment_streams_are_keyed_not_sequential() {
+        // same key ⇒ same stream; any key component change ⇒ different
+        let a: Vec<u64> = {
+            let mut r = Prng::assignment_stream(7, 3, 11);
+            (0..8).map(|_| r.next_u64()).collect()
+        };
+        let b: Vec<u64> = {
+            let mut r = Prng::assignment_stream(7, 3, 11);
+            (0..8).map(|_| r.next_u64()).collect()
+        };
+        assert_eq!(a, b);
+        for (seed, worker, ordinal) in [(8, 3, 11), (7, 4, 11), (7, 3, 12)] {
+            let mut r = Prng::assignment_stream(seed, worker, ordinal);
+            let c: Vec<u64> = (0..8).map(|_| r.next_u64()).collect();
+            assert_ne!(a, c, "({seed},{worker},{ordinal})");
+        }
     }
 
     #[test]

@@ -44,6 +44,12 @@ pub struct Arrival {
 struct WorkerState {
     /// Assignment generation; events from older generations are stale.
     gen: u64,
+    /// Count of assignments ever issued to this worker — the key of the
+    /// current assignment's private draw stream
+    /// ([`crate::prng::Prng::assignment_stream`]). Unlike `gen` it is not
+    /// bumped by cancellation, so it matches the wall-clock substrate's
+    /// per-worker mailbox count exactly.
+    ordinal: u64,
     /// Iterate index of the current computation's starting point.
     start_k: u64,
     /// Whether the worker currently has an assignment in flight.
@@ -70,6 +76,8 @@ pub struct Cluster {
     /// Whether to maintain `by_start_k` (only schedulers that cancel need
     /// it; without cancellation it would grow with every assignment).
     track_stale: bool,
+    /// The run seed — root of every assignment's private draw stream.
+    data_seed: u64,
     /// Counters.
     pub stats: ClusterStats,
 }
@@ -92,6 +100,7 @@ impl Cluster {
         let workers = (0..n)
             .map(|i| WorkerState {
                 gen: 0,
+                ordinal: 0,
                 start_k: 0,
                 busy: false,
                 assign_time: 0.0,
@@ -107,6 +116,7 @@ impl Cluster {
             stale_queue: std::collections::VecDeque::new(),
             free_bufs: Vec::new(),
             track_stale: false,
+            data_seed: seed,
             stats: ClusterStats::default(),
         }
     }
@@ -135,10 +145,23 @@ impl Cluster {
         &self.workers[worker].point
     }
 
-    /// The worker's private random stream (sample draws happen here so
-    /// runs are reproducible regardless of delivery interleavings).
+    /// The worker's private *timing* stream (compute-duration draws).
+    /// Gradient materialization draws come from the per-assignment stream
+    /// instead — see [`Cluster::assign_ordinal`].
     pub fn worker_rng(&mut self, worker: usize) -> &mut Prng {
         &mut self.workers[worker].rng
+    }
+
+    /// Seed from which assignment draw streams are derived.
+    pub fn data_seed(&self) -> u64 {
+        self.data_seed
+    }
+
+    /// Ordinal of the worker's current (or just-delivered) assignment —
+    /// together with `(data_seed, worker)` it keys the assignment's
+    /// private draw stream ([`crate::prng::Prng::assignment_stream`]).
+    pub fn assign_ordinal(&self, worker: usize) -> u64 {
+        self.workers[worker].ordinal
     }
 
     pub fn is_busy(&self, worker: usize) -> bool {
@@ -166,6 +189,7 @@ impl Cluster {
         let w = &mut self.workers[worker];
         debug_assert!(!w.busy, "worker {worker} is already busy");
         w.gen += 1;
+        w.ordinal += 1;
         w.start_k = start_k;
         w.busy = true;
         w.assign_time = now;

@@ -11,8 +11,9 @@
 use crate::anyhow;
 use crate::util::error::Result;
 
+use crate::data::partition::Partition;
 use crate::data::{Dataset, IMG_PIXELS, N_CLASSES};
-use crate::opt::StochasticProblem;
+use crate::opt::{StochasticProblem, WorkerCtx};
 use crate::prng::Prng;
 use crate::runtime::PjrtRuntime;
 
@@ -36,6 +37,9 @@ pub struct MlpProblem {
     pub batch: usize,
     train: Dataset,
     eval: Dataset,
+    /// Per-worker shards of the train split (non-IID training); `None`
+    /// means every worker samples the full split.
+    shards: Option<Vec<Vec<u32>>>,
     /// Number of deterministic eval batches averaged per evaluation.
     eval_batches: usize,
     init_seed: u64,
@@ -101,6 +105,7 @@ impl MlpProblem {
             batch,
             train,
             eval,
+            shards: None,
             eval_batches: 4,
             init_seed: 0xF17,
         })
@@ -116,6 +121,21 @@ impl MlpProblem {
 
     pub fn set_eval_batches(&mut self, n: usize) {
         self.eval_batches = n.max(1);
+    }
+
+    /// Train under per-worker data shards: worker `w`'s minibatches are
+    /// drawn only from `partition.shards[w]` (indices into the train
+    /// split). Pass a partition from [`crate::data::partition`].
+    pub fn set_shards(&mut self, partition: Partition) {
+        assert!(
+            partition.is_disjoint_cover(self.train.len()),
+            "partition must cover the train split"
+        );
+        assert!(
+            partition.shards.iter().all(|s| !s.is_empty()),
+            "every worker needs a non-empty shard"
+        );
+        self.shards = Some(partition.shards);
     }
 
     /// One artifact call: `(loss, grad)` on the batch currently staged in
@@ -176,10 +196,28 @@ impl StochasticProblem for MlpProblem {
         self.param_count
     }
 
-    fn stoch_grad(&mut self, x: &[f64], rng: &mut Prng, grad: &mut [f64]) -> f64 {
+    fn stoch_grad(&mut self, x: &[f64], ctx: WorkerCtx<'_>, grad: &mut [f64]) -> f64 {
         let b = self.batch;
-        // disjoint field borrows: dataset read, staging buffers written
-        self.train.sample_batch(b, rng, &mut self.xb, &mut self.yb);
+        // disjoint field borrows: dataset + shards read, staging buffers
+        // written
+        match &self.shards {
+            Some(shards) => {
+                assert!(
+                    ctx.worker < shards.len(),
+                    "worker {} has no shard (partition built for {} workers)",
+                    ctx.worker,
+                    shards.len()
+                );
+                self.train.sample_batch_from(
+                    &shards[ctx.worker],
+                    b,
+                    ctx.rng,
+                    &mut self.xb,
+                    &mut self.yb,
+                );
+            }
+            None => self.train.sample_batch(b, ctx.rng, &mut self.xb, &mut self.yb),
+        }
         self.step_on_staged(x, grad)
     }
 

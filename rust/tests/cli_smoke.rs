@@ -19,7 +19,7 @@ fn run(args: &[&str]) -> (String, String, bool) {
 fn help_lists_subcommands() {
     let (stdout, _, ok) = run(&["--help"]);
     assert!(ok);
-    for sub in ["run", "compare", "complexity", "fig1", "fig2", "fig3", "train"] {
+    for sub in ["run", "compare", "complexity", "fig1", "fig2", "fig3", "train", "sweep"] {
         assert!(stdout.contains(sub), "help missing '{sub}'");
     }
 }
@@ -93,6 +93,31 @@ fn run_all_scheduler_flavors() {
         ]);
         assert!(ok, "{sched}: {stdout}\n{stderr}");
         assert!(stdout.contains("final:"), "{sched}");
+    }
+}
+
+#[test]
+fn sweep_emits_long_form_csv() {
+    let (stdout, stderr, ok) = run(&[
+        "sweep",
+        "--alpha", "0.1,1.0,inf",
+        "--seeds", "0",
+        "--n", "4",
+        "--n-data", "120",
+        "--batch", "4",
+        "--max-iters", "150",
+        "--schedulers", "ringmaster,rennala",
+    ]);
+    assert!(ok, "{stdout}\n{stderr}");
+    let lines: Vec<&str> = stdout.trim_end().lines().collect();
+    assert!(lines[0].starts_with("scheduler,alpha,seed,"), "{}", lines[0]);
+    // one row per (scheduler, α, seed) grid point: 2 × 3 × 1
+    assert_eq!(lines.len(), 1 + 6, "{stdout}");
+    for alpha in ["0.1", "1", "inf"] {
+        assert!(
+            lines.iter().skip(1).any(|l| l.split(',').nth(1) == Some(alpha)),
+            "missing α={alpha} rows in:\n{stdout}"
+        );
     }
 }
 

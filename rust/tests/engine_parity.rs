@@ -3,16 +3,25 @@
 //! The same (scheduler, compute model, seed) configuration is run through
 //! both [`GradientSource`] implementations — the discrete-event simulator
 //! (`Driver` → `SimSource`) and the real-thread pool (`run_wallclock` →
-//! `ThreadSource`) — and the runs must agree *qualitatively*: both descend,
-//! both respect the scheduler's accounting invariants, and Ringmaster's
-//! Lemma 4.1 delay bound (`δ < R` on every consumed gradient) holds on
-//! both substrates. Bitwise agreement is not expected: thread timing
-//! reorders arrivals.
+//! `ThreadSource`) — at two strengths:
+//!
+//! * **Qualitative** (wall-clock arrival order): both descend, both
+//!   respect the scheduler's accounting invariants, and Ringmaster's
+//!   Lemma 4.1 delay bound (`δ < R` on every consumed gradient) holds on
+//!   both substrates. Bitwise agreement is not expected: thread timing
+//!   reorders arrivals.
+//! * **Bitwise** (`ExecConfig::deterministic`): deliveries are released
+//!   in virtual-time order, and — because timing draws come from the
+//!   worker's sequential stream and gradient draws from per-assignment
+//!   keyed streams on *both* substrates — the full iterate trajectory,
+//!   per-worker shard-hit accounting and recorded curves must be
+//!   identical, including under label-skew data sharding.
 
 use ringmaster::coordinator::{Decision, Scheduler, SchedulerKind};
+use ringmaster::data::{partition, synthetic_mnist, N_CLASSES};
 use ringmaster::driver::{Driver, DriverConfig, RunRecord};
-use ringmaster::exec::{run_wallclock, ExecConfig};
-use ringmaster::opt::{Noisy, QuadraticProblem};
+use ringmaster::exec::{run_wallclock, run_wallclock_sharded, ExecConfig};
+use ringmaster::opt::{LogisticProblem, Noisy, QuadraticProblem, Sharded};
 use ringmaster::sim::ComputeModel;
 
 const D: usize = 8;
@@ -195,6 +204,130 @@ fn ringmaster_delay_bound_holds_on_both_substrates() {
             }
         }
     }
+}
+
+/// The acceptance test of the sharding contract: identical iterate
+/// trajectory and shard-hit accounting for `SimSource` vs `ThreadSource`
+/// under label-skew partitioning, for Ringmaster (with Algorithm 5
+/// cancellation) and Rennala (with cross-round discards).
+#[test]
+fn sharded_runs_are_bitwise_identical_across_substrates() {
+    let n = 4;
+    let seed = 5;
+    let ds = synthetic_mnist(240, 0.15, 3);
+    let problem = LogisticProblem::from_dataset(&ds, 0.01);
+    let part = partition::label_skew(&ds.labels, N_CLASSES, n, 0.3, 7);
+    // continuous durations ⇒ virtual completion times are tie-free, so
+    // the conservative release order equals the simulator's event order
+    let model = ComputeModel::random_paper(n);
+    let batch = 4;
+
+    for kind in [
+        SchedulerKind::Ringmaster { r: 3, gamma: 0.02, cancel: true },
+        SchedulerKind::Rennala { b: 2, gamma: 0.02 },
+    ] {
+        let mut driver = Driver::new(
+            Sharded::new(problem.clone(), part.clone(), batch),
+            model.clone(),
+            DriverConfig {
+                seed,
+                max_iters: 60,
+                record_every: 10,
+                ..Default::default()
+            },
+        );
+        let mut s1 = kind.build();
+        let sim = driver.run(s1.as_mut());
+
+        let mut s2 = kind.build();
+        let wall = run_wallclock_sharded(
+            &problem,
+            &part,
+            batch,
+            &model,
+            s2.as_mut(),
+            &ExecConfig {
+                time_scale: 1e-4,
+                max_iters: 60,
+                seed,
+                record_every: 10,
+                deterministic: true,
+                ..Default::default()
+            },
+        );
+
+        let name = kind.name();
+        assert!(sim.iters > 0, "{name}: progress");
+        assert_eq!(sim.iters, wall.iters, "{name}: iterate count");
+        assert_eq!(sim.x_final, wall.x_final, "{name}: iterate trajectory");
+        assert_eq!(sim.worker_hits, wall.worker_hits, "{name}: shard hits");
+        assert_eq!(sim.applied, wall.applied, "{name}");
+        assert_eq!(sim.accumulated, wall.accumulated, "{name}");
+        assert_eq!(sim.discarded, wall.discarded, "{name}");
+        assert_eq!(
+            sim.cluster.cancellations, wall.cluster.cancellations,
+            "{name}: Algorithm 5 parity"
+        );
+        assert_eq!(sim.cluster.assignments, wall.cluster.assignments, "{name}");
+        // recorded curves agree in (virtual) time and value
+        assert_eq!(sim.gap_curve.t, wall.gap_curve.t, "{name}: record times");
+        assert_eq!(sim.gap_curve.v, wall.gap_curve.v, "{name}: record values");
+        // substrate markers survive: wall runs still report a duration
+        assert!(sim.wall.is_none() && wall.wall.is_some(), "{name}");
+        // hit accounting is internally consistent and someone delivered
+        assert_eq!(
+            sim.worker_hits.iter().sum::<u64>(),
+            sim.applied + sim.accumulated,
+            "{name}"
+        );
+        assert!(
+            sim.worker_hits[0] > 0,
+            "{name}: the fastest worker must land consumed gradients: {:?}",
+            sim.worker_hits
+        );
+    }
+}
+
+/// Deterministic mode is not sharding-specific: the classic §G noisy
+/// quadratic also reproduces bit-for-bit across substrates.
+#[test]
+fn deterministic_noisy_runs_are_bitwise_identical_across_substrates() {
+    let model = ComputeModel::random_paper(N);
+    let mut d = Driver::new(
+        Noisy::new(QuadraticProblem::paper(D), NOISE),
+        model.clone(),
+        DriverConfig {
+            seed: 11,
+            max_iters: 80,
+            record_every: 20,
+            ..Default::default()
+        },
+    );
+    let mut s1 = SchedulerKind::Ringmaster { r: 3, gamma: 0.3, cancel: true }.build();
+    let sim = d.run(s1.as_mut());
+
+    let problem = QuadraticProblem::paper(D);
+    let mut s2 = SchedulerKind::Ringmaster { r: 3, gamma: 0.3, cancel: true }.build();
+    let wall = run_wallclock(
+        &problem,
+        &model,
+        s2.as_mut(),
+        &ExecConfig {
+            time_scale: 1e-4,
+            max_iters: 80,
+            noise_sigma: NOISE,
+            seed: 11,
+            record_every: 20,
+            deterministic: true,
+            ..Default::default()
+        },
+    );
+    assert!(sim.iters > 0);
+    assert_eq!(sim.iters, wall.iters);
+    assert_eq!(sim.x_final, wall.x_final);
+    assert_eq!(sim.worker_hits, wall.worker_hits);
+    assert_eq!(sim.gap_curve.t, wall.gap_curve.t);
+    assert_eq!(sim.gap_curve.v, wall.gap_curve.v);
 }
 
 #[test]

@@ -123,7 +123,11 @@ fn mlp_sgd_improves_accuracy_over_init() {
     let mut rng = Prng::seed_from_u64(1);
     let mut g = vec![0.0; p.dim()];
     for _ in 0..60 {
-        p.stoch_grad(&x.clone(), &mut rng, &mut g);
+        p.stoch_grad(
+            &x.clone(),
+            ringmaster::opt::WorkerCtx { worker: 0, rng: &mut rng },
+            &mut g,
+        );
         ringmaster::linalg::axpy(-0.2, &g, &mut x);
     }
     let acc1 = p.accuracy(&x).unwrap();

@@ -9,17 +9,18 @@
 //! measured time tracks T_A, Ringmaster's tracks T_R, and the speedup
 //! T_A/T_R shows up in the measurements (who wins, by roughly what factor).
 //!
-//! The (profile × scheduler) measurement grid is assembled up front and
-//! fanned across the engine's sweep pool (`engine::sweep`), so the bench
-//! uses every core instead of running the 12 simulations serially.
+//! The (profile × scheduler) measurement grid is assembled up front as
+//! scenario cells and fanned across the sweep pool by the `scenario`
+//! orchestration layer, so the bench uses every core instead of running
+//! the 12 simulations serially.
 //!
 //! Quick scale: n=256.  RINGMASTER_BENCH_SCALE=full: n=6174.
 
 use ringmaster::bench_util::{bench_scale, Scale, Table};
 use ringmaster::complexity::{self};
 use ringmaster::coordinator::SchedulerKind;
-use ringmaster::engine::sweep::SweepJob;
 use ringmaster::experiments::{standard_profiles, sweep_quadratic, QuadExpConfig};
+use ringmaster::scenario::Cell;
 use ringmaster::sim::ComputeModel;
 use ringmaster::util::fmt_secs;
 
@@ -70,7 +71,7 @@ fn main() {
     // survive delays up to n), γ ≈ 1/(2RL) for Ringmaster (Thm 4.1),
     // γ ≈ 1/(2m*L) for Naive Optimal ASGD on its m* workers.
     let profiles = standard_profiles(n);
-    let mut jobs: Vec<SweepJob> = Vec::new();
+    let mut cells: Vec<Cell> = Vec::new();
     for (name, taus) in &profiles {
         let model = ComputeModel::Fixed { taus: taus.clone() };
         let gamma_asgd = 1.0 / (2.0 * n as f64 * c.l);
@@ -81,17 +82,17 @@ fn main() {
             SchedulerKind::Naive { m_star: m_star_naive, gamma: gamma_naive },
             SchedulerKind::Ringmaster { r, gamma, cancel: true },
         ] {
-            jobs.push(SweepJob {
-                label: name.clone(),
-                kind,
-                model: model.clone(),
-                seed: 0,
-            });
+            cells.push(base.cell(
+                name.clone(),
+                model.clone(),
+                &kind,
+                ringmaster::engine::ServerOpt::Sgd,
+            ));
         }
     }
-    let results = sweep_quadratic(&base, &jobs);
+    let results = sweep_quadratic(&base, &cells);
 
-    // results come back in job order, tagged with their profile label and
+    // results come back in cell order, tagged with their profile label and
     // scheduler kind — attribute by tag, not by position
     for (name, taus) in &profiles {
         let (t_r, m_star) = complexity::t_optimal(taus, c);
@@ -108,7 +109,7 @@ fn main() {
         let time_of = |pred: fn(&SchedulerKind) -> bool| {
             results
                 .iter()
-                .find(|res| res.label == *name && pred(&res.kind))
+                .find(|res| res.cell.model_label == *name && pred(&res.cell.scheduler.kind))
                 .and_then(|res| res.record.time_to_target())
         };
         let t_asgd_meas = time_of(|k| matches!(k, SchedulerKind::Asgd { .. }));

@@ -126,6 +126,35 @@ impl SchedulerKind {
     pub fn name(&self) -> String {
         self.build().name()
     }
+
+    /// The scheduler's stepsize.
+    pub fn gamma(&self) -> f64 {
+        match *self {
+            SchedulerKind::Ringmaster { gamma, .. }
+            | SchedulerKind::Asgd { gamma }
+            | SchedulerKind::DelayAdaptive { gamma }
+            | SchedulerKind::Rennala { gamma, .. }
+            | SchedulerKind::Buffered { gamma, .. }
+            | SchedulerKind::Naive { gamma, .. }
+            | SchedulerKind::Minibatch { gamma, .. } => gamma,
+        }
+    }
+
+    /// The same scheduler with its stepsize replaced — the γ axis of a
+    /// [`crate::scenario::GridAxes`] tuning grid.
+    pub fn with_gamma(&self, gamma: f64) -> SchedulerKind {
+        let mut kind = self.clone();
+        match &mut kind {
+            SchedulerKind::Ringmaster { gamma: g, .. }
+            | SchedulerKind::Asgd { gamma: g }
+            | SchedulerKind::DelayAdaptive { gamma: g }
+            | SchedulerKind::Rennala { gamma: g, .. }
+            | SchedulerKind::Buffered { gamma: g, .. }
+            | SchedulerKind::Naive { gamma: g, .. }
+            | SchedulerKind::Minibatch { gamma: g, .. } => *g = gamma,
+        }
+        kind
+    }
 }
 
 #[cfg(test)]

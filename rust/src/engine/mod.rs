@@ -29,8 +29,10 @@
 //!   curve/trace recording, and stopping logic. Every
 //!   [`crate::coordinator::SchedulerKind`] therefore behaves identically
 //!   on both substrates *by construction*.
-//! * [`sweep`] — a scoped-thread-pool fan-out for (scheduler × compute
-//!   model × seed) grids on top of the unified engine.
+//! * [`sweep`] — the scoped-thread-pool fan-out primitive (panic-
+//!   propagating, order-preserving, with streaming result emission) that
+//!   the [`crate::scenario`] orchestration layer builds its checkpointed,
+//!   shardable grids on.
 //!
 //! `driver::Driver::run` and `exec::run_wallclock` are thin shims over
 //! this module; both return the unified [`RunRecord`].
@@ -80,6 +82,11 @@ pub struct DriverConfig {
     /// Record per-worker execution spans (bounded ring buffer + running
     /// utilization totals). Off by default.
     pub record_trace: bool,
+    /// Record per-shard loss curves at every record point (fairness
+    /// diagnostics for [`crate::opt::Sharded`]-style problems; a no-op for
+    /// problems whose [`crate::opt::StochasticProblem::shard_losses`]
+    /// returns `None`). One extra full-data pass per record, off by default.
+    pub record_shard_losses: bool,
     /// Server-side update rule (default: the paper's plain SGD step).
     pub server_opt: ServerOpt,
 }
@@ -95,6 +102,7 @@ impl Default for DriverConfig {
             record_every: 100,
             record_update_times: false,
             record_trace: false,
+            record_shard_losses: false,
             server_opt: ServerOpt::Sgd,
         }
     }
@@ -126,6 +134,10 @@ pub struct RunRecord {
     pub cluster: ClusterStats,
     /// Timestamps of iterate updates (when `record_update_times`).
     pub update_times: Vec<f64>,
+    /// Per-shard loss curves (when `record_shard_losses` and the problem
+    /// is sharded): `shard_loss_curves[w]` is shard `w`'s own objective
+    /// vs source time — the fairness view the global `gap_curve` hides.
+    pub shard_loss_curves: Vec<Curve>,
     /// Per-worker execution trace (when `record_trace`).
     pub trace: Option<Trace>,
     /// Final iterate.
@@ -141,6 +153,16 @@ pub struct RunRecord {
 }
 
 impl RunRecord {
+    /// Time at which the run hit its `target_gap` (None if never, and
+    /// None for runs killed by the divergence guard — a transient dip
+    /// below the target on the way to +∞ is not convergence).
+    pub fn time_to_target(&self) -> Option<f64> {
+        if self.diverged {
+            return None;
+        }
+        self.gap_target.and_then(|tg| self.gap_curve.first_time_below(tg))
+    }
+
     /// Maximum duration of any `r` consecutive iterate updates — the
     /// quantity Lemma 4.1 bounds by `t(R)`.  Requires `record_update_times`.
     pub fn max_window_time(&self, r: usize) -> Option<f64> {
@@ -248,7 +270,7 @@ where
     let mut snap_fresh = true;
     let mut grad_buf = vec![0.0; dim];
     let mut acc = vec![0.0; dim];
-    let mut server = ServerOptState::new(cfg.server_opt.clone(), dim);
+    let mut server = ServerOptState::new(cfg.server_opt.clone(), dim, n);
     let mut trace = cfg.record_trace.then(|| Trace::new(n, 65_536));
     let mut cancel_spans: Vec<(usize, f64, u64)> = Vec::new();
     let mut acc_count = 0u64;
@@ -267,20 +289,37 @@ where
     // updates, so a fresh O(d) allocation per record would be hot-path
     // garbage on long runs
     let mut eval_scratch = vec![0.0; dim];
+    let mut shard_curves: Vec<Curve> = Vec::new();
+    /// The curves one evaluation point is pushed into (`shards` is `None`
+    /// unless `record_shard_losses` is set).
+    struct RecordSinks<'a> {
+        gap: &'a mut Curve,
+        gradnorm: &'a mut Curve,
+        shards: Option<&'a mut Vec<Curve>>,
+    }
     fn record<P: StochasticProblem + ?Sized>(
         x: &[f64],
         t: f64,
         problem: &mut P,
         f_star: Option<f64>,
         scratch: &mut [f64],
-        gap_c: &mut Curve,
-        gn_c: &mut Curve,
+        sinks: &mut RecordSinks<'_>,
     ) -> (f64, f64) {
         let v = problem.eval_value_grad(x, scratch);
         let gap = f_star.map(|fs| v - fs).unwrap_or(v);
         let gn = nrm2_sq(scratch);
-        gap_c.push_always(t, gap);
-        gn_c.push_always(t, gn);
+        sinks.gap.push_always(t, gap);
+        sinks.gradnorm.push_always(t, gn);
+        if let Some(curves) = sinks.shards.as_deref_mut() {
+            if let Some(losses) = problem.shard_losses(x) {
+                if curves.is_empty() {
+                    *curves = (0..losses.len()).map(|w| Curve::new(format!("shard{w}"))).collect();
+                }
+                for (c, &l) in curves.iter_mut().zip(&losses) {
+                    c.push_always(t, l);
+                }
+            }
+        }
         (gap, gn)
     }
     // initial record at t = 0
@@ -290,8 +329,11 @@ where
         &mut *problem,
         f_star,
         &mut eval_scratch,
-        &mut gap_curve,
-        &mut gradnorm_curve,
+        &mut RecordSinks {
+            gap: &mut gap_curve,
+            gradnorm: &mut gradnorm_curve,
+            shards: cfg.record_shard_losses.then_some(&mut shard_curves),
+        },
     );
 
     // initial assignments: active subset or everyone, at x^0
@@ -341,7 +383,7 @@ where
         }
         match decision {
             Decision::Step { gamma } => {
-                server.apply(&mut x, &grad_buf, gamma);
+                server.apply(&mut x, &grad_buf, gamma, Some(worker));
                 k += 1;
                 applied += 1;
                 stepped = true;
@@ -357,7 +399,9 @@ where
                     // the hot path
                     let inv = 1.0 / acc_count as f64;
                     crate::linalg::scale(inv, &mut acc);
-                    server.apply(&mut x, &acc, gamma);
+                    // a flushed batch mixes several workers' gradients, so
+                    // per-worker rescaling does not apply (worker = None)
+                    server.apply(&mut x, &acc, gamma, None);
                     acc.fill(0.0);
                     acc_count = 0;
                     k += 1;
@@ -433,8 +477,11 @@ where
                     &mut *problem,
                     f_star,
                     &mut eval_scratch,
-                    &mut gap_curve,
-                    &mut gradnorm_curve,
+                    &mut RecordSinks {
+                        gap: &mut gap_curve,
+                        gradnorm: &mut gradnorm_curve,
+                        shards: cfg.record_shard_losses.then_some(&mut shard_curves),
+                    },
                 );
                 last_gap = gap;
                 last_gn = gn;
@@ -468,8 +515,11 @@ where
         &mut *problem,
         f_star,
         &mut eval_scratch,
-        &mut gap_curve,
-        &mut gradnorm_curve,
+        &mut RecordSinks {
+            gap: &mut gap_curve,
+            gradnorm: &mut gradnorm_curve,
+            shards: cfg.record_shard_losses.then_some(&mut shard_curves),
+        },
     );
     if time_to_eps.is_none() {
         if let Some(eps) = cfg.eps {
@@ -493,6 +543,7 @@ where
         worker_hits,
         cluster: source.stats(),
         update_times,
+        shard_loss_curves: shard_curves,
         trace,
         x_final: x,
         final_gap,
@@ -522,6 +573,7 @@ mod tests {
             worker_hits: vec![],
             cluster: ClusterStats::default(),
             update_times: vec![1.0, 2.0, 7.0, 8.0],
+            shard_loss_curves: vec![],
             trace: None,
             x_final: vec![],
             final_gap: 0.0,

@@ -4,7 +4,8 @@
 //! servers often run a stateful optimizer over the incoming (stochastic,
 //! possibly stale) gradients.  [`ServerOpt`] abstracts the update
 //! `x ← update(x, g, γ)` so any scheduler can be combined with heavy-ball
-//! momentum or Adam without touching the scheduling logic.
+//! momentum, Adam, or heterogeneity-aware per-worker rescaling without
+//! touching the scheduling logic.
 //!
 //! The DriverConfig default is [`ServerOpt::Sgd`], which reproduces the
 //! paper's algorithms exactly.
@@ -20,6 +21,23 @@ pub enum ServerOpt {
     Momentum { beta: f64 },
     /// Adam (bias-corrected).
     Adam { beta1: f64, beta2: f64, eps: f64 },
+    /// Heterogeneity-aware per-worker stepsize rescaling à la Rescaled
+    /// ASGD (Mahran, Maranjyan & Richtárik 2025): worker `i`'s applied
+    /// update is scaled by the inverse of its *empirical* participation
+    /// rate, `η_i = (applied_total) / (n · applied_i)`, so under-
+    /// represented (slow) workers' data is not down-weighted by their
+    /// update frequency. The scale is clamped to `[1/max_scale, max_scale]`
+    /// for stability; the rate estimate is online (no τ oracle needed),
+    /// which keeps the rule valid under the universal computation model
+    /// where speeds change over time.
+    Rescaled { max_scale: f64 },
+}
+
+impl ServerOpt {
+    /// `Rescaled` with the default clamp (scales within 10× of plain SGD).
+    pub fn rescaled() -> Self {
+        ServerOpt::Rescaled { max_scale: 10.0 }
+    }
 }
 
 impl Default for ServerOpt {
@@ -35,17 +53,24 @@ pub struct ServerOptState {
     m: Vec<f64>,
     v: Vec<f64>,
     t: u64,
+    /// Per-worker applied-update counts (`Rescaled` only).
+    hits: Vec<u64>,
+    /// Running `Σ hits` so `scale_for` stays O(1) on the hot path.
+    hits_total: u64,
 }
 
 impl ServerOptState {
-    pub fn new(rule: ServerOpt, dim: usize) -> Self {
-        let needs = !matches!(rule, ServerOpt::Sgd);
+    pub fn new(rule: ServerOpt, dim: usize, n_workers: usize) -> Self {
+        let needs = matches!(rule, ServerOpt::Momentum { .. } | ServerOpt::Adam { .. });
         let is_adam = matches!(rule, ServerOpt::Adam { .. });
+        let rescaled = matches!(rule, ServerOpt::Rescaled { .. });
         Self {
             rule,
             m: if needs { vec![0.0; dim] } else { Vec::new() },
             v: if is_adam { vec![0.0; dim] } else { Vec::new() },
             t: 0,
+            hits: if rescaled { vec![0; n_workers] } else { Vec::new() },
+            hits_total: 0,
         }
     }
 
@@ -53,8 +78,32 @@ impl ServerOptState {
         &self.rule
     }
 
+    /// The stepsize multiplier `Rescaled` would apply to `worker`'s next
+    /// gradient (1.0 for every other rule, and for batched updates that
+    /// mix workers, signalled by `worker = None`).
+    pub fn scale_for(&self, worker: Option<usize>) -> f64 {
+        let (ServerOpt::Rescaled { max_scale }, Some(w)) = (&self.rule, worker) else {
+            return 1.0;
+        };
+        let total = self.hits_total;
+        let n = self.hits.len() as f64;
+        // Laplace-smoothed participation estimate: one phantom update per
+        // worker, so the very first step of a run is at scale exactly 1
+        // rather than at the clamp boundary
+        let rate = (total as f64 + n) / (n * (self.hits[w] + 1) as f64);
+        // a clamp band below 1 (or NaN) would be an inverted clamp — a
+        // misconfigured max_scale degrades to plain SGD instead of
+        // panicking mid-sweep
+        let hi = max_scale.max(1.0);
+        rate.clamp(1.0 / hi, hi)
+    }
+
     /// Apply one update `x ← update(x, g, γ)`.
-    pub fn apply(&mut self, x: &mut [f64], g: &[f64], gamma: f64) {
+    ///
+    /// `worker` is the identity of the worker whose gradient `g` is (used
+    /// by [`ServerOpt::Rescaled`]); pass `None` for batched updates whose
+    /// accumulator mixes several workers.
+    pub fn apply(&mut self, x: &mut [f64], g: &[f64], gamma: f64, worker: Option<usize>) {
         match self.rule {
             ServerOpt::Sgd => axpy(-gamma, g, x),
             ServerOpt::Momentum { beta } => {
@@ -75,6 +124,14 @@ impl ServerOptState {
                     x[i] -= gamma * mhat / (vhat.sqrt() + eps);
                 }
             }
+            ServerOpt::Rescaled { .. } => {
+                let scale = self.scale_for(worker);
+                axpy(-gamma * scale, g, x);
+                if let Some(w) = worker {
+                    self.hits[w] += 1;
+                    self.hits_total += 1;
+                }
+            }
         }
     }
 }
@@ -88,10 +145,10 @@ mod tests {
         let p = QuadraticProblem::paper(32);
         let mut x = p.init_point();
         let mut g = vec![0.0; 32];
-        let mut opt = ServerOptState::new(rule, 32);
+        let mut opt = ServerOptState::new(rule, 32, 1);
         for _ in 0..iters {
             p.value_grad(&x, &mut g);
-            opt.apply(&mut x, &g, gamma);
+            opt.apply(&mut x, &g, gamma, Some(0));
         }
         p.value(&x) - p.f_star().unwrap()
     }
@@ -100,8 +157,8 @@ mod tests {
     fn sgd_matches_axpy() {
         let mut x = vec![1.0, 2.0];
         let g = vec![0.5, -0.5];
-        let mut opt = ServerOptState::new(ServerOpt::Sgd, 2);
-        opt.apply(&mut x, &g, 0.1);
+        let mut opt = ServerOptState::new(ServerOpt::Sgd, 2, 4);
+        opt.apply(&mut x, &g, 0.1, Some(3));
         assert_eq!(x, vec![0.95, 2.05]);
     }
 
@@ -127,5 +184,72 @@ mod tests {
         let a = optimize(ServerOpt::Sgd, 0.3, 100);
         let b = optimize(ServerOpt::Momentum { beta: 0.0 }, 0.3, 100);
         assert!((a - b).abs() < 1e-12);
+    }
+
+    #[test]
+    fn rescaled_upweights_underrepresented_workers() {
+        // worker 0 applies 9 updates, worker 1 one: by then worker 1's
+        // empirical participation is far below the uniform 1/2, so its
+        // gradient must be scaled up, and worker 0's down
+        let mut opt = ServerOptState::new(ServerOpt::rescaled(), 1, 2);
+        let mut x = vec![0.0];
+        for _ in 0..9 {
+            opt.apply(&mut x, &[1.0], 0.1, Some(0));
+        }
+        let fast_scale = opt.scale_for(Some(0));
+        let slow_scale = opt.scale_for(Some(1));
+        assert!(slow_scale > 1.0, "slow worker scale {slow_scale}");
+        assert!(fast_scale < 1.0, "fast worker scale {fast_scale}");
+        // Laplace-smoothed: (9+2)/(2·(0+1)) = 5.5 and (9+2)/(2·(9+1)) = 0.55
+        assert!((slow_scale - 5.5).abs() < 1e-12, "{slow_scale}");
+        assert!((fast_scale - 0.55).abs() < 1e-12, "{fast_scale}");
+        // batched updates (mixed workers) are never rescaled
+        assert_eq!(opt.scale_for(None), 1.0);
+    }
+
+    #[test]
+    fn rescaled_clamps_to_max_scale() {
+        let mut opt = ServerOptState::new(ServerOpt::Rescaled { max_scale: 3.0 }, 1, 2);
+        let mut x = vec![0.0];
+        for _ in 0..1000 {
+            opt.apply(&mut x, &[0.0], 0.1, Some(0));
+        }
+        assert_eq!(opt.scale_for(Some(1)), 3.0);
+        assert!(opt.scale_for(Some(0)) >= 1.0 / 3.0);
+    }
+
+    #[test]
+    fn rescaled_degenerate_max_scale_does_not_panic() {
+        // max_scale < 1 would invert the clamp band; it must degrade to
+        // plain SGD (scale 1), not panic inside a sweep worker
+        let mut opt = ServerOptState::new(ServerOpt::Rescaled { max_scale: 0.5 }, 1, 2);
+        let mut x = vec![0.0];
+        for _ in 0..10 {
+            opt.apply(&mut x, &[1.0], 0.1, Some(0));
+        }
+        assert_eq!(opt.scale_for(Some(0)), 1.0);
+        assert_eq!(opt.scale_for(Some(1)), 1.0);
+    }
+
+    #[test]
+    fn rescaled_converges_and_scales_settle_on_a_balanced_stream() {
+        // perfectly balanced round-robin arrivals: the participation
+        // estimate settles at the uniform rate, so every worker's scale
+        // ends ≈ 1 and the optimizer behaves like plain SGD
+        let p = QuadraticProblem::paper(16);
+        let mut x = p.init_point();
+        let mut g = vec![0.0; 16];
+        let mut res = ServerOptState::new(ServerOpt::rescaled(), 16, 4);
+        for k in 0..400 {
+            p.value_grad(&x, &mut g);
+            res.apply(&mut x, &g, 0.2, Some(k % 4));
+        }
+        for w in 0..4 {
+            let s = res.scale_for(Some(w));
+            assert!((s - 1.0).abs() < 0.05, "worker {w} scale {s}");
+        }
+        let gap = p.value(&x) - p.f_star().unwrap();
+        let gap0 = p.value(&p.init_point()) - p.f_star().unwrap();
+        assert!(gap < 0.5 * gap0, "no descent: gap {gap} (from {gap0})");
     }
 }

@@ -1,20 +1,25 @@
-//! Parallel sweep runner: fan (scheduler × compute model × seed) grids
-//! across a scoped thread pool.
+//! The scoped-thread-pool fan-out primitive behind every grid runner.
 //!
 //! Every run through the unified engine is self-contained (its own
 //! problem, cluster and RNG streams, all derived from an explicit seed),
 //! so grid points are embarrassingly parallel and bit-identical to their
-//! serial counterparts. [`parallel_map`] is the primitive; [`SweepJob`] /
-//! [`run_sweep`] layer a labelled grid on top. Used by
-//! `experiments::tune_stepsize`, `experiments::sweep_quadratic`, the
-//! paper-table benches and the CLI.
+//! serial counterparts. [`parallel_map`] preserves input order in the
+//! output; [`parallel_map_streaming`] additionally emits each result to a
+//! sink *as it completes* (in completion order), which is what lets the
+//! [`crate::scenario`] checkpoint journal persist finished grid cells
+//! while slower cells are still running.
+//!
+//! A panicking worker no longer poisons a per-slot mutex and surfaces as a
+//! confusing `expect(..)`: the first panic payload is captured, the
+//! remaining workers drain, and the original panic is re-raised on the
+//! calling thread via [`std::panic::resume_unwind`]. Result slots are
+//! written by the single collecting thread, so they are plain
+//! `Option<R>`s — no per-slot lock at all.
 
-use std::sync::atomic::{AtomicUsize, Ordering};
-use std::sync::Mutex;
-
-use super::RunRecord;
-use crate::coordinator::SchedulerKind;
-use crate::sim::ComputeModel;
+use std::ops::ControlFlow;
+use std::panic::{catch_unwind, resume_unwind, AssertUnwindSafe};
+use std::sync::atomic::{AtomicBool, AtomicUsize, Ordering};
+use std::sync::{mpsc, Mutex};
 
 /// Worker-thread count: `RINGMASTER_SWEEP_THREADS` or the machine's
 /// available parallelism.
@@ -35,100 +40,115 @@ pub fn sweep_threads() -> usize {
 ///
 /// Falls back to a serial loop for single-item/single-thread cases, so the
 /// result is identical either way (`f` must be deterministic per item, which
-/// every seeded engine run is).
+/// every seeded engine run is). If any invocation of `f` panics, the panic
+/// is propagated to the caller with its original payload.
 pub fn parallel_map<T, R, F>(items: &[T], f: F) -> Vec<R>
 where
     T: Sync,
     R: Send,
     F: Fn(usize, &T) -> R + Sync,
 {
+    parallel_map_streaming(items, f, |_, _| ControlFlow::Continue(()))
+        .into_iter()
+        .map(|s| s.expect("sink never breaks, so every item completed"))
+        .collect()
+}
+
+/// [`parallel_map`] that additionally streams each `(index, result)` pair
+/// into `sink` the moment the result lands, while other items are still in
+/// flight.
+///
+/// `sink` runs on the calling thread, so it may hold `&mut` state (e.g. an
+/// open checkpoint journal) without synchronization. It is invoked in
+/// *completion* order, which is nondeterministic under parallelism — the
+/// returned `Vec` is always in input order. Returning
+/// [`ControlFlow::Break`] from the sink (e.g. the journal hit a disk
+/// error) halts the pool: no new items start, in-flight items finish, the
+/// sink is not called again, and the never-started items come back as
+/// `None` — so a persistent-sink failure costs at most one in-flight item
+/// per thread instead of the rest of the grid. On a worker panic no new
+/// items start; items already in flight still finish and still reach the
+/// sink (a checkpoint journal keeps every cell that completed), and the
+/// first panic is re-raised once the pool drains.
+pub fn parallel_map_streaming<T, R, F, S>(items: &[T], f: F, mut sink: S) -> Vec<Option<R>>
+where
+    T: Sync,
+    R: Send,
+    F: Fn(usize, &T) -> R + Sync,
+    S: FnMut(usize, &R) -> ControlFlow<()>,
+{
     let threads = sweep_threads().min(items.len());
+    let mut slots: Vec<Option<R>> = Vec::with_capacity(items.len());
+    slots.resize_with(items.len(), || None);
     if threads <= 1 {
-        return items.iter().enumerate().map(|(i, t)| f(i, t)).collect();
+        for (i, t) in items.iter().enumerate() {
+            let r = f(i, t);
+            let flow = sink(i, &r);
+            slots[i] = Some(r);
+            if flow.is_break() {
+                break;
+            }
+        }
+        return slots;
     }
     let next = AtomicUsize::new(0);
-    let slots: Vec<Mutex<Option<R>>> = items.iter().map(|_| Mutex::new(None)).collect();
+    // set on worker panic or sink break: no further items are handed out
+    let halt = AtomicBool::new(false);
+    // first panic payload wins; later panics are dropped (they are almost
+    // always the same root cause hit by several workers)
+    let panic_slot: Mutex<Option<Box<dyn std::any::Any + Send>>> = Mutex::new(None);
+    let (tx, rx) = mpsc::channel::<(usize, R)>();
     std::thread::scope(|scope| {
         for _ in 0..threads {
-            scope.spawn(|| loop {
+            let tx = tx.clone();
+            let (next, halt, panic_slot, f) = (&next, &halt, &panic_slot, &f);
+            scope.spawn(move || loop {
+                if halt.load(Ordering::Relaxed) {
+                    break;
+                }
                 let i = next.fetch_add(1, Ordering::Relaxed);
                 if i >= items.len() {
                     break;
                 }
-                let r = f(i, &items[i]);
-                *slots[i].lock().unwrap() = Some(r);
+                match catch_unwind(AssertUnwindSafe(|| f(i, &items[i]))) {
+                    Ok(r) => {
+                        if tx.send((i, r)).is_err() {
+                            break;
+                        }
+                    }
+                    Err(payload) => {
+                        let mut slot = panic_slot.lock().unwrap_or_else(|p| p.into_inner());
+                        if slot.is_none() {
+                            *slot = Some(payload);
+                        }
+                        halt.store(true, Ordering::Relaxed);
+                        break;
+                    }
+                }
             });
         }
-    });
-    slots
-        .into_iter()
-        .map(|m| {
-            m.into_inner()
-                .unwrap()
-                .expect("sweep worker filled every slot")
-        })
-        .collect()
-}
-
-/// One grid point: which scheduler, on which cluster, from which seed.
-#[derive(Clone, Debug)]
-pub struct SweepJob {
-    /// Free-form label (e.g. the τ-profile name) carried to the result.
-    pub label: String,
-    pub kind: SchedulerKind,
-    pub model: ComputeModel,
-    pub seed: u64,
-}
-
-/// One completed grid point.
-#[derive(Clone, Debug)]
-pub struct SweepResult {
-    pub label: String,
-    pub kind: SchedulerKind,
-    pub seed: u64,
-    pub record: RunRecord,
-}
-
-/// Build the full (scheduler × model × seed) cross product.
-pub fn grid(
-    kinds: &[SchedulerKind],
-    models: &[(String, ComputeModel)],
-    seeds: &[u64],
-) -> Vec<SweepJob> {
-    let mut jobs = Vec::with_capacity(kinds.len() * models.len() * seeds.len());
-    for (label, model) in models {
-        for kind in kinds {
-            for &seed in seeds {
-                jobs.push(SweepJob {
-                    label: label.clone(),
-                    kind: kind.clone(),
-                    model: model.clone(),
-                    seed,
-                });
+        drop(tx);
+        // collect on the calling thread: stream to the sink as results
+        // land; `recv` errors out once every worker has hung up
+        let mut sink_open = true;
+        while let Ok((i, r)) = rx.recv() {
+            if sink_open && sink(i, &r).is_break() {
+                sink_open = false;
+                halt.store(true, Ordering::Relaxed);
             }
+            slots[i] = Some(r);
         }
+    });
+    if let Some(payload) = panic_slot.into_inner().unwrap_or_else(|p| p.into_inner()) {
+        resume_unwind(payload);
     }
-    jobs
-}
-
-/// Execute every job in parallel through `run` (typically a closure over
-/// `experiments::run_quadratic` or a custom engine invocation), preserving
-/// job order.
-pub fn run_sweep<F>(jobs: &[SweepJob], run: F) -> Vec<SweepResult>
-where
-    F: Fn(&SweepJob) -> RunRecord + Sync,
-{
-    parallel_map(jobs, |_, job| SweepResult {
-        label: job.label.clone(),
-        kind: job.kind.clone(),
-        seed: job.seed,
-        record: run(job),
-    })
+    slots
 }
 
 #[cfg(test)]
 mod tests {
     use super::*;
+    use std::sync::atomic::AtomicU64;
 
     #[test]
     fn parallel_map_preserves_order() {
@@ -148,24 +168,98 @@ mod tests {
     }
 
     #[test]
-    fn grid_is_full_cross_product() {
-        let kinds = vec![
-            SchedulerKind::Asgd { gamma: 0.1 },
-            SchedulerKind::Rennala { b: 2, gamma: 0.1 },
-        ];
-        let models = vec![
-            ("a".to_string(), ComputeModel::fixed_equal(2, 1.0)),
-            ("b".to_string(), ComputeModel::fixed_linear(2)),
-        ];
-        let jobs = grid(&kinds, &models, &[0, 1, 2]);
-        assert_eq!(jobs.len(), 12);
-        assert_eq!(jobs[0].label, "a");
-        assert_eq!(jobs.last().unwrap().label, "b");
+    fn streaming_sink_sees_every_result_exactly_once() {
+        let items: Vec<u64> = (0..40).collect();
+        let mut seen = vec![0u32; items.len()];
+        let mut sum = 0u64;
+        let out = parallel_map_streaming(
+            &items,
+            |_, &x| x * 3,
+            |i, &r| {
+                seen[i] += 1;
+                sum += r;
+                ControlFlow::Continue(())
+            },
+        );
+        let got: Vec<u64> = out.into_iter().map(|s| s.unwrap()).collect();
+        assert_eq!(got, (0..40).map(|x| x * 3).collect::<Vec<_>>());
+        assert!(seen.iter().all(|&c| c == 1), "{seen:?}");
+        assert_eq!(sum, (0..40).map(|x| x * 3).sum::<u64>());
+    }
+
+    #[test]
+    fn sink_break_halts_the_pool_without_panicking() {
+        let items: Vec<u64> = (0..200).collect();
+        let mut sink_calls = 0u32;
+        let out = parallel_map_streaming(
+            &items,
+            |_, &x| x,
+            |_, _| {
+                sink_calls += 1;
+                if sink_calls >= 3 {
+                    ControlFlow::Break(())
+                } else {
+                    ControlFlow::Continue(())
+                }
+            },
+        );
+        // the sink is never called again after it breaks ...
+        assert_eq!(sink_calls, 3);
+        // ... and the pool returns cleanly with a full-length slot vector
+        assert_eq!(out.len(), items.len());
+        assert!(out.iter().filter(|s| s.is_some()).count() >= 3);
+    }
+
+    #[test]
+    fn worker_panic_propagates_with_original_payload() {
+        let items: Vec<usize> = (0..32).collect();
+        let caught = catch_unwind(AssertUnwindSafe(|| {
+            parallel_map(&items, |_, &x| {
+                if x == 13 {
+                    panic!("boom at {x}");
+                }
+                x
+            })
+        }));
+        let payload = caught.expect_err("panic must propagate");
+        let msg = payload
+            .downcast_ref::<String>()
+            .cloned()
+            .unwrap_or_default();
+        assert!(msg.contains("boom at 13"), "payload was: {msg}");
+    }
+
+    #[test]
+    fn panic_does_not_hang_the_pool_and_sink_keeps_prior_results() {
+        // all other workers must drain even though one slot never fills
+        let items: Vec<usize> = (0..64).collect();
+        let emitted = AtomicU64::new(0);
+        let caught = catch_unwind(AssertUnwindSafe(|| {
+            parallel_map_streaming(
+                &items,
+                |_, &x| {
+                    if x == 0 {
+                        panic!("early casualty");
+                    }
+                    x
+                },
+                |_, _| {
+                    emitted.fetch_add(1, Ordering::Relaxed);
+                    ControlFlow::Continue(())
+                },
+            )
+        }));
+        assert!(caught.is_err());
+        // results that completed before the pool noticed the panic were
+        // streamed; the panicked slot never was
+        assert!(emitted.load(Ordering::Relaxed) < 64);
     }
 
     #[test]
     fn parallel_matches_serial_engine_runs() {
         use crate::driver::{Driver, DriverConfig};
+        use crate::coordinator::SchedulerKind;
+        use crate::sim::ComputeModel;
         let run_one = |seed: u64| {
             let mut d = Driver::new(
                 crate::opt::Noisy::new(crate::opt::QuadraticProblem::paper(8), 0.01),

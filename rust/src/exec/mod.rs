@@ -92,6 +92,7 @@ impl ExecConfig {
             record_every: self.record_every,
             record_update_times: false,
             record_trace: self.record_trace,
+            record_shard_losses: false,
             server_opt: self.server_opt.clone(),
         }
     }

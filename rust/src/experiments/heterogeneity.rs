@@ -2,19 +2,20 @@
 //!
 //! The paper's homogeneity assumption (every worker samples the same
 //! distribution) is exactly what Ringleader ASGD relaxes. This module
-//! studies the seven schedulers under controlled heterogeneity: a
+//! studies the schedulers under controlled heterogeneity: a
 //! synthetic-MNIST binary logistic task whose samples are label-skew
-//! partitioned across workers with [`crate::data::partition::label_skew`]
-//! — `α = ∞` is the IID baseline, `α = 0.1` near single-class shards —
-//! fanned across the [`crate::engine::sweep`] thread pool and emitted as
-//! long-form CSV (one row per grid point) for downstream analysis.
+//! partitioned across workers — `α = ∞` is the IID baseline, `α = 0.1`
+//! near single-class shards.
+//!
+//! [`HetConfig`] is only the *description* of the study; execution is the
+//! [`crate::scenario`] orchestration layer ([`HetConfig::grid_spec`]
+//! expands the matrix into content-keyed cells), which is what makes the
+//! CLI `sweep` checkpointed (`--journal`), resumable, and shardable
+//! (`--shard i/n`). Fairness metrics (per-shard loss curves) are recorded
+//! for every cell and summarized into the sweep CSV's trailing columns.
 
 use crate::coordinator::SchedulerKind;
-use crate::data::partition::{self, Partition};
-use crate::data::{synthetic_mnist, Dataset, N_CLASSES};
-use crate::driver::{Driver, DriverConfig, RunRecord};
-use crate::engine::sweep::parallel_map;
-use crate::opt::{LogisticProblem, Sharded};
+use crate::scenario::{GridAxes, GridSpec, ProblemSpec, RunBudget, SchedSpec};
 use crate::sim::ComputeModel;
 
 /// Grid + problem knobs of one heterogeneity study.
@@ -32,7 +33,9 @@ pub struct HetConfig {
     /// Dirichlet concentrations; non-finite values mean IID.
     pub alphas: Vec<f64>,
     pub seeds: Vec<u64>,
-    pub schedulers: Vec<SchedulerKind>,
+    /// Server policies (optionally with a non-SGD server optimizer, e.g.
+    /// Rescaled-ASGD's per-worker stepsize rescaling).
+    pub schedulers: Vec<SchedSpec>,
 }
 
 impl HetConfig {
@@ -49,125 +52,52 @@ impl HetConfig {
             alphas: vec![f64::INFINITY, 1.0, 0.1],
             seeds: vec![0, 1],
             schedulers: vec![
-                SchedulerKind::Ringmaster { r: 16, gamma, cancel: true },
-                SchedulerKind::Rennala { b: 8, gamma },
-                SchedulerKind::Asgd { gamma },
+                SchedulerKind::Ringmaster { r: 16, gamma, cancel: true }.into(),
+                SchedulerKind::Rennala { b: 8, gamma }.into(),
+                SchedulerKind::Asgd { gamma }.into(),
             ],
         }
     }
-}
 
-/// One completed grid point.
-#[derive(Clone, Debug)]
-pub struct HetCell {
-    pub scheduler: String,
-    pub alpha: f64,
-    pub seed: u64,
-    /// Realized label concentration of the partition (mean max-class
-    /// fraction per shard — 1/C for IID, → 1 for single-class shards).
-    pub concentration: f64,
-    pub record: RunRecord,
-}
-
-/// Build the partition for one grid point. `α = ∞` degenerates to IID.
-pub fn alpha_partition(labels: &[u8], n_workers: usize, alpha: f64, seed: u64) -> Partition {
-    partition::label_skew(labels, N_CLASSES, n_workers, alpha, seed ^ 0x5EED)
-}
-
-/// Run the full (scheduler × α × seed) grid in parallel on the sweep
-/// pool, preserving grid order (schedulers outermost, seeds innermost).
-pub fn heterogeneity_matrix(cfg: &HetConfig) -> Vec<HetCell> {
-    // dataset + objective depend only on the seed: build each once and
-    // share across the grid (the synthetic-MNIST generation and the
-    // pixel f32→f64 conversion dominate cell setup; the per-cell clone
-    // of the problem is a single memcpy)
-    let per_seed: Vec<(u64, Dataset, LogisticProblem)> = cfg
-        .seeds
-        .iter()
-        .map(|&seed| {
-            let ds = synthetic_mnist(cfg.n_data, 0.15, seed);
-            let problem = LogisticProblem::from_dataset(&ds, cfg.lambda);
-            (seed, ds, problem)
-        })
-        .collect();
-    let mut jobs: Vec<(SchedulerKind, f64, usize)> = Vec::new();
-    for kind in &cfg.schedulers {
-        for &alpha in &cfg.alphas {
-            for si in 0..per_seed.len() {
-                jobs.push((kind.clone(), alpha, si));
-            }
-        }
-    }
-    parallel_map(&jobs, |_, (kind, alpha, si)| {
-        let (seed, ds, problem) = &per_seed[*si];
-        let part = alpha_partition(&ds.labels, cfg.n_workers, *alpha, *seed);
-        let concentration = part.label_concentration(&ds.labels, N_CLASSES);
-        let sharded = Sharded::new(problem.clone(), part, cfg.batch);
-        let mut driver = Driver::new(
-            sharded,
-            ComputeModel::random_paper(cfg.n_workers),
-            DriverConfig {
-                seed: *seed,
-                max_iters: cfg.max_iters,
-                record_every: cfg.record_every,
+    /// Expand the study into a scenario grid (schedulers outermost, then
+    /// α, seeds innermost — the historical matrix order), with per-shard
+    /// fairness recording enabled.
+    pub fn grid_spec(&self) -> GridSpec {
+        GridSpec::new(
+            &GridAxes {
+                schedulers: self.schedulers.clone(),
+                gammas: vec![],
+                models: vec![(
+                    "paper".to_string(),
+                    ComputeModel::random_paper(self.n_workers),
+                )],
+                problems: self
+                    .alphas
+                    .iter()
+                    .map(|&alpha| ProblemSpec::ShardedLogistic {
+                        n_data: self.n_data,
+                        n_workers: self.n_workers,
+                        batch: self.batch,
+                        lambda: self.lambda,
+                        alpha,
+                    })
+                    .collect(),
+                seeds: self.seeds.clone(),
+            },
+            RunBudget {
+                max_iters: self.max_iters,
+                record_every: self.record_every,
+                record_shard_losses: true,
                 ..Default::default()
             },
-        );
-        let mut sched = kind.build();
-        let record = driver.run(sched.as_mut());
-        HetCell {
-            scheduler: kind.name(),
-            alpha: *alpha,
-            seed: *seed,
-            concentration,
-            record,
-        }
-    })
-}
-
-fn fmt_alpha(alpha: f64) -> String {
-    if alpha.is_finite() {
-        format!("{alpha}")
-    } else {
-        "inf".to_string()
+        )
     }
-}
-
-/// Long-form CSV: one row per (scheduler, α, seed) grid point.
-pub fn het_csv(cells: &[HetCell]) -> String {
-    let mut out = String::from(
-        "scheduler,alpha,seed,concentration,iters,sim_time,final_loss,\
-         final_gradnorm_sq,applied,accumulated,discarded,cancellations,\
-         min_worker_hits,max_worker_hits\n",
-    );
-    for c in cells {
-        let r = &c.record;
-        let min_hits = r.worker_hits.iter().copied().min().unwrap_or(0);
-        let max_hits = r.worker_hits.iter().copied().max().unwrap_or(0);
-        out.push_str(&format!(
-            "{},{},{},{:.4},{},{:.4},{:.6e},{:.6e},{},{},{},{},{},{}\n",
-            c.scheduler,
-            fmt_alpha(c.alpha),
-            c.seed,
-            c.concentration,
-            r.iters,
-            r.sim_time,
-            r.final_gap,
-            r.final_gradnorm_sq,
-            r.applied,
-            r.accumulated,
-            r.discarded,
-            r.cluster.cancellations,
-            min_hits,
-            max_hits,
-        ));
-    }
-    out
 }
 
 #[cfg(test)]
 mod tests {
     use super::*;
+    use crate::scenario::{self, ShardSel};
 
     fn tiny() -> HetConfig {
         HetConfig {
@@ -180,53 +110,67 @@ mod tests {
             alphas: vec![f64::INFINITY, 0.1],
             seeds: vec![0],
             schedulers: vec![
-                SchedulerKind::Ringmaster { r: 4, gamma: 0.02, cancel: true },
-                SchedulerKind::Rennala { b: 2, gamma: 0.02 },
+                SchedulerKind::Ringmaster { r: 4, gamma: 0.02, cancel: true }.into(),
+                SchedulerKind::Rennala { b: 2, gamma: 0.02 }.into(),
             ],
         }
     }
 
     #[test]
     fn matrix_covers_the_grid_in_order() {
-        let cfg = tiny();
-        let cells = heterogeneity_matrix(&cfg);
-        assert_eq!(cells.len(), 4); // 2 schedulers × 2 α × 1 seed
-        assert_eq!(cells[0].scheduler, cells[1].scheduler);
-        assert!(cells[0].alpha.is_infinite() && cells[1].alpha == 0.1);
-        for c in &cells {
-            assert!(c.record.iters > 0, "{} α={} made no progress", c.scheduler, c.alpha);
+        let spec = tiny().grid_spec();
+        let run = scenario::run_grid(&spec, ShardSel::ALL, None, None).unwrap();
+        assert!(run.is_complete());
+        assert_eq!(run.rows.len(), 4); // 2 schedulers × 2 α × 1 seed
+        let (c0, s0) = &run.rows[0];
+        let (c1, s1) = &run.rows[1];
+        assert_eq!(c0.scheduler, c1.scheduler);
+        assert!(c0.problem.alpha().unwrap().is_infinite());
+        assert_eq!(c1.problem.alpha(), Some(0.1));
+        for (c, s) in &run.rows {
             assert!(
-                c.record.worker_hits.iter().sum::<u64>()
-                    == c.record.applied + c.record.accumulated
+                s.iters > 0,
+                "{} α={:?} made no progress",
+                c.scheduler.name(),
+                c.problem.alpha()
             );
+            assert_eq!(
+                s.worker_hits.iter().sum::<u64>(),
+                s.applied + s.accumulated
+            );
+            // fairness metrics recorded for every sharded cell
+            assert_eq!(s.shard_final_losses.len(), 4);
+            assert!(s.shard_final_losses.iter().all(|l| l.is_finite()));
         }
         // skewed partitions are measurably more concentrated than IID
-        assert!(cells[1].concentration > cells[0].concentration + 0.1);
+        assert!(s1.concentration.unwrap() > s0.concentration.unwrap() + 0.1);
     }
 
     #[test]
     fn csv_is_long_form_one_row_per_cell() {
-        let cfg = tiny();
-        let cells = heterogeneity_matrix(&cfg);
-        let csv = het_csv(&cells);
+        let spec = tiny().grid_spec();
+        let run = scenario::run_grid(&spec, ShardSel::ALL, None, None).unwrap();
+        let csv = scenario::grid_csv(&run.rows);
         let lines: Vec<&str> = csv.trim_end().lines().collect();
-        assert_eq!(lines.len(), 1 + cells.len());
+        assert_eq!(lines.len(), 1 + run.rows.len());
         assert!(lines[0].starts_with("scheduler,alpha,seed,concentration"));
+        assert!(lines[0].ends_with("shard_loss_min,shard_loss_max,shard_loss_spread"));
         assert!(lines[1].contains("ringmaster"));
         assert!(lines.iter().skip(1).any(|l| l.contains(",inf,")));
         assert!(lines.iter().skip(1).any(|l| l.contains(",0.1,")));
-        // every data row has the full column count
+        // every data row has the full column count, fairness included
         let n_cols = lines[0].split(',').count();
         for l in &lines[1..] {
             assert_eq!(l.split(',').count(), n_cols, "{l}");
+            assert!(!l.ends_with(','), "fairness columns must be filled: {l}");
         }
     }
 
     #[test]
     fn matrix_is_deterministic() {
-        let cfg = tiny();
-        let a = heterogeneity_matrix(&cfg);
-        let b = heterogeneity_matrix(&cfg);
+        let spec = tiny().grid_spec();
+        let a = scenario::run_cells(&spec);
+        let b = scenario::run_cells(&spec);
         for (x, y) in a.iter().zip(&b) {
             assert_eq!(x.record.iters, y.record.iters);
             assert_eq!(x.record.x_final, y.record.x_final);

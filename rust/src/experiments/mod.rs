@@ -3,15 +3,18 @@
 //!
 //! Each function reproduces one table/figure of the paper (see DESIGN.md's
 //! experiment index) and returns structured results; printing/CSV output is
-//! layered on top so benches and the CLI stay in sync.
+//! layered on top so benches and the CLI stay in sync. All grid execution
+//! (stepsize tuning, quadratic sweeps, the heterogeneity matrix) goes
+//! through the [`crate::scenario`] orchestration layer.
 
 pub mod heterogeneity;
 
 use crate::complexity::{self, Constants};
 use crate::coordinator::SchedulerKind;
-use crate::driver::{Driver, DriverConfig, RunRecord};
-use crate::engine::sweep::{self, SweepJob, SweepResult};
-use crate::opt::{Noisy, Problem, QuadraticProblem};
+use crate::driver::RunRecord;
+use crate::engine::ServerOpt;
+use crate::opt::{Problem, QuadraticProblem};
+use crate::scenario::{self, Cell, CellOutcome, GridSpec, ProblemSpec, RunBudget, SchedSpec};
 use crate::sim::ComputeModel;
 
 /// Common quadratic-experiment configuration (§G defaults).
@@ -69,34 +72,76 @@ impl QuadExpConfig {
             eps,
         )
     }
+
+    /// The scenario problem axis this configuration describes.
+    pub fn problem_spec(&self) -> ProblemSpec {
+        ProblemSpec::Quadratic {
+            d: self.d,
+            noise_sigma: self.noise_sigma,
+        }
+    }
+
+    /// The scenario run budget this configuration describes.
+    pub fn budget(&self) -> RunBudget {
+        RunBudget {
+            max_iters: self.max_iters,
+            max_time: self.max_time,
+            record_every: self.record_every,
+            target_gap: self.target_gap,
+            eps: None,
+            record_shard_losses: false,
+        }
+    }
+
+    /// One grid cell of this configuration (seed from `self.seed`).
+    pub fn cell(
+        &self,
+        label: impl Into<String>,
+        model: ComputeModel,
+        kind: &SchedulerKind,
+        server_opt: ServerOpt,
+    ) -> Cell {
+        Cell {
+            scheduler: SchedSpec {
+                kind: kind.clone(),
+                server_opt,
+            },
+            model_label: label.into(),
+            model,
+            problem: self.problem_spec(),
+            seed: self.seed,
+        }
+    }
 }
 
-/// Run one scheduler on the §G quadratic under the given compute model.
+/// Run one scheduler on the §G quadratic under the given compute model —
+/// a one-cell invocation of the [`scenario`] runner, so ad-hoc runs and
+/// grid cells go down the identical path.
 pub fn run_quadratic(
     cfg: &QuadExpConfig,
     model: ComputeModel,
     kind: &SchedulerKind,
 ) -> RunRecord {
-    let problem = Noisy::new(QuadraticProblem::paper(cfg.d), cfg.noise_sigma);
-    let dcfg = DriverConfig {
-        seed: cfg.seed,
-        eps: None,
-        target_gap: cfg.target_gap,
-        max_time: cfg.max_time,
-        max_iters: cfg.max_iters,
-        record_every: cfg.record_every,
-        ..Default::default()
-    };
-    let mut driver = Driver::new(problem, model, dcfg);
-    let mut sched = kind.build();
-    driver.run(sched.as_mut())
+    run_quadratic_with(cfg, model, kind, ServerOpt::Sgd)
+}
+
+/// [`run_quadratic`] with an explicit server-side update rule (how the
+/// CLI's `--scheduler rescaled` reaches the engine).
+pub fn run_quadratic_with(
+    cfg: &QuadExpConfig,
+    model: ComputeModel,
+    kind: &SchedulerKind,
+    server_opt: ServerOpt,
+) -> RunRecord {
+    scenario::run_cell(&cfg.cell("adhoc", model, kind, server_opt), &cfg.budget()).0
 }
 
 /// Tune a scheduler family over a stepsize grid (the paper's `{5^p}`),
 /// returning the best record by time-to-target (then by final gap).
 ///
-/// The grid points run in parallel on the [`sweep`] thread pool; every run
-/// is seeded, so the selection is identical to the historical serial loop.
+/// The γ axis expands into a [`scenario::GridSpec`] whose cells run in
+/// parallel on the sweep thread pool; every run is seeded, so the
+/// selection is identical to the historical serial loop.
 pub fn tune_stepsize<F>(
     cfg: &QuadExpConfig,
     model: &ComputeModel,
@@ -107,8 +152,15 @@ where
     F: Fn(f64) -> SchedulerKind + Sync,
 {
     assert!(!grid.is_empty());
-    let records =
-        sweep::parallel_map(grid, |_, &gamma| run_quadratic(cfg, model.clone(), &make(gamma)));
+    let cells: Vec<Cell> = grid
+        .iter()
+        .map(|&gamma| cfg.cell("tune", model.clone(), &make(gamma), ServerOpt::Sgd))
+        .collect();
+    let spec = GridSpec::from_cells(cells, cfg.budget());
+    let records: Vec<RunRecord> = scenario::run_cells(&spec)
+        .into_iter()
+        .map(|o| o.record)
+        .collect();
     let score = |r: &RunRecord| -> (f64, f64) {
         // lexicographic: time-to-target, then final gap; divergent runs
         // (NaN/inf) sort last
@@ -138,28 +190,13 @@ where
 }
 
 /// Run a labelled (scheduler × model × seed) grid of §G-quadratic
-/// experiments in parallel, preserving job order in the results.
+/// experiments in parallel, preserving cell order in the results.
 ///
-/// `cfg` provides the shared problem/budget knobs; each [`SweepJob`]
-/// overrides the seed and supplies the scheduler + compute model.
-pub fn sweep_quadratic(cfg: &QuadExpConfig, jobs: &[SweepJob]) -> Vec<SweepResult> {
-    sweep::run_sweep(jobs, |job| {
-        let mut c = cfg.clone();
-        c.seed = job.seed;
-        run_quadratic(&c, job.model.clone(), &job.kind)
-    })
-}
-
-impl RunRecord {
-    /// Time at which the run hit its `target_gap` (None if never, and
-    /// None for runs killed by the divergence guard — a transient dip
-    /// below the target on the way to +∞ is not convergence).
-    pub fn time_to_target(&self) -> Option<f64> {
-        if self.diverged {
-            return None;
-        }
-        self.gap_target.and_then(|tg| self.gap_curve.first_time_below(tg))
-    }
+/// `cfg` provides the shared budget; the cells (typically built with
+/// [`QuadExpConfig::cell`] or a [`scenario::GridAxes`] expansion) carry
+/// scheduler, compute model, problem and seed.
+pub fn sweep_quadratic(cfg: &QuadExpConfig, cells: &[Cell]) -> Vec<CellOutcome> {
+    scenario::run_cells(&GridSpec::from_cells(cells.to_vec(), cfg.budget()))
 }
 
 /// The paper's stepsize grid `{5^p : p ∈ [-5, 5]}`.
@@ -306,21 +343,28 @@ mod tests {
         cfg.n_workers = 4;
         cfg.noise_sigma = 0.001;
         cfg.max_iters = 500;
-        let jobs = crate::engine::sweep::grid(
-            &[
-                SchedulerKind::Ringmaster { r: 4, gamma: 0.2, cancel: true },
-                SchedulerKind::Asgd { gamma: 0.1 },
+        let cells = crate::scenario::GridAxes {
+            schedulers: vec![
+                SchedulerKind::Ringmaster { r: 4, gamma: 0.2, cancel: true }.into(),
+                SchedulerKind::Asgd { gamma: 0.1 }.into(),
             ],
-            &[("linear".to_string(), ComputeModel::fixed_linear(4))],
-            &[0, 1],
-        );
-        let results = sweep_quadratic(&cfg, &jobs);
+            gammas: vec![],
+            models: vec![("linear".to_string(), ComputeModel::fixed_linear(4))],
+            problems: vec![cfg.problem_spec()],
+            seeds: vec![0, 1],
+        }
+        .expand();
+        let results = sweep_quadratic(&cfg, &cells);
         assert_eq!(results.len(), 4);
-        for (job, res) in jobs.iter().zip(&results) {
-            assert_eq!(job.seed, res.seed);
-            assert_eq!(job.kind.name(), res.kind.name());
-            assert_eq!(res.label, "linear");
-            assert!(res.record.iters > 0, "{} made no progress", res.kind.name());
+        for (cell, res) in cells.iter().zip(&results) {
+            assert_eq!(cell.seed, res.cell.seed);
+            assert_eq!(cell.scheduler.name(), res.cell.scheduler.name());
+            assert_eq!(res.cell.model_label, "linear");
+            assert!(
+                res.record.iters > 0,
+                "{} made no progress",
+                res.cell.scheduler.name()
+            );
         }
     }
 }

@@ -14,8 +14,10 @@
 //!   *random* and *universal* computation models ([`sim`], via
 //!   [`engine::SimSource`]) and a real-thread wall-clock pool
 //!   ([`engine::ThreadSource`]) — with thin facades in [`driver`]
-//!   (simulation) and [`exec`] (wall clock), a parallel grid sweeper
-//!   ([`engine::sweep`]), the closed-form time-complexity theory
+//!   (simulation) and [`exec`] (wall clock), the [`scenario`]
+//!   orchestration layer (checkpointed, resumable, `--shard i/n`-able
+//!   experiment grids over a content-keyed cell journal, fanned out on
+//!   [`engine::sweep`]), the closed-form time-complexity theory
 //!   ([`complexity`]), and the config / CLI / metrics plumbing of a
 //!   deployable framework.
 //! * **Layer 2 (python/compile/model.py)** — the experimental objectives
@@ -28,6 +30,9 @@
 //! training hot path never touches Python.
 //!
 //! ```text
+//!      GridSpec (axes → content-keyed cells)  scenario (orchestration)
+//!        │ resume: diff vs CellStore JSONL journal; --shard i/n fan-out
+//!        ▼  cells stream through sweep::parallel_map (panic-propagating)
 //!            Scheduler (policy)            coordinator::*
 //!                  │ Decision
 //!                  ▼
@@ -44,13 +49,20 @@
 //!                  │
 //!         data::partition shards           iid | Dirichlet-α | quantity skew
 //!                  │
-//!             RunRecord (unified, per-worker hit accounting)
+//!             RunRecord (unified, per-worker hits, per-shard loss curves)
+//!                  │
+//!             RunSummary → CellStore / grid_csv   scenario::store
 //! ```
 //!
 //! Data heterogeneity (Ringleader ASGD's regime) is first-class: worker
 //! identity flows from assignment to gradient draw on both substrates, so
 //! every scheduler can be studied under non-IID shards
-//! ([`experiments::heterogeneity`], CLI `sweep`).
+//! ([`experiments::heterogeneity`], CLI `sweep`), with per-shard fairness
+//! curves and Rescaled-ASGD-style server-side stepsize rescaling
+//! ([`engine::ServerOpt::Rescaled`]). Every grid entry point — the
+//! heterogeneity matrix, stepsize tuning, the quadratic sweeps, the
+//! paper-table bench, the `sweep`/`compare` subcommands — runs through
+//! [`scenario`]'s checkpointed, resumable, shardable cell runner.
 
 pub mod bench_util;
 pub mod cli;
@@ -67,6 +79,7 @@ pub mod metrics;
 pub mod opt;
 pub mod prng;
 pub mod runtime;
+pub mod scenario;
 pub mod sim;
 pub mod testkit;
 pub mod train;

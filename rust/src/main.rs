@@ -13,7 +13,9 @@
 //! ringmaster fig3        Figure 3 (MLP on synthetic-MNIST, PJRT)
 //! ringmaster train       end-to-end MLP training via PJRT artifacts
 //! ringmaster exec-demo   wall-clock (threaded) executor demo
-//! ringmaster sweep       heterogeneity matrix (scheduler × α × seed) → CSV
+//! ringmaster sweep       heterogeneity matrix (scheduler × α × seed) → CSV;
+//!                        checkpointed (--journal), resumable, shardable
+//!                        (--shard i/n) via the scenario orchestration layer
 //! ```
 
 use std::path::PathBuf;
@@ -31,6 +33,7 @@ use ringmaster::experiments::{
 };
 use ringmaster::metrics::{ascii_plot, write_curves_csv};
 use ringmaster::opt::{Problem, QuadraticProblem};
+use ringmaster::scenario::{self, CellStore, SchedSpec, ShardSel};
 use ringmaster::sim::ComputeModel;
 use ringmaster::util::fmt_secs;
 
@@ -59,7 +62,7 @@ fn print_help() {
          usage: ringmaster <subcommand> [--key value ...]\n\n\
          subcommands:\n\
            run          one scheduler on the §G quadratic\n\
-                        --scheduler ringmaster|asgd|delay-adaptive|rennala|naive|minibatch\n\
+                        --scheduler ringmaster|asgd|delay-adaptive|rennala|naive|minibatch|rescaled\n\
                         --n 64 --d 256 --gamma 0.2 --r 0 (0=theory) --cancel\n\
            compare      all schedulers, tuned over the paper's stepsize grid\n\
            complexity   closed-form theory for a τ profile (--profile linear|sqrt|equal)\n\
@@ -71,7 +74,10 @@ fn print_help() {
            exec-demo    wall-clock threaded executor demo\n\
            sweep        data-heterogeneity scenario matrix → long-form CSV\n\
                         --alpha 0.1,1.0,inf --seeds 0,1 --n 16 --n-data 400\n\
-                        --schedulers ringmaster,rennala,asgd --gamma 0.02\n\n\
+                        --schedulers ringmaster,rennala,asgd,rescaled --gamma 0.02\n\
+                        --journal sweep.jsonl   checkpoint completed cells; rerun resumes\n\
+                        --shard i/n             run the i-th of n disjoint grid slices\n\
+                        --max-cells K           stop after K cells (budgeted invocation)\n\n\
          common flags: --seed N --csv-out path.csv --plot --config file.toml"
     );
 }
@@ -111,7 +117,7 @@ fn model_from_args(args: &Args, n: usize) -> Result<ComputeModel> {
     })
 }
 
-fn scheduler_from_args(args: &Args, cfg: &QuadExpConfig, eps: f64) -> Result<SchedulerKind> {
+fn scheduler_from_args(args: &Args, cfg: &QuadExpConfig, eps: f64) -> Result<SchedSpec> {
     let c = cfg.constants(eps);
     let gamma_theory = complexity::theorem_stepsize(complexity::default_r(c.sigma_sq, c.eps), c);
     let gamma = args.f64_or("gamma", gamma_theory)?;
@@ -124,24 +130,29 @@ fn scheduler_from_args(args: &Args, cfg: &QuadExpConfig, eps: f64) -> Result<Sch
             r,
             gamma,
             cancel: !args.flag("no-cancel"),
-        },
-        "asgd" => SchedulerKind::Asgd { gamma },
-        "delay-adaptive" => SchedulerKind::DelayAdaptive { gamma },
+        }
+        .into(),
+        "asgd" => SchedulerKind::Asgd { gamma }.into(),
+        "delay-adaptive" => SchedulerKind::DelayAdaptive { gamma }.into(),
         "rennala" => SchedulerKind::Rennala {
             b: args.usize_or("b", r as usize)? as u64,
             gamma,
-        },
+        }
+        .into(),
         "naive" => {
             let taus: Vec<f64> = (1..=cfg.n_workers).map(|i| i as f64).collect();
             SchedulerKind::Naive {
                 m_star: complexity::naive_m_star(&taus, c.sigma_sq, c.eps),
                 gamma,
             }
+            .into()
         }
         "minibatch" => SchedulerKind::Minibatch {
             m: cfg.n_workers,
             gamma,
-        },
+        }
+        .into(),
+        "rescaled" => SchedSpec::rescaled_asgd(gamma),
         other => bail!("unknown --scheduler '{other}'"),
     })
 }
@@ -157,10 +168,11 @@ fn cmd_run(args: &Args) -> Result<()> {
     cfg.target_gap = Some(args.f64_or("target-gap", 1e-8)?);
     let eps = args.f64_or("eps", 1e-4)?;
     let model = model_from_args(args, cfg.n_workers)?;
-    let kind = scheduler_from_args(args, &cfg, eps)?;
+    let sched = scheduler_from_args(args, &cfg, eps)?;
 
-    println!("running {} on quadratic d={} n={} ...", kind.name(), cfg.d, cfg.n_workers);
-    let rec = experiments::run_quadratic(&cfg, model, &kind);
+    println!("running {} on quadratic d={} n={} ...", sched.name(), cfg.d, cfg.n_workers);
+    let rec =
+        experiments::run_quadratic_with(&cfg, model, &sched.kind, sched.server_opt.clone());
     println!(
         "  iters={} sim_time={} applied={} accumulated={} discarded={} cancelled={}",
         rec.iters,
@@ -517,7 +529,7 @@ fn cmd_train(args: &Args) -> Result<()> {
 }
 
 fn cmd_sweep(args: &Args) -> Result<()> {
-    use ringmaster::experiments::heterogeneity::{het_csv, heterogeneity_matrix, HetConfig};
+    use ringmaster::experiments::heterogeneity::HetConfig;
 
     // f64::from_str already accepts "inf"/"infinity" case-insensitively
     let parse_alphas = |s: &str| -> Result<Vec<f64>> {
@@ -576,28 +588,68 @@ fn cmd_sweep(args: &Args) -> Result<()> {
         .filter(|t| !t.is_empty())
         .map(|name| {
             Ok(match name.trim() {
-                "ringmaster" => SchedulerKind::Ringmaster { r, gamma, cancel: true },
-                "asgd" => SchedulerKind::Asgd { gamma },
-                "delay-adaptive" => SchedulerKind::DelayAdaptive { gamma },
-                "rennala" => SchedulerKind::Rennala { b, gamma },
-                "minibatch" => SchedulerKind::Minibatch { m: cfg.n_workers, gamma },
+                "ringmaster" => SchedulerKind::Ringmaster { r, gamma, cancel: true }.into(),
+                "asgd" => SchedulerKind::Asgd { gamma }.into(),
+                "delay-adaptive" => SchedulerKind::DelayAdaptive { gamma }.into(),
+                "rennala" => SchedulerKind::Rennala { b, gamma }.into(),
+                "minibatch" => SchedulerKind::Minibatch { m: cfg.n_workers, gamma }.into(),
+                "rescaled" => SchedSpec::rescaled_asgd(gamma),
                 other => bail!("unknown scheduler '{other}' in --schedulers"),
             })
         })
-        .collect::<Result<Vec<_>>>()?;
+        .collect::<Result<Vec<SchedSpec>>>()?;
+
+    let spec = cfg.grid_spec();
+    let shard = match args.get("shard") {
+        Some(s) => scenario::parse_shard(s).map_err(|e| ringmaster::anyhow!("{e}"))?,
+        None => ShardSel::ALL,
+    };
+    let max_cells = args.usize("max-cells")?;
+    // without a journal a budgeted partial run persists nothing — the K
+    // cells of compute would be silently thrown away
+    ensure!(
+        max_cells.is_none() || args.get("journal").is_some(),
+        "--max-cells without --journal would discard the partial results; \
+         add --journal <path> to checkpoint them"
+    );
+    let mut store = match args.get("journal") {
+        Some(path) => Some(CellStore::open(
+            std::path::Path::new(path),
+            &spec.fingerprint(),
+            spec.len(),
+        )?),
+        None => None,
+    };
 
     eprintln!(
-        "sweep: {} schedulers × {} α × {} seeds = {} grid points (n={}, n-data={}, batch={})",
+        "sweep: {} schedulers × {} α × {} seeds = {} grid points (n={}, n-data={}, \
+         batch={}, shard {}/{}{})",
         cfg.schedulers.len(),
         cfg.alphas.len(),
         cfg.seeds.len(),
-        cfg.schedulers.len() * cfg.alphas.len() * cfg.seeds.len(),
+        spec.len(),
         cfg.n_workers,
         cfg.n_data,
-        cfg.batch
+        cfg.batch,
+        shard.index + 1,
+        shard.count,
+        store
+            .as_ref()
+            .map(|s| format!(", journal {} [{} done]", s.path().display(), s.completed().len()))
+            .unwrap_or_default(),
     );
-    let cells = heterogeneity_matrix(&cfg);
-    let csv = het_csv(&cells);
+    let run = scenario::run_grid(&spec, shard, store.as_mut(), max_cells)?;
+    if !run.is_complete() {
+        eprintln!(
+            "sweep: interrupted with {}/{} cells complete ({} run this invocation); \
+             rerun with the same --journal to resume",
+            run.rows.len(),
+            run.rows.len() + run.remaining,
+            run.ran,
+        );
+        return Ok(());
+    }
+    let csv = scenario::grid_csv(&run.rows);
     if let Some(path) = args.get("csv-out") {
         std::fs::write(path, &csv)?;
         eprintln!("wrote {path}");

@@ -109,6 +109,12 @@ impl SampleProblem for LogisticProblem {
         }
         Self::softplus_neg(m) + 0.5 * self.lambda * dot(w, w)
     }
+
+    fn sample_loss(&self, i: usize, w: &[f64], _scratch: &mut [f64]) -> f64 {
+        // loss-only path: skips the O(d) gradient accumulation entirely
+        let m = self.ys[i] * dot(self.row(i), w);
+        Self::softplus_neg(m) + 0.5 * self.lambda * dot(w, w)
+    }
 }
 
 impl Problem for LogisticProblem {

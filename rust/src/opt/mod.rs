@@ -107,6 +107,16 @@ pub trait StochasticProblem {
         None
     }
 
+    /// Per-shard objective values at `x` — `losses[w]` is the mean loss
+    /// over worker `w`'s own data shard. `None` (the default) for
+    /// unsharded problems. Drives the engine's fairness curves
+    /// (`RunRecord::shard_loss_curves`): under data heterogeneity the
+    /// global objective can fall while a minority shard's loss rises,
+    /// and this is the hook that makes that visible.
+    fn shard_losses(&mut self, _x: &[f64]) -> Option<Vec<f64>> {
+        None
+    }
+
     fn init_point(&self) -> Vec<f64>;
 }
 

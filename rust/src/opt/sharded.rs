@@ -30,6 +30,15 @@ pub trait SampleProblem: Problem {
     /// Accumulate `weight · ∇ℓ_idx(x)` into `grad` and return the raw
     /// sample loss `ℓ_idx(x)`. `grad` is *not* cleared.
     fn sample_grad(&self, idx: usize, x: &[f64], weight: f64, grad: &mut [f64]) -> f64;
+
+    /// `ℓ_idx(x)` alone. The default routes through [`sample_grad`] with a
+    /// caller-provided scratch (weight 0, so the accumulation is a no-op);
+    /// implementations with a cheap loss-only path should override it.
+    ///
+    /// [`sample_grad`]: SampleProblem::sample_grad
+    fn sample_loss(&self, idx: usize, x: &[f64], scratch: &mut [f64]) -> f64 {
+        self.sample_grad(idx, x, 0.0, scratch)
+    }
 }
 
 /// One minibatch draw from a shard: `batch` samples uniform-with-
@@ -67,6 +76,10 @@ pub struct Sharded<P> {
     pub problem: P,
     shards: Vec<Vec<u32>>,
     batch: usize,
+    /// Gradient scratch for loss-only default paths in `shard_losses`
+    /// (the fairness hook) — held so per-record fairness evals do not
+    /// allocate O(d) garbage on the hot path.
+    loss_scratch: Vec<f64>,
 }
 
 impl<P: SampleProblem> Sharded<P> {
@@ -82,10 +95,12 @@ impl<P: SampleProblem> Sharded<P> {
             partition.shards.iter().all(|s| !s.is_empty()),
             "every worker needs a non-empty shard"
         );
+        let loss_scratch = vec![0.0; problem.dim()];
         Self {
             problem,
             shards: partition.shards,
             batch,
+            loss_scratch,
         }
     }
 
@@ -126,6 +141,21 @@ impl<P: SampleProblem> StochasticProblem for Sharded<P> {
 
     fn eval_value_grad(&mut self, x: &[f64], grad: &mut [f64]) -> f64 {
         self.problem.value_grad(x, grad)
+    }
+
+    fn shard_losses(&mut self, x: &[f64]) -> Option<Vec<f64>> {
+        // one pass over the full dataset in total: Σ_w |shard_w| = n
+        let mut out = Vec::with_capacity(self.shards.len());
+        for shard in &self.shards {
+            let mut sum = 0.0;
+            for &i in shard {
+                sum += self
+                    .problem
+                    .sample_loss(i as usize, x, &mut self.loss_scratch);
+            }
+            out.push(sum / shard.len() as f64);
+        }
+        Some(out)
     }
 
     fn f_star(&self) -> Option<f64> {
@@ -227,6 +257,38 @@ mod tests {
         assert!((g[0] + 0.5).abs() < 1e-12);
         // sample loss at w = 0 is log(1 + e⁰) = ln 2, any batch size
         assert!((loss - 2f64.ln()).abs() < 1e-12, "loss {loss}");
+    }
+
+    #[test]
+    fn shard_losses_are_per_shard_means() {
+        let mut p = Sharded::new(two_block_problem(), two_block_partition(), 1);
+        // at w = 0 both classes have loss ln 2
+        let at0 = p.shard_losses(&[0.0]).unwrap();
+        assert_eq!(at0.len(), 2);
+        for l in &at0 {
+            assert!((l - 2f64.ln()).abs() < 1e-12, "{l}");
+        }
+        // at w = 1 the y=+1 shard is well-classified, the y=−1 shard is
+        // not — the fairness metric must expose that asymmetry
+        let at1 = p.shard_losses(&[1.0]).unwrap();
+        let expect_pos = (1f64 + (-1f64).exp()).ln();
+        let expect_neg = (1f64 + 1f64.exp()).ln();
+        assert!((at1[0] - expect_pos).abs() < 1e-12, "{}", at1[0]);
+        assert!((at1[1] - expect_neg).abs() < 1e-12, "{}", at1[1]);
+        assert!(at1[1] > at1[0]);
+    }
+
+    #[test]
+    fn default_sample_loss_matches_grad_path() {
+        let p = two_block_problem();
+        let mut scratch = vec![0.0];
+        // LogisticProblem overrides sample_loss; check it agrees with the
+        // weight-0 sample_grad default it replaces
+        for i in 0..8 {
+            let via_grad = p.sample_grad(i, &[0.7], 0.0, &mut scratch);
+            let direct = p.sample_loss(i, &[0.7], &mut scratch);
+            assert!((via_grad - direct).abs() < 1e-12);
+        }
     }
 
     #[test]

@@ -1,0 +1,88 @@
+//! Scenario orchestration: **one** grid subsystem for every experiment
+//! matrix in the repo — checkpointed, resumable, and shardable across
+//! processes and machines.
+//!
+//! Historically each grid runner re-implemented its own loop
+//! (`experiments::heterogeneity`, stepsize tuning, the quadratic sweeps,
+//! the paper-table bench, ad-hoc loops in `main.rs`), and none of them
+//! could survive an interruption or split work across machines. This
+//! module subsumes them:
+//!
+//! * [`GridAxes`] / [`GridSpec`] — a serializable grid over the axes
+//!   (scheduler + server-opt) × stepsize γ × compute model ×
+//!   problem/partition-α × seed, expanding to a deterministic cell list
+//!   whose [`Cell::key`]s are derived from nothing but cell content.
+//! * [`CellStore`] — an append-only JSONL checkpoint journal
+//!   ([`crate::util::json`]); each completed cell's [`RunSummary`] is
+//!   flushed as it lands, and a rerun resumes by diffing journaled keys
+//!   against the grid. Every engine run is seed-derived, so a resumed
+//!   sweep is bit-identical to an uninterrupted one.
+//! * [`run_grid`] — shard-aware fan-out: `--shard i/n` gives each process
+//!   a disjoint, balanced slice of the grid on top of the panic-
+//!   propagating, streaming [`crate::engine::sweep::parallel_map`].
+//! * [`run_cells`] / [`run_cell`] — the in-memory path for callers that
+//!   need full [`crate::engine::RunRecord`]s (tuning, tables, benches).
+//!
+//! # Example: a resumable, shardable sweep
+//!
+//! ```no_run
+//! use ringmaster::coordinator::SchedulerKind;
+//! use ringmaster::scenario::{
+//!     CellStore, GridAxes, GridSpec, ProblemSpec, RunBudget, ShardSel,
+//! };
+//! use ringmaster::sim::ComputeModel;
+//!
+//! let spec = GridSpec::new(
+//!     &GridAxes {
+//!         schedulers: vec![
+//!             SchedulerKind::Ringmaster { r: 8, gamma: 0.02, cancel: true }.into(),
+//!             SchedulerKind::Rennala { b: 4, gamma: 0.02 }.into(),
+//!         ],
+//!         gammas: vec![], // keep each scheduler's own γ
+//!         models: vec![("paper".into(), ComputeModel::random_paper(8))],
+//!         problems: vec![
+//!             ProblemSpec::ShardedLogistic {
+//!                 n_data: 400, n_workers: 8, batch: 8, lambda: 0.01,
+//!                 alpha: f64::INFINITY, // IID baseline
+//!             },
+//!             ProblemSpec::ShardedLogistic {
+//!                 n_data: 400, n_workers: 8, batch: 8, lambda: 0.01,
+//!                 alpha: 0.1, // near single-class shards
+//!             },
+//!         ],
+//!         seeds: vec![0, 1, 2],
+//!     },
+//!     RunBudget { max_iters: 1500, record_shard_losses: true, ..Default::default() },
+//! );
+//!
+//! // First invocation: killed (or budget-limited) partway through — every
+//! // finished cell is already in the journal.
+//! let mut store = CellStore::open(
+//!     std::path::Path::new("sweep.jsonl"), &spec.fingerprint(), spec.len(),
+//! )?;
+//! let partial = ringmaster::scenario::run_grid(
+//!     &spec, ShardSel::ALL, Some(&mut store), Some(4),
+//! )?;
+//! assert!(!partial.is_complete());
+//!
+//! // Second invocation (e.g. after a crash): only the missing cells run,
+//! // and the CSV is byte-identical to an uninterrupted sweep's.
+//! let resumed = ringmaster::scenario::run_grid(
+//!     &spec, ShardSel::ALL, Some(&mut store), None,
+//! )?;
+//! assert!(resumed.is_complete());
+//! let _csv = ringmaster::scenario::grid_csv(&resumed.rows);
+//! # Ok::<(), ringmaster::util::error::Error>(())
+//! ```
+
+mod runner;
+mod spec;
+mod store;
+
+pub use runner::{
+    alpha_partition, grid_csv, run_cell, run_cells, run_grid, CellOutcome, GridRun,
+};
+pub use spec::{
+    fnv1a64, parse_shard, Cell, GridAxes, GridSpec, ProblemSpec, RunBudget, SchedSpec, ShardSel,
+};
+pub use store::{CellStore, RunSummary};

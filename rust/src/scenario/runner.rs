@@ -1,0 +1,410 @@
+//! Grid execution: in-memory fan-out, checkpointed/resumable sweeps, and
+//! the long-form CSV emitter.
+//!
+//! Every cell run is fully determined by its [`Cell`] content plus the
+//! grid's [`RunBudget`] (all randomness is seed-derived), so execution is
+//! embarrassingly parallel, restartable, and splittable across machines:
+//! a resumed sweep reconstructs exactly the rows an uninterrupted one
+//! would have produced, and shard CSVs concatenate into the full grid.
+
+use std::collections::BTreeMap;
+
+use crate::data::partition::label_skew;
+use crate::data::{synthetic_mnist, N_CLASSES};
+use crate::driver::Driver;
+use crate::engine::sweep::{parallel_map, parallel_map_streaming};
+use crate::engine::RunRecord;
+use crate::opt::{LogisticProblem, Noisy, QuadraticProblem, Sharded};
+use crate::util::error::Result;
+
+use super::spec::{Cell, GridSpec, ProblemSpec, RunBudget, ShardSel};
+use super::store::{CellStore, RunSummary};
+
+/// Build the label-skew partition of one sharded cell. `α = ∞`
+/// degenerates to IID. (The seed is offset so partition randomness and
+/// run randomness stay independent streams.)
+pub fn alpha_partition(
+    labels: &[u8],
+    n_workers: usize,
+    alpha: f64,
+    seed: u64,
+) -> crate::data::partition::Partition {
+    label_skew(labels, N_CLASSES, n_workers, alpha, seed ^ 0x5EED)
+}
+
+/// Datasets/objectives shared across cells: synthetic-MNIST generation
+/// dominates the setup of small cells, and every cell with the same
+/// `(n_data, seed, λ)` uses the identical instance, so build each once
+/// up front and share it across the pool.
+type DataCache = BTreeMap<(usize, u64, u64), (Vec<u8>, LogisticProblem)>;
+
+fn build_cache(cells: &[Cell]) -> DataCache {
+    let mut cache = DataCache::new();
+    for c in cells {
+        if let ProblemSpec::ShardedLogistic { n_data, lambda, .. } = c.problem {
+            cache.entry((n_data, c.seed, lambda.to_bits())).or_insert_with(|| {
+                let ds = synthetic_mnist(n_data, 0.15, c.seed);
+                let problem = LogisticProblem::from_dataset(&ds, lambda);
+                (ds.labels, problem)
+            });
+        }
+    }
+    cache
+}
+
+/// Summarize one finished cell, stamping the cell's *display* name (which
+/// includes the server-opt suffix, e.g. `asgd+rescaled`) over the bare
+/// policy name the engine recorded — the journal and CSV then agree on
+/// one scheduler identity.
+fn summarize(cell: &Cell, record: &RunRecord, concentration: Option<f64>) -> RunSummary {
+    let mut s = RunSummary::from_record(record, concentration);
+    s.scheduler = cell.scheduler.name();
+    s
+}
+
+fn run_cell_with(cell: &Cell, budget: &RunBudget, cache: &DataCache) -> (RunRecord, Option<f64>) {
+    let server_opt = cell.scheduler.server_opt.clone();
+    let mut sched = cell.scheduler.kind.build();
+    match &cell.problem {
+        ProblemSpec::Quadratic { d, noise_sigma } => {
+            let problem = Noisy::new(QuadraticProblem::paper(*d), *noise_sigma);
+            let dcfg = budget.driver_config(cell.seed, server_opt, false);
+            let mut driver = Driver::new(problem, cell.model.clone(), dcfg);
+            (driver.run(sched.as_mut()), None)
+        }
+        ProblemSpec::ShardedLogistic {
+            n_data,
+            n_workers,
+            batch,
+            lambda,
+            alpha,
+        } => {
+            assert_eq!(
+                cell.model.n_workers(),
+                *n_workers,
+                "cell '{}': compute model has {} workers but the partition \
+                 is built for {n_workers}",
+                cell.key(),
+                cell.model.n_workers(),
+            );
+            let (labels, problem) = cache
+                .get(&(*n_data, cell.seed, lambda.to_bits()))
+                .expect("data cache covers every sharded cell");
+            let part = alpha_partition(labels, *n_workers, *alpha, cell.seed);
+            let concentration = part.label_concentration(labels, N_CLASSES);
+            let sharded = Sharded::new(problem.clone(), part, *batch);
+            let dcfg = budget.driver_config(cell.seed, server_opt, true);
+            let mut driver = Driver::new(sharded, cell.model.clone(), dcfg);
+            (driver.run(sched.as_mut()), Some(concentration))
+        }
+    }
+}
+
+/// Run one cell on its own (no grid machinery): the single-cell engine
+/// invocation every non-grid caller (e.g. `experiments::run_quadratic`)
+/// shares with the grid path, so ad-hoc runs and grid cells can never
+/// diverge. Returns the full record plus the partition concentration for
+/// sharded cells.
+pub fn run_cell(cell: &Cell, budget: &RunBudget) -> (RunRecord, Option<f64>) {
+    let cache = build_cache(std::slice::from_ref(cell));
+    run_cell_with(cell, budget, &cache)
+}
+
+/// One completed cell with its full in-memory record.
+pub struct CellOutcome {
+    pub cell: Cell,
+    pub record: RunRecord,
+    pub concentration: Option<f64>,
+}
+
+/// Run every cell of the grid in-memory (no checkpointing), preserving
+/// grid order. This is the path for callers that need full records
+/// (curves, iterates): stepsize tuning, head-to-head tables, benches.
+pub fn run_cells(spec: &GridSpec) -> Vec<CellOutcome> {
+    let cache = build_cache(&spec.cells);
+    let out = parallel_map(&spec.cells, |_, cell| {
+        let (record, concentration) = run_cell_with(cell, &spec.budget, &cache);
+        (record, concentration)
+    });
+    spec.cells
+        .iter()
+        .zip(out)
+        .map(|(cell, (record, concentration))| CellOutcome {
+            cell: cell.clone(),
+            record,
+            concentration,
+        })
+        .collect()
+}
+
+/// Outcome of one (possibly partial) checkpointed grid invocation.
+pub struct GridRun {
+    /// Completed cells in grid order — from the journal or run just now.
+    pub rows: Vec<(Cell, RunSummary)>,
+    /// Cells of this shard still pending (nonzero only when `max_cells`
+    /// interrupted the run).
+    pub remaining: usize,
+    /// Cells actually executed by *this* invocation.
+    pub ran: usize,
+}
+
+impl GridRun {
+    pub fn is_complete(&self) -> bool {
+        self.remaining == 0
+    }
+}
+
+/// Run (this shard of) a grid, resuming from — and streaming checkpoints
+/// into — `store` when given.
+///
+/// * Cells whose key is already journaled are *not* rerun; their
+///   summaries come from the journal. Because every run is seed-derived,
+///   the merged result is identical to a from-scratch run.
+/// * Fresh results are appended to the journal the moment each cell
+///   finishes (completion order), so an interrupt loses at most in-flight
+///   cells.
+/// * `max_cells` bounds how many pending cells this invocation executes —
+///   an orderly way to slice a huge grid into budgeted runs (and how the
+///   tests interrupt a sweep deterministically).
+pub fn run_grid(
+    spec: &GridSpec,
+    shard: ShardSel,
+    store: Option<&mut CellStore>,
+    max_cells: Option<usize>,
+) -> Result<GridRun> {
+    let cells = spec.shard_cells(shard);
+    let keys: Vec<String> = cells.iter().map(Cell::key).collect();
+    let done: BTreeMap<String, RunSummary> = store
+        .as_ref()
+        .map(|s| s.completed().clone())
+        .unwrap_or_default();
+
+    let mut pending_idx: Vec<usize> = (0..cells.len())
+        .filter(|&i| !done.contains_key(&keys[i]))
+        .collect();
+    if let Some(m) = max_cells {
+        pending_idx.truncate(m);
+    }
+    let pending: Vec<Cell> = pending_idx.iter().map(|&i| cells[i].clone()).collect();
+    let ran = pending.len();
+
+    let cache = build_cache(&pending);
+    let mut store = store;
+    let mut append_err: Option<crate::util::error::Error> = None;
+    let summaries = parallel_map_streaming(
+        &pending,
+        |_, cell| {
+            let (record, concentration) = run_cell_with(cell, &spec.budget, &cache);
+            summarize(cell, &record, concentration)
+        },
+        |i, summary| {
+            // checkpoint in completion order, while other cells still run;
+            // a failing journal halts the pool (Break) so a dead disk
+            // costs at most the in-flight cells, not the rest of the grid
+            if let Some(st) = store.as_deref_mut() {
+                if let Err(e) = st.append(&keys[pending_idx[i]], summary) {
+                    append_err = Some(e);
+                    return std::ops::ControlFlow::Break(());
+                }
+            }
+            std::ops::ControlFlow::Continue(())
+        },
+    );
+    if let Some(e) = append_err {
+        return Err(e);
+    }
+
+    let mut fresh: BTreeMap<usize, RunSummary> = pending_idx
+        .into_iter()
+        .zip(summaries)
+        .filter_map(|(i, s)| s.map(|s| (i, s)))
+        .collect();
+    let mut rows = Vec::with_capacity(cells.len());
+    let mut remaining = 0;
+    for (i, cell) in cells.into_iter().enumerate() {
+        if let Some(s) = done.get(&keys[i]) {
+            rows.push((cell, s.clone()));
+        } else if let Some(s) = fresh.remove(&i) {
+            rows.push((cell, s));
+        } else {
+            remaining += 1;
+        }
+    }
+    Ok(GridRun {
+        rows,
+        remaining,
+        ran,
+    })
+}
+
+fn fmt_alpha(alpha: Option<f64>) -> String {
+    match alpha {
+        None => String::new(),
+        Some(a) if a.is_finite() => format!("{a}"),
+        Some(_) => "inf".to_string(),
+    }
+}
+
+/// Long-form CSV: one row per completed grid cell, in row order.
+///
+/// The column prefix is the historical `sweep` contract
+/// (`scheduler,alpha,seed,concentration,...`); the trailing fairness
+/// columns summarize the final per-shard losses (empty for cells without
+/// shard-loss recording). Rows are rebuilt from [`RunSummary`]s, so a CSV
+/// regenerated after a resume is byte-identical to an uninterrupted one.
+/// Scheduler display names may contain commas (`ringmaster(R=4,stop)`);
+/// they are normalized to `;` so every row keeps the header's column
+/// count without CSV quoting.
+pub fn grid_csv(rows: &[(Cell, RunSummary)]) -> String {
+    let mut out = String::from(
+        "scheduler,alpha,seed,concentration,iters,sim_time,final_loss,\
+         final_gradnorm_sq,applied,accumulated,discarded,cancellations,\
+         min_worker_hits,max_worker_hits,shard_loss_min,shard_loss_max,\
+         shard_loss_spread\n",
+    );
+    for (cell, s) in rows {
+        let min_hits = s.worker_hits.iter().copied().min().unwrap_or(0);
+        let max_hits = s.worker_hits.iter().copied().max().unwrap_or(0);
+        let conc = s
+            .concentration
+            .map(|c| format!("{c:.4}"))
+            .unwrap_or_default();
+        let fairness = if s.shard_final_losses.is_empty() {
+            ",,".to_string()
+        } else {
+            let lo = s.shard_final_losses.iter().copied().fold(f64::INFINITY, f64::min);
+            let hi = s
+                .shard_final_losses
+                .iter()
+                .copied()
+                .fold(f64::NEG_INFINITY, f64::max);
+            format!("{lo:.6e},{hi:.6e},{:.6e}", hi - lo)
+        };
+        out.push_str(&format!(
+            "{},{},{},{conc},{},{:.4},{:.6e},{:.6e},{},{},{},{},{},{},{fairness}\n",
+            s.scheduler.replace(',', ";"),
+            fmt_alpha(cell.problem.alpha()),
+            cell.seed,
+            s.iters,
+            s.sim_time,
+            s.final_gap,
+            s.final_gradnorm_sq,
+            s.applied,
+            s.accumulated,
+            s.discarded,
+            s.cancellations,
+            min_hits,
+            max_hits,
+        ));
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::coordinator::SchedulerKind;
+    use crate::driver::DriverConfig;
+    use crate::scenario::spec::GridAxes;
+    use crate::sim::ComputeModel;
+
+    fn quad_spec() -> GridSpec {
+        GridSpec::new(
+            &GridAxes {
+                schedulers: vec![
+                    SchedulerKind::Ringmaster { r: 4, gamma: 0.2, cancel: true }.into(),
+                    SchedulerKind::Asgd { gamma: 0.1 }.into(),
+                ],
+                gammas: vec![],
+                models: vec![("lin".into(), ComputeModel::fixed_linear(4))],
+                problems: vec![ProblemSpec::Quadratic { d: 16, noise_sigma: 0.001 }],
+                seeds: vec![0, 1],
+            },
+            RunBudget {
+                max_iters: 400,
+                record_every: 100,
+                ..Default::default()
+            },
+        )
+    }
+
+    #[test]
+    fn run_cells_matches_a_direct_driver_invocation() {
+        let spec = quad_spec();
+        let outcomes = run_cells(&spec);
+        assert_eq!(outcomes.len(), 4);
+        // cell 0 rerun by hand through the plain Driver path
+        let mut driver = Driver::new(
+            Noisy::new(QuadraticProblem::paper(16), 0.001),
+            ComputeModel::fixed_linear(4),
+            DriverConfig {
+                seed: 0,
+                max_iters: 400,
+                record_every: 100,
+                ..Default::default()
+            },
+        );
+        let mut sched = SchedulerKind::Ringmaster { r: 4, gamma: 0.2, cancel: true }.build();
+        let direct = driver.run(sched.as_mut());
+        assert_eq!(outcomes[0].record.iters, direct.iters);
+        assert_eq!(outcomes[0].record.x_final, direct.x_final);
+        assert!(outcomes[0].concentration.is_none());
+    }
+
+    #[test]
+    fn run_grid_without_store_completes_in_grid_order() {
+        let spec = quad_spec();
+        let run = run_grid(&spec, ShardSel::ALL, None, None).unwrap();
+        assert!(run.is_complete());
+        assert_eq!(run.rows.len(), 4);
+        assert_eq!(run.ran, 4);
+        for ((cell, s), spec_cell) in run.rows.iter().zip(&spec.cells) {
+            assert_eq!(cell.key(), spec_cell.key());
+            assert!(s.iters > 0);
+        }
+    }
+
+    #[test]
+    fn max_cells_interrupts_cleanly() {
+        let spec = quad_spec();
+        let run = run_grid(&spec, ShardSel::ALL, None, Some(3)).unwrap();
+        assert!(!run.is_complete());
+        assert_eq!(run.rows.len(), 3);
+        assert_eq!(run.remaining, 1);
+    }
+
+    #[test]
+    fn sharded_invocations_union_to_the_full_grid() {
+        let spec = quad_spec();
+        let full = run_grid(&spec, ShardSel::ALL, None, None).unwrap();
+        let mut pieces = Vec::new();
+        for i in 0..3 {
+            let piece =
+                run_grid(&spec, ShardSel { index: i, count: 3 }, None, None).unwrap();
+            assert!(piece.is_complete());
+            pieces.extend(piece.rows);
+        }
+        assert_eq!(pieces.len(), full.rows.len());
+        // same cells, same results — order differs per shard, so compare as sets
+        let key_of = |rows: &[(Cell, RunSummary)]| -> std::collections::BTreeMap<String, u64> {
+            rows.iter().map(|(c, s)| (c.key(), s.iters)).collect()
+        };
+        assert_eq!(key_of(&pieces), key_of(&full.rows));
+    }
+
+    #[test]
+    fn csv_shape_and_empty_fairness_columns() {
+        let spec = quad_spec();
+        let run = run_grid(&spec, ShardSel::ALL, None, None).unwrap();
+        let csv = grid_csv(&run.rows);
+        let lines: Vec<&str> = csv.trim_end().lines().collect();
+        assert_eq!(lines.len(), 1 + 4);
+        let n_cols = lines[0].split(',').count();
+        for l in &lines[1..] {
+            assert_eq!(l.split(',').count(), n_cols, "{l}");
+        }
+        // quadratic cells have no α / concentration / fairness values
+        assert!(lines[1].contains("ringmaster"));
+        assert!(lines[1].ends_with(",,"));
+    }
+}

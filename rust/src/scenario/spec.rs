@@ -1,0 +1,518 @@
+//! Grid specification: axes, cells, and the content-keying that makes
+//! checkpointed / sharded execution possible.
+//!
+//! A [`Cell`] is one fully-determined experiment (scheduler + server
+//! optimizer + compute model + problem + seed); its [`Cell::key`] is a
+//! canonical string derived from nothing but that content, so two
+//! processes that expand the same [`GridSpec`] agree on every key without
+//! coordination. That identity is what the [`crate::scenario::CellStore`]
+//! journal diffs against on resume, and what `--shard i/n` fan-out relies
+//! on for disjoint covers.
+
+use crate::coordinator::SchedulerKind;
+use crate::engine::{DriverConfig, ServerOpt};
+use crate::sim::ComputeModel;
+
+/// FNV-1a 64-bit — tiny, dependency-free, stable across platforms. Used
+/// for compacting long axis values (e.g. a 6174-worker τ vector) into a
+/// fixed-width key fragment and for grid fingerprints.
+pub fn fnv1a64(bytes: &[u8]) -> u64 {
+    let mut h: u64 = 0xcbf29ce484222325;
+    for &b in bytes {
+        h ^= b as u64;
+        h = h.wrapping_mul(0x100000001b3);
+    }
+    h
+}
+
+/// Canonical f64 rendering for keys: Rust's shortest round-trip `{}`
+/// formatting, which is deterministic and injective on finite values.
+fn fkey(v: f64) -> String {
+    format!("{v}")
+}
+
+/// The problem axis: everything needed to rebuild the objective (and its
+/// data partition) from scratch inside any process.
+#[derive(Clone, Debug, PartialEq)]
+pub enum ProblemSpec {
+    /// The §G noisy quadratic: `QuadraticProblem::paper(d)` +
+    /// `N(0, σ_coord² I)` gradient noise.
+    Quadratic { d: usize, noise_sigma: f64 },
+    /// Binary logistic regression on synthetic MNIST, label-skew sharded
+    /// across `n_workers` with Dirichlet concentration `alpha`
+    /// (`alpha = ∞` ⇒ IID) — the Ringleader-ASGD heterogeneity regime.
+    ShardedLogistic {
+        n_data: usize,
+        n_workers: usize,
+        batch: usize,
+        lambda: f64,
+        alpha: f64,
+    },
+}
+
+impl ProblemSpec {
+    /// The Dirichlet-α of the partition axis (`None` for unsharded
+    /// problems; `inf` means IID).
+    pub fn alpha(&self) -> Option<f64> {
+        match self {
+            ProblemSpec::Quadratic { .. } => None,
+            ProblemSpec::ShardedLogistic { alpha, .. } => Some(*alpha),
+        }
+    }
+
+    /// Sharded problems need per-shard loss recording for the fairness
+    /// columns; unsharded ones would waste an eval pass.
+    pub fn is_sharded(&self) -> bool {
+        matches!(self, ProblemSpec::ShardedLogistic { .. })
+    }
+
+    /// Replace the partition α (no-op for unsharded problems) — the α
+    /// axis of [`GridAxes`].
+    pub fn with_alpha(&self, a: f64) -> ProblemSpec {
+        let mut p = self.clone();
+        if let ProblemSpec::ShardedLogistic { alpha, .. } = &mut p {
+            *alpha = a;
+        }
+        p
+    }
+
+    fn key(&self) -> String {
+        match self {
+            ProblemSpec::Quadratic { d, noise_sigma } => {
+                format!("quad(d={d},s={})", fkey(*noise_sigma))
+            }
+            ProblemSpec::ShardedLogistic {
+                n_data,
+                n_workers,
+                batch,
+                lambda,
+                alpha,
+            } => format!(
+                "shlog(n={n_data},w={n_workers},b={batch},l={},a={})",
+                fkey(*lambda),
+                fkey(*alpha)
+            ),
+        }
+    }
+}
+
+/// The scheduler axis: a server policy plus the server-side update rule
+/// it is combined with (e.g. Rescaled-ASGD = `Asgd` + [`ServerOpt::Rescaled`]).
+#[derive(Clone, Debug, PartialEq)]
+pub struct SchedSpec {
+    pub kind: SchedulerKind,
+    pub server_opt: ServerOpt,
+}
+
+impl SchedSpec {
+    pub fn plain(kind: SchedulerKind) -> Self {
+        Self {
+            kind,
+            server_opt: ServerOpt::Sgd,
+        }
+    }
+
+    /// Rescaled ASGD (Mahran et al. 2025): classic ASGD arrivals with
+    /// per-worker stepsize rescaling at the server — the single
+    /// definition behind every CLI `rescaled` spelling.
+    pub fn rescaled_asgd(gamma: f64) -> Self {
+        Self {
+            kind: SchedulerKind::Asgd { gamma },
+            server_opt: ServerOpt::rescaled(),
+        }
+    }
+
+    /// Display name for tables/CSV: the policy name, suffixed with the
+    /// server-opt when it is not plain SGD.
+    pub fn name(&self) -> String {
+        let base = self.kind.name();
+        match &self.server_opt {
+            ServerOpt::Sgd => base,
+            ServerOpt::Rescaled { .. } => format!("{base}+rescaled"),
+            ServerOpt::Momentum { .. } => format!("{base}+momentum"),
+            ServerOpt::Adam { .. } => format!("{base}+adam"),
+        }
+    }
+
+    fn key(&self) -> String {
+        let k = match &self.kind {
+            SchedulerKind::Ringmaster { r, gamma, cancel } => {
+                format!("ringmaster(r={r},g={},c={cancel})", fkey(*gamma))
+            }
+            SchedulerKind::Asgd { gamma } => format!("asgd(g={})", fkey(*gamma)),
+            SchedulerKind::DelayAdaptive { gamma } => {
+                format!("delay-adaptive(g={})", fkey(*gamma))
+            }
+            SchedulerKind::Rennala { b, gamma } => {
+                format!("rennala(b={b},g={})", fkey(*gamma))
+            }
+            SchedulerKind::Buffered { b, gamma } => {
+                format!("buffered(b={b},g={})", fkey(*gamma))
+            }
+            SchedulerKind::Naive { m_star, gamma } => {
+                format!("naive(m={m_star},g={})", fkey(*gamma))
+            }
+            SchedulerKind::Minibatch { m, gamma } => {
+                format!("minibatch(m={m},g={})", fkey(*gamma))
+            }
+        };
+        let o = match &self.server_opt {
+            ServerOpt::Sgd => "sgd".to_string(),
+            ServerOpt::Momentum { beta } => format!("mom({})", fkey(*beta)),
+            ServerOpt::Adam { beta1, beta2, eps } => {
+                format!("adam({},{},{})", fkey(*beta1), fkey(*beta2), fkey(*eps))
+            }
+            ServerOpt::Rescaled { max_scale } => format!("rescaled({})", fkey(*max_scale)),
+        };
+        format!("{k}/{o}")
+    }
+}
+
+impl From<SchedulerKind> for SchedSpec {
+    fn from(kind: SchedulerKind) -> Self {
+        SchedSpec::plain(kind)
+    }
+}
+
+/// Shared stopping/recording budget of every cell in a grid (part of the
+/// grid fingerprint, so a journal cannot silently mix budgets).
+#[derive(Clone, Debug, PartialEq)]
+pub struct RunBudget {
+    pub max_iters: u64,
+    pub max_time: f64,
+    pub record_every: u64,
+    pub target_gap: Option<f64>,
+    pub eps: Option<f64>,
+    /// Record per-shard loss curves (fairness metrics) on sharded cells.
+    pub record_shard_losses: bool,
+}
+
+impl Default for RunBudget {
+    fn default() -> Self {
+        Self {
+            max_iters: 1_000_000,
+            max_time: f64::INFINITY,
+            record_every: 100,
+            target_gap: None,
+            eps: None,
+            record_shard_losses: false,
+        }
+    }
+}
+
+impl RunBudget {
+    pub fn key(&self) -> String {
+        let opt = |o: Option<f64>| o.map(fkey).unwrap_or_else(|| "-".into());
+        format!(
+            "budget(i={},t={},r={},tg={},e={},sl={})",
+            self.max_iters,
+            fkey(self.max_time),
+            self.record_every,
+            opt(self.target_gap),
+            opt(self.eps),
+            self.record_shard_losses,
+        )
+    }
+
+    /// The engine configuration of one cell run.
+    pub fn driver_config(&self, seed: u64, server_opt: ServerOpt, sharded: bool) -> DriverConfig {
+        DriverConfig {
+            seed,
+            eps: self.eps,
+            target_gap: self.target_gap,
+            max_time: self.max_time,
+            max_iters: self.max_iters,
+            record_every: self.record_every,
+            record_shard_losses: self.record_shard_losses && sharded,
+            server_opt,
+            ..Default::default()
+        }
+    }
+}
+
+/// One fully-determined grid point.
+#[derive(Clone, Debug, PartialEq)]
+pub struct Cell {
+    pub scheduler: SchedSpec,
+    /// Short display label of the compute model ("paper", "linear", a τ
+    /// profile name, ...). Key uniqueness does not rely on it — the model
+    /// content is hashed into the key alongside.
+    pub model_label: String,
+    pub model: ComputeModel,
+    pub problem: ProblemSpec,
+    pub seed: u64,
+}
+
+impl Cell {
+    /// Canonical content key: every axis value, with the (possibly huge)
+    /// compute model compacted to a stable 64-bit digest of its full
+    /// parameterization.
+    pub fn key(&self) -> String {
+        let model_digest = fnv1a64(format!("{:?}", self.model).as_bytes());
+        format!(
+            "{}|{}#{model_digest:016x}|{}|seed={}",
+            self.scheduler.key(),
+            self.model_label,
+            self.problem.key(),
+            self.seed
+        )
+    }
+}
+
+/// Cross-product axes that expand to a deterministic cell list.
+///
+/// Expansion order (outermost → innermost): scheduler → γ → model →
+/// problem/α → seed. Empty `gammas` means every scheduler keeps its own
+/// stepsize; otherwise each scheduler is re-tuned to every γ in the axis
+/// ([`SchedulerKind::with_gamma`]).
+#[derive(Clone, Debug, Default)]
+pub struct GridAxes {
+    pub schedulers: Vec<SchedSpec>,
+    pub gammas: Vec<f64>,
+    pub models: Vec<(String, ComputeModel)>,
+    pub problems: Vec<ProblemSpec>,
+    pub seeds: Vec<u64>,
+}
+
+impl GridAxes {
+    pub fn expand(&self) -> Vec<Cell> {
+        let mut cells = Vec::new();
+        for sched in &self.schedulers {
+            let tuned: Vec<SchedSpec> = if self.gammas.is_empty() {
+                vec![sched.clone()]
+            } else {
+                self.gammas
+                    .iter()
+                    .map(|&g| SchedSpec {
+                        kind: sched.kind.with_gamma(g),
+                        server_opt: sched.server_opt.clone(),
+                    })
+                    .collect()
+            };
+            for s in &tuned {
+                for (label, model) in &self.models {
+                    for problem in &self.problems {
+                        for &seed in &self.seeds {
+                            cells.push(Cell {
+                                scheduler: s.clone(),
+                                model_label: label.clone(),
+                                model: model.clone(),
+                                problem: problem.clone(),
+                                seed,
+                            });
+                        }
+                    }
+                }
+            }
+        }
+        cells
+    }
+}
+
+/// A fully-expanded grid plus its shared budget — the unit the runner,
+/// the checkpoint store and the shard selector all operate on.
+#[derive(Clone, Debug)]
+pub struct GridSpec {
+    pub cells: Vec<Cell>,
+    pub budget: RunBudget,
+}
+
+impl GridSpec {
+    pub fn new(axes: &GridAxes, budget: RunBudget) -> Self {
+        Self {
+            cells: axes.expand(),
+            budget,
+        }
+    }
+
+    pub fn from_cells(cells: Vec<Cell>, budget: RunBudget) -> Self {
+        Self { cells, budget }
+    }
+
+    pub fn len(&self) -> usize {
+        self.cells.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.cells.is_empty()
+    }
+
+    /// Stable digest of every cell key + the budget: the identity the
+    /// journal header records, so a resume against a *different* grid is
+    /// an error instead of silent garbage.
+    pub fn fingerprint(&self) -> String {
+        let mut all = String::new();
+        for c in &self.cells {
+            all.push_str(&c.key());
+            all.push('\n');
+        }
+        all.push_str(&self.budget.key());
+        format!("{:016x}", fnv1a64(all.as_bytes()))
+    }
+
+    /// The cells of shard `sel` (round-robin over the deterministic grid
+    /// order, so the `n` shards are disjoint, covering, and balanced to
+    /// within one cell).
+    pub fn shard_cells(&self, sel: ShardSel) -> Vec<Cell> {
+        self.cells
+            .iter()
+            .enumerate()
+            .filter(|(i, _)| i % sel.count == sel.index)
+            .map(|(_, c)| c.clone())
+            .collect()
+    }
+}
+
+/// Which slice of the grid this process owns (`--shard i/n`, 1-based on
+/// the CLI; `ShardSel::ALL` = the whole grid).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct ShardSel {
+    /// 0-based shard index, `< count`.
+    pub index: usize,
+    pub count: usize,
+}
+
+impl ShardSel {
+    pub const ALL: ShardSel = ShardSel { index: 0, count: 1 };
+}
+
+/// Parse the CLI's `--shard i/n` (1-based: `1/4 .. 4/4`).
+pub fn parse_shard(s: &str) -> Result<ShardSel, String> {
+    let err = || format!("--shard expects 'i/n' with 1 ≤ i ≤ n, got '{s}'");
+    let (i, n) = s.split_once('/').ok_or_else(err)?;
+    let i: usize = i.trim().parse().map_err(|_| err())?;
+    let n: usize = n.trim().parse().map_err(|_| err())?;
+    if i < 1 || n < 1 || i > n {
+        return Err(err());
+    }
+    Ok(ShardSel {
+        index: i - 1,
+        count: n,
+    })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::collections::BTreeSet;
+
+    fn axes() -> GridAxes {
+        GridAxes {
+            schedulers: vec![
+                SchedulerKind::Ringmaster { r: 4, gamma: 0.1, cancel: true }.into(),
+                SchedSpec {
+                    kind: SchedulerKind::Asgd { gamma: 0.1 },
+                    server_opt: ServerOpt::rescaled(),
+                },
+            ],
+            gammas: vec![],
+            models: vec![("lin".into(), ComputeModel::fixed_linear(4))],
+            problems: vec![
+                ProblemSpec::ShardedLogistic {
+                    n_data: 120,
+                    n_workers: 4,
+                    batch: 4,
+                    lambda: 0.01,
+                    alpha: f64::INFINITY,
+                },
+                ProblemSpec::ShardedLogistic {
+                    n_data: 120,
+                    n_workers: 4,
+                    batch: 4,
+                    lambda: 0.01,
+                    alpha: 0.1,
+                },
+            ],
+            seeds: vec![0, 1, 2],
+        }
+    }
+
+    #[test]
+    fn expansion_is_the_ordered_cross_product() {
+        let cells = axes().expand();
+        assert_eq!(cells.len(), 2 * 2 * 3);
+        // schedulers outermost, seeds innermost
+        assert_eq!(cells[0].seed, 0);
+        assert_eq!(cells[1].seed, 1);
+        assert_eq!(cells[0].scheduler, cells[5].scheduler);
+        assert_ne!(cells[0].scheduler, cells[6].scheduler);
+        assert_eq!(cells[0].problem.alpha(), Some(f64::INFINITY));
+        assert_eq!(cells[3].problem.alpha(), Some(0.1));
+    }
+
+    #[test]
+    fn gamma_axis_retunes_every_scheduler() {
+        let mut a = axes();
+        a.gammas = vec![0.5, 0.25];
+        let cells = a.expand();
+        assert_eq!(cells.len(), 2 * 2 * 2 * 3);
+        assert_eq!(cells[0].scheduler.kind.gamma(), 0.5);
+        assert_eq!(cells[6].scheduler.kind.gamma(), 0.25);
+    }
+
+    #[test]
+    fn keys_are_unique_and_deterministic() {
+        let spec = GridSpec::new(&axes(), RunBudget::default());
+        let keys: Vec<String> = spec.cells.iter().map(Cell::key).collect();
+        let uniq: BTreeSet<&String> = keys.iter().collect();
+        assert_eq!(uniq.len(), keys.len(), "{keys:#?}");
+        // content-keyed: a second expansion agrees exactly
+        let again = GridSpec::new(&axes(), RunBudget::default());
+        let keys2: Vec<String> = again.cells.iter().map(Cell::key).collect();
+        assert_eq!(keys, keys2);
+        assert_eq!(spec.fingerprint(), again.fingerprint());
+        // ... and the budget is part of the fingerprint
+        let other = RunBudget {
+            max_iters: 77,
+            ..Default::default()
+        };
+        assert_ne!(
+            spec.fingerprint(),
+            GridSpec::new(&axes(), other).fingerprint()
+        );
+    }
+
+    #[test]
+    fn key_distinguishes_server_opt_and_model_content() {
+        let mut c = axes().expand()[0].clone();
+        let base = c.key();
+        c.scheduler.server_opt = ServerOpt::rescaled();
+        assert_ne!(c.key(), base);
+        let mut c2 = axes().expand()[0].clone();
+        c2.model = ComputeModel::fixed_sqrt(4); // same label, other taus
+        assert_ne!(c2.key(), base);
+    }
+
+    #[test]
+    fn shards_are_a_disjoint_cover_for_every_n() {
+        let spec = GridSpec::new(&axes(), RunBudget::default());
+        let all: BTreeSet<String> = spec.cells.iter().map(Cell::key).collect();
+        for n in 1..=spec.len() + 1 {
+            let mut union: BTreeSet<String> = BTreeSet::new();
+            let mut total = 0;
+            for i in 0..n {
+                let shard = spec.shard_cells(ShardSel { index: i, count: n });
+                total += shard.len();
+                union.extend(shard.iter().map(Cell::key));
+            }
+            assert_eq!(total, spec.len(), "overlap at n={n}");
+            assert_eq!(union, all, "coverage gap at n={n}");
+            // balanced to within one cell
+            let sizes: Vec<usize> = (0..n)
+                .map(|i| spec.shard_cells(ShardSel { index: i, count: n }).len())
+                .collect();
+            let (lo, hi) = (sizes.iter().min().unwrap(), sizes.iter().max().unwrap());
+            assert!(hi - lo <= 1, "{sizes:?}");
+        }
+    }
+
+    #[test]
+    fn parse_shard_grammar() {
+        assert_eq!(parse_shard("1/4").unwrap(), ShardSel { index: 0, count: 4 });
+        assert_eq!(parse_shard("4/4").unwrap(), ShardSel { index: 3, count: 4 });
+        assert_eq!(parse_shard("1/1").unwrap(), ShardSel::ALL);
+        for bad in ["0/4", "5/4", "x/4", "3", "3/", "/4", "0/0"] {
+            assert!(parse_shard(bad).is_err(), "{bad}");
+        }
+    }
+}

@@ -1,0 +1,362 @@
+//! The checkpoint journal: completed grid cells as append-only JSONL.
+//!
+//! Line 1 is a header `{"version":1,"grid":"<fingerprint>","cells":N}`;
+//! every following line is `{"key":"<cell key>","summary":{..}}`. Appends
+//! are flushed per cell, so a killed sweep loses at most the cell that was
+//! mid-write — and a truncated trailing line is tolerated on reload (that
+//! cell simply reruns). Because every engine run is seed-derived, a
+//! journal entry is exactly as good as rerunning the cell: resuming from
+//! the journal and running from scratch produce byte-identical CSVs.
+
+use std::collections::BTreeMap;
+use std::fs::{File, OpenOptions};
+use std::io::Write as _;
+use std::path::{Path, PathBuf};
+
+use crate::engine::RunRecord;
+use crate::util::error::Result;
+use crate::util::json::{self, Json};
+
+/// The serializable slice of a [`RunRecord`] that grid-level consumers
+/// (CSV emitters, table printers, resume logic) need. Full curves stay
+/// in-process; the journal keeps runs summarizable across machines.
+#[derive(Clone, Debug, PartialEq)]
+pub struct RunSummary {
+    pub scheduler: String,
+    pub iters: u64,
+    pub sim_time: f64,
+    pub applied: u64,
+    pub accumulated: u64,
+    pub discarded: u64,
+    pub cancellations: u64,
+    pub worker_hits: Vec<u64>,
+    pub final_gap: f64,
+    pub final_gradnorm_sq: f64,
+    pub time_to_target: Option<f64>,
+    pub time_to_eps: Option<f64>,
+    pub diverged: bool,
+    /// Realized label concentration of the data partition (sharded cells).
+    pub concentration: Option<f64>,
+    /// Final per-shard losses (fairness metrics; empty when not recorded).
+    pub shard_final_losses: Vec<f64>,
+}
+
+/// JSON `Num`s cannot carry non-finite values; encode them as strings.
+fn num(v: f64) -> Json {
+    if v.is_finite() {
+        Json::Num(v)
+    } else if v.is_nan() {
+        Json::Str("nan".into())
+    } else if v > 0.0 {
+        Json::Str("inf".into())
+    } else {
+        Json::Str("-inf".into())
+    }
+}
+
+fn get_num(j: &Json) -> Option<f64> {
+    match j {
+        Json::Num(n) => Some(*n),
+        Json::Str(s) => match s.as_str() {
+            "nan" => Some(f64::NAN),
+            "inf" => Some(f64::INFINITY),
+            "-inf" => Some(f64::NEG_INFINITY),
+            _ => None,
+        },
+        _ => None,
+    }
+}
+
+fn opt_num(v: Option<f64>) -> Json {
+    v.map(num).unwrap_or(Json::Null)
+}
+
+fn get_u64(j: &Json) -> Option<u64> {
+    get_num(j).and_then(|f| {
+        (f >= 0.0 && f.fract() == 0.0 && f < 9.0e15).then_some(f as u64)
+    })
+}
+
+impl RunSummary {
+    /// Summarize a finished run. `concentration` comes from the runner
+    /// (it is a property of the cell's partition, not of the record).
+    pub fn from_record(rec: &RunRecord, concentration: Option<f64>) -> Self {
+        Self {
+            scheduler: rec.scheduler.clone(),
+            iters: rec.iters,
+            sim_time: rec.sim_time,
+            applied: rec.applied,
+            accumulated: rec.accumulated,
+            discarded: rec.discarded,
+            cancellations: rec.cluster.cancellations,
+            worker_hits: rec.worker_hits.clone(),
+            final_gap: rec.final_gap,
+            final_gradnorm_sq: rec.final_gradnorm_sq,
+            time_to_target: rec.time_to_target(),
+            time_to_eps: rec.time_to_eps,
+            diverged: rec.diverged,
+            concentration,
+            shard_final_losses: rec
+                .shard_loss_curves
+                .iter()
+                .filter_map(|c| c.last().map(|(_, v)| v))
+                .collect(),
+        }
+    }
+
+    pub fn to_json(&self) -> Json {
+        json::obj(vec![
+            ("scheduler", Json::Str(self.scheduler.clone())),
+            ("iters", num(self.iters as f64)),
+            ("sim_time", num(self.sim_time)),
+            ("applied", num(self.applied as f64)),
+            ("accumulated", num(self.accumulated as f64)),
+            ("discarded", num(self.discarded as f64)),
+            ("cancellations", num(self.cancellations as f64)),
+            (
+                "worker_hits",
+                Json::Arr(self.worker_hits.iter().map(|&h| num(h as f64)).collect()),
+            ),
+            ("final_gap", num(self.final_gap)),
+            ("final_gradnorm_sq", num(self.final_gradnorm_sq)),
+            ("time_to_target", opt_num(self.time_to_target)),
+            ("time_to_eps", opt_num(self.time_to_eps)),
+            ("diverged", Json::Bool(self.diverged)),
+            ("concentration", opt_num(self.concentration)),
+            (
+                "shard_final_losses",
+                Json::Arr(self.shard_final_losses.iter().map(|&l| num(l)).collect()),
+            ),
+        ])
+    }
+
+    pub fn from_json(j: &Json) -> Option<Self> {
+        let opt = |key: &str| match j.get(key) {
+            Json::Null => Some(None),
+            other => get_num(other).map(Some),
+        };
+        Some(Self {
+            scheduler: j.get("scheduler").as_str()?.to_string(),
+            iters: get_u64(j.get("iters"))?,
+            sim_time: get_num(j.get("sim_time"))?,
+            applied: get_u64(j.get("applied"))?,
+            accumulated: get_u64(j.get("accumulated"))?,
+            discarded: get_u64(j.get("discarded"))?,
+            cancellations: get_u64(j.get("cancellations"))?,
+            worker_hits: j
+                .get("worker_hits")
+                .as_arr()?
+                .iter()
+                .map(get_u64)
+                .collect::<Option<Vec<_>>>()?,
+            final_gap: get_num(j.get("final_gap"))?,
+            final_gradnorm_sq: get_num(j.get("final_gradnorm_sq"))?,
+            time_to_target: opt("time_to_target")?,
+            time_to_eps: opt("time_to_eps")?,
+            diverged: matches!(j.get("diverged"), Json::Bool(true)),
+            concentration: opt("concentration")?,
+            shard_final_losses: j
+                .get("shard_final_losses")
+                .as_arr()?
+                .iter()
+                .map(get_num)
+                .collect::<Option<Vec<_>>>()?,
+        })
+    }
+}
+
+/// Append-only journal of completed cells, keyed by [`super::Cell::key`].
+pub struct CellStore {
+    path: PathBuf,
+    file: File,
+    completed: BTreeMap<String, RunSummary>,
+}
+
+impl CellStore {
+    /// Open (or create) the journal at `path` for the grid identified by
+    /// `fingerprint` with `n_cells` total cells. An existing journal
+    /// written for a different grid is refused — resuming a different
+    /// parameterization against old results would corrupt the sweep.
+    ///
+    /// The journal is a **single-writer** file: concurrent processes must
+    /// each use their own path (`--shard i/n` fan-out pairs naturally
+    /// with one journal per shard). The file is never truncated, so a
+    /// second writer cannot wipe checkpointed cells — but interleaved
+    /// appends from two processes are not supported.
+    pub fn open(path: &Path, fingerprint: &str, n_cells: usize) -> Result<CellStore> {
+        let mut completed = BTreeMap::new();
+        let text = if path.exists() {
+            std::fs::read_to_string(path)?
+        } else {
+            String::new()
+        };
+        // a missing or zero-length file (killed before the header flushed)
+        // is a fresh journal; anything else must start with a valid header.
+        // The file is only ever opened in append mode — never truncated —
+        // so a concurrent writer's cells can at worst interleave, not be
+        // wiped (still: one writer per journal is the contract; shards
+        // should each get their own --journal).
+        let fresh = text.is_empty();
+        if !fresh {
+            let mut lines = text.lines();
+            match lines.next().map(json::parse) {
+                Some(Ok(header)) => {
+                    let grid = header.get("grid").as_str().unwrap_or_default();
+                    if grid != fingerprint {
+                        crate::bail!(
+                            "journal {} was written for a different grid \
+                             (journal fingerprint {grid}, current {fingerprint}); \
+                             delete it or rerun with the original parameters",
+                            path.display()
+                        );
+                    }
+                }
+                _ => crate::bail!(
+                    "journal {} has no readable header — not a sweep journal?",
+                    path.display()
+                ),
+            }
+            for line in lines {
+                // tolerate a truncated trailing line (killed mid-append):
+                // the cell it would have recorded simply reruns
+                let Ok(entry) = json::parse(line) else { continue };
+                let (Some(key), Some(summary)) = (
+                    entry.get("key").as_str(),
+                    RunSummary::from_json(entry.get("summary")),
+                ) else {
+                    continue;
+                };
+                completed.insert(key.to_string(), summary);
+            }
+        }
+        if let Some(parent) = path.parent() {
+            if !parent.as_os_str().is_empty() {
+                std::fs::create_dir_all(parent)?;
+            }
+        }
+        let mut file = OpenOptions::new().create(true).append(true).open(path)?;
+        if fresh {
+            let header = json::obj(vec![
+                ("version", Json::Num(1.0)),
+                ("grid", Json::Str(fingerprint.to_string())),
+                ("cells", Json::Num(n_cells as f64)),
+            ]);
+            writeln!(file, "{}", json::write(&header))?;
+            file.flush()?;
+        } else if !text.ends_with('\n') {
+            // terminate the half-written line a kill left behind, so the
+            // next append starts on a fresh line instead of gluing onto it
+            writeln!(file)?;
+        }
+        Ok(CellStore {
+            path: path.to_path_buf(),
+            file,
+            completed,
+        })
+    }
+
+    pub fn path(&self) -> &Path {
+        &self.path
+    }
+
+    /// Cells already recorded (across every prior invocation and shard
+    /// that wrote this journal).
+    pub fn completed(&self) -> &BTreeMap<String, RunSummary> {
+        &self.completed
+    }
+
+    /// Record one finished cell and flush, so the entry survives an
+    /// immediately following kill.
+    pub fn append(&mut self, key: &str, summary: &RunSummary) -> Result<()> {
+        let entry = json::obj(vec![
+            ("key", Json::Str(key.to_string())),
+            ("summary", summary.to_json()),
+        ]);
+        writeln!(self.file, "{}", json::write(&entry))?;
+        self.file.flush()?;
+        self.completed.insert(key.to_string(), summary.clone());
+        Ok(())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::io::Write as _;
+
+    fn sample_summary() -> RunSummary {
+        RunSummary {
+            scheduler: "ringmaster(R=4)".into(),
+            iters: 120,
+            sim_time: 31.25,
+            applied: 120,
+            accumulated: 0,
+            discarded: 7,
+            cancellations: 3,
+            worker_hits: vec![40, 50, 30],
+            final_gap: 1.25e-4,
+            final_gradnorm_sq: f64::INFINITY,
+            time_to_target: None,
+            time_to_eps: Some(12.5),
+            diverged: false,
+            concentration: Some(0.62),
+            shard_final_losses: vec![0.3, 0.7, f64::NAN],
+        }
+    }
+
+    #[test]
+    fn summary_roundtrips_through_json_including_nonfinite() {
+        let s = sample_summary();
+        let j = json::parse(&json::write(&s.to_json())).unwrap();
+        let back = RunSummary::from_json(&j).unwrap();
+        assert_eq!(back.scheduler, s.scheduler);
+        assert_eq!(back.iters, s.iters);
+        assert_eq!(back.sim_time, s.sim_time);
+        assert_eq!(back.worker_hits, s.worker_hits);
+        assert_eq!(back.final_gap, s.final_gap);
+        assert!(back.final_gradnorm_sq.is_infinite());
+        assert_eq!(back.time_to_target, None);
+        assert_eq!(back.time_to_eps, Some(12.5));
+        assert_eq!(back.concentration, Some(0.62));
+        assert_eq!(back.shard_final_losses[..2], s.shard_final_losses[..2]);
+        assert!(back.shard_final_losses[2].is_nan());
+    }
+
+    #[test]
+    fn store_persists_resumes_and_tolerates_truncated_tail() {
+        let dir = std::env::temp_dir().join(format!("ringmaster_store_{}", std::process::id()));
+        std::fs::create_dir_all(&dir).unwrap();
+        let path = dir.join("journal.jsonl");
+        std::fs::remove_file(&path).ok();
+
+        let mut store = CellStore::open(&path, "abc123", 4).unwrap();
+        store.append("cell-a", &sample_summary()).unwrap();
+        store.append("cell-b", &sample_summary()).unwrap();
+        drop(store);
+
+        // simulate a kill mid-append: half a JSON line at the tail
+        {
+            let mut f = OpenOptions::new().append(true).open(&path).unwrap();
+            write!(f, "{{\"key\":\"cell-c\",\"summ").unwrap();
+        }
+        let mut store = CellStore::open(&path, "abc123", 4).unwrap();
+        assert_eq!(store.completed().len(), 2);
+        assert!(store.completed().contains_key("cell-a"));
+        assert!(store.completed().contains_key("cell-b"));
+        assert!(!store.completed().contains_key("cell-c"));
+        // appending after a dangling tail must land on its own line ...
+        store.append("cell-d", &sample_summary()).unwrap();
+        drop(store);
+        // ... so the next load sees it (and still skips the garbage line)
+        let store = CellStore::open(&path, "abc123", 4).unwrap();
+        assert_eq!(store.completed().len(), 3);
+        assert!(store.completed().contains_key("cell-d"));
+        drop(store);
+
+        // a different grid fingerprint must be refused
+        let err = CellStore::open(&path, "different", 4);
+        assert!(err.is_err());
+        assert!(format!("{}", err.err().unwrap()).contains("different grid"));
+        std::fs::remove_dir_all(&dir).ok();
+    }
+}

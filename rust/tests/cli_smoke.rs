@@ -122,6 +122,79 @@ fn sweep_emits_long_form_csv() {
 }
 
 #[test]
+fn sweep_journal_interrupt_resume_is_byte_identical_and_shards_cover() {
+    let dir = std::env::temp_dir().join(format!("ringmaster_cli_sweep_{}", std::process::id()));
+    std::fs::create_dir_all(&dir).unwrap();
+    let journal = dir.join("sweep.jsonl");
+    std::fs::remove_file(&journal).ok();
+    let base = [
+        "sweep",
+        "--alpha", "inf,0.1",
+        "--seeds", "0",
+        "--n", "4",
+        "--n-data", "120",
+        "--batch", "4",
+        "--max-iters", "120",
+        "--schedulers", "ringmaster,rescaled",
+    ];
+
+    // ground truth: uninterrupted, journal-free
+    let (fresh, _, ok) = run(&base);
+    assert!(ok);
+
+    // invocation 1: journaled, budgeted to 2 of the 4 cells → no CSV yet
+    let journal_s = journal.to_str().unwrap().to_string();
+    let mut with_journal: Vec<&str> = base.to_vec();
+    with_journal.extend(["--journal", journal_s.as_str()]);
+    let mut interrupted = with_journal.clone();
+    interrupted.extend(["--max-cells", "2"]);
+    let (out1, err1, ok1) = run(&interrupted);
+    assert!(ok1, "{err1}");
+    assert!(out1.is_empty(), "partial sweep must not emit CSV: {out1}");
+    assert!(err1.contains("2/4 cells complete"), "{err1}");
+
+    // invocation 2: resume from the journal → CSV identical to fresh
+    let (out2, err2, ok2) = run(&with_journal);
+    assert!(ok2, "{err2}");
+    assert_eq!(out2, fresh, "resumed CSV differs from uninterrupted run");
+
+    // rescaled rows made it into the CSV
+    assert!(out2.lines().any(|l| l.starts_with("asgd+rescaled,")), "{out2}");
+
+    // shard fan-out: 1/2 ∪ 2/2 rows = full rows (journal-free)
+    let mut shard_rows: Vec<String> = Vec::new();
+    for sel in ["1/2", "2/2"] {
+        let mut sharded = base.to_vec();
+        sharded.extend(["--shard", sel]);
+        let (out, err, ok) = run(&sharded);
+        assert!(ok, "{err}");
+        shard_rows.extend(out.trim_end().lines().skip(1).map(String::from));
+    }
+    let mut expect: Vec<&str> = fresh.trim_end().lines().skip(1).collect();
+    let mut got: Vec<&str> = shard_rows.iter().map(String::as_str).collect();
+    expect.sort_unstable();
+    got.sort_unstable();
+    assert_eq!(got, expect, "shard union must equal the full grid");
+
+    // a conflicting grid against the same journal is refused (the
+    // duplicated --max-iters wins in the option map, changing the grid)
+    let mut conflicting: Vec<&str> = with_journal.clone();
+    conflicting.extend(["--max-iters", "121"]);
+    let (_, err3, ok3) = run(&conflicting);
+    assert!(!ok3, "journal for another grid must be refused");
+    assert!(err3.contains("different grid"), "{err3}");
+
+    // --max-cells without --journal would silently discard the compute
+    let mut unjournaled = base.to_vec();
+    unjournaled.extend(["--max-cells", "2"]);
+    let (_, err4, ok4) = run(&unjournaled);
+    assert!(!ok4, "budgeted run without a journal must be refused");
+    assert!(err4.contains("--journal"), "{err4}");
+
+    std::fs::remove_dir_all(&dir).ok();
+}
+
+#[test]
 fn exec_demo_runs_real_threads() {
     let (stdout, stderr, ok) = run(&[
         "exec-demo",

@@ -1,0 +1,150 @@
+//! Resume and shard semantics of the scenario orchestration layer — the
+//! production contract of checkpointed sweeps:
+//!
+//! * a sweep interrupted after k cells and resumed produces a CSV
+//!   byte-identical to an uninterrupted run's;
+//! * the `--shard i/n` slices are pairwise disjoint and their union is
+//!   the full grid, with shard CSV rows matching the unsharded rows.
+
+use std::path::PathBuf;
+
+use ringmaster::coordinator::SchedulerKind;
+use ringmaster::experiments::heterogeneity::HetConfig;
+use ringmaster::scenario::{self, CellStore, GridSpec, ShardSel};
+
+fn tiny_spec() -> GridSpec {
+    HetConfig {
+        n_data: 120,
+        n_workers: 4,
+        batch: 4,
+        lambda: 0.01,
+        max_iters: 120,
+        record_every: 40,
+        alphas: vec![f64::INFINITY, 0.1],
+        seeds: vec![0, 1],
+        schedulers: vec![
+            SchedulerKind::Ringmaster { r: 4, gamma: 0.02, cancel: true }.into(),
+            SchedulerKind::Rennala { b: 2, gamma: 0.02 }.into(),
+        ],
+    }
+    .grid_spec()
+}
+
+fn tmp(name: &str) -> PathBuf {
+    let dir = std::env::temp_dir().join(format!("ringmaster_resume_{}", std::process::id()));
+    std::fs::create_dir_all(&dir).unwrap();
+    dir.join(name)
+}
+
+#[test]
+fn interrupted_then_resumed_sweep_is_byte_identical_to_uninterrupted() {
+    let spec = tiny_spec();
+    assert_eq!(spec.len(), 8); // 2 sched × 2 α × 2 seeds
+
+    // ground truth: one uninterrupted, journal-free run
+    let fresh = scenario::run_grid(&spec, ShardSel::ALL, None, None).unwrap();
+    assert!(fresh.is_complete());
+    let fresh_csv = scenario::grid_csv(&fresh.rows);
+
+    // invocation 1: journaled, interrupted after 3 cells
+    let journal = tmp("interrupt.jsonl");
+    std::fs::remove_file(&journal).ok();
+    let mut store = CellStore::open(&journal, &spec.fingerprint(), spec.len()).unwrap();
+    let partial = scenario::run_grid(&spec, ShardSel::ALL, Some(&mut store), Some(3)).unwrap();
+    assert!(!partial.is_complete());
+    assert_eq!(partial.ran, 3);
+    assert_eq!(partial.remaining, 5);
+    drop(store);
+
+    // invocation 2 (a brand-new process would do exactly this): reopen the
+    // journal, diff, and run only what is missing
+    let mut store = CellStore::open(&journal, &spec.fingerprint(), spec.len()).unwrap();
+    assert_eq!(store.completed().len(), 3, "journal kept the finished cells");
+    let resumed = scenario::run_grid(&spec, ShardSel::ALL, Some(&mut store), None).unwrap();
+    assert!(resumed.is_complete());
+    assert_eq!(resumed.ran, 5, "only the missing cells reran");
+
+    let resumed_csv = scenario::grid_csv(&resumed.rows);
+    assert_eq!(
+        resumed_csv.as_bytes(),
+        fresh_csv.as_bytes(),
+        "resumed CSV must be byte-identical to an uninterrupted run"
+    );
+
+    // idempotence: a third invocation runs nothing and still yields the
+    // identical CSV, entirely from the journal
+    let mut store = CellStore::open(&journal, &spec.fingerprint(), spec.len()).unwrap();
+    let noop = scenario::run_grid(&spec, ShardSel::ALL, Some(&mut store), None).unwrap();
+    assert_eq!(noop.ran, 0);
+    assert_eq!(scenario::grid_csv(&noop.rows).as_bytes(), fresh_csv.as_bytes());
+}
+
+#[test]
+fn journal_refuses_a_different_grid() {
+    let spec = tiny_spec();
+    let journal = tmp("mismatch.jsonl");
+    std::fs::remove_file(&journal).ok();
+    let mut store = CellStore::open(&journal, &spec.fingerprint(), spec.len()).unwrap();
+    scenario::run_grid(&spec, ShardSel::ALL, Some(&mut store), Some(1)).unwrap();
+    drop(store);
+
+    // same journal, different budget ⇒ different fingerprint ⇒ refused
+    let mut other = tiny_spec();
+    other.budget.max_iters = 121;
+    assert_ne!(other.fingerprint(), spec.fingerprint());
+    assert!(CellStore::open(&journal, &other.fingerprint(), other.len()).is_err());
+}
+
+#[test]
+fn shards_partition_the_grid_and_union_to_the_unsharded_rows() {
+    let spec = tiny_spec();
+    let full = scenario::run_grid(&spec, ShardSel::ALL, None, None).unwrap();
+    let full_csv = scenario::grid_csv(&full.rows);
+    let full_rows: Vec<&str> = full_csv.trim_end().lines().skip(1).collect();
+
+    for n in [2usize, 3] {
+        // disjoint cover of the cell keys
+        let mut seen = std::collections::BTreeSet::new();
+        let mut shard_rows: Vec<String> = Vec::new();
+        for i in 0..n {
+            let sel = ShardSel { index: i, count: n };
+            for cell in spec.shard_cells(sel) {
+                assert!(seen.insert(cell.key()), "cell on two shards: {}", cell.key());
+            }
+            // each shard runs (journal-free here) and emits its own rows
+            let piece = scenario::run_grid(&spec, sel, None, None).unwrap();
+            assert!(piece.is_complete());
+            let csv = scenario::grid_csv(&piece.rows);
+            shard_rows.extend(csv.trim_end().lines().skip(1).map(String::from));
+        }
+        assert_eq!(seen.len(), spec.len(), "union covers the grid (n={n})");
+
+        // concatenated shard rows = unsharded rows (as a multiset)
+        let mut a: Vec<&str> = shard_rows.iter().map(String::as_str).collect();
+        let mut b = full_rows.clone();
+        a.sort_unstable();
+        b.sort_unstable();
+        assert_eq!(a, b, "sharded rows differ from unsharded (n={n})");
+    }
+}
+
+#[test]
+fn sweep_csv_has_fairness_columns_for_sharded_cells() {
+    let spec = tiny_spec();
+    let run = scenario::run_grid(&spec, ShardSel::ALL, None, None).unwrap();
+    let csv = scenario::grid_csv(&run.rows);
+    let lines: Vec<&str> = csv.trim_end().lines().collect();
+    let header: Vec<&str> = lines[0].split(',').collect();
+    let min_i = header.iter().position(|&h| h == "shard_loss_min").unwrap();
+    let max_i = header.iter().position(|&h| h == "shard_loss_max").unwrap();
+    let spread_i = header.iter().position(|&h| h == "shard_loss_spread").unwrap();
+    for l in &lines[1..] {
+        let f: Vec<&str> = l.split(',').collect();
+        let lo: f64 = f[min_i].parse().unwrap();
+        let hi: f64 = f[max_i].parse().unwrap();
+        let spread: f64 = f[spread_i].parse().unwrap();
+        assert!(lo.is_finite() && hi >= lo, "{l}");
+        // all three are independently rounded to 7 significant digits
+        assert!((spread - (hi - lo)).abs() < 1e-5 * hi.abs().max(1.0), "{l}");
+    }
+}

@@ -11,18 +11,36 @@
 //!
 //! The (profile × scheduler) measurement grid is assembled up front as
 //! scenario cells and fanned across the sweep pool by the `scenario`
-//! orchestration layer, so the bench uses every core instead of running
-//! the 12 simulations serially.
+//! orchestration layer — one timed sweep per scheduler family, so the
+//! bench also yields the per-scheduler wall seconds CI's `bench-smoke`
+//! job records into the `BENCH_*.json` perf trajectory
+//! (`RINGMASTER_BENCH_JSON=path` writes the report;
+//! `tools/bench_regression.py` gates regressions against committed
+//! baselines).
 //!
 //! Quick scale: n=256.  RINGMASTER_BENCH_SCALE=full: n=6174.
+//! RINGMASTER_BENCH_SUBSTRATE=sim|wallclock-det|wallclock-live selects
+//! the execution substrate (default sim).
 
-use ringmaster::bench_util::{bench_scale, Scale, Table};
+use std::time::Instant;
+
+use ringmaster::bench_util::{
+    bench_json_out, bench_scale, write_bench_json, Scale, SchedulerStat, Table,
+};
 use ringmaster::complexity::{self};
 use ringmaster::coordinator::SchedulerKind;
 use ringmaster::experiments::{standard_profiles, sweep_quadratic, QuadExpConfig};
-use ringmaster::scenario::Cell;
+use ringmaster::scenario::{Cell, CellOutcome, Substrate};
 use ringmaster::sim::ComputeModel;
 use ringmaster::util::fmt_secs;
+
+fn bench_substrate() -> Substrate {
+    match std::env::var("RINGMASTER_BENCH_SUBSTRATE").as_deref() {
+        Ok("wallclock-det") => Substrate::Wallclock { deterministic: true, threads: 0 },
+        Ok("wallclock-live") => Substrate::Wallclock { deterministic: false, threads: 0 },
+        _ => Substrate::Sim,
+    }
+}
 
 fn main() {
     let scale = bench_scale();
@@ -65,32 +83,46 @@ fn main() {
         "theory T_A/T_R",
     ]);
 
-    // assemble the full measurement grid, then run it in parallel.
-    // Table 1's rows are *worst-case guarantees under each analysis's
-    // prescribed stepsize*: γ_A ≈ 1/(2nL) for classic ASGD (it must
-    // survive delays up to n), γ ≈ 1/(2RL) for Ringmaster (Thm 4.1),
-    // γ ≈ 1/(2m*L) for Naive Optimal ASGD on its m* workers.
+    // assemble the measurement grid *per scheduler family*, timing each
+    // family's parallel sweep — the per-scheduler wall seconds are the
+    // perf-trajectory metric CI records. Table 1's rows are *worst-case
+    // guarantees under each analysis's prescribed stepsize*: γ_A ≈ 1/(2nL)
+    // for classic ASGD (it must survive delays up to n), γ ≈ 1/(2RL) for
+    // Ringmaster (Thm 4.1), γ ≈ 1/(2m*L) for Naive Optimal ASGD on its m*
+    // workers.
+    let substrate = bench_substrate();
     let profiles = standard_profiles(n);
-    let mut cells: Vec<Cell> = Vec::new();
-    for (name, taus) in &profiles {
-        let model = ComputeModel::Fixed { taus: taus.clone() };
-        let gamma_asgd = 1.0 / (2.0 * n as f64 * c.l);
-        let m_star_naive = complexity::naive_m_star(taus, c.sigma_sq, c.eps);
-        let gamma_naive = 1.0 / (2.0 * m_star_naive as f64 * c.l);
-        for kind in [
-            SchedulerKind::Asgd { gamma: gamma_asgd },
-            SchedulerKind::Naive { m_star: m_star_naive, gamma: gamma_naive },
-            SchedulerKind::Ringmaster { r, gamma, cancel: true },
-        ] {
-            cells.push(base.cell(
-                name.clone(),
-                model.clone(),
-                &kind,
-                ringmaster::engine::ServerOpt::Sgd,
-            ));
-        }
+    let family_cells = |family: &str| -> Vec<Cell> {
+        profiles
+            .iter()
+            .map(|(name, taus)| {
+                let model = ComputeModel::Fixed { taus: taus.clone() };
+                let gamma_asgd = 1.0 / (2.0 * n as f64 * c.l);
+                let m_star_naive = complexity::naive_m_star(taus, c.sigma_sq, c.eps);
+                let gamma_naive = 1.0 / (2.0 * m_star_naive as f64 * c.l);
+                let kind = match family {
+                    "asgd" => SchedulerKind::Asgd { gamma: gamma_asgd },
+                    "naive" => SchedulerKind::Naive { m_star: m_star_naive, gamma: gamma_naive },
+                    _ => SchedulerKind::Ringmaster { r, gamma, cancel: true },
+                };
+                base.cell(name.clone(), model, &kind, ringmaster::engine::ServerOpt::Sgd)
+                    .on(substrate)
+            })
+            .collect()
+    };
+    let mut results: Vec<CellOutcome> = Vec::new();
+    let mut stats: Vec<SchedulerStat> = Vec::new();
+    for family in ["asgd", "naive", "ringmaster"] {
+        let cells = family_cells(family);
+        let t0 = Instant::now();
+        let outcomes = sweep_quadratic(&base, &cells);
+        stats.push(SchedulerStat {
+            name: family.to_string(),
+            cells: outcomes.len(),
+            wall_seconds: t0.elapsed().as_secs_f64(),
+        });
+        results.extend(outcomes);
     }
-    let results = sweep_quadratic(&base, &cells);
 
     // results come back in cell order, tagged with their profile label and
     // scheduler kind — attribute by tag, not by position
@@ -138,4 +170,21 @@ fn main() {
         "\nexpected shape: Ringmaster ≈ Naive ≪ ASGD on heterogeneous profiles; \
          all equal on the homogeneous profile."
     );
+
+    let total_cells: usize = stats.iter().map(|s| s.cells).sum();
+    let total_wall: f64 = stats.iter().map(|s| s.wall_seconds).sum();
+    println!(
+        "\nthroughput: {total_cells} cells in {} ({:.2} cells/sec) on substrate {}",
+        fmt_secs(total_wall),
+        if total_wall > 0.0 { total_cells as f64 / total_wall } else { 0.0 },
+        substrate.name(),
+    );
+    for s in &stats {
+        println!("  {:<12} {} cells  {}", s.name, s.cells, fmt_secs(s.wall_seconds));
+    }
+    if let Some(path) = bench_json_out() {
+        write_bench_json(&path, "table1", scale, substrate.name(), n, &stats)
+            .expect("writing bench JSON");
+        println!("wrote bench report to {}", path.display());
+    }
 }

@@ -70,6 +70,90 @@ pub fn bb<T>(x: T) -> T {
     black_box(x)
 }
 
+/// Where a bench should write its machine-readable report
+/// (`RINGMASTER_BENCH_JSON=path`), if anywhere. CI's `bench-smoke` job
+/// sets this to collect the `BENCH_*.json` perf-trajectory artifact.
+pub fn bench_json_out() -> Option<std::path::PathBuf> {
+    std::env::var("RINGMASTER_BENCH_JSON")
+        .ok()
+        .filter(|s| !s.is_empty())
+        .map(std::path::PathBuf::from)
+}
+
+/// One scheduler family's slice of a bench JSON report.
+#[derive(Clone, Debug)]
+pub struct SchedulerStat {
+    pub name: String,
+    /// Grid cells this family ran.
+    pub cells: usize,
+    /// Host wall seconds its slice of the grid took.
+    pub wall_seconds: f64,
+}
+
+/// Write the schema-stable bench report CI's `bench-smoke` job uploads
+/// and regression-gates (`tools/bench_regression.py`). Schema version 1,
+/// fixed key set:
+///
+/// ```json
+/// {"bench":"table1","cells":12,"cells_per_sec":9.7,"n_workers":256,
+///  "provenance":"measured","scale":"quick","schema_version":1,
+///  "schedulers":{"asgd":{"cells":4,"wall_seconds":0.5},...},
+///  "substrate":"sim","wall_seconds":1.23}
+/// ```
+///
+/// Committed `BENCH_*.json` baselines use the same schema with
+/// `"provenance":"placeholder"` and `null` metrics until a measured value
+/// is committed; the regression gate skips those.
+pub fn write_bench_json(
+    path: &std::path::Path,
+    bench: &str,
+    scale: Scale,
+    substrate: &str,
+    n_workers: usize,
+    stats: &[SchedulerStat],
+) -> std::io::Result<()> {
+    use crate::util::json::{obj, write, Json};
+    let cells: usize = stats.iter().map(|s| s.cells).sum();
+    let wall: f64 = stats.iter().map(|s| s.wall_seconds).sum();
+    let cells_per_sec = if wall > 0.0 { cells as f64 / wall } else { 0.0 };
+    let schedulers = Json::Obj(
+        stats
+            .iter()
+            .map(|s| {
+                (
+                    s.name.clone(),
+                    obj(vec![
+                        ("cells", Json::Num(s.cells as f64)),
+                        ("wall_seconds", Json::Num(s.wall_seconds)),
+                    ]),
+                )
+            })
+            .collect(),
+    );
+    let report = obj(vec![
+        ("schema_version", Json::Num(1.0)),
+        ("bench", Json::Str(bench.to_string())),
+        (
+            "scale",
+            Json::Str(
+                match scale {
+                    Scale::Quick => "quick",
+                    Scale::Full => "full",
+                }
+                .to_string(),
+            ),
+        ),
+        ("substrate", Json::Str(substrate.to_string())),
+        ("n_workers", Json::Num(n_workers as f64)),
+        ("cells", Json::Num(cells as f64)),
+        ("wall_seconds", Json::Num(wall)),
+        ("cells_per_sec", Json::Num(cells_per_sec)),
+        ("schedulers", schedulers),
+        ("provenance", Json::Str("measured".to_string())),
+    ]);
+    std::fs::write(path, format!("{}\n", write(&report)))
+}
+
 /// Print a measurement row (aligned, human units).
 pub fn report(m: &Measurement) {
     println!(
@@ -146,6 +230,54 @@ mod tests {
         assert!(m.median_s > 0.0);
         assert!(m.p25_s <= m.median_s && m.median_s <= m.p75_s);
         assert_eq!(m.reps, 5);
+    }
+
+    #[test]
+    fn bench_json_schema_is_stable_and_parses() {
+        let path = std::env::temp_dir().join(format!(
+            "ringmaster_bench_json_{}.json",
+            std::process::id()
+        ));
+        write_bench_json(
+            &path,
+            "table1",
+            Scale::Quick,
+            "sim",
+            256,
+            &[
+                SchedulerStat { name: "asgd".into(), cells: 4, wall_seconds: 0.5 },
+                SchedulerStat { name: "ringmaster".into(), cells: 4, wall_seconds: 0.3 },
+            ],
+        )
+        .unwrap();
+        let text = std::fs::read_to_string(&path).unwrap();
+        let j = crate::util::json::parse(&text).unwrap();
+        for key in [
+            "schema_version",
+            "bench",
+            "scale",
+            "substrate",
+            "n_workers",
+            "cells",
+            "wall_seconds",
+            "cells_per_sec",
+            "schedulers",
+            "provenance",
+        ] {
+            assert!(
+                !matches!(j.get(key), crate::util::json::Json::Null),
+                "missing schema key {key}"
+            );
+        }
+        assert_eq!(j.get("cells").as_usize(), Some(8));
+        assert_eq!(j.get("provenance").as_str(), Some("measured"));
+        let cps = j.get("cells_per_sec").as_f64().unwrap();
+        assert!((cps - 10.0).abs() < 1e-9, "{cps}");
+        assert_eq!(
+            j.get("schedulers").get("asgd").get("cells").as_usize(),
+            Some(4)
+        );
+        std::fs::remove_file(&path).ok();
     }
 
     #[test]

@@ -29,7 +29,18 @@ impl fmt::Display for CliError {
 impl std::error::Error for CliError {}
 
 /// Boolean-valued switches that take no argument.
-const SWITCHES: &[&str] = &["help", "version", "quiet", "verbose", "no-cancel", "cancel", "csv", "json", "plot"];
+const SWITCHES: &[&str] = &[
+    "help",
+    "version",
+    "quiet",
+    "verbose",
+    "no-cancel",
+    "cancel",
+    "csv",
+    "json",
+    "plot",
+    "deterministic",
+];
 
 /// Parse an argv slice (without the program name).
 pub fn parse(argv: &[String]) -> Result<Args, CliError> {

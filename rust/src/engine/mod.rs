@@ -30,9 +30,14 @@
 //!   [`crate::coordinator::SchedulerKind`] therefore behaves identically
 //!   on both substrates *by construction*.
 //! * [`sweep`] — the scoped-thread-pool fan-out primitive (panic-
-//!   propagating, order-preserving, with streaming result emission) that
-//!   the [`crate::scenario`] orchestration layer builds its checkpointed,
-//!   shardable grids on.
+//!   propagating, order-preserving, with streaming result emission and an
+//!   explicit thread-count override for callers whose items are
+//!   themselves multithreaded) that the [`crate::scenario`] orchestration
+//!   layer builds its checkpointed, shardable grids on. Grid cells select
+//!   their source through the scenario `Substrate` axis: `Sim` cells run
+//!   [`SimSource`], wall-clock cells run [`ThreadSource`] — with
+//!   [`ThreadPoolConfig::virtual_time`] keeping deterministic wall-clock
+//!   cells bit-identical to the simulator at full hardware speed.
 //!
 //! `driver::Driver::run` and `exec::run_wallclock` are thin shims over
 //! this module; both return the unified [`RunRecord`].

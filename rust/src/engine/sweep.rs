@@ -48,7 +48,20 @@ where
     R: Send,
     F: Fn(usize, &T) -> R + Sync,
 {
-    parallel_map_streaming(items, f, |_, _| ControlFlow::Continue(()))
+    parallel_map_with(sweep_threads(), items, f)
+}
+
+/// [`parallel_map`] with an explicit worker-thread count (callers whose
+/// items are themselves multithreaded — e.g. wall-clock grid cells, one OS
+/// thread per simulated worker — cap the pool to keep the host from
+/// oversubscribing).
+pub fn parallel_map_with<T, R, F>(threads: usize, items: &[T], f: F) -> Vec<R>
+where
+    T: Sync,
+    R: Send,
+    F: Fn(usize, &T) -> R + Sync,
+{
+    parallel_map_streaming_with(threads, items, f, |_, _| ControlFlow::Continue(()))
         .into_iter()
         .map(|s| s.expect("sink never breaks, so every item completed"))
         .collect()
@@ -70,14 +83,31 @@ where
 /// items start; items already in flight still finish and still reach the
 /// sink (a checkpoint journal keeps every cell that completed), and the
 /// first panic is re-raised once the pool drains.
-pub fn parallel_map_streaming<T, R, F, S>(items: &[T], f: F, mut sink: S) -> Vec<Option<R>>
+pub fn parallel_map_streaming<T, R, F, S>(items: &[T], f: F, sink: S) -> Vec<Option<R>>
 where
     T: Sync,
     R: Send,
     F: Fn(usize, &T) -> R + Sync,
     S: FnMut(usize, &R) -> ControlFlow<()>,
 {
-    let threads = sweep_threads().min(items.len());
+    parallel_map_streaming_with(sweep_threads(), items, f, sink)
+}
+
+/// [`parallel_map_streaming`] with an explicit worker-thread count (`0` is
+/// treated as 1; the count is still clamped to the item count).
+pub fn parallel_map_streaming_with<T, R, F, S>(
+    threads: usize,
+    items: &[T],
+    f: F,
+    mut sink: S,
+) -> Vec<Option<R>>
+where
+    T: Sync,
+    R: Send,
+    F: Fn(usize, &T) -> R + Sync,
+    S: FnMut(usize, &R) -> ControlFlow<()>,
+{
+    let threads = threads.max(1).min(items.len());
     let mut slots: Vec<Option<R>> = Vec::with_capacity(items.len());
     slots.resize_with(items.len(), || None);
     if threads <= 1 {
@@ -165,6 +195,19 @@ mod tests {
         let empty: Vec<u32> = Vec::new();
         assert!(parallel_map(&empty, |_, &x| x).is_empty());
         assert_eq!(parallel_map(&[7u32], |_, &x| x + 1), vec![8]);
+    }
+
+    #[test]
+    fn explicit_thread_counts_match_default_pool_results() {
+        let items: Vec<usize> = (0..24).collect();
+        let expect: Vec<usize> = items.iter().map(|x| x + 1).collect();
+        for threads in [0usize, 1, 2, 64] {
+            assert_eq!(
+                parallel_map_with(threads, &items, |_, &x| x + 1),
+                expect,
+                "threads={threads}"
+            );
+        }
     }
 
     #[test]

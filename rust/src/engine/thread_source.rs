@@ -80,6 +80,26 @@ impl Default for ThreadPoolConfig {
     }
 }
 
+impl ThreadPoolConfig {
+    /// Pure virtual-clock pool for grid cells: deterministic release
+    /// order with `time_scale = 0`, so durations are *drawn* (stream
+    /// parity with the simulator) but never realized as sleeps — the cell
+    /// runs as fast as the hardware allows while staying bit-identical to
+    /// [`super::SimSource`] under the same seed. A `time_scale` of zero is
+    /// only meaningful in deterministic mode: the live arrival order would
+    /// otherwise be a pure thread race *and* the wall→virtual clock
+    /// conversion (`elapsed / scale`) would divide by zero.
+    pub fn virtual_time(seed: u64, noise_sigma: f64, max_wall: Duration) -> Self {
+        Self {
+            time_scale: 0.0,
+            max_wall,
+            seed,
+            noise_sigma,
+            deterministic: true,
+        }
+    }
+}
+
 /// A worker thread's private gradient oracle: how *this* worker turns a
 /// parameter snapshot into a stochastic gradient.
 ///

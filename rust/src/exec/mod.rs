@@ -23,7 +23,7 @@ use crate::engine::{
     self, DriverConfig, RunRecord, ServerOpt, ShardSampler, ThreadPoolConfig, ThreadSource,
     WallclockEval,
 };
-use crate::opt::{Problem, SampleProblem};
+use crate::opt::{Problem, SampleProblem, Sharded};
 use crate::sim::ComputeModel;
 
 /// Wall-clock run configuration.
@@ -117,13 +117,27 @@ pub fn run_wallclock<P: Problem + Sync>(
     sched: &mut dyn Scheduler,
     cfg: &ExecConfig,
 ) -> RunRecord {
+    run_wallclock_engine(problem, model, sched, &cfg.pool_config(), &cfg.driver_config())
+}
+
+/// Engine-level wall-clock entry: the caller supplies the full
+/// [`ThreadPoolConfig`] and [`DriverConfig`] instead of the `ExecConfig`
+/// convenience subset. This is the path the [`crate::scenario`] grid
+/// runner dispatches wall-clock cells through — grid budgets (target gap,
+/// ε-stationarity, shard-loss recording) map directly onto the engine
+/// config, with no `ExecConfig` translation losing knobs.
+pub fn run_wallclock_engine<P: Problem + Sync>(
+    problem: &P,
+    model: &ComputeModel,
+    sched: &mut dyn Scheduler,
+    pool: &ThreadPoolConfig,
+    dcfg: &DriverConfig,
+) -> RunRecord {
     let active = active_workers(sched, model.n_workers());
-    let pool_cfg = cfg.pool_config();
-    let driver_cfg = cfg.driver_config();
     thread::scope(|scope| {
-        let mut source = ThreadSource::spawn(scope, problem, model, &active, &pool_cfg);
+        let mut source = ThreadSource::spawn(scope, problem, model, &active, pool);
         let mut eval = WallclockEval(problem);
-        let rec = engine::run(&mut eval, &mut source, sched, &driver_cfg);
+        let rec = engine::run(&mut eval, &mut source, sched, dcfg);
         source.shutdown();
         rec
     })
@@ -145,7 +159,37 @@ pub fn run_wallclock_sharded<P>(
     cfg: &ExecConfig,
 ) -> RunRecord
 where
-    P: SampleProblem + Sync,
+    P: SampleProblem + Sync + Clone,
+{
+    run_wallclock_sharded_engine(
+        problem,
+        partition,
+        batch,
+        model,
+        sched,
+        &cfg.pool_config(),
+        &cfg.driver_config(),
+    )
+}
+
+/// Engine-level sharded wall-clock entry (see [`run_wallclock_engine`]).
+///
+/// Worker threads own their shards ([`ShardSampler`]); server-side
+/// evaluation goes through the same [`crate::opt::Sharded`] adapter the
+/// simulator substrate uses, so per-shard fairness recording
+/// (`DriverConfig::record_shard_losses`) works identically here — a grid
+/// cell's CSV row is substrate-invariant column for column.
+pub fn run_wallclock_sharded_engine<P>(
+    problem: &P,
+    partition: &Partition,
+    batch: usize,
+    model: &ComputeModel,
+    sched: &mut dyn Scheduler,
+    pool: &ThreadPoolConfig,
+    dcfg: &DriverConfig,
+) -> RunRecord
+where
+    P: SampleProblem + Sync + Clone,
 {
     let n = model.n_workers();
     assert!(batch > 0, "minibatch size must be at least 1");
@@ -159,8 +203,6 @@ where
         "every worker needs a non-empty shard"
     );
     let active = active_workers(sched, n);
-    let pool_cfg = cfg.pool_config();
-    let driver_cfg = cfg.driver_config();
     thread::scope(|scope| {
         let samplers: Vec<ShardSampler<'_, P>> = (0..n)
             .map(|w| ShardSampler {
@@ -169,9 +211,9 @@ where
                 batch,
             })
             .collect();
-        let mut source = ThreadSource::spawn_with(scope, samplers, model, &active, &pool_cfg);
-        let mut eval = WallclockEval(problem);
-        let rec = engine::run(&mut eval, &mut source, sched, &driver_cfg);
+        let mut source = ThreadSource::spawn_with(scope, samplers, model, &active, pool);
+        let mut eval = Sharded::new(problem.clone(), partition.clone(), batch);
+        let rec = engine::run(&mut eval, &mut source, sched, dcfg);
         source.shutdown();
         rec
     })

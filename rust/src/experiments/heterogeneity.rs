@@ -15,7 +15,7 @@
 //! for every cell and summarized into the sweep CSV's trailing columns.
 
 use crate::coordinator::SchedulerKind;
-use crate::scenario::{GridAxes, GridSpec, ProblemSpec, RunBudget, SchedSpec};
+use crate::scenario::{GridAxes, GridSpec, ProblemSpec, RunBudget, SchedSpec, Substrate};
 use crate::sim::ComputeModel;
 
 /// Grid + problem knobs of one heterogeneity study.
@@ -36,6 +36,9 @@ pub struct HetConfig {
     /// Server policies (optionally with a non-SGD server optimizer, e.g.
     /// Rescaled-ASGD's per-worker stepsize rescaling).
     pub schedulers: Vec<SchedSpec>,
+    /// Execution substrate every cell of the matrix runs on (the CLI's
+    /// `sweep --substrate ...`; default: the discrete-event simulator).
+    pub substrate: Substrate,
 }
 
 impl HetConfig {
@@ -56,6 +59,7 @@ impl HetConfig {
                 SchedulerKind::Rennala { b: 8, gamma }.into(),
                 SchedulerKind::Asgd { gamma }.into(),
             ],
+            substrate: Substrate::Sim,
         }
     }
 
@@ -83,6 +87,7 @@ impl HetConfig {
                     })
                     .collect(),
                 seeds: self.seeds.clone(),
+                substrates: vec![self.substrate],
             },
             RunBudget {
                 max_iters: self.max_iters,
@@ -113,6 +118,7 @@ mod tests {
                 SchedulerKind::Ringmaster { r: 4, gamma: 0.02, cancel: true }.into(),
                 SchedulerKind::Rennala { b: 2, gamma: 0.02 }.into(),
             ],
+            substrate: Substrate::Sim,
         }
     }
 
@@ -154,8 +160,9 @@ mod tests {
         let lines: Vec<&str> = csv.trim_end().lines().collect();
         assert_eq!(lines.len(), 1 + run.rows.len());
         assert!(lines[0].starts_with("scheduler,alpha,seed,concentration"));
-        assert!(lines[0].ends_with("shard_loss_min,shard_loss_max,shard_loss_spread"));
+        assert!(lines[0].ends_with("shard_loss_min,shard_loss_max,shard_loss_spread,substrate"));
         assert!(lines[1].contains("ringmaster"));
+        assert!(lines[1].ends_with(",sim"));
         assert!(lines.iter().skip(1).any(|l| l.contains(",inf,")));
         assert!(lines.iter().skip(1).any(|l| l.contains(",0.1,")));
         // every data row has the full column count, fairness included

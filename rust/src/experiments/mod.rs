@@ -14,7 +14,9 @@ use crate::coordinator::SchedulerKind;
 use crate::driver::RunRecord;
 use crate::engine::ServerOpt;
 use crate::opt::{Problem, QuadraticProblem};
-use crate::scenario::{self, Cell, CellOutcome, GridSpec, ProblemSpec, RunBudget, SchedSpec};
+use crate::scenario::{
+    self, Cell, CellOutcome, GridSpec, ProblemSpec, RunBudget, SchedSpec, Substrate,
+};
 use crate::sim::ComputeModel;
 
 /// Common quadratic-experiment configuration (§G defaults).
@@ -93,7 +95,8 @@ impl QuadExpConfig {
         }
     }
 
-    /// One grid cell of this configuration (seed from `self.seed`).
+    /// One grid cell of this configuration (seed from `self.seed`), on
+    /// the default simulator substrate — retarget with [`Cell::on`].
     pub fn cell(
         &self,
         label: impl Into<String>,
@@ -110,6 +113,7 @@ impl QuadExpConfig {
             model,
             problem: self.problem_spec(),
             seed: self.seed,
+            substrate: Substrate::Sim,
         }
     }
 }
@@ -133,7 +137,23 @@ pub fn run_quadratic_with(
     kind: &SchedulerKind,
     server_opt: ServerOpt,
 ) -> RunRecord {
-    scenario::run_cell(&cfg.cell("adhoc", model, kind, server_opt), &cfg.budget()).0
+    run_quadratic_on(cfg, model, kind, server_opt, Substrate::Sim)
+}
+
+/// [`run_quadratic_with`] on an explicit execution substrate (the CLI's
+/// `run --substrate wallclock [--deterministic]`).
+pub fn run_quadratic_on(
+    cfg: &QuadExpConfig,
+    model: ComputeModel,
+    kind: &SchedulerKind,
+    server_opt: ServerOpt,
+    substrate: Substrate,
+) -> RunRecord {
+    scenario::run_cell(
+        &cfg.cell("adhoc", model, kind, server_opt).on(substrate),
+        &cfg.budget(),
+    )
+    .0
 }
 
 /// Tune a scheduler family over a stepsize grid (the paper's `{5^p}`),
@@ -151,10 +171,28 @@ pub fn tune_stepsize<F>(
 where
     F: Fn(f64) -> SchedulerKind + Sync,
 {
+    tune_stepsize_on(cfg, model, grid, make, Substrate::Sim)
+}
+
+/// [`tune_stepsize`] on an explicit execution substrate — every γ cell of
+/// the tuning grid runs there (the CLI's `compare --substrate ...`).
+pub fn tune_stepsize_on<F>(
+    cfg: &QuadExpConfig,
+    model: &ComputeModel,
+    grid: &[f64],
+    make: F,
+    substrate: Substrate,
+) -> (f64, RunRecord)
+where
+    F: Fn(f64) -> SchedulerKind + Sync,
+{
     assert!(!grid.is_empty());
     let cells: Vec<Cell> = grid
         .iter()
-        .map(|&gamma| cfg.cell("tune", model.clone(), &make(gamma), ServerOpt::Sgd))
+        .map(|&gamma| {
+            cfg.cell("tune", model.clone(), &make(gamma), ServerOpt::Sgd)
+                .on(substrate)
+        })
         .collect();
     let spec = GridSpec::from_cells(cells, cfg.budget());
     let records: Vec<RunRecord> = scenario::run_cells(&spec)
@@ -352,6 +390,7 @@ mod tests {
             models: vec![("linear".to_string(), ComputeModel::fixed_linear(4))],
             problems: vec![cfg.problem_spec()],
             seeds: vec![0, 1],
+            substrates: vec![],
         }
         .expand();
         let results = sweep_quadratic(&cfg, &cells);

@@ -31,7 +31,10 @@
 //!
 //! ```text
 //!      GridSpec (axes → content-keyed cells)  scenario (orchestration)
-//!        │ resume: diff vs CellStore JSONL journal; --shard i/n fan-out
+//!        │ axes: scheduler × γ × model × problem/α × seed × Substrate
+//!        │ resume: diff vs CellStore JSONL journal; --shard i/n fan-out;
+//!        │ transient-failure RetryPolicy (attempts journaled);
+//!        │ cross-machine: shard journals → merge_journals → one CSV
 //!        ▼  cells stream through sweep::parallel_map (panic-propagating)
 //!            Scheduler (policy)            coordinator::*
 //!                  │ Decision
@@ -40,6 +43,8 @@
 //!             │              │
 //!       SimSource      ThreadSource        engine::{sim_source,thread_source}
 //!       (sim clock)    (wall / virtual clock)
+//!        Substrate::Sim  Substrate::Wallclock{deterministic,threads}
+//!             │              │  (det: bit-identical to Sim, scale-0 sleeps)
 //!             │              │
 //!        sim::Cluster   GradSampler per thread
 //!             │              │ (NoisySampler | ShardSampler)
@@ -52,6 +57,7 @@
 //!             RunRecord (unified, per-worker hits, per-shard loss curves)
 //!                  │
 //!             RunSummary → CellStore / grid_csv   scenario::store
+//!                  │            (…,substrate column; wall_secs journaled)
 //! ```
 //!
 //! Data heterogeneity (Ringleader ASGD's regime) is first-class: worker

@@ -15,7 +15,11 @@
 //! ringmaster exec-demo   wall-clock (threaded) executor demo
 //! ringmaster sweep       heterogeneity matrix (scheduler × α × seed) → CSV;
 //!                        checkpointed (--journal), resumable, shardable
-//!                        (--shard i/n) via the scenario orchestration layer
+//!                        (--shard i/n), substrate-selectable
+//!                        (--substrate sim|wallclock [--deterministic]),
+//!                        retrying transient cell failures (--retries)
+//! ringmaster sweep merge union N shard journals into one (--out), for
+//!                        cross-machine fan-out: shard → merge → CSV
 //! ```
 
 use std::path::PathBuf;
@@ -33,7 +37,7 @@ use ringmaster::experiments::{
 };
 use ringmaster::metrics::{ascii_plot, write_curves_csv};
 use ringmaster::opt::{Problem, QuadraticProblem};
-use ringmaster::scenario::{self, CellStore, SchedSpec, ShardSel};
+use ringmaster::scenario::{self, CellStore, RetryPolicy, SchedSpec, ShardSel, Substrate};
 use ringmaster::sim::ComputeModel;
 use ringmaster::util::fmt_secs;
 
@@ -77,8 +81,15 @@ fn print_help() {
                         --schedulers ringmaster,rennala,asgd,rescaled --gamma 0.02\n\
                         --journal sweep.jsonl   checkpoint completed cells; rerun resumes\n\
                         --shard i/n             run the i-th of n disjoint grid slices\n\
-                        --max-cells K           stop after K cells (budgeted invocation)\n\n\
-         common flags: --seed N --csv-out path.csv --plot --config file.toml"
+                        --max-cells K           stop after K cells (budgeted invocation)\n\
+                        --substrate sim|wallclock  execution substrate of every cell\n\
+                        --deterministic         wallclock: virtual-time release order\n\
+                                                (bit-identical to --substrate sim)\n\
+                        --wc-threads K          cap concurrent wall-clock cells\n\
+                        --retries K             retry transient cell failures K times\n\
+           sweep merge  union shard journals: sweep merge --out m.jsonl a.jsonl b.jsonl\n\n\
+         common flags: --seed N --csv-out path.csv --plot --config file.toml\n\
+         run/compare also accept --substrate sim|wallclock [--deterministic]"
     );
 }
 
@@ -105,6 +116,17 @@ fn dispatch(args: &Args) -> Result<()> {
         "sweep" => cmd_sweep(args),
         other => bail!("unknown subcommand '{other}' (try --help)"),
     }
+}
+
+/// `--substrate sim|wallclock`, refined by the `--deterministic` switch
+/// and the `--wc-threads` concurrency cap.
+fn substrate_from_args(args: &Args) -> Result<Substrate> {
+    scenario::parse_substrate(
+        args.str_or("substrate", "sim"),
+        args.flag("deterministic"),
+        args.usize_or("wc-threads", 0)?,
+    )
+    .map_err(|e| ringmaster::anyhow!("{e}"))
 }
 
 fn model_from_args(args: &Args, n: usize) -> Result<ComputeModel> {
@@ -169,10 +191,22 @@ fn cmd_run(args: &Args) -> Result<()> {
     let eps = args.f64_or("eps", 1e-4)?;
     let model = model_from_args(args, cfg.n_workers)?;
     let sched = scheduler_from_args(args, &cfg, eps)?;
+    let substrate = substrate_from_args(args)?;
 
-    println!("running {} on quadratic d={} n={} ...", sched.name(), cfg.d, cfg.n_workers);
-    let rec =
-        experiments::run_quadratic_with(&cfg, model, &sched.kind, sched.server_opt.clone());
+    println!(
+        "running {} on quadratic d={} n={} [{}] ...",
+        sched.name(),
+        cfg.d,
+        cfg.n_workers,
+        substrate.name()
+    );
+    let rec = experiments::run_quadratic_on(
+        &cfg,
+        model,
+        &sched.kind,
+        sched.server_opt.clone(),
+        substrate,
+    );
     println!(
         "  iters={} sim_time={} applied={} accumulated={} discarded={} cancelled={}",
         rec.iters,
@@ -246,6 +280,7 @@ fn cmd_compare(args: &Args) -> Result<()> {
             }),
         ),
     ];
+    let substrate = substrate_from_args(args)?;
     let mut table = ringmaster::bench_util::Table::new(&[
         "scheduler",
         "γ*",
@@ -255,7 +290,8 @@ fn cmd_compare(args: &Args) -> Result<()> {
         "discarded",
     ]);
     for (name, make) in families {
-        let (gamma, rec) = experiments::tune_stepsize(&cfg, &model, &grid, make.as_ref());
+        let (gamma, rec) =
+            experiments::tune_stepsize_on(&cfg, &model, &grid, make.as_ref(), substrate);
         table.row(&[
             name.to_string(),
             format!("{gamma:.4}"),
@@ -528,8 +564,34 @@ fn cmd_train(args: &Args) -> Result<()> {
     Ok(())
 }
 
+/// `sweep merge --out merged.jsonl shard1.jsonl shard2.jsonl ...` — union
+/// the journals of a cross-machine `--shard i/n` fan-out. A final
+/// `sweep ... --journal merged.jsonl --csv-out grid.csv` invocation (same
+/// grid flags) then emits the full CSV without rerunning a single cell.
+fn cmd_sweep_merge(args: &Args) -> Result<()> {
+    let inputs: Vec<PathBuf> = args.positionals[1..].iter().map(PathBuf::from).collect();
+    ensure!(
+        !inputs.is_empty(),
+        "sweep merge expects input journals: \
+         sweep merge --out merged.jsonl shard1.jsonl shard2.jsonl ..."
+    );
+    let out = args
+        .get("out")
+        .ok_or_else(|| ringmaster::anyhow!("sweep merge requires --out <merged.jsonl>"))?;
+    let stats = scenario::merge_journals(&inputs, std::path::Path::new(out))?;
+    eprintln!(
+        "merged {} journals → {out}: {} cells ({} duplicate entries dropped)",
+        stats.inputs, stats.cells, stats.duplicates
+    );
+    Ok(())
+}
+
 fn cmd_sweep(args: &Args) -> Result<()> {
     use ringmaster::experiments::heterogeneity::HetConfig;
+
+    if args.positionals.first().map(String::as_str) == Some("merge") {
+        return cmd_sweep_merge(args);
+    }
 
     // f64::from_str already accepts "inf"/"infinity" case-insensitively
     let parse_alphas = |s: &str| -> Result<Vec<f64>> {
@@ -561,6 +623,7 @@ fn cmd_sweep(args: &Args) -> Result<()> {
     cfg.n_data = args.usize_or("n-data", cfg.n_data)?;
     cfg.batch = args.usize_or("batch", cfg.batch)?;
     cfg.max_iters = args.usize_or("max-iters", cfg.max_iters as usize)? as u64;
+    cfg.substrate = substrate_from_args(args)?;
     // validate up front: the partition/sharding layers assert these, and
     // a CLI typo should be an error message, not a panic
     ensure!(
@@ -621,9 +684,12 @@ fn cmd_sweep(args: &Args) -> Result<()> {
         None => None,
     };
 
+    // --retries K = up to K extra attempts per transiently-failing cell
+    let retry = RetryPolicy::new(1 + args.usize_or("retries", 1)? as u32);
+
     eprintln!(
         "sweep: {} schedulers × {} α × {} seeds = {} grid points (n={}, n-data={}, \
-         batch={}, shard {}/{}{})",
+         batch={}, substrate {}, shard {}/{}{})",
         cfg.schedulers.len(),
         cfg.alphas.len(),
         cfg.seeds.len(),
@@ -631,6 +697,7 @@ fn cmd_sweep(args: &Args) -> Result<()> {
         cfg.n_workers,
         cfg.n_data,
         cfg.batch,
+        cfg.substrate.name(),
         shard.index + 1,
         shard.count,
         store
@@ -638,7 +705,10 @@ fn cmd_sweep(args: &Args) -> Result<()> {
             .map(|s| format!(", journal {} [{} done]", s.path().display(), s.completed().len()))
             .unwrap_or_default(),
     );
-    let run = scenario::run_grid(&spec, shard, store.as_mut(), max_cells)?;
+    let run = scenario::run_grid_retrying(&spec, shard, store.as_mut(), max_cells, retry)?;
+    if run.retries > 0 {
+        eprintln!("sweep: {} transient cell failure(s) retried", run.retries);
+    }
     if !run.is_complete() {
         eprintln!(
             "sweep: interrupted with {}/{} cells complete ({} run this invocation); \

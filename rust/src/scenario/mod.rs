@@ -10,16 +10,29 @@
 //!
 //! * [`GridAxes`] / [`GridSpec`] — a serializable grid over the axes
 //!   (scheduler + server-opt) × stepsize γ × compute model ×
-//!   problem/partition-α × seed, expanding to a deterministic cell list
-//!   whose [`Cell::key`]s are derived from nothing but cell content.
+//!   problem/partition-α × seed × execution [`Substrate`], expanding to a
+//!   deterministic cell list whose [`Cell::key`]s are derived from
+//!   nothing but cell content.
+//! * [`Substrate`] — where a cell runs: the discrete-event simulator
+//!   (`Sim`, the default) or real threads (`Wallclock`, one OS thread per
+//!   worker). Deterministic wall-clock cells use the virtual-time release
+//!   protocol and are bit-identical to their sim twins, so they stay
+//!   content-addressable, resumable, and CSV-comparable column for
+//!   column.
 //! * [`CellStore`] — an append-only JSONL checkpoint journal
 //!   ([`crate::util::json`]); each completed cell's [`RunSummary`] is
-//!   flushed as it lands, and a rerun resumes by diffing journaled keys
-//!   against the grid. Every engine run is seed-derived, so a resumed
-//!   sweep is bit-identical to an uninterrupted one.
+//!   flushed as it lands (with the [`RetryPolicy`] attempt count that
+//!   produced it), and a rerun resumes by diffing journaled keys against
+//!   the grid. Every engine run is seed-derived, so a resumed sweep is
+//!   bit-identical to an uninterrupted one.
 //! * [`run_grid`] — shard-aware fan-out: `--shard i/n` gives each process
 //!   a disjoint, balanced slice of the grid on top of the panic-
-//!   propagating, streaming [`crate::engine::sweep::parallel_map`].
+//!   propagating, streaming [`crate::engine::sweep::parallel_map`];
+//!   transient cell deaths retry per [`RetryPolicy`].
+//! * [`merge_journals`] — the cross-machine half of fan-out: union N
+//!   shard journals (same-grid fingerprint enforced, dedup by key,
+//!   content conflict = hard error) into one journal the final CSV is
+//!   emitted from.
 //! * [`run_cells`] / [`run_cell`] — the in-memory path for callers that
 //!   need full [`crate::engine::RunRecord`]s (tuning, tables, benches).
 //!
@@ -51,6 +64,7 @@
 //!             },
 //!         ],
 //!         seeds: vec![0, 1, 2],
+//!         substrates: vec![], // default: the discrete-event simulator
 //!     },
 //!     RunBudget { max_iters: 1500, record_shard_losses: true, ..Default::default() },
 //! );
@@ -80,9 +94,11 @@ mod spec;
 mod store;
 
 pub use runner::{
-    alpha_partition, grid_csv, run_cell, run_cells, run_grid, CellOutcome, GridRun,
+    alpha_partition, grid_csv, run_cell, run_cells, run_grid, run_grid_retrying, run_grid_with,
+    CellOutcome, GridRun, RetryPolicy,
 };
 pub use spec::{
-    fnv1a64, parse_shard, Cell, GridAxes, GridSpec, ProblemSpec, RunBudget, SchedSpec, ShardSel,
+    fnv1a64, parse_shard, parse_substrate, Cell, GridAxes, GridSpec, ProblemSpec, RunBudget,
+    SchedSpec, ShardSel, Substrate,
 };
-pub use store::{CellStore, RunSummary};
+pub use store::{merge_journals, CellStore, MergeStats, RunSummary};

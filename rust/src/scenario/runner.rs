@@ -6,18 +6,33 @@
 //! embarrassingly parallel, restartable, and splittable across machines:
 //! a resumed sweep reconstructs exactly the rows an uninterrupted one
 //! would have produced, and shard CSVs concatenate into the full grid.
+//!
+//! Cells dispatch by their [`Substrate`]: `Sim` runs through the
+//! discrete-event simulator ([`crate::engine::SimSource`] via
+//! [`crate::driver::Driver`]); `Wallclock` runs on real threads
+//! ([`crate::engine::ThreadSource`] via [`crate::exec`]) — deterministic
+//! wall-clock cells use the virtual-time release protocol and are
+//! bit-identical to their sim twins, so the grid CSV is substrate-
+//! invariant in every column except the trailing `substrate` tag.
+//! Transiently failing cells (host hiccups, not content bugs) are retried
+//! per [`RetryPolicy`], with the attempt count journaled alongside the
+//! result.
 
 use std::collections::BTreeMap;
+use std::panic::{catch_unwind, resume_unwind, AssertUnwindSafe};
+use std::sync::OnceLock;
+use std::time::Duration;
 
 use crate::data::partition::label_skew;
 use crate::data::{synthetic_mnist, N_CLASSES};
 use crate::driver::Driver;
-use crate::engine::sweep::{parallel_map, parallel_map_streaming};
-use crate::engine::RunRecord;
+use crate::engine::sweep::{parallel_map_streaming_with, parallel_map_with, sweep_threads};
+use crate::engine::{RunRecord, ThreadPoolConfig};
+use crate::exec;
 use crate::opt::{LogisticProblem, Noisy, QuadraticProblem, Sharded};
 use crate::util::error::Result;
 
-use super::spec::{Cell, GridSpec, ProblemSpec, RunBudget, ShardSel};
+use super::spec::{Cell, GridSpec, ProblemSpec, RunBudget, ShardSel, Substrate};
 use super::store::{CellStore, RunSummary};
 
 /// Build the label-skew partition of one sharded cell. `α = ∞`
@@ -62,15 +77,89 @@ fn summarize(cell: &Cell, record: &RunRecord, concentration: Option<f64>) -> Run
     s
 }
 
+/// Wall seconds per simulated second for live (non-deterministic)
+/// wall-clock cells: τ=1 ↦ 0.1 ms of real sleep.
+const LIVE_TIME_SCALE: f64 = 1e-4;
+
+/// Hard wall cap on any single wall-clock cell — a safety net so a wedged
+/// pool cannot hang a grid; the real stopping logic is the engine's
+/// (`RunBudget::{max_iters,max_time}`).
+const WALLCLOCK_SAFETY: Duration = Duration::from_secs(600);
+
+/// Pool configuration of one wall-clock cell. Deterministic cells run on
+/// the pure virtual clock (`time_scale = 0` — durations drawn for stream
+/// parity but never slept), so they are bit-identical to the simulator
+/// *and* as fast as the hardware allows; live cells realize τ as sleeps
+/// at [`LIVE_TIME_SCALE`].
+fn wallclock_pool(
+    deterministic: bool,
+    seed: u64,
+    noise_sigma: f64,
+    budget: &RunBudget,
+) -> ThreadPoolConfig {
+    if deterministic {
+        // the virtual clock enforces budget.max_time through the engine,
+        // exactly like the simulator
+        ThreadPoolConfig::virtual_time(seed, noise_sigma, WALLCLOCK_SAFETY)
+    } else {
+        // live cells measure source time in raw wall seconds, so a finite
+        // time budget doubles as the pool's wall cap
+        let max_wall = if budget.max_time.is_finite() {
+            Duration::from_secs_f64(budget.max_time.min(WALLCLOCK_SAFETY.as_secs_f64()))
+        } else {
+            WALLCLOCK_SAFETY
+        };
+        ThreadPoolConfig {
+            time_scale: LIVE_TIME_SCALE,
+            max_wall,
+            seed,
+            noise_sigma,
+            deterministic: false,
+        }
+    }
+}
+
+/// Sweep-pool width for a batch of cells: wall-clock cells each spawn one
+/// OS thread per simulated worker, so the smallest nonzero
+/// `Substrate::Wallclock { threads }` cap among them bounds how many run
+/// concurrently (sim-only batches keep the pool's own default).
+fn pool_threads(cells: &[Cell]) -> usize {
+    let base = sweep_threads();
+    cells
+        .iter()
+        .filter_map(|c| match c.substrate {
+            Substrate::Wallclock { threads, .. } if threads > 0 => Some(threads),
+            _ => None,
+        })
+        .min()
+        .map_or(base, |cap| base.min(cap))
+}
+
 fn run_cell_with(cell: &Cell, budget: &RunBudget, cache: &DataCache) -> (RunRecord, Option<f64>) {
     let server_opt = cell.scheduler.server_opt.clone();
     let mut sched = cell.scheduler.kind.build();
     match &cell.problem {
         ProblemSpec::Quadratic { d, noise_sigma } => {
-            let problem = Noisy::new(QuadraticProblem::paper(*d), *noise_sigma);
             let dcfg = budget.driver_config(cell.seed, server_opt, false);
-            let mut driver = Driver::new(problem, cell.model.clone(), dcfg);
-            (driver.run(sched.as_mut()), None)
+            let rec = match cell.substrate {
+                Substrate::Sim => {
+                    let problem = Noisy::new(QuadraticProblem::paper(*d), *noise_sigma);
+                    let mut driver = Driver::new(problem, cell.model.clone(), dcfg);
+                    driver.run(sched.as_mut())
+                }
+                Substrate::Wallclock { deterministic, .. } => {
+                    let problem = QuadraticProblem::paper(*d);
+                    let pool = wallclock_pool(deterministic, cell.seed, *noise_sigma, budget);
+                    exec::run_wallclock_engine(
+                        &problem,
+                        &cell.model,
+                        sched.as_mut(),
+                        &pool,
+                        &dcfg,
+                    )
+                }
+            };
+            (rec, None)
         }
         ProblemSpec::ShardedLogistic {
             n_data,
@@ -92,10 +181,27 @@ fn run_cell_with(cell: &Cell, budget: &RunBudget, cache: &DataCache) -> (RunReco
                 .expect("data cache covers every sharded cell");
             let part = alpha_partition(labels, *n_workers, *alpha, cell.seed);
             let concentration = part.label_concentration(labels, N_CLASSES);
-            let sharded = Sharded::new(problem.clone(), part, *batch);
             let dcfg = budget.driver_config(cell.seed, server_opt, true);
-            let mut driver = Driver::new(sharded, cell.model.clone(), dcfg);
-            (driver.run(sched.as_mut()), Some(concentration))
+            let rec = match cell.substrate {
+                Substrate::Sim => {
+                    let sharded = Sharded::new(problem.clone(), part, *batch);
+                    let mut driver = Driver::new(sharded, cell.model.clone(), dcfg);
+                    driver.run(sched.as_mut())
+                }
+                Substrate::Wallclock { deterministic, .. } => {
+                    let pool = wallclock_pool(deterministic, cell.seed, 0.0, budget);
+                    exec::run_wallclock_sharded_engine(
+                        problem,
+                        &part,
+                        *batch,
+                        &cell.model,
+                        sched.as_mut(),
+                        &pool,
+                        &dcfg,
+                    )
+                }
+            };
+            (rec, Some(concentration))
         }
     }
 }
@@ -122,7 +228,7 @@ pub struct CellOutcome {
 /// (curves, iterates): stepsize tuning, head-to-head tables, benches.
 pub fn run_cells(spec: &GridSpec) -> Vec<CellOutcome> {
     let cache = build_cache(&spec.cells);
-    let out = parallel_map(&spec.cells, |_, cell| {
+    let out = parallel_map_with(pool_threads(&spec.cells), &spec.cells, |_, cell| {
         let (record, concentration) = run_cell_with(cell, &spec.budget, &cache);
         (record, concentration)
     });
@@ -137,6 +243,70 @@ pub fn run_cells(spec: &GridSpec) -> Vec<CellOutcome> {
         .collect()
 }
 
+/// Cell-level retry for transient failures: a grid cell that dies because
+/// the *host* hiccuped (thread-spawn failure, resource exhaustion) is
+/// retried up to `max_attempts` total attempts; cell-content panics
+/// (assertion failures, poisoned math) re-raise immediately — retrying a
+/// deterministic bug would just fail `max_attempts` times slower. The
+/// attempt count that finally produced a result is journaled with the
+/// cell ([`CellStore::append`]), so flaky hosts leave an audit trail,
+/// while CSVs stay byte-identical to a never-failing run (every run is
+/// seed-derived, so attempt 2 computes exactly what attempt 1 would
+/// have).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct RetryPolicy {
+    /// Total attempts per cell, ≥ 1 (1 = never retry).
+    pub max_attempts: u32,
+}
+
+impl Default for RetryPolicy {
+    /// One retry: absorbs a transient host hiccup without letting a
+    /// persistently sick host loop.
+    fn default() -> Self {
+        Self { max_attempts: 2 }
+    }
+}
+
+impl RetryPolicy {
+    /// Never retry.
+    pub fn none() -> Self {
+        Self { max_attempts: 1 }
+    }
+
+    pub fn new(max_attempts: u32) -> Self {
+        Self {
+            max_attempts: max_attempts.max(1),
+        }
+    }
+
+    /// The explicit opt-in marker: a panic whose message contains this
+    /// exact namespaced string is always classified transient — how tests
+    /// and custom cell executors inject retryable failures without the
+    /// classifier having to guess.
+    pub const TRANSIENT_MARKER: &'static str = "ringmaster: transient";
+
+    /// Transient-error classification over a panic payload: environmental
+    /// failures (the OS refusing resources it normally grants) qualify;
+    /// anything else is assumed to be a content bug and is not retried.
+    /// Markers are deliberately narrow — a namespaced opt-in string and
+    /// the exact OS thread-spawn failure texts — so a content panic that
+    /// merely *mentions* words like "transient" is not swallowed by
+    /// retries.
+    pub fn is_transient(payload: &(dyn std::any::Any + Send)) -> bool {
+        let msg = payload
+            .downcast_ref::<String>()
+            .map(String::as_str)
+            .or_else(|| payload.downcast_ref::<&'static str>().copied())
+            .unwrap_or("");
+        const MARKERS: &[&str] = &[
+            "failed to spawn thread",
+            "Resource temporarily unavailable",
+            RetryPolicy::TRANSIENT_MARKER,
+        ];
+        MARKERS.iter().any(|m| msg.contains(m))
+    }
+}
+
 /// Outcome of one (possibly partial) checkpointed grid invocation.
 pub struct GridRun {
     /// Completed cells in grid order — from the journal or run just now.
@@ -146,6 +316,9 @@ pub struct GridRun {
     pub remaining: usize,
     /// Cells actually executed by *this* invocation.
     pub ran: usize,
+    /// Extra attempts spent on transient failures by *this* invocation
+    /// (0 when nothing had to be retried).
+    pub retries: u64,
 }
 
 impl GridRun {
@@ -155,7 +328,8 @@ impl GridRun {
 }
 
 /// Run (this shard of) a grid, resuming from — and streaming checkpoints
-/// into — `store` when given.
+/// into — `store` when given. Transient cell failures are retried with
+/// the default [`RetryPolicy`].
 ///
 /// * Cells whose key is already journaled are *not* rerun; their
 ///   summaries come from the journal. Because every run is seed-derived,
@@ -172,6 +346,54 @@ pub fn run_grid(
     store: Option<&mut CellStore>,
     max_cells: Option<usize>,
 ) -> Result<GridRun> {
+    run_grid_retrying(spec, shard, store, max_cells, RetryPolicy::default())
+}
+
+/// [`run_grid`] with an explicit [`RetryPolicy`] (the CLI's `--retries`).
+pub fn run_grid_retrying(
+    spec: &GridSpec,
+    shard: ShardSel,
+    store: Option<&mut CellStore>,
+    max_cells: Option<usize>,
+    retry: RetryPolicy,
+) -> Result<GridRun> {
+    // diff the shard against the journal up front so the data cache only
+    // ever covers cells that may actually run: a resumed sweep never
+    // regenerates a completed cell's dataset, and a fully-journaled
+    // invocation (cache built lazily on first executed cell) builds none
+    let pending: Vec<Cell> = {
+        let cells = spec.shard_cells(shard);
+        match store.as_ref() {
+            Some(s) => cells
+                .into_iter()
+                .filter(|c| !s.completed().contains_key(&c.key()))
+                .collect(),
+            None => cells,
+        }
+    };
+    let cache: OnceLock<DataCache> = OnceLock::new();
+    run_grid_with(spec, shard, store, max_cells, retry, |cell, budget| {
+        let cache = cache.get_or_init(|| build_cache(&pending));
+        run_cell_with(cell, budget, cache)
+    })
+}
+
+/// The fully-general grid runner: resume diff, shard selection, budgeted
+/// interruption, retry-with-journaled-attempts — over a caller-supplied
+/// cell executor. [`run_grid`]/[`run_grid_retrying`] pass the standard
+/// substrate-dispatching executor; tests inject failing executors to
+/// exercise the retry path deterministically.
+pub fn run_grid_with<F>(
+    spec: &GridSpec,
+    shard: ShardSel,
+    store: Option<&mut CellStore>,
+    max_cells: Option<usize>,
+    retry: RetryPolicy,
+    exec_cell: F,
+) -> Result<GridRun>
+where
+    F: Fn(&Cell, &RunBudget) -> (RunRecord, Option<f64>) + Sync,
+{
     let cells = spec.shard_cells(shard);
     let keys: Vec<String> = cells.iter().map(Cell::key).collect();
     let done: BTreeMap<String, RunSummary> = store
@@ -188,21 +410,37 @@ pub fn run_grid(
     let pending: Vec<Cell> = pending_idx.iter().map(|&i| cells[i].clone()).collect();
     let ran = pending.len();
 
-    let cache = build_cache(&pending);
+    let run_one = |cell: &Cell| -> (RunSummary, u32) {
+        let mut attempt = 1u32;
+        loop {
+            match catch_unwind(AssertUnwindSafe(|| exec_cell(cell, &spec.budget))) {
+                Ok((record, concentration)) => {
+                    return (summarize(cell, &record, concentration), attempt);
+                }
+                Err(payload) => {
+                    if attempt >= retry.max_attempts.max(1)
+                        || !RetryPolicy::is_transient(payload.as_ref())
+                    {
+                        resume_unwind(payload);
+                    }
+                    attempt += 1;
+                }
+            }
+        }
+    };
+
     let mut store = store;
     let mut append_err: Option<crate::util::error::Error> = None;
-    let summaries = parallel_map_streaming(
+    let summaries = parallel_map_streaming_with(
+        pool_threads(&pending),
         &pending,
-        |_, cell| {
-            let (record, concentration) = run_cell_with(cell, &spec.budget, &cache);
-            summarize(cell, &record, concentration)
-        },
-        |i, summary| {
+        |_, cell| run_one(cell),
+        |i, (summary, attempts)| {
             // checkpoint in completion order, while other cells still run;
             // a failing journal halts the pool (Break) so a dead disk
             // costs at most the in-flight cells, not the rest of the grid
             if let Some(st) = store.as_deref_mut() {
-                if let Err(e) = st.append(&keys[pending_idx[i]], summary) {
+                if let Err(e) = st.append(&keys[pending_idx[i]], summary, *attempts) {
                     append_err = Some(e);
                     return std::ops::ControlFlow::Break(());
                 }
@@ -214,10 +452,16 @@ pub fn run_grid(
         return Err(e);
     }
 
+    let mut retries = 0u64;
     let mut fresh: BTreeMap<usize, RunSummary> = pending_idx
         .into_iter()
         .zip(summaries)
-        .filter_map(|(i, s)| s.map(|s| (i, s)))
+        .filter_map(|(i, s)| {
+            s.map(|(s, attempts)| {
+                retries += u64::from(attempts) - 1;
+                (i, s)
+            })
+        })
         .collect();
     let mut rows = Vec::with_capacity(cells.len());
     let mut remaining = 0;
@@ -234,6 +478,7 @@ pub fn run_grid(
         rows,
         remaining,
         ran,
+        retries,
     })
 }
 
@@ -250,17 +495,21 @@ fn fmt_alpha(alpha: Option<f64>) -> String {
 /// The column prefix is the historical `sweep` contract
 /// (`scheduler,alpha,seed,concentration,...`); the trailing fairness
 /// columns summarize the final per-shard losses (empty for cells without
-/// shard-loss recording). Rows are rebuilt from [`RunSummary`]s, so a CSV
-/// regenerated after a resume is byte-identical to an uninterrupted one.
-/// Scheduler display names may contain commas (`ringmaster(R=4,stop)`);
-/// they are normalized to `;` so every row keeps the header's column
-/// count without CSV quoting.
+/// shard-loss recording), and the final `substrate` column tags where the
+/// cell ran (`sim` / `wallclock-det` / `wallclock-live`) — for a
+/// deterministic wall-clock run it is the *only* column that differs from
+/// the sim twin's row, which is what the CI substrate-parity check diffs
+/// on. Rows are rebuilt from [`RunSummary`]s, so a CSV regenerated after
+/// a resume is byte-identical to an uninterrupted one. Scheduler display
+/// names may contain commas (`ringmaster(R=4,stop)`); they are normalized
+/// to `;` so every row keeps the header's column count without CSV
+/// quoting.
 pub fn grid_csv(rows: &[(Cell, RunSummary)]) -> String {
     let mut out = String::from(
         "scheduler,alpha,seed,concentration,iters,sim_time,final_loss,\
          final_gradnorm_sq,applied,accumulated,discarded,cancellations,\
          min_worker_hits,max_worker_hits,shard_loss_min,shard_loss_max,\
-         shard_loss_spread\n",
+         shard_loss_spread,substrate\n",
     );
     for (cell, s) in rows {
         let min_hits = s.worker_hits.iter().copied().min().unwrap_or(0);
@@ -281,7 +530,7 @@ pub fn grid_csv(rows: &[(Cell, RunSummary)]) -> String {
             format!("{lo:.6e},{hi:.6e},{:.6e}", hi - lo)
         };
         out.push_str(&format!(
-            "{},{},{},{conc},{},{:.4},{:.6e},{:.6e},{},{},{},{},{},{},{fairness}\n",
+            "{},{},{},{conc},{},{:.4},{:.6e},{:.6e},{},{},{},{},{},{},{fairness},{}\n",
             s.scheduler.replace(',', ";"),
             fmt_alpha(cell.problem.alpha()),
             cell.seed,
@@ -295,6 +544,7 @@ pub fn grid_csv(rows: &[(Cell, RunSummary)]) -> String {
             s.cancellations,
             min_hits,
             max_hits,
+            cell.substrate.name(),
         ));
     }
     out
@@ -319,6 +569,7 @@ mod tests {
                 models: vec![("lin".into(), ComputeModel::fixed_linear(4))],
                 problems: vec![ProblemSpec::Quadratic { d: 16, noise_sigma: 0.001 }],
                 seeds: vec![0, 1],
+                substrates: vec![],
             },
             RunBudget {
                 max_iters: 400,
@@ -403,8 +654,52 @@ mod tests {
         for l in &lines[1..] {
             assert_eq!(l.split(',').count(), n_cols, "{l}");
         }
-        // quadratic cells have no α / concentration / fairness values
+        // quadratic cells have no α / concentration / fairness values,
+        // and every row carries its substrate tag
         assert!(lines[1].contains("ringmaster"));
-        assert!(lines[1].ends_with(",,"));
+        assert!(lines[1].ends_with(",,,sim"), "{}", lines[1]);
+    }
+
+    #[test]
+    fn deterministic_wallclock_cells_match_sim_cells_column_for_column() {
+        // the same grid on both substrates: deterministic wall-clock rows
+        // must agree with the sim rows in every column except the
+        // trailing substrate tag — the in-process version of the CI
+        // substrate-parity smoke. Continuous durations (`random_paper`)
+        // keep virtual completion times tie-free, the regime where the
+        // conservative release order provably equals the simulator's.
+        let mut spec = quad_spec();
+        spec.cells = GridAxes {
+            schedulers: vec![
+                SchedulerKind::Ringmaster { r: 4, gamma: 0.2, cancel: true }.into(),
+                SchedulerKind::Asgd { gamma: 0.1 }.into(),
+            ],
+            gammas: vec![],
+            models: vec![("paper".into(), ComputeModel::random_paper(4))],
+            problems: vec![ProblemSpec::Quadratic { d: 16, noise_sigma: 0.001 }],
+            seeds: vec![0, 1],
+            substrates: vec![
+                Substrate::Sim,
+                Substrate::Wallclock { deterministic: true, threads: 2 },
+            ],
+        }
+        .expand();
+        let run = run_grid(&spec, ShardSel::ALL, None, None).unwrap();
+        assert_eq!(run.retries, 0);
+        let csv = grid_csv(&run.rows);
+        let lines: Vec<&str> = csv.trim_end().lines().collect();
+        assert_eq!(lines.len(), 1 + 8);
+        for pair in lines[1..].chunks(2) {
+            let sim = pair[0].strip_suffix(",sim").expect(pair[0]);
+            let wc = pair[1].strip_suffix(",wallclock-det").expect(pair[1]);
+            assert_eq!(sim, wc, "substrate parity broken");
+        }
+        // wall-clock runs carry a host duration in their summaries
+        for (cell, s) in &run.rows {
+            match cell.substrate {
+                Substrate::Sim => assert!(s.wall_secs.is_none()),
+                Substrate::Wallclock { .. } => assert!(s.wall_secs.is_some()),
+            }
+        }
     }
 }

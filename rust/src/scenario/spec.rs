@@ -31,6 +31,80 @@ fn fkey(v: f64) -> String {
     format!("{v}")
 }
 
+/// The execution-substrate axis: *where* a cell runs.
+///
+/// The paper's optimality claim is about wall-clock time under
+/// heterogeneous worker speeds, so the grid must be able to exercise the
+/// real-thread substrate ([`crate::engine::ThreadSource`]) and not just
+/// the discrete-event simulator ([`crate::engine::SimSource`]). Both go
+/// through the identical `engine::run` server loop, so a cell's *policy*
+/// behavior is substrate-invariant by construction; with
+/// `deterministic: true` the wall-clock run is additionally bit-identical
+/// to the simulator (see `tests/engine_parity.rs`), which is what keeps
+/// wall-clock cells content-addressable and resume-safe.
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
+pub enum Substrate {
+    /// Discrete-event simulator — the default, and the fastest path.
+    #[default]
+    Sim,
+    /// One OS thread per worker ([`crate::engine::ThreadSource`]).
+    Wallclock {
+        /// Release deliveries in virtual-time order (conservative
+        /// protocol): bit-identical to [`Substrate::Sim`] under the same
+        /// seed, durations not realized as sleeps. With `false` the cell
+        /// runs on the live wall clock — real sleeps, real arrival races —
+        /// and is *not* reproducible run-to-run (the journal then caches
+        /// whichever result landed first).
+        deterministic: bool,
+        /// Cap on how many wall-clock cells a grid invocation runs
+        /// concurrently (each cell spawns one OS thread per worker, so an
+        /// uncapped pool on a wide model can oversubscribe the host).
+        /// `0` means the sweep pool's own default. Not part of the cell
+        /// key: it changes scheduling, never the result.
+        threads: usize,
+    },
+}
+
+impl Substrate {
+    /// Stable display/CSV identifier.
+    pub fn name(&self) -> &'static str {
+        match self {
+            Substrate::Sim => "sim",
+            Substrate::Wallclock { deterministic: true, .. } => "wallclock-det",
+            Substrate::Wallclock { deterministic: false, .. } => "wallclock-live",
+        }
+    }
+
+    /// Cell-key fragment. `None` for the default substrate, so every
+    /// pre-substrate journal (and its grid fingerprint) stays valid.
+    fn key_fragment(&self) -> Option<&'static str> {
+        match self {
+            Substrate::Sim => None,
+            Substrate::Wallclock { deterministic: true, .. } => Some("wc(det)"),
+            Substrate::Wallclock { deterministic: false, .. } => Some("wc(live)"),
+        }
+    }
+}
+
+/// Parse the CLI's `--substrate sim|wallclock` (the latter refined by the
+/// `--deterministic` switch and the `--wc-threads` cap).
+pub fn parse_substrate(
+    name: &str,
+    deterministic: bool,
+    threads: usize,
+) -> Result<Substrate, String> {
+    match name {
+        "sim" => Ok(Substrate::Sim),
+        "wallclock" | "wc" => Ok(Substrate::Wallclock {
+            deterministic,
+            threads,
+        }),
+        other => Err(format!(
+            "--substrate expects 'sim' or 'wallclock', got '{other}'"
+        )),
+    }
+}
+
 /// The problem axis: everything needed to rebuild the objective (and its
 /// data partition) from scratch inside any process.
 #[derive(Clone, Debug, PartialEq)]
@@ -241,30 +315,46 @@ pub struct Cell {
     pub model: ComputeModel,
     pub problem: ProblemSpec,
     pub seed: u64,
+    /// Execution substrate this cell runs on.
+    pub substrate: Substrate,
 }
 
 impl Cell {
     /// Canonical content key: every axis value, with the (possibly huge)
     /// compute model compacted to a stable 64-bit digest of its full
-    /// parameterization.
+    /// parameterization. The substrate appends a fragment only when it is
+    /// not the default [`Substrate::Sim`], so pre-substrate journals keep
+    /// their keys.
     pub fn key(&self) -> String {
         let model_digest = fnv1a64(format!("{:?}", self.model).as_bytes());
+        let sub = self
+            .substrate
+            .key_fragment()
+            .map(|f| format!("|{f}"))
+            .unwrap_or_default();
         format!(
-            "{}|{}#{model_digest:016x}|{}|seed={}",
+            "{}|{}#{model_digest:016x}|{}|seed={}{sub}",
             self.scheduler.key(),
             self.model_label,
             self.problem.key(),
             self.seed
         )
     }
+
+    /// Builder: the same cell re-targeted to another substrate.
+    pub fn on(mut self, substrate: Substrate) -> Cell {
+        self.substrate = substrate;
+        self
+    }
 }
 
 /// Cross-product axes that expand to a deterministic cell list.
 ///
 /// Expansion order (outermost → innermost): scheduler → γ → model →
-/// problem/α → seed. Empty `gammas` means every scheduler keeps its own
-/// stepsize; otherwise each scheduler is re-tuned to every γ in the axis
-/// ([`SchedulerKind::with_gamma`]).
+/// problem/α → seed → substrate. Empty `gammas` means every scheduler
+/// keeps its own stepsize; otherwise each scheduler is re-tuned to every γ
+/// in the axis ([`SchedulerKind::with_gamma`]). Empty `substrates` means
+/// every cell runs on the default [`Substrate::Sim`].
 #[derive(Clone, Debug, Default)]
 pub struct GridAxes {
     pub schedulers: Vec<SchedSpec>,
@@ -272,10 +362,16 @@ pub struct GridAxes {
     pub models: Vec<(String, ComputeModel)>,
     pub problems: Vec<ProblemSpec>,
     pub seeds: Vec<u64>,
+    pub substrates: Vec<Substrate>,
 }
 
 impl GridAxes {
     pub fn expand(&self) -> Vec<Cell> {
+        let substrates: Vec<Substrate> = if self.substrates.is_empty() {
+            vec![Substrate::Sim]
+        } else {
+            self.substrates.clone()
+        };
         let mut cells = Vec::new();
         for sched in &self.schedulers {
             let tuned: Vec<SchedSpec> = if self.gammas.is_empty() {
@@ -293,13 +389,16 @@ impl GridAxes {
                 for (label, model) in &self.models {
                     for problem in &self.problems {
                         for &seed in &self.seeds {
-                            cells.push(Cell {
-                                scheduler: s.clone(),
-                                model_label: label.clone(),
-                                model: model.clone(),
-                                problem: problem.clone(),
-                                seed,
-                            });
+                            for &substrate in &substrates {
+                                cells.push(Cell {
+                                    scheduler: s.clone(),
+                                    model_label: label.clone(),
+                                    model: model.clone(),
+                                    problem: problem.clone(),
+                                    seed,
+                                    substrate,
+                                });
+                            }
                         }
                     }
                 }
@@ -424,6 +523,7 @@ mod tests {
                 },
             ],
             seeds: vec![0, 1, 2],
+            substrates: vec![],
         }
     }
 
@@ -504,6 +604,61 @@ mod tests {
             let (lo, hi) = (sizes.iter().min().unwrap(), sizes.iter().max().unwrap());
             assert!(hi - lo <= 1, "{sizes:?}");
         }
+    }
+
+    #[test]
+    fn substrate_axis_expands_and_keys_are_backward_compatible() {
+        let wc = Substrate::Wallclock { deterministic: true, threads: 2 };
+        let mut a = axes();
+        // empty axis ⇒ Sim everywhere, and Sim keys carry no fragment
+        let plain = a.expand();
+        assert!(plain.iter().all(|c| c.substrate == Substrate::Sim));
+        assert!(plain.iter().all(|c| !c.key().contains("|wc(")));
+
+        a.substrates = vec![Substrate::Sim, wc];
+        let cells = a.expand();
+        assert_eq!(cells.len(), plain.len() * 2);
+        // substrate is the innermost axis: sim/wallclock twins adjacent
+        assert_eq!(cells[0].substrate, Substrate::Sim);
+        assert_eq!(cells[1].substrate, wc);
+        assert_eq!(cells[0].key(), plain[0].key(), "sim keys unchanged");
+        assert_eq!(cells[1].key(), format!("{}|wc(det)", plain[0].key()));
+        // the `threads` cap is an execution knob, not cell content
+        let capped = cells[1].clone().on(Substrate::Wallclock {
+            deterministic: true,
+            threads: 7,
+        });
+        assert_eq!(capped.key(), cells[1].key());
+        // ... but determinism IS content (live runs are not reproducible)
+        let live = cells[1].clone().on(Substrate::Wallclock {
+            deterministic: false,
+            threads: 0,
+        });
+        assert_ne!(live.key(), cells[1].key());
+        assert!(live.key().ends_with("|wc(live)"));
+    }
+
+    #[test]
+    fn parse_substrate_grammar() {
+        assert_eq!(parse_substrate("sim", false, 0).unwrap(), Substrate::Sim);
+        assert_eq!(
+            parse_substrate("wallclock", true, 3).unwrap(),
+            Substrate::Wallclock { deterministic: true, threads: 3 }
+        );
+        assert_eq!(
+            parse_substrate("wc", false, 0).unwrap(),
+            Substrate::Wallclock { deterministic: false, threads: 0 }
+        );
+        assert!(parse_substrate("gpu", false, 0).is_err());
+        assert_eq!(Substrate::Sim.name(), "sim");
+        assert_eq!(
+            Substrate::Wallclock { deterministic: true, threads: 0 }.name(),
+            "wallclock-det"
+        );
+        assert_eq!(
+            Substrate::Wallclock { deterministic: false, threads: 0 }.name(),
+            "wallclock-live"
+        );
     }
 
     #[test]

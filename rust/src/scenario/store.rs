@@ -1,12 +1,21 @@
 //! The checkpoint journal: completed grid cells as append-only JSONL.
 //!
 //! Line 1 is a header `{"version":1,"grid":"<fingerprint>","cells":N}`;
-//! every following line is `{"key":"<cell key>","summary":{..}}`. Appends
-//! are flushed per cell, so a killed sweep loses at most the cell that was
-//! mid-write — and a truncated trailing line is tolerated on reload (that
-//! cell simply reruns). Because every engine run is seed-derived, a
-//! journal entry is exactly as good as rerunning the cell: resuming from
-//! the journal and running from scratch produce byte-identical CSVs.
+//! every following line is
+//! `{"attempts":A,"key":"<cell key>","summary":{..}}` (`attempts` is the
+//! retry count that produced the result — bookkeeping only, never part of
+//! the CSV, so resume-by-diff stays byte-identical whether or not a cell
+//! was retried). Appends are flushed per cell, so a killed sweep loses at
+//! most the cell that was mid-write — and a truncated trailing line is
+//! tolerated on reload (that cell simply reruns). Because every engine run
+//! is seed-derived, a journal entry is exactly as good as rerunning the
+//! cell: resuming from the journal and running from scratch produce
+//! byte-identical CSVs.
+//!
+//! [`merge_journals`] unions the journals of a cross-machine `--shard i/n`
+//! fan-out (same grid fingerprint required, dedup by cell key, *content*
+//! conflict = hard error) into one journal a final `--journal` invocation
+//! can emit the full CSV from without rerunning anything.
 
 use std::collections::BTreeMap;
 use std::fs::{File, OpenOptions};
@@ -39,6 +48,11 @@ pub struct RunSummary {
     pub concentration: Option<f64>,
     /// Final per-shard losses (fairness metrics; empty when not recorded).
     pub shard_final_losses: Vec<f64>,
+    /// Host wall-clock seconds of the run (`Some` only for wall-clock
+    /// substrate cells). Diagnostics only — never a CSV column, and
+    /// excluded from merge conflict detection ([`RunSummary::content_eq`]):
+    /// it records how long the host took, not what the cell computed.
+    pub wall_secs: Option<f64>,
 }
 
 /// JSON `Num`s cannot carry non-finite values; encode them as strings.
@@ -101,7 +115,22 @@ impl RunSummary {
                 .iter()
                 .filter_map(|c| c.last().map(|(_, v)| v))
                 .collect(),
+            wall_secs: rec.wall.map(|d| d.as_secs_f64()),
         }
+    }
+
+    /// Equality on result *content*: every field except `wall_secs`.
+    /// Compared through the canonical JSON rendering so non-finite values
+    /// (NaN fairness losses, infinite gradnorms) compare equal to
+    /// themselves — exactly the identity journal merging dedups by.
+    pub fn content_eq(&self, other: &RunSummary) -> bool {
+        json::write(&self.content_json()) == json::write(&other.content_json())
+    }
+
+    fn content_json(&self) -> Json {
+        let mut c = self.clone();
+        c.wall_secs = None;
+        c.to_json()
     }
 
     pub fn to_json(&self) -> Json {
@@ -127,6 +156,7 @@ impl RunSummary {
                 "shard_final_losses",
                 Json::Arr(self.shard_final_losses.iter().map(|&l| num(l)).collect()),
             ),
+            ("wall_secs", opt_num(self.wall_secs)),
         ])
     }
 
@@ -161,8 +191,73 @@ impl RunSummary {
                 .iter()
                 .map(get_num)
                 .collect::<Option<Vec<_>>>()?,
+            // absent in pre-substrate journals ⇒ `get` yields Null ⇒ None
+            wall_secs: opt("wall_secs")?,
         })
     }
+}
+
+struct JournalHeader {
+    grid: String,
+    version: f64,
+    cells: f64,
+}
+
+/// Parse journal `text`: the header line plus every well-formed entry
+/// `(key, summary, attempts)`, skipping unparseable lines — most
+/// importantly the truncated trailing line a killed writer leaves.
+/// The **single** journal reader, shared by [`CellStore::open`] and
+/// [`merge_journals`], so resume and merge can never disagree about what
+/// a journal contains.
+fn parse_journal(
+    path: &Path,
+    text: &str,
+) -> Result<(JournalHeader, Vec<(String, RunSummary, u32)>)> {
+    let mut lines = text.lines();
+    let header = match lines.next().map(json::parse) {
+        Some(Ok(h)) if h.get("grid").as_str().is_some() => JournalHeader {
+            grid: h.get("grid").as_str().unwrap_or_default().to_string(),
+            version: h.get("version").as_f64().unwrap_or(1.0),
+            cells: h.get("cells").as_f64().unwrap_or(0.0),
+        },
+        _ => crate::bail!(
+            "journal {} has no readable header — not a sweep journal?",
+            path.display()
+        ),
+    };
+    let mut entries = Vec::new();
+    for line in lines {
+        let Ok(entry) = json::parse(line) else { continue };
+        let (Some(key), Some(summary)) = (
+            entry.get("key").as_str(),
+            RunSummary::from_json(entry.get("summary")),
+        ) else {
+            continue;
+        };
+        // pre-retry journals carry no attempt count ⇒ one attempt
+        let attempts = get_u64(entry.get("attempts"))
+            .and_then(|a| u32::try_from(a).ok())
+            .filter(|&a| a >= 1)
+            .unwrap_or(1);
+        entries.push((key.to_string(), summary, attempts));
+    }
+    Ok((header, entries))
+}
+
+fn header_json(fingerprint: &str, version: f64, n_cells: f64) -> Json {
+    json::obj(vec![
+        ("version", Json::Num(version)),
+        ("grid", Json::Str(fingerprint.to_string())),
+        ("cells", Json::Num(n_cells)),
+    ])
+}
+
+fn entry_json(key: &str, summary: &RunSummary, attempts: u32) -> Json {
+    json::obj(vec![
+        ("key", Json::Str(key.to_string())),
+        ("attempts", num(attempts as f64)),
+        ("summary", summary.to_json()),
+    ])
 }
 
 /// Append-only journal of completed cells, keyed by [`super::Cell::key`].
@@ -170,6 +265,7 @@ pub struct CellStore {
     path: PathBuf,
     file: File,
     completed: BTreeMap<String, RunSummary>,
+    attempts: BTreeMap<String, u32>,
 }
 
 impl CellStore {
@@ -185,6 +281,7 @@ impl CellStore {
     /// appends from two processes are not supported.
     pub fn open(path: &Path, fingerprint: &str, n_cells: usize) -> Result<CellStore> {
         let mut completed = BTreeMap::new();
+        let mut attempts = BTreeMap::new();
         let text = if path.exists() {
             std::fs::read_to_string(path)?
         } else {
@@ -198,35 +295,19 @@ impl CellStore {
         // should each get their own --journal).
         let fresh = text.is_empty();
         if !fresh {
-            let mut lines = text.lines();
-            match lines.next().map(json::parse) {
-                Some(Ok(header)) => {
-                    let grid = header.get("grid").as_str().unwrap_or_default();
-                    if grid != fingerprint {
-                        crate::bail!(
-                            "journal {} was written for a different grid \
-                             (journal fingerprint {grid}, current {fingerprint}); \
-                             delete it or rerun with the original parameters",
-                            path.display()
-                        );
-                    }
-                }
-                _ => crate::bail!(
-                    "journal {} has no readable header — not a sweep journal?",
-                    path.display()
-                ),
+            let (header, entries) = parse_journal(path, &text)?;
+            if header.grid != fingerprint {
+                crate::bail!(
+                    "journal {} was written for a different grid \
+                     (journal fingerprint {}, current {fingerprint}); \
+                     delete it or rerun with the original parameters",
+                    path.display(),
+                    header.grid
+                );
             }
-            for line in lines {
-                // tolerate a truncated trailing line (killed mid-append):
-                // the cell it would have recorded simply reruns
-                let Ok(entry) = json::parse(line) else { continue };
-                let (Some(key), Some(summary)) = (
-                    entry.get("key").as_str(),
-                    RunSummary::from_json(entry.get("summary")),
-                ) else {
-                    continue;
-                };
-                completed.insert(key.to_string(), summary);
+            for (key, summary, tries) in entries {
+                attempts.insert(key.clone(), tries);
+                completed.insert(key, summary);
             }
         }
         if let Some(parent) = path.parent() {
@@ -236,11 +317,7 @@ impl CellStore {
         }
         let mut file = OpenOptions::new().create(true).append(true).open(path)?;
         if fresh {
-            let header = json::obj(vec![
-                ("version", Json::Num(1.0)),
-                ("grid", Json::Str(fingerprint.to_string())),
-                ("cells", Json::Num(n_cells as f64)),
-            ]);
+            let header = header_json(fingerprint, 1.0, n_cells as f64);
             writeln!(file, "{}", json::write(&header))?;
             file.flush()?;
         } else if !text.ends_with('\n') {
@@ -252,6 +329,7 @@ impl CellStore {
             path: path.to_path_buf(),
             file,
             completed,
+            attempts,
         })
     }
 
@@ -265,18 +343,137 @@ impl CellStore {
         &self.completed
     }
 
-    /// Record one finished cell and flush, so the entry survives an
-    /// immediately following kill.
-    pub fn append(&mut self, key: &str, summary: &RunSummary) -> Result<()> {
-        let entry = json::obj(vec![
-            ("key", Json::Str(key.to_string())),
-            ("summary", summary.to_json()),
-        ]);
+    /// How many attempts the recorded result of `key` took (1 = first try;
+    /// also 1 for keys this journal has no record of).
+    pub fn attempts(&self, key: &str) -> u32 {
+        self.attempts.get(key).copied().unwrap_or(1)
+    }
+
+    /// Record one finished cell (with the retry attempt count that
+    /// produced it) and flush, so the entry survives an immediately
+    /// following kill.
+    pub fn append(&mut self, key: &str, summary: &RunSummary, attempts: u32) -> Result<()> {
+        let entry = entry_json(key, summary, attempts);
         writeln!(self.file, "{}", json::write(&entry))?;
         self.file.flush()?;
         self.completed.insert(key.to_string(), summary.clone());
+        self.attempts.insert(key.to_string(), attempts);
         Ok(())
     }
+}
+
+/// Statistics of one [`merge_journals`] invocation.
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
+pub struct MergeStats {
+    /// Input journals read.
+    pub inputs: usize,
+    /// Distinct cells in the merged journal.
+    pub cells: usize,
+    /// Entries dropped because another input already recorded the same
+    /// cell with identical content.
+    pub duplicates: usize,
+}
+
+/// Union N journals written for the **same grid** into one journal at
+/// `out` — the cross-machine half of `--shard i/n` fan-out: every shard
+/// runs `sweep --shard i/n --journal shard_i.jsonl` on its own machine,
+/// the journals are merged here, and a final `sweep --journal merged.jsonl`
+/// invocation emits the full-grid CSV without rerunning a single cell.
+///
+/// * Every input must carry the same header fingerprint (and cell count);
+///   journals of different grids are refused outright.
+/// * Entries are deduplicated by cell key in first-seen input order.
+///   Duplicates with identical content are dropped (keeping the largest
+///   attempt count); the same key with *different* content is a hard error
+///   — disjoint shards can never legitimately produce that, so it means
+///   two incompatible runs are being mixed.
+/// * Truncated trailing lines (a shard killed mid-append) are tolerated
+///   exactly as [`CellStore::open`] tolerates them.
+///
+/// `out` is (over)written only after every input has been fully read into
+/// memory, so `out` may even name one of the inputs.
+pub fn merge_journals(inputs: &[PathBuf], out: &Path) -> Result<MergeStats> {
+    crate::ensure!(
+        !inputs.is_empty(),
+        "journal merge needs at least one input journal"
+    );
+    let mut reference: Option<(String, f64, f64)> = None; // grid, version, cells
+    let mut order: Vec<String> = Vec::new();
+    let mut merged: BTreeMap<String, (RunSummary, u32, String)> = BTreeMap::new();
+    let mut duplicates = 0usize;
+
+    for path in inputs {
+        let text = std::fs::read_to_string(path)
+            .map_err(|e| crate::anyhow!("reading {}: {e}", path.display()))?;
+        let (header, entries) = parse_journal(path, &text)?;
+        let (grid, cells) = (header.grid, header.cells);
+        match &reference {
+            None => reference = Some((grid, header.version, cells)),
+            Some((g, _, c)) => {
+                crate::ensure!(
+                    *g == grid && *c == cells,
+                    "journal {} was written for a different grid \
+                     (fingerprint {grid} / {cells} cells, expected {g} / {c} cells); \
+                     only shards of the same sweep can be merged",
+                    path.display()
+                );
+            }
+        }
+        for (key, summary, attempts) in entries {
+            let content = json::write(&summary.content_json());
+            match merged.entry(key.clone()) {
+                std::collections::btree_map::Entry::Vacant(slot) => {
+                    order.push(key);
+                    slot.insert((summary, attempts, content));
+                }
+                std::collections::btree_map::Entry::Occupied(mut slot) => {
+                    let (_, tries, existing) = slot.get_mut();
+                    crate::ensure!(
+                        *existing == content,
+                        "merge conflict: cell '{key}' has different results \
+                         across inputs (second occurrence in {}); refusing to \
+                         pick one silently",
+                        path.display()
+                    );
+                    duplicates += 1;
+                    *tries = (*tries).max(attempts);
+                }
+            }
+        }
+    }
+
+    let (grid, version, cells) = reference.expect("at least one input was read");
+    let mut text = String::new();
+    text.push_str(&json::write(&header_json(&grid, version, cells)));
+    text.push('\n');
+    for key in &order {
+        let (summary, attempts, _) = &merged[key];
+        text.push_str(&json::write(&entry_json(key, summary, *attempts)));
+        text.push('\n');
+    }
+    if let Some(parent) = out.parent() {
+        if !parent.as_os_str().is_empty() {
+            std::fs::create_dir_all(parent)?;
+        }
+    }
+    // write to a sibling temp file, then rename: the overwrite of `out`
+    // is all-or-nothing, so a crash (or ENOSPC) mid-write can never
+    // destroy `out` — which may be one of the inputs (in-place merge)
+    let tmp = out.with_file_name(format!(
+        "{}.tmp",
+        out.file_name()
+            .and_then(|n| n.to_str())
+            .unwrap_or("merged.jsonl")
+    ));
+    std::fs::write(&tmp, text)
+        .map_err(|e| crate::anyhow!("writing {}: {e}", tmp.display()))?;
+    std::fs::rename(&tmp, out)
+        .map_err(|e| crate::anyhow!("renaming {} → {}: {e}", tmp.display(), out.display()))?;
+    Ok(MergeStats {
+        inputs: inputs.len(),
+        cells: order.len(),
+        duplicates,
+    })
 }
 
 #[cfg(test)]
@@ -301,12 +498,14 @@ mod tests {
             diverged: false,
             concentration: Some(0.62),
             shard_final_losses: vec![0.3, 0.7, f64::NAN],
+            wall_secs: None,
         }
     }
 
     #[test]
     fn summary_roundtrips_through_json_including_nonfinite() {
-        let s = sample_summary();
+        let mut s = sample_summary();
+        s.wall_secs = Some(0.125);
         let j = json::parse(&json::write(&s.to_json())).unwrap();
         let back = RunSummary::from_json(&j).unwrap();
         assert_eq!(back.scheduler, s.scheduler);
@@ -320,6 +519,19 @@ mod tests {
         assert_eq!(back.concentration, Some(0.62));
         assert_eq!(back.shard_final_losses[..2], s.shard_final_losses[..2]);
         assert!(back.shard_final_losses[2].is_nan());
+        assert_eq!(back.wall_secs, Some(0.125));
+    }
+
+    #[test]
+    fn content_eq_ignores_wall_secs_but_not_results() {
+        let a = sample_summary();
+        let mut b = sample_summary();
+        b.wall_secs = Some(2.0);
+        // NaN fairness entries still compare equal to themselves (JSON
+        // canonical form), and wall time is not content
+        assert!(a.content_eq(&b));
+        b.iters += 1;
+        assert!(!a.content_eq(&b));
     }
 
     #[test]
@@ -330,8 +542,8 @@ mod tests {
         std::fs::remove_file(&path).ok();
 
         let mut store = CellStore::open(&path, "abc123", 4).unwrap();
-        store.append("cell-a", &sample_summary()).unwrap();
-        store.append("cell-b", &sample_summary()).unwrap();
+        store.append("cell-a", &sample_summary(), 1).unwrap();
+        store.append("cell-b", &sample_summary(), 3).unwrap();
         drop(store);
 
         // simulate a kill mid-append: half a JSON line at the tail
@@ -344,8 +556,12 @@ mod tests {
         assert!(store.completed().contains_key("cell-a"));
         assert!(store.completed().contains_key("cell-b"));
         assert!(!store.completed().contains_key("cell-c"));
+        // attempt counts survive the reload (and default to 1 elsewhere)
+        assert_eq!(store.attempts("cell-a"), 1);
+        assert_eq!(store.attempts("cell-b"), 3);
+        assert_eq!(store.attempts("cell-nope"), 1);
         // appending after a dangling tail must land on its own line ...
-        store.append("cell-d", &sample_summary()).unwrap();
+        store.append("cell-d", &sample_summary(), 1).unwrap();
         drop(store);
         // ... so the next load sees it (and still skips the garbage line)
         let store = CellStore::open(&path, "abc123", 4).unwrap();
@@ -357,6 +573,53 @@ mod tests {
         let err = CellStore::open(&path, "different", 4);
         assert!(err.is_err());
         assert!(format!("{}", err.err().unwrap()).contains("different grid"));
+        std::fs::remove_dir_all(&dir).ok();
+    }
+
+    #[test]
+    fn merge_unions_shard_journals_and_is_loadable() {
+        let dir = std::env::temp_dir().join(format!("ringmaster_merge_{}", std::process::id()));
+        std::fs::create_dir_all(&dir).unwrap();
+        let (a, b, m) = (dir.join("a.jsonl"), dir.join("b.jsonl"), dir.join("m.jsonl"));
+        for p in [&a, &b, &m] {
+            std::fs::remove_file(p).ok();
+        }
+        let mut sa = CellStore::open(&a, "fp", 3).unwrap();
+        sa.append("cell-0", &sample_summary(), 1).unwrap();
+        sa.append("cell-2", &sample_summary(), 2).unwrap();
+        drop(sa);
+        let mut sb = CellStore::open(&b, "fp", 3).unwrap();
+        sb.append("cell-1", &sample_summary(), 1).unwrap();
+        // overlap with identical content: deduped, max attempts kept
+        sb.append("cell-2", &sample_summary(), 1).unwrap();
+        drop(sb);
+
+        let stats = merge_journals(&[a.clone(), b.clone()], &m).unwrap();
+        assert_eq!(stats, MergeStats { inputs: 2, cells: 3, duplicates: 1 });
+        let merged = CellStore::open(&m, "fp", 3).unwrap();
+        assert_eq!(merged.completed().len(), 3);
+        for k in ["cell-0", "cell-1", "cell-2"] {
+            assert!(merged.completed().contains_key(k), "{k}");
+        }
+        assert_eq!(merged.attempts("cell-2"), 2);
+
+        // a journal for another grid is refused outright
+        let c = dir.join("c.jsonl");
+        std::fs::remove_file(&c).ok();
+        drop(CellStore::open(&c, "other-fp", 3).unwrap());
+        let err = merge_journals(&[a.clone(), c], &m).unwrap_err();
+        assert!(format!("{err}").contains("different grid"), "{err}");
+
+        // conflicting content under the same key is a hard error
+        let d = dir.join("d.jsonl");
+        std::fs::remove_file(&d).ok();
+        let mut sd = CellStore::open(&d, "fp", 3).unwrap();
+        let mut other = sample_summary();
+        other.iters += 7;
+        sd.append("cell-0", &other, 1).unwrap();
+        drop(sd);
+        let err = merge_journals(&[a, d], &m).unwrap_err();
+        assert!(format!("{err}").contains("merge conflict"), "{err}");
         std::fs::remove_dir_all(&dir).ok();
     }
 }

@@ -195,6 +195,117 @@ fn sweep_journal_interrupt_resume_is_byte_identical_and_shards_cover() {
 }
 
 #[test]
+fn sweep_wallclock_deterministic_matches_sim_in_shared_columns() {
+    let base = [
+        "sweep",
+        "--alpha", "inf,0.1",
+        "--seeds", "0",
+        "--n", "4",
+        "--n-data", "120",
+        "--batch", "4",
+        "--max-iters", "120",
+        "--schedulers", "ringmaster,rennala",
+    ];
+    let (sim, err_s, ok_s) = run(&base);
+    assert!(ok_s, "{err_s}");
+    let mut wc_args = base.to_vec();
+    wc_args.extend(["--substrate", "wallclock", "--deterministic", "--wc-threads", "2"]);
+    let (wc, err_w, ok_w) = run(&wc_args);
+    assert!(ok_w, "{err_w}");
+
+    let strip = |out: &str, suffix: &str| -> Vec<String> {
+        out.trim_end()
+            .lines()
+            .skip(1)
+            .map(|l| {
+                l.strip_suffix(suffix)
+                    .unwrap_or_else(|| panic!("row missing {suffix}: {l}"))
+                    .to_string()
+            })
+            .collect()
+    };
+    assert!(sim.lines().next().unwrap().ends_with(",substrate"));
+    assert_eq!(
+        strip(&sim, ",sim"),
+        strip(&wc, ",wallclock-det"),
+        "deterministic wall-clock sweep must match sim in every shared column"
+    );
+
+    // an unknown substrate is a clean CLI error
+    let mut bad = base.to_vec();
+    bad.extend(["--substrate", "gpu"]);
+    let (_, err, ok) = run(&bad);
+    assert!(!ok);
+    assert!(err.contains("--substrate"), "{err}");
+}
+
+#[test]
+fn sweep_merge_reassembles_a_cross_machine_fan_out() {
+    let dir = std::env::temp_dir().join(format!("ringmaster_cli_merge_{}", std::process::id()));
+    std::fs::create_dir_all(&dir).unwrap();
+    let (s1, s2, merged) = (
+        dir.join("s1.jsonl"),
+        dir.join("s2.jsonl"),
+        dir.join("merged.jsonl"),
+    );
+    for p in [&s1, &s2, &merged] {
+        std::fs::remove_file(p).ok();
+    }
+    let base = [
+        "sweep",
+        "--alpha", "inf,0.1",
+        "--seeds", "0",
+        "--n", "4",
+        "--n-data", "120",
+        "--batch", "4",
+        "--max-iters", "120",
+        "--schedulers", "ringmaster,rennala",
+    ];
+    // uninterrupted ground truth
+    let (fresh, _, ok) = run(&base);
+    assert!(ok);
+    // two shards, each journaling to its own file (one per "machine")
+    for (sel, journal) in [("1/2", &s1), ("2/2", &s2)] {
+        let mut sharded = base.to_vec();
+        let j = journal.to_str().unwrap().to_string();
+        sharded.extend(["--shard", sel]);
+        let owned = ["--journal".to_string(), j];
+        let refs: Vec<&str> = sharded
+            .iter()
+            .copied()
+            .chain(owned.iter().map(String::as_str))
+            .collect();
+        let (_, err, ok) = run(&refs);
+        assert!(ok, "{err}");
+    }
+    // merge the shard journals
+    let (_, err, ok) = run(&[
+        "sweep",
+        "merge",
+        "--out",
+        merged.to_str().unwrap(),
+        s1.to_str().unwrap(),
+        s2.to_str().unwrap(),
+    ]);
+    assert!(ok, "{err}");
+    assert!(err.contains("merged 2 journals"), "{err}");
+
+    // the merged journal reproduces the uninterrupted CSV, running nothing
+    let mut final_args = base.to_vec();
+    final_args.extend(["--journal", merged.to_str().unwrap()]);
+    let (out, err, ok) = run(&final_args);
+    assert!(ok, "{err}");
+    assert!(err.contains("[4 done]"), "merged journal must cover the grid: {err}");
+    assert_eq!(out, fresh, "merged-journal CSV differs from uninterrupted run");
+
+    // merge without --out is a clean error
+    let (_, err, ok) = run(&["sweep", "merge", s1.to_str().unwrap()]);
+    assert!(!ok);
+    assert!(err.contains("--out"), "{err}");
+    std::fs::remove_dir_all(&dir).ok();
+}
+
+#[test]
 fn exec_demo_runs_real_threads() {
     let (stdout, stderr, ok) = run(&[
         "exec-demo",

@@ -10,7 +10,7 @@ use std::path::PathBuf;
 
 use ringmaster::coordinator::SchedulerKind;
 use ringmaster::experiments::heterogeneity::HetConfig;
-use ringmaster::scenario::{self, CellStore, GridSpec, ShardSel};
+use ringmaster::scenario::{self, CellStore, GridSpec, ShardSel, Substrate};
 
 fn tiny_spec() -> GridSpec {
     HetConfig {
@@ -26,6 +26,7 @@ fn tiny_spec() -> GridSpec {
             SchedulerKind::Ringmaster { r: 4, gamma: 0.02, cancel: true }.into(),
             SchedulerKind::Rennala { b: 2, gamma: 0.02 }.into(),
         ],
+        substrate: Substrate::Sim,
     }
     .grid_spec()
 }

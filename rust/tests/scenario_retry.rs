@@ -1,0 +1,253 @@
+//! Retry-policy, journal-merge, and substrate-parity semantics of the
+//! scenario layer — the production contract of cross-machine sweeps:
+//!
+//! * a cell that fails transiently is retried, the attempt count lands in
+//!   the journal, and the final CSV is byte-identical to a never-failing
+//!   run (every run is seed-derived, so attempt 2 computes exactly what
+//!   attempt 1 would have);
+//! * permanent (content) panics are *not* retried — they propagate on the
+//!   first attempt;
+//! * `merge_journals` over disjoint shard journals reproduces an
+//!   uninterrupted run's CSV byte for byte, and refuses conflicting
+//!   payloads under the same cell key;
+//! * a deterministic wall-clock grid matches its sim twin in every CSV
+//!   column except the trailing substrate tag — on a *sharded* problem,
+//!   the regime the paper's wall-clock optimality claim is about.
+
+use std::path::PathBuf;
+use std::sync::atomic::{AtomicU32, Ordering};
+
+use ringmaster::coordinator::SchedulerKind;
+use ringmaster::experiments::heterogeneity::HetConfig;
+use ringmaster::scenario::{
+    self, merge_journals, CellStore, GridSpec, RetryPolicy, ShardSel, Substrate,
+};
+
+fn tiny_cfg() -> HetConfig {
+    HetConfig {
+        n_data: 120,
+        n_workers: 4,
+        batch: 4,
+        lambda: 0.01,
+        max_iters: 120,
+        record_every: 40,
+        alphas: vec![f64::INFINITY, 0.1],
+        seeds: vec![0],
+        schedulers: vec![
+            SchedulerKind::Ringmaster { r: 4, gamma: 0.02, cancel: true }.into(),
+            SchedulerKind::Rennala { b: 2, gamma: 0.02 }.into(),
+        ],
+        substrate: Substrate::Sim,
+    }
+}
+
+fn tiny_spec() -> GridSpec {
+    tiny_cfg().grid_spec()
+}
+
+fn tmp(name: &str) -> PathBuf {
+    let dir = std::env::temp_dir().join(format!("ringmaster_retry_{}", std::process::id()));
+    std::fs::create_dir_all(&dir).unwrap();
+    dir.join(name)
+}
+
+#[test]
+fn transient_failure_retries_and_csv_is_byte_identical_to_clean_run() {
+    let spec = tiny_spec();
+    assert_eq!(spec.len(), 4); // 2 sched × 2 α × 1 seed
+
+    // ground truth: a run where nothing ever fails
+    let fresh = scenario::run_grid(&spec, ShardSel::ALL, None, None).unwrap();
+    assert_eq!(fresh.retries, 0);
+    let fresh_csv = scenario::grid_csv(&fresh.rows);
+
+    // inject: the third cell dies once with a transient error, then heals
+    let victim = spec.cells[2].key();
+    let victim_calls = AtomicU32::new(0);
+    let journal = tmp("transient.jsonl");
+    std::fs::remove_file(&journal).ok();
+    let mut store = CellStore::open(&journal, &spec.fingerprint(), spec.len()).unwrap();
+    let run = scenario::run_grid_with(
+        &spec,
+        ShardSel::ALL,
+        Some(&mut store),
+        None,
+        RetryPolicy::default(),
+        |cell, budget| {
+            if cell.key() == victim && victim_calls.fetch_add(1, Ordering::SeqCst) == 0 {
+                panic!("{}: failure injected for test", RetryPolicy::TRANSIENT_MARKER);
+            }
+            scenario::run_cell(cell, budget)
+        },
+    )
+    .unwrap();
+    assert!(run.is_complete());
+    assert_eq!(run.retries, 1, "exactly one extra attempt was spent");
+    assert_eq!(victim_calls.load(Ordering::SeqCst), 2, "failed once, succeeded on retry");
+
+    // the journal records the attempt count — audit trail for flaky hosts
+    assert_eq!(store.attempts(&victim), 2);
+    for cell in &spec.cells {
+        if cell.key() != victim {
+            assert_eq!(store.attempts(&cell.key()), 1, "{}", cell.key());
+        }
+    }
+    drop(store);
+
+    // ... and the CSV cannot tell the retried run from the clean one
+    let csv = scenario::grid_csv(&run.rows);
+    assert_eq!(csv.as_bytes(), fresh_csv.as_bytes());
+
+    // resuming from the retried journal is also byte-identical (attempts
+    // are bookkeeping, not content)
+    let mut store = CellStore::open(&journal, &spec.fingerprint(), spec.len()).unwrap();
+    assert_eq!(store.attempts(&victim), 2, "attempts survive reload");
+    let resumed = scenario::run_grid(&spec, ShardSel::ALL, Some(&mut store), None).unwrap();
+    assert_eq!(resumed.ran, 0);
+    assert_eq!(scenario::grid_csv(&resumed.rows).as_bytes(), fresh_csv.as_bytes());
+}
+
+#[test]
+fn transient_classification_is_narrow() {
+    let boxed = |s: String| -> Box<dyn std::any::Any + Send> { Box::new(s) };
+    assert!(RetryPolicy::is_transient(
+        boxed(format!("{}: injected", RetryPolicy::TRANSIENT_MARKER)).as_ref()
+    ));
+    assert!(RetryPolicy::is_transient(
+        boxed("failed to spawn thread: Resource temporarily unavailable".into()).as_ref()
+    ));
+    // a content panic that merely *mentions* the word is not swallowed
+    assert!(!RetryPolicy::is_transient(
+        boxed("non-transient divergence in worker 3".into()).as_ref()
+    ));
+    assert!(!RetryPolicy::is_transient(
+        boxed("assertion failed: cell content bug".into()).as_ref()
+    ));
+}
+
+#[test]
+fn permanent_panics_are_not_retried() {
+    let spec = tiny_spec();
+    let victim = spec.cells[0].key();
+    let victim_calls = AtomicU32::new(0);
+    let caught = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| {
+        scenario::run_grid_with(
+            &spec,
+            ShardSel::ALL,
+            None,
+            None,
+            RetryPolicy::new(5),
+            |cell, budget| {
+                if cell.key() == victim {
+                    victim_calls.fetch_add(1, Ordering::SeqCst);
+                    panic!("assertion failed: cell content bug");
+                }
+                scenario::run_cell(cell, budget)
+            },
+        )
+    }));
+    assert!(caught.is_err(), "content panic must propagate");
+    assert_eq!(
+        victim_calls.load(Ordering::SeqCst),
+        1,
+        "a non-transient panic must not be retried"
+    );
+}
+
+#[test]
+fn merged_shard_journals_reproduce_an_uninterrupted_run_byte_for_byte() {
+    let spec = tiny_spec();
+    let fresh = scenario::run_grid(&spec, ShardSel::ALL, None, None).unwrap();
+    let fresh_csv = scenario::grid_csv(&fresh.rows);
+
+    // two "machines", each running its disjoint shard into its own journal
+    let (s1, s2, merged) = (tmp("shard1.jsonl"), tmp("shard2.jsonl"), tmp("merged.jsonl"));
+    for p in [&s1, &s2, &merged] {
+        std::fs::remove_file(p).ok();
+    }
+    for (i, path) in [(0usize, &s1), (1usize, &s2)] {
+        let mut store = CellStore::open(path, &spec.fingerprint(), spec.len()).unwrap();
+        let piece = scenario::run_grid(
+            &spec,
+            ShardSel { index: i, count: 2 },
+            Some(&mut store),
+            None,
+        )
+        .unwrap();
+        assert!(piece.is_complete());
+    }
+
+    let stats = merge_journals(&[s1.clone(), s2.clone()], &merged).unwrap();
+    assert_eq!(stats.inputs, 2);
+    assert_eq!(stats.cells, spec.len());
+    assert_eq!(stats.duplicates, 0, "shards are disjoint");
+
+    // the merged journal drives a full-grid invocation that runs nothing
+    let mut store = CellStore::open(&merged, &spec.fingerprint(), spec.len()).unwrap();
+    assert_eq!(store.completed().len(), spec.len());
+    let run = scenario::run_grid(&spec, ShardSel::ALL, Some(&mut store), None).unwrap();
+    assert_eq!(run.ran, 0, "every cell must come from the merged journal");
+    assert_eq!(scenario::grid_csv(&run.rows).as_bytes(), fresh_csv.as_bytes());
+}
+
+#[test]
+fn merge_refuses_conflicting_payloads_under_the_same_key() {
+    let spec = tiny_spec();
+    let (a, b, out) = (tmp("conflict_a.jsonl"), tmp("conflict_b.jsonl"), tmp("conflict_m.jsonl"));
+    for p in [&a, &b, &out] {
+        std::fs::remove_file(p).ok();
+    }
+    let mut store = CellStore::open(&a, &spec.fingerprint(), spec.len()).unwrap();
+    scenario::run_grid(&spec, ShardSel::ALL, Some(&mut store), Some(1)).unwrap();
+    drop(store);
+
+    // journal B records the same cell with tampered content
+    let mut store = CellStore::open(&b, &spec.fingerprint(), spec.len()).unwrap();
+    scenario::run_grid_with(
+        &spec,
+        ShardSel::ALL,
+        Some(&mut store),
+        Some(1),
+        RetryPolicy::none(),
+        |cell, budget| {
+            let (mut rec, conc) = scenario::run_cell(cell, budget);
+            rec.iters += 1; // different result, same key
+            (rec, conc)
+        },
+    )
+    .unwrap();
+    drop(store);
+
+    let err = merge_journals(&[a, b], &out).unwrap_err();
+    assert!(format!("{err}").contains("merge conflict"), "{err}");
+}
+
+#[test]
+fn deterministic_wallclock_grid_matches_sim_grid_on_a_sharded_problem() {
+    let sim_csv = {
+        let run = scenario::run_grid(&tiny_spec(), ShardSel::ALL, None, None).unwrap();
+        scenario::grid_csv(&run.rows)
+    };
+    let wc_csv = {
+        let mut cfg = tiny_cfg();
+        cfg.substrate = Substrate::Wallclock { deterministic: true, threads: 2 };
+        let run = scenario::run_grid(&cfg.grid_spec(), ShardSel::ALL, None, None).unwrap();
+        scenario::grid_csv(&run.rows)
+    };
+    let strip = |csv: &str, suffix: &str| -> Vec<String> {
+        csv.trim_end()
+            .lines()
+            .skip(1)
+            .map(|l| {
+                l.strip_suffix(suffix)
+                    .unwrap_or_else(|| panic!("row missing {suffix}: {l}"))
+                    .to_string()
+            })
+            .collect()
+    };
+    assert_eq!(
+        strip(&sim_csv, ",sim"),
+        strip(&wc_csv, ",wallclock-det"),
+        "every shared CSV column must be substrate-invariant"
+    );
+}

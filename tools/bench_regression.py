@@ -1,0 +1,100 @@
+#!/usr/bin/env python3
+"""Perf-trajectory gate for the `bench-smoke` CI job.
+
+Usage: bench_regression.py <fresh.json> <baseline-dir>
+
+Validates the freshly measured BENCH report against the schema and fails
+(exit 1) when its throughput regresses more than REGRESSION_FACTOR against
+any *comparable, measured* committed baseline (`BENCH_*.json` in
+<baseline-dir>). Baselines are comparable when bench, scale, substrate and
+n_workers all match; baselines with provenance "placeholder" (schema
+committed before a measured value exists) or null metrics are skipped.
+"""
+
+import glob
+import json
+import os
+import sys
+
+REGRESSION_FACTOR = 1.5
+
+REQUIRED_KEYS = {
+    "schema_version",
+    "bench",
+    "scale",
+    "substrate",
+    "n_workers",
+    "cells",
+    "wall_seconds",
+    "cells_per_sec",
+    "schedulers",
+    "provenance",
+}
+
+
+def load(path):
+    with open(path) as f:
+        return json.load(f)
+
+
+def check_schema(report, path):
+    missing = REQUIRED_KEYS - set(report)
+    if missing:
+        sys.exit(f"{path}: missing schema keys: {sorted(missing)}")
+    if report["schema_version"] != 1:
+        sys.exit(f"{path}: unknown schema_version {report['schema_version']}")
+
+
+def is_number(x):
+    return isinstance(x, (int, float)) and not isinstance(x, bool)
+
+
+def main():
+    if len(sys.argv) != 3:
+        sys.exit(__doc__)
+    fresh_path, baseline_dir = sys.argv[1], sys.argv[2]
+    fresh = load(fresh_path)
+    check_schema(fresh, fresh_path)
+    if fresh["provenance"] != "measured" or not is_number(fresh["cells_per_sec"]):
+        sys.exit(f"{fresh_path}: fresh report must be a measured run")
+    print(
+        f"fresh: {fresh['bench']}/{fresh['scale']}/{fresh['substrate']} "
+        f"n={fresh['n_workers']}: {fresh['cells']} cells, "
+        f"{fresh['cells_per_sec']:.3f} cells/sec"
+    )
+
+    failures = []
+    compared = 0
+    for path in sorted(glob.glob(os.path.join(baseline_dir, "BENCH_*.json"))):
+        if os.path.abspath(path) == os.path.abspath(fresh_path):
+            continue
+        base = load(path)
+        check_schema(base, path)
+        comparable = all(
+            base[k] == fresh[k] for k in ("bench", "scale", "substrate", "n_workers")
+        )
+        if not comparable:
+            print(f"skip {path}: different configuration")
+            continue
+        if base["provenance"] != "measured" or not is_number(base["cells_per_sec"]):
+            print(f"skip {path}: placeholder / unmeasured baseline")
+            continue
+        compared += 1
+        ratio = base["cells_per_sec"] / fresh["cells_per_sec"]
+        verdict = "REGRESSION" if ratio > REGRESSION_FACTOR else "ok"
+        print(
+            f"vs {path}: baseline {base['cells_per_sec']:.3f} cells/sec "
+            f"(baseline/fresh = {ratio:.2f}x) ... {verdict}"
+        )
+        if ratio > REGRESSION_FACTOR:
+            failures.append(path)
+
+    if failures:
+        sys.exit(
+            f"throughput regressed >{REGRESSION_FACTOR}x against: {failures}"
+        )
+    print(f"bench gate passed ({compared} comparable baseline(s))")
+
+
+if __name__ == "__main__":
+    main()

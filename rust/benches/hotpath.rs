@@ -2,11 +2,22 @@
 //!
 //! * simulator event throughput (scheduler decision + event queue + delay
 //!   bookkeeping) with a no-op gradient — the L3 coordination overhead;
+//! * the same event loop at n = 1,000,000 workers — the timing-wheel
+//!   scale test (construct, saturate, drain) that a comparison-heap
+//!   queue handles strictly worse and a naive cancel sweep cannot;
 //! * native quadratic gradient (tridiag matvec + axpy) at d = 1729;
 //! * end-to-end simulated events/s on the §G quadratic at several n;
 //! * PJRT quadratic gradient (artifact call overhead), when artifacts exist.
+//!
+//! With `RINGMASTER_BENCH_JSON=path` set (CI's `bench-smoke` job), writes
+//! a schema-v1 report whose `"metrics"` object carries the named
+//! throughputs (`sim_events_per_sec`, `sim_1m_events_per_sec`,
+//! `driver_updates_per_sec_n*`, `matvec_gb_per_sec`) that
+//! `tools/bench_regression.py` gates against the committed baseline.
 
-use ringmaster::bench_util::{bb, bench, report};
+use ringmaster::bench_util::{
+    bb, bench, bench_json_out, bench_scale, report, write_bench_json_with_metrics, SchedulerStat,
+};
 use ringmaster::coordinator::{RingmasterScheduler, Scheduler, SchedulerKind};
 use ringmaster::experiments::{run_quadratic, QuadExpConfig};
 use ringmaster::linalg::TridiagToeplitz;
@@ -15,6 +26,9 @@ use ringmaster::sim::ComputeModel;
 
 fn main() {
     println!("— hot-path microbenches —");
+
+    let mut metrics: Vec<(String, f64)> = Vec::new();
+    let mut stats: Vec<SchedulerStat> = Vec::new();
 
     // 1. pure event loop: cluster + scheduler, zero-dim problem
     {
@@ -52,9 +66,53 @@ fn main() {
             "    → {:.2} M events/s",
             m.throughput(events as f64) / 1e6
         );
+        metrics.push(("sim_events_per_sec".into(), m.throughput(events as f64)));
+        stats.push(SchedulerStat {
+            name: "sim_event_loop_n1024".into(),
+            cells: 1,
+            wall_seconds: m.median_s,
+        });
     }
 
-    // 2. native quadratic gradient at the paper's d
+    // 2. million-worker churn: build the cluster, saturate it with one
+    //    in-flight assignment per worker, then drain 100k arrivals with
+    //    immediate reassignment. Events counted = initial pushes + drained
+    //    arrivals; construction cost is deliberately inside the timed
+    //    region (at this scale it is part of the story).
+    {
+        use ringmaster::sim::Cluster;
+        use std::sync::Arc;
+        let n = 1_000_000usize;
+        let drain = 100_000u64;
+        let m = bench("sim event loop (n=1M, churn)", 0, 3, || {
+            let mut cluster = Cluster::new(ComputeModel::fixed_linear(n), n, 1);
+            let snap = Arc::new(Vec::new());
+            for w in 0..n {
+                cluster.assign(w, 0, &snap);
+            }
+            let mut k = 0u64;
+            for _ in 0..drain {
+                let a = cluster.next_arrival().unwrap();
+                k += 1;
+                cluster.assign(a.worker, k, &snap);
+            }
+            bb(k);
+        });
+        report(&m);
+        let events = n as f64 + drain as f64;
+        println!(
+            "    → {:.2} M events/s (incl. construction + {n} initial assigns)",
+            m.throughput(events) / 1e6
+        );
+        metrics.push(("sim_1m_events_per_sec".into(), m.throughput(events)));
+        stats.push(SchedulerStat {
+            name: "sim_event_loop_n1m".into(),
+            cells: 1,
+            wall_seconds: m.median_s,
+        });
+    }
+
+    // 3. native quadratic gradient at the paper's d
     {
         let d = 1729;
         let a = TridiagToeplitz::paper(d);
@@ -74,9 +132,15 @@ fn main() {
             m.throughput(bytes) / 1e9,
             reps
         );
+        metrics.push(("matvec_gb_per_sec".into(), m.throughput(bytes) / 1e9));
+        stats.push(SchedulerStat {
+            name: "tridiag_matvec_d1729".into(),
+            cells: 1,
+            wall_seconds: m.median_s,
+        });
     }
 
-    // 3. end-to-end simulated events/s (full gradient math in the loop)
+    // 4. end-to-end simulated events/s (full gradient math in the loop)
     for n in [64usize, 1024, 6174] {
         let cfg = QuadExpConfig {
             d: 1729,
@@ -102,9 +166,18 @@ fn main() {
             "    → {:.0} k updates/s",
             m.throughput(20_000.0) / 1e3
         );
+        metrics.push((
+            format!("driver_updates_per_sec_n{n}"),
+            m.throughput(20_000.0),
+        ));
+        stats.push(SchedulerStat {
+            name: format!("driver_n{n}"),
+            cells: 1,
+            wall_seconds: m.median_s,
+        });
     }
 
-    // 4. PJRT artifact gradient (if artifacts are built)
+    // 5. PJRT artifact gradient (if artifacts are built)
     match ringmaster::opt::PjrtQuadratic::load_default(1729) {
         Ok(p) => {
             let x = vec![0.5; 1729];
@@ -115,5 +188,20 @@ fn main() {
             report(&m);
         }
         Err(e) => println!("  (pjrt bench skipped: {e})"),
+    }
+
+    if let Some(path) = bench_json_out() {
+        let named: Vec<(&str, f64)> = metrics.iter().map(|(k, v)| (k.as_str(), *v)).collect();
+        write_bench_json_with_metrics(
+            &path,
+            "hotpath",
+            bench_scale(),
+            "sim",
+            1_000_000,
+            &stats,
+            &named,
+        )
+        .expect("write bench json");
+        println!("  wrote {}", path.display());
     }
 }

@@ -112,6 +112,25 @@ pub fn write_bench_json(
     n_workers: usize,
     stats: &[SchedulerStat],
 ) -> std::io::Result<()> {
+    write_bench_json_with_metrics(path, bench, scale, substrate, n_workers, stats, &[])
+}
+
+/// [`write_bench_json`] plus an optional `metrics` object — named
+/// throughputs (higher is better: events/sec, updates/sec, GB/s) that
+/// `tools/bench_regression.py` gates individually whenever a committed
+/// baseline carries the same metric name. The key is *optional* in the
+/// schema (schema_version stays 1): reports without metrics — including
+/// every committed pre-hotpath baseline — remain valid, and the gate
+/// simply has nothing extra to compare.
+pub fn write_bench_json_with_metrics(
+    path: &std::path::Path,
+    bench: &str,
+    scale: Scale,
+    substrate: &str,
+    n_workers: usize,
+    stats: &[SchedulerStat],
+    metrics: &[(&str, f64)],
+) -> std::io::Result<()> {
     use crate::util::json::{obj, write, Json};
     let cells: usize = stats.iter().map(|s| s.cells).sum();
     let wall: f64 = stats.iter().map(|s| s.wall_seconds).sum();
@@ -130,7 +149,7 @@ pub fn write_bench_json(
             })
             .collect(),
     );
-    let report = obj(vec![
+    let mut fields = vec![
         ("schema_version", Json::Num(1.0)),
         ("bench", Json::Str(bench.to_string())),
         (
@@ -150,7 +169,17 @@ pub fn write_bench_json(
         ("cells_per_sec", Json::Num(cells_per_sec)),
         ("schedulers", schedulers),
         ("provenance", Json::Str("measured".to_string())),
-    ]);
+    ];
+    if !metrics.is_empty() {
+        let m = Json::Obj(
+            metrics
+                .iter()
+                .map(|(k, v)| (k.to_string(), Json::Num(*v)))
+                .collect(),
+        );
+        fields.push(("metrics", m));
+    }
+    let report = obj(fields);
     std::fs::write(path, format!("{}\n", write(&report)))
 }
 
@@ -277,6 +306,46 @@ mod tests {
             j.get("schedulers").get("asgd").get("cells").as_usize(),
             Some(4)
         );
+        std::fs::remove_file(&path).ok();
+    }
+
+    #[test]
+    fn bench_json_metrics_key_is_optional_and_round_trips() {
+        let path = std::env::temp_dir().join(format!(
+            "ringmaster_bench_json_metrics_{}.json",
+            std::process::id()
+        ));
+        // Without metrics the key is absent entirely (schema v1 byte shape
+        // unchanged for existing reports).
+        write_bench_json(
+            &path,
+            "hotpath",
+            Scale::Quick,
+            "sim",
+            1,
+            &[SchedulerStat { name: "loop".into(), cells: 1, wall_seconds: 0.25 }],
+        )
+        .unwrap();
+        let j = crate::util::json::parse(&std::fs::read_to_string(&path).unwrap()).unwrap();
+        assert!(matches!(j.get("metrics"), crate::util::json::Json::Null));
+
+        write_bench_json_with_metrics(
+            &path,
+            "hotpath",
+            Scale::Quick,
+            "sim",
+            1,
+            &[SchedulerStat { name: "loop".into(), cells: 1, wall_seconds: 0.25 }],
+            &[("sim_events_per_sec", 2.0e6), ("matvec_gb_per_sec", 3.5)],
+        )
+        .unwrap();
+        let j = crate::util::json::parse(&std::fs::read_to_string(&path).unwrap()).unwrap();
+        assert_eq!(
+            j.get("metrics").get("sim_events_per_sec").as_f64(),
+            Some(2.0e6)
+        );
+        assert_eq!(j.get("metrics").get("matvec_gb_per_sec").as_f64(), Some(3.5));
+        assert_eq!(j.get("schema_version").as_usize(), Some(1));
         std::fs::remove_file(&path).ok();
     }
 

@@ -283,7 +283,19 @@ where
 
     let mut gap_curve = Curve::new(sched.name());
     let mut gradnorm_curve = Curve::new(sched.name());
+    // pre-reserve the recording buffers: the record count is known up
+    // front (one per `record_every` updates, plus first/last), so growth
+    // reallocations would be avoidable hot-loop work. Curve::reserve caps
+    // at its decimation bound; update_times is exact but clamped so a
+    // `max_iters = u64::MAX`-style budget cannot pre-commit memory.
+    let expected_records =
+        (cfg.max_iters / cfg.record_every.max(1)).saturating_add(2).min(1 << 20) as usize;
+    gap_curve.reserve(expected_records);
+    gradnorm_curve.reserve(expected_records);
     let mut update_times = Vec::new();
+    if cfg.record_update_times {
+        update_times.reserve(cfg.max_iters.min(1 << 20) as usize);
+    }
     let mut applied = 0u64;
     let mut accumulated = 0u64;
     let mut discarded = 0u64;
@@ -326,6 +338,19 @@ where
             }
         }
         (gap, gn)
+    }
+    /// Refresh the shared snapshot to the current iterate. When the engine
+    /// holds the only reference — every outstanding assignment has moved
+    /// to a newer snapshot and materialized deliveries released theirs via
+    /// `take_point` — the existing allocation is reused in place
+    /// (`Arc::get_mut` + `copy_from_slice`); otherwise workers still read
+    /// the old iterate through it and a fresh allocation is required for
+    /// correctness (a snapshot must never mutate under a reader).
+    fn refresh_snap(snap: &mut Arc<Vec<f64>>, x: &[f64]) {
+        match Arc::get_mut(snap) {
+            Some(buf) => buf.copy_from_slice(x),
+            None => *snap = Arc::new(x.to_vec()),
+        }
     }
     // initial record at t = 0
     let (mut last_gap, mut last_gn) = record(
@@ -437,7 +462,7 @@ where
         // reassign the arriving worker (or park it until the round ends)
         if sched.reassign_after_arrival() {
             if !snap_fresh {
-                snap = Arc::new(x.clone());
+                refresh_snap(&mut snap, &x);
                 snap_fresh = true;
             }
             source.assign(worker, k, &snap);
@@ -450,7 +475,7 @@ where
                 update_times.push(arrival.time);
             }
             if !snap_fresh {
-                snap = Arc::new(x.clone());
+                refresh_snap(&mut snap, &x);
                 snap_fresh = true;
             }
             // Algorithm 5: stop computations that just became too stale

@@ -69,7 +69,12 @@ impl<P: StochasticProblem + ?Sized> GradientSource<P> for SimSource {
         // threads, so sharded/noisy draws agree bit-for-bit across
         // substrates, and skipping materialization (Discard) or
         // cancelling an assignment cannot shift any later draw
-        let point = self.cluster.point(delivery.worker).clone();
+        //
+        // `take_point` (not `point().clone()`): materialization is the
+        // last use of this assignment's snapshot, so release the worker's
+        // reference now — once every worker has moved off an iterate the
+        // engine can recycle that snapshot's allocation via `Arc::get_mut`
+        let point = self.cluster.take_point(delivery.worker);
         let mut rng = Prng::assignment_stream(
             self.cluster.data_seed(),
             delivery.worker as u64,

@@ -159,7 +159,7 @@ pub fn run_wallclock_sharded<P>(
     cfg: &ExecConfig,
 ) -> RunRecord
 where
-    P: SampleProblem + Sync + Clone,
+    P: SampleProblem + Sync,
 {
     run_wallclock_sharded_engine(
         problem,
@@ -189,7 +189,7 @@ pub fn run_wallclock_sharded_engine<P>(
     dcfg: &DriverConfig,
 ) -> RunRecord
 where
-    P: SampleProblem + Sync + Clone,
+    P: SampleProblem + Sync,
 {
     let n = model.n_workers();
     assert!(batch > 0, "minibatch size must be at least 1");
@@ -212,7 +212,9 @@ where
             })
             .collect();
         let mut source = ThreadSource::spawn_with(scope, samplers, model, &active, pool);
-        let mut eval = Sharded::new(problem.clone(), partition.clone(), batch);
+        // borrow, don't clone: `&P` is a `SampleProblem` via the blanket
+        // reference impl, so server-side eval reads the caller's dataset
+        let mut eval = Sharded::new(problem, partition.clone(), batch);
         let rec = engine::run(&mut eval, &mut source, sched, dcfg);
         source.shutdown();
         rec

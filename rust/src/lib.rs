@@ -12,7 +12,9 @@
 //!   backend-agnostic server loop** ([`engine`]) over two substrates —
 //!   a discrete-event cluster simulator implementing the paper's *fixed*,
 //!   *random* and *universal* computation models ([`sim`], via
-//!   [`engine::SimSource`]) and a real-thread wall-clock pool
+//!   [`engine::SimSource`]; its event core is a hierarchical timing-wheel
+//!   queue with generation-stamped lazy cancellation, sized for
+//!   million-worker clusters) and a real-thread wall-clock pool
 //!   ([`engine::ThreadSource`]) — with thin facades in [`driver`]
 //!   (simulation) and [`exec`] (wall clock), the [`scenario`]
 //!   orchestration layer (checkpointed, resumable, `--shard i/n`-able
@@ -47,6 +49,8 @@
 //!             │              │  (det: bit-identical to Sim, scale-0 sleeps)
 //!             │              │
 //!        sim::Cluster   GradSampler per thread
+//!        (timing-wheel EventQueue;
+//!         stamped lazy cancellation)
 //!             │              │ (NoisySampler | ShardSampler)
 //!             └──── WorkerCtx ────┘        opt::{StochasticProblem, Sharded}
 //!          (worker id + per-assignment     prng::assignment_stream

@@ -46,6 +46,17 @@ impl Curve {
         }
     }
 
+    /// Pre-reserve room for `points` upcoming records (capped at the
+    /// decimation bound `2 * target_points`, past which pushes never grow
+    /// the buffers anyway). Callers that know their record count — e.g.
+    /// the engine's `max_iters / record_every` — hoist the growth
+    /// reallocations out of the hot loop.
+    pub fn reserve(&mut self, points: usize) {
+        let want = points.min(2 * self.target_points);
+        self.t.reserve(want.saturating_sub(self.t.len()));
+        self.v.reserve(want.saturating_sub(self.v.len()));
+    }
+
     /// Record a point (subject to the current decimation stride).
     pub fn push(&mut self, t: f64, v: f64) {
         if self.counter % self.stride == 0 {

@@ -77,6 +77,36 @@ pub trait Problem {
     }
 }
 
+/// Shared references are problems too (every method takes `&self`): the
+/// scenario grid borrows one cached problem instance per dataset instead
+/// of cloning it into every cell — e.g. `Sharded<&LogisticProblem>` reads
+/// the cached dataset through the reference.
+impl<P: Problem + ?Sized> Problem for &P {
+    fn dim(&self) -> usize {
+        (**self).dim()
+    }
+
+    fn value_grad(&self, x: &[f64], grad: &mut [f64]) -> f64 {
+        (**self).value_grad(x, grad)
+    }
+
+    fn value(&self, x: &[f64]) -> f64 {
+        (**self).value(x)
+    }
+
+    fn f_star(&self) -> Option<f64> {
+        (**self).f_star()
+    }
+
+    fn smoothness(&self) -> Option<f64> {
+        (**self).smoothness()
+    }
+
+    fn init_point(&self) -> Vec<f64> {
+        (**self).init_point()
+    }
+}
+
 /// A source of stochastic gradients plus an exact evaluation path.
 pub trait StochasticProblem {
     fn dim(&self) -> usize;

@@ -41,6 +41,23 @@ pub trait SampleProblem: Problem {
     }
 }
 
+/// Companion to the `Problem`-for-references blanket impl: sample access
+/// also goes through `&self` only, so a shared reference is a full
+/// [`SampleProblem`] — what lets `Sharded<&P>` borrow a cached dataset.
+impl<P: SampleProblem + ?Sized> SampleProblem for &P {
+    fn n_samples(&self) -> usize {
+        (**self).n_samples()
+    }
+
+    fn sample_grad(&self, idx: usize, x: &[f64], weight: f64, grad: &mut [f64]) -> f64 {
+        (**self).sample_grad(idx, x, weight, grad)
+    }
+
+    fn sample_loss(&self, idx: usize, x: &[f64], scratch: &mut [f64]) -> f64 {
+        (**self).sample_loss(idx, x, scratch)
+    }
+}
+
 /// One minibatch draw from a shard: `batch` samples uniform-with-
 /// replacement from `shard`, averaged. Returns the minibatch loss.
 ///

@@ -47,20 +47,51 @@ pub fn alpha_partition(
     label_skew(labels, N_CLASSES, n_workers, alpha, seed ^ 0x5EED)
 }
 
+/// One cached dataset/objective plus every partition derived from it.
+struct CellData {
+    labels: Vec<u8>,
+    problem: LogisticProblem,
+    /// `(n_workers, α bits) → (partition, label concentration)` — the
+    /// per-cell label-skew construction, hoisted: cells sharing a dataset
+    /// and sharding configuration (e.g. the same cell across schedulers
+    /// or substrates) reuse one partition instead of re-running
+    /// [`alpha_partition`] + concentration per cell.
+    partitions: BTreeMap<(usize, u64), (crate::data::partition::Partition, f64)>,
+}
+
 /// Datasets/objectives shared across cells: synthetic-MNIST generation
 /// dominates the setup of small cells, and every cell with the same
 /// `(n_data, seed, λ)` uses the identical instance, so build each once
-/// up front and share it across the pool.
-type DataCache = BTreeMap<(usize, u64, u64), (Vec<u8>, LogisticProblem)>;
+/// up front and share it across the pool. Cells *borrow* the cached
+/// problem (`Sharded<&LogisticProblem>` via the reference blanket impls)
+/// — the dataset is never cloned per cell.
+type DataCache = BTreeMap<(usize, u64, u64), CellData>;
 
 fn build_cache(cells: &[Cell]) -> DataCache {
     let mut cache = DataCache::new();
     for c in cells {
-        if let ProblemSpec::ShardedLogistic { n_data, lambda, .. } = c.problem {
-            cache.entry((n_data, c.seed, lambda.to_bits())).or_insert_with(|| {
+        if let ProblemSpec::ShardedLogistic {
+            n_data,
+            n_workers,
+            lambda,
+            alpha,
+            ..
+        } = c.problem
+        {
+            let data = cache.entry((n_data, c.seed, lambda.to_bits())).or_insert_with(|| {
                 let ds = synthetic_mnist(n_data, 0.15, c.seed);
                 let problem = LogisticProblem::from_dataset(&ds, lambda);
-                (ds.labels, problem)
+                CellData {
+                    labels: ds.labels,
+                    problem,
+                    partitions: BTreeMap::new(),
+                }
+            });
+            let labels = &data.labels;
+            data.partitions.entry((n_workers, alpha.to_bits())).or_insert_with(|| {
+                let part = alpha_partition(labels, n_workers, alpha, c.seed);
+                let concentration = part.label_concentration(labels, N_CLASSES);
+                (part, concentration)
             });
         }
     }
@@ -176,23 +207,28 @@ fn run_cell_with(cell: &Cell, budget: &RunBudget, cache: &DataCache) -> (RunReco
                 cell.key(),
                 cell.model.n_workers(),
             );
-            let (labels, problem) = cache
+            let data = cache
                 .get(&(*n_data, cell.seed, lambda.to_bits()))
                 .expect("data cache covers every sharded cell");
-            let part = alpha_partition(labels, *n_workers, *alpha, cell.seed);
-            let concentration = part.label_concentration(labels, N_CLASSES);
+            let (part, concentration) = data
+                .partitions
+                .get(&(*n_workers, alpha.to_bits()))
+                .expect("partition cache covers every sharded cell");
             let dcfg = budget.driver_config(cell.seed, server_opt, true);
             let rec = match cell.substrate {
                 Substrate::Sim => {
-                    let sharded = Sharded::new(problem.clone(), part, *batch);
+                    // borrow the cached problem — `&LogisticProblem` is a
+                    // `SampleProblem` via the reference blanket impl, so
+                    // the dataset is shared, not cloned, across the pool
+                    let sharded = Sharded::new(&data.problem, part.clone(), *batch);
                     let mut driver = Driver::new(sharded, cell.model.clone(), dcfg);
                     driver.run(sched.as_mut())
                 }
                 Substrate::Wallclock { deterministic, .. } => {
                     let pool = wallclock_pool(deterministic, cell.seed, 0.0, budget);
                     exec::run_wallclock_sharded_engine(
-                        problem,
-                        &part,
+                        &data.problem,
+                        part,
                         *batch,
                         &cell.model,
                         sched.as_mut(),
@@ -201,7 +237,7 @@ fn run_cell_with(cell: &Cell, budget: &RunBudget, cache: &DataCache) -> (RunReco
                     )
                 }
             };
-            (rec, Some(concentration))
+            (rec, Some(*concentration))
         }
     }
 }

@@ -4,7 +4,10 @@
 //! computation-time model* — exactly what a discrete-event simulation
 //! executes. This module provides:
 //!
-//! * [`EventQueue`] — a deterministic priority queue over simulated seconds;
+//! * [`EventQueue`] — a deterministic priority queue over simulated
+//!   seconds (a hierarchical timing wheel: O(1) push, amortized O(1) pop
+//!   on the simulator's monotone workload — see `queue.rs`'s module docs
+//!   for the ordering contract it upholds);
 //! * [`ComputeModel`] — the paper's three computation-time regimes:
 //!   the **fixed computation model** (eq. 1–2), the **random** per-gradient
 //!   model of §G (`τ_i = i + |N(0, i)|`), and the **universal computation
@@ -78,6 +81,9 @@ pub struct Cluster {
     track_stale: bool,
     /// The run seed — root of every assignment's private draw stream.
     data_seed: u64,
+    /// Shared empty snapshot installed by [`Cluster::take_point`] — cloning
+    /// it is a refcount bump, so releasing snapshots stays allocation-free.
+    empty_point: Arc<Vec<f64>>,
     /// Counters.
     pub stats: ClusterStats,
 }
@@ -117,6 +123,7 @@ impl Cluster {
             free_bufs: Vec::new(),
             track_stale: false,
             data_seed: seed,
+            empty_point: empty,
             stats: ClusterStats::default(),
         }
     }
@@ -143,6 +150,15 @@ impl Cluster {
     /// computation started at.
     pub fn point(&self, worker: usize) -> &Arc<Vec<f64>> {
         &self.workers[worker].point
+    }
+
+    /// Take the worker's snapshot, releasing its `Arc` reference (the
+    /// worker keeps a shared empty vector instead). Called by the driver
+    /// when it materializes a delivered gradient: dropping the reference
+    /// promptly is what lets the engine reuse its snapshot allocation via
+    /// `Arc::get_mut` once every outstanding assignment has moved on.
+    pub fn take_point(&mut self, worker: usize) -> Arc<Vec<f64>> {
+        std::mem::replace(&mut self.workers[worker].point, self.empty_point.clone())
     }
 
     /// The worker's private *timing* stream (compute-duration draws).

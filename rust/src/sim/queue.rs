@@ -1,14 +1,50 @@
 //! Deterministic event queue over simulated time.
 //!
-//! A thin wrapper around `BinaryHeap` with (a) a total order on `f64`
-//! timestamps via `total_cmp` and (b) a monotone sequence number breaking
-//! ties in insertion order, so simulations are bit-reproducible regardless
-//! of heap internals.  Payloads are stored inline in the heap entries
-//! (they do not participate in the ordering), keeping pops to a single
-//! cache line — this queue sits on the innermost simulator loop.
+//! A hierarchical timing wheel (radix calendar queue) specialized for the
+//! simulator's near-monotone workload: `push` is O(1) (one `Vec` append),
+//! `pop` is amortized O(1) for the discrete-event access pattern (every
+//! event is redistributed at most 64 times over its lifetime, and in
+//! practice once or twice because successive event times share high bits).
+//! This replaces the previous `BinaryHeap` implementation, whose O(log n)
+//! sift-downs dominated the innermost simulator loop at million-worker
+//! scale.
+//!
+//! # Ordering contract (unchanged from the heap version)
+//!
+//! Events pop in `(time, seq)` order: earliest timestamp first under the
+//! IEEE-754 total order (`f64::total_cmp`), FIFO among exact timestamp
+//! ties (`seq` is a monotone insertion counter). The order is *total* and
+//! independent of queue internals, so simulations are bit-reproducible.
+//!
+//! # How it works
+//!
+//! Timestamps are mapped to `u64` keys by the order-preserving bit trick
+//! ([`time_key`]): `a.total_cmp(&b) == time_key(a).cmp(&time_key(b))`.
+//! The queue maintains a *horizon* — the key of the most recent
+//! redistribution front (initially below every finite key):
+//!
+//! * entries with `key == horizon` live in a FIFO ring (`current`) and pop
+//!   directly from the front;
+//! * entries with `key > horizon` live in one of 64 radix levels, indexed
+//!   by the highest bit at which `key` differs from `horizon`;
+//! * entries with `key < horizon` (impossible for the simulator, which
+//!   never schedules into the past, but allowed by the generic API) go to
+//!   a small fallback `BinaryHeap` ordered by `(key, seq)`.
+//!
+//! When `current` drains, the lowest non-empty level is swept: its minimum
+//! key becomes the new horizon, equal-key entries move to `current`, and
+//! the rest drop to strictly lower levels (the classic radix-heap step).
+//! Equal-key entries are always co-located and every move is an
+//! order-preserving append, so FIFO among ties is structural, not sorted.
+//!
+//! Why the fallback heap preserves total order: the horizon never
+//! decreases, so a "late" entry's key stays strictly below the horizon —
+//! and hence below every wheel key — forever. Draining the fallback first
+//! is therefore exactly `(time, seq)` order, and late ties never split
+//! across the two structures.
 
 use std::cmp::Ordering;
-use std::collections::BinaryHeap;
+use std::collections::{BinaryHeap, VecDeque};
 
 /// Totally-ordered `f64` (NaN-free by construction in the simulator).
 #[derive(Clone, Copy, Debug, PartialEq)]
@@ -28,79 +64,202 @@ impl Ord for OrdF64 {
     }
 }
 
-/// Min-heap entry: ordered by `(time, seq)` only; payload rides along.
+/// Map a timestamp to a `u64` key preserving `total_cmp` order exactly:
+/// flip all bits of negatives, flip only the sign bit of non-negatives.
+/// A bijection, so [`key_time`] recovers the timestamp bit-for-bit.
+#[inline]
+fn time_key(t: f64) -> u64 {
+    let b = t.to_bits();
+    if b >> 63 == 1 {
+        !b
+    } else {
+        b ^ (1 << 63)
+    }
+}
+
+/// Inverse of [`time_key`].
+#[inline]
+fn key_time(k: u64) -> f64 {
+    f64::from_bits(if k >> 63 == 1 { k ^ (1 << 63) } else { !k })
+}
+
+/// A wheel entry. Unlike the old heap entry it needs no `Ord`: position in
+/// the wheel encodes the key prefix, appends encode the `seq` order.
 #[derive(Debug)]
-struct Entry<T> {
-    t: OrdF64,
+struct Slot<T> {
+    key: u64,
     seq: u64,
     payload: T,
 }
 
-impl<T> PartialEq for Entry<T> {
+/// Fallback-heap entry for pushes below the horizon; ordered by
+/// `(key, seq)` reversed so `BinaryHeap` pops earliest-first.
+#[derive(Debug)]
+struct Late<T> {
+    key: u64,
+    seq: u64,
+    payload: T,
+}
+
+impl<T> PartialEq for Late<T> {
     fn eq(&self, other: &Self) -> bool {
-        self.t == other.t && self.seq == other.seq
+        self.key == other.key && self.seq == other.seq
     }
 }
 
-impl<T> Eq for Entry<T> {}
+impl<T> Eq for Late<T> {}
 
-impl<T> PartialOrd for Entry<T> {
+impl<T> PartialOrd for Late<T> {
     fn partial_cmp(&self, other: &Self) -> Option<Ordering> {
         Some(self.cmp(other))
     }
 }
 
-impl<T> Ord for Entry<T> {
+impl<T> Ord for Late<T> {
     fn cmp(&self, other: &Self) -> Ordering {
-        // reversed: BinaryHeap is a max-heap, we want earliest-first
-        (other.t, other.seq).cmp(&(self.t, self.seq))
+        (other.key, other.seq).cmp(&(self.key, self.seq))
     }
 }
+
+const LEVELS: usize = 64;
 
 /// Min-priority queue of `(time, payload)` events.
 #[derive(Debug)]
 pub struct EventQueue<T> {
-    heap: BinaryHeap<Entry<T>>,
+    /// Entries whose key equals the horizon — the "now" FIFO lane.
+    current: VecDeque<(u64, T)>,
+    /// Timestamp shared by everything in `current` (= `key_time(horizon)`).
+    current_time: f64,
+    /// Radix levels: `levels[j]` holds entries whose key first differs
+    /// from the horizon at bit `j` (so `key > horizon`).
+    levels: [Vec<Slot<T>>; LEVELS],
+    /// Key of the current redistribution front; nondecreasing over the
+    /// queue's lifetime. Starts at 0, below every finite timestamp's key.
+    horizon: u64,
+    /// Defensive lane for pushes below the horizon (never hit by the
+    /// simulator; kept so the public API stays total).
+    late: BinaryHeap<Late<T>>,
+    len: usize,
     seq: u64,
 }
 
 impl<T> EventQueue<T> {
     pub fn new() -> Self {
         Self {
-            heap: BinaryHeap::new(),
+            current: VecDeque::new(),
+            current_time: key_time(0),
+            levels: std::array::from_fn(|_| Vec::new()),
+            horizon: 0,
+            late: BinaryHeap::new(),
+            len: 0,
             seq: 0,
         }
     }
 
     pub fn len(&self) -> usize {
-        self.heap.len()
+        self.len
     }
 
     pub fn is_empty(&self) -> bool {
-        self.heap.is_empty()
+        self.len == 0
+    }
+
+    /// Level index for `key` relative to `horizon`: position of the
+    /// highest bit at which they differ. Requires `key != horizon`.
+    #[inline]
+    fn level_of(key: u64, horizon: u64) -> usize {
+        (63 - (key ^ horizon).leading_zeros()) as usize
     }
 
     /// Schedule `payload` at absolute time `t`.
+    ///
+    /// O(1): a single append to the lane selected by `time_key(t)`.
     #[inline]
     pub fn push(&mut self, t: f64, payload: T) {
         debug_assert!(t.is_finite(), "event time must be finite, got {t}");
-        self.heap.push(Entry {
-            t: OrdF64(t),
-            seq: self.seq,
-            payload,
-        });
+        let key = time_key(t);
+        let seq = self.seq;
         self.seq += 1;
+        self.len += 1;
+        if key == self.horizon {
+            self.current.push_back((seq, payload));
+        } else if key > self.horizon {
+            self.levels[Self::level_of(key, self.horizon)].push(Slot { key, seq, payload });
+        } else {
+            self.late.push(Late { key, seq, payload });
+        }
     }
 
     /// Pop the earliest event (FIFO among equal timestamps).
     #[inline]
     pub fn pop(&mut self) -> Option<(f64, T)> {
-        self.heap.pop().map(|e| (e.t.0, e.payload))
+        // Late entries are strictly earlier than every wheel entry (their
+        // keys are below the horizon, wheel keys are at or above it).
+        if let Some(e) = self.late.pop() {
+            self.len -= 1;
+            return Some((key_time(e.key), e.payload));
+        }
+        if self.len == 0 {
+            return None;
+        }
+        if self.current.is_empty() {
+            self.advance();
+        }
+        let (_, payload) = self.current.pop_front().expect("len > 0 after advance");
+        self.len -= 1;
+        Some((self.current_time, payload))
     }
 
     /// Earliest pending timestamp.
     pub fn peek_time(&self) -> Option<f64> {
-        self.heap.peek().map(|e| e.t.0)
+        if let Some(e) = self.late.peek() {
+            return Some(key_time(e.key));
+        }
+        if !self.current.is_empty() {
+            return Some(self.current_time);
+        }
+        // Cold path (only engine idle checks land here): scan the lowest
+        // non-empty level — it contains the global minimum key.
+        self.levels
+            .iter()
+            .find(|lvl| !lvl.is_empty())
+            .map(|lvl| key_time(lvl.iter().map(|s| s.key).min().expect("non-empty")))
+    }
+
+    /// Refill `current` from the lowest non-empty level: its minimum key
+    /// becomes the new horizon; equal-key entries (in stored = `seq` order)
+    /// move to `current`; the rest redistribute to strictly lower levels.
+    ///
+    /// Precondition: `current` is empty and some level is non-empty.
+    fn advance(&mut self) {
+        let j = self
+            .levels
+            .iter()
+            .position(|lvl| !lvl.is_empty())
+            .expect("advance called on an empty wheel");
+        let mut drained = std::mem::take(&mut self.levels[j]);
+        let new_horizon = drained.iter().map(|s| s.key).min().expect("non-empty");
+        debug_assert!(new_horizon > self.horizon);
+        self.horizon = new_horizon;
+        self.current_time = key_time(new_horizon);
+        for slot in drained.drain(..) {
+            if slot.key == new_horizon {
+                self.current.push_back((slot.seq, slot.payload));
+            } else {
+                // Drops strictly below j: `slot.key` and `new_horizon`
+                // agree on all bits >= j (both matched the old horizon
+                // above bit j and have bit j set).
+                let lvl = Self::level_of(slot.key, new_horizon);
+                debug_assert!(lvl < j);
+                self.levels[lvl].push(Slot {
+                    key: slot.key,
+                    seq: slot.seq,
+                    payload: slot.payload,
+                });
+            }
+        }
+        // Hand the drained (now empty) allocation back to level j.
+        self.levels[j] = drained;
     }
 }
 
@@ -169,5 +328,127 @@ mod tests {
         assert_eq!(q.pop().unwrap().1, 0);
         assert_eq!(q.pop().unwrap().1, 1);
         assert_eq!(q.pop().unwrap().1, 2);
+    }
+
+    #[test]
+    fn time_key_is_total_cmp_order_isomorphic_and_invertible() {
+        let samples = [
+            f64::NEG_INFINITY,
+            -1e300,
+            -1.0,
+            -1e-308,
+            -0.0,
+            0.0,
+            1e-308,
+            0.5,
+            1.0,
+            1.0 + f64::EPSILON,
+            1e300,
+            f64::INFINITY,
+        ];
+        for &a in &samples {
+            assert_eq!(key_time(time_key(a)).to_bits(), a.to_bits());
+            for &b in &samples {
+                assert_eq!(a.total_cmp(&b), time_key(a).cmp(&time_key(b)));
+            }
+        }
+    }
+
+    #[test]
+    fn pushes_below_horizon_still_pop_in_order() {
+        let mut q = EventQueue::new();
+        q.push(10.0, "x");
+        assert_eq!(q.pop(), Some((10.0, "x"))); // horizon is now key(10.0)
+        q.push(5.0, "late-a"); // below the horizon -> fallback lane
+        q.push(5.0, "late-b");
+        q.push(20.0, "wheel");
+        assert_eq!(q.peek_time(), Some(5.0));
+        assert_eq!(q.pop(), Some((5.0, "late-a")));
+        assert_eq!(q.pop(), Some((5.0, "late-b")));
+        assert_eq!(q.pop(), Some((20.0, "wheel")));
+        assert_eq!(q.pop(), None);
+    }
+
+    /// Reference model: the old `BinaryHeap` queue, reduced to its ordering
+    /// essence — a max-heap over reversed `(time, seq)`.
+    struct RefQueue<T> {
+        heap: std::collections::BinaryHeap<RefEntry<T>>,
+        seq: u64,
+    }
+
+    struct RefEntry<T> {
+        t: OrdF64,
+        seq: u64,
+        payload: T,
+    }
+
+    impl<T> PartialEq for RefEntry<T> {
+        fn eq(&self, other: &Self) -> bool {
+            self.t == other.t && self.seq == other.seq
+        }
+    }
+    impl<T> Eq for RefEntry<T> {}
+    impl<T> PartialOrd for RefEntry<T> {
+        fn partial_cmp(&self, other: &Self) -> Option<Ordering> {
+            Some(self.cmp(other))
+        }
+    }
+    impl<T> Ord for RefEntry<T> {
+        fn cmp(&self, other: &Self) -> Ordering {
+            (other.t, other.seq).cmp(&(self.t, self.seq))
+        }
+    }
+
+    impl<T> RefQueue<T> {
+        fn new() -> Self {
+            Self {
+                heap: std::collections::BinaryHeap::new(),
+                seq: 0,
+            }
+        }
+        fn push(&mut self, t: f64, payload: T) {
+            self.heap.push(RefEntry {
+                t: OrdF64(t),
+                seq: self.seq,
+                payload,
+            });
+            self.seq += 1;
+        }
+        fn pop(&mut self) -> Option<(f64, T)> {
+            self.heap.pop().map(|e| (e.t.0, e.payload))
+        }
+    }
+
+    #[test]
+    fn equivalent_to_heap_reference_under_random_interleaving() {
+        crate::testkit::check("wheel == heap reference", |g| {
+            let mut wheel = EventQueue::new();
+            let mut reference = RefQueue::new();
+            // Small timestamp alphabet -> heavy exact ties; include a
+            // negative and a subnormal to cross key-map branch points.
+            let times: Vec<f64> = (0..g.usize_in(2, 6))
+                .map(|_| g.f64_in(-2.0, 50.0))
+                .chain([0.0, -0.0, 1e-308])
+                .collect();
+            let mut id = 0u32;
+            for _ in 0..g.usize_in(10, 400) {
+                if g.bool() || wheel.is_empty() {
+                    let t = *g.pick(&times);
+                    wheel.push(t, id);
+                    reference.push(t, id);
+                    id += 1;
+                } else {
+                    let got = wheel.pop().map(|(t, p)| (t.to_bits(), p));
+                    let want = reference.pop().map(|(t, p)| (t.to_bits(), p));
+                    assert_eq!(got, want);
+                }
+            }
+            assert_eq!(wheel.len(), reference.heap.len());
+            while let Some(want) = reference.pop() {
+                let got = wheel.pop().expect("wheel drained early");
+                assert_eq!((got.0.to_bits(), got.1), (want.0.to_bits(), want.1));
+            }
+            assert!(wheel.pop().is_none());
+        });
     }
 }

@@ -9,6 +9,16 @@ any *comparable, measured* committed baseline (`BENCH_*.json` in
 <baseline-dir>). Baselines are comparable when bench, scale, substrate and
 n_workers all match; baselines with provenance "placeholder" (schema
 committed before a measured value exists) or null metrics are skipped.
+
+Two throughput surfaces are gated, both higher-is-better at the same
+threshold:
+
+* the aggregate `cells_per_sec`, and
+* every named metric in the optional `"metrics"` object (events/sec,
+  updates/sec, GB/s — written by `benches/hotpath.rs`) that appears in
+  **both** the fresh report and the baseline. Metrics only one side
+  carries are reported but not gated, so adding a new metric never fails
+  the gate against older baselines.
 """
 
 import glob
@@ -43,10 +53,31 @@ def check_schema(report, path):
         sys.exit(f"{path}: missing schema keys: {sorted(missing)}")
     if report["schema_version"] != 1:
         sys.exit(f"{path}: unknown schema_version {report['schema_version']}")
+    metrics = report.get("metrics")
+    if metrics is not None:
+        if not isinstance(metrics, dict):
+            sys.exit(f"{path}: 'metrics' must be an object of named numbers")
+        bad = [k for k, v in metrics.items() if not is_number(v)]
+        if bad:
+            sys.exit(f"{path}: non-numeric metrics: {sorted(bad)}")
 
 
 def is_number(x):
     return isinstance(x, (int, float)) and not isinstance(x, bool)
+
+
+def gate_ratio(name, base_value, fresh_value, failures, path):
+    """Higher-is-better gate: fail when baseline/fresh > REGRESSION_FACTOR."""
+    if fresh_value <= 0.0:
+        sys.exit(f"{path}: fresh {name} is non-positive ({fresh_value})")
+    ratio = base_value / fresh_value
+    verdict = "REGRESSION" if ratio > REGRESSION_FACTOR else "ok"
+    print(
+        f"vs {path} [{name}]: baseline {base_value:.3f} "
+        f"(baseline/fresh = {ratio:.2f}x) ... {verdict}"
+    )
+    if ratio > REGRESSION_FACTOR:
+        failures.append(f"{path}:{name}")
 
 
 def main():
@@ -62,6 +93,9 @@ def main():
         f"n={fresh['n_workers']}: {fresh['cells']} cells, "
         f"{fresh['cells_per_sec']:.3f} cells/sec"
     )
+    fresh_metrics = fresh.get("metrics") or {}
+    for name in sorted(fresh_metrics):
+        print(f"fresh metric {name}: {fresh_metrics[name]:.3f}")
 
     failures = []
     compared = 0
@@ -80,14 +114,15 @@ def main():
             print(f"skip {path}: placeholder / unmeasured baseline")
             continue
         compared += 1
-        ratio = base["cells_per_sec"] / fresh["cells_per_sec"]
-        verdict = "REGRESSION" if ratio > REGRESSION_FACTOR else "ok"
-        print(
-            f"vs {path}: baseline {base['cells_per_sec']:.3f} cells/sec "
-            f"(baseline/fresh = {ratio:.2f}x) ... {verdict}"
-        )
-        if ratio > REGRESSION_FACTOR:
-            failures.append(path)
+        gate_ratio("cells_per_sec", base["cells_per_sec"], fresh["cells_per_sec"], failures, path)
+        base_metrics = base.get("metrics") or {}
+        for name in sorted(base_metrics):
+            if name not in fresh_metrics:
+                print(f"note {path}: baseline metric {name} absent from fresh report")
+                continue
+            gate_ratio(name, base_metrics[name], fresh_metrics[name], failures, path)
+        for name in sorted(set(fresh_metrics) - set(base_metrics)):
+            print(f"note {path}: new metric {name} has no baseline yet")
 
     if failures:
         sys.exit(

@@ -19,13 +19,56 @@ use ringmaster::bench_util::{
     bb, bench, bench_json_out, bench_scale, report, write_bench_json_with_metrics, SchedulerStat,
 };
 use ringmaster::coordinator::{RingmasterScheduler, Scheduler, SchedulerKind};
+use ringmaster::driver::{Driver, DriverConfig};
+use ringmaster::engine::sweep::cell_threads;
 use ringmaster::experiments::{run_quadratic, QuadExpConfig};
+use ringmaster::linalg::par::ComputePool;
 use ringmaster::linalg::TridiagToeplitz;
-use ringmaster::opt::Problem;
+use ringmaster::opt::{Noisy, Problem, QuadraticProblem};
 use ringmaster::sim::ComputeModel;
+
+/// Run one fixed Ringmaster cell through the pooled driver and dump the
+/// recorded gap curve as raw IEEE-754 bit patterns, one `t v` hex pair per
+/// line. CI's determinism smoke runs this twice — RINGMASTER_CELL_THREADS
+/// 1 and N — and diffs the files byte-for-byte: any cross-width
+/// divergence in the pooled kernels shows up as a bit flip here.
+fn emit_curve(path: &str) {
+    let pool = ComputePool::new(cell_threads(1));
+    let mut d = Driver::new(
+        Noisy::new(QuadraticProblem::paper(1729), 0.01),
+        ComputeModel::random_paper(64),
+        DriverConfig {
+            seed: 0,
+            max_iters: 2000,
+            record_every: 10,
+            ..Default::default()
+        },
+    );
+    let mut s = SchedulerKind::Ringmaster { r: 64, gamma: 0.05, cancel: true }.build();
+    let rec = d.run_pooled(s.as_mut(), &pool);
+    let mut out = String::new();
+    for (t, v) in rec.gap_curve.t.iter().zip(&rec.gap_curve.v) {
+        out.push_str(&format!("{:016x} {:016x}\n", t.to_bits(), v.to_bits()));
+    }
+    std::fs::write(path, &out).expect("write curve file");
+    println!(
+        "  wrote {} curve points (pool width {}) to {path}",
+        rec.gap_curve.len(),
+        pool.width()
+    );
+}
 
 fn main() {
     println!("— hot-path microbenches —");
+
+    if let Ok(path) = std::env::var("RINGMASTER_CURVE_OUT") {
+        emit_curve(&path);
+    }
+    // curve-only mode: the CI determinism smoke wants two quick curve
+    // emissions at different pool widths, not the full bench suite
+    if std::env::var("RINGMASTER_HOTPATH_ONLY").as_deref() == Ok("curve") {
+        return;
+    }
 
     let mut metrics: Vec<(String, f64)> = Vec::new();
     let mut stats: Vec<SchedulerStat> = Vec::new();
@@ -138,6 +181,83 @@ fn main() {
             cells: 1,
             wall_seconds: m.median_s,
         });
+    }
+
+    // 3b. pooled matvec + full quadratic gradient at d = 1,000,000, per
+    //     compute-pool width. Before timing, every width's output is
+    //     asserted bit-identical to the serial kernels — the determinism
+    //     contract measured at the scale where parallelism pays.
+    {
+        let d = 1_000_000usize;
+        let a = TridiagToeplitz::paper(d);
+        let x: Vec<f64> = (0..d).map(|i| 0.5 + (i % 17) as f64 * 1e-3).collect();
+        let problem = QuadraticProblem::paper(d);
+        let mut serial_mv = vec![0.0; d];
+        a.matvec(&x, &mut serial_mv);
+        let mut serial_g = vec![0.0; d];
+        let serial_v = problem.value_grad(&x, &mut serial_g);
+
+        let mut widths = vec![1usize, 2, 4, cell_threads(1)];
+        widths.sort_unstable();
+        widths.dedup();
+        let reps = 20;
+        let bytes = (2.0 * d as f64 * 8.0) * reps as f64;
+        for &w in &widths {
+            let pool = ComputePool::new(w);
+            let mut out = vec![0.0; d];
+            pool.matvec(&a, &x, &mut out);
+            assert!(
+                out.iter().zip(&serial_mv).all(|(p, s)| p.to_bits() == s.to_bits()),
+                "pooled matvec at width {w} must be bit-identical to serial"
+            );
+            let mut g = vec![0.0; d];
+            let v = problem.value_grad_pooled(&x, &mut g, &pool);
+            assert_eq!(
+                v.to_bits(),
+                serial_v.to_bits(),
+                "pooled value at width {w} must be bit-identical to serial"
+            );
+            assert!(
+                g.iter().zip(&serial_g).all(|(p, s)| p.to_bits() == s.to_bits()),
+                "pooled gradient at width {w} must be bit-identical to serial"
+            );
+
+            let m = bench(&format!("par matvec d=1M (width {w})"), 1, 5, || {
+                for _ in 0..reps {
+                    pool.matvec(&a, bb(&x), &mut out);
+                }
+                bb(&out);
+            });
+            report(&m);
+            println!("    → {:.2} GB/s effective", m.throughput(bytes) / 1e9);
+            metrics.push((
+                format!("par_matvec_1m_gb_per_sec_w{w}"),
+                m.throughput(bytes) / 1e9,
+            ));
+            stats.push(SchedulerStat {
+                name: format!("par_matvec_1m_w{w}"),
+                cells: 1,
+                wall_seconds: m.median_s,
+            });
+
+            let m = bench(&format!("par quad grad d=1M (width {w})"), 1, 5, || {
+                for _ in 0..reps {
+                    bb(problem.value_grad_pooled(bb(&x), &mut g, &pool));
+                }
+                bb(&g);
+            });
+            report(&m);
+            println!("    → {:.1} evals/s", m.throughput(reps as f64));
+            metrics.push((
+                format!("par_grad_1m_evals_per_sec_w{w}"),
+                m.throughput(reps as f64),
+            ));
+            stats.push(SchedulerStat {
+                name: format!("par_grad_1m_w{w}"),
+                cells: 1,
+                wall_seconds: m.median_s,
+            });
+        }
     }
 
     // 4. end-to-end simulated events/s (full gradient math in the loop)

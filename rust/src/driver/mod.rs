@@ -14,6 +14,7 @@ pub use crate::engine::{DriverConfig, RunRecord, ServerOpt, ServerOptState};
 
 use crate::coordinator::Scheduler;
 use crate::engine::SimSource;
+use crate::linalg::par::ComputePool;
 use crate::opt::StochasticProblem;
 use crate::sim::ComputeModel;
 
@@ -36,11 +37,18 @@ impl<P: StochasticProblem> Driver<P> {
     /// Run to completion, returning the record. The driver can be reused;
     /// every run rebuilds the cluster from the same seed.
     pub fn run(&mut self, sched: &mut dyn Scheduler) -> RunRecord {
+        self.run_pooled(sched, ComputePool::serial_ref())
+    }
+
+    /// [`Self::run`] with an explicit [`ComputePool`] for the O(d) work
+    /// (gradient evaluation, server updates, curve records). Bit-identical
+    /// to the serial path at every pool width — see [`crate::linalg::par`].
+    pub fn run_pooled(&mut self, sched: &mut dyn Scheduler, pool: &ComputePool) -> RunRecord {
         let mut source = SimSource::new(self.model.clone(), self.cfg.seed);
         // the stale-assignment index is only worth maintaining for
         // schedulers that cancel (Algorithm 5)
         source.set_track_stale(sched.cancel_threshold(u64::MAX).is_some());
-        crate::engine::run(&mut self.problem, &mut source, sched, &self.cfg)
+        crate::engine::run_pooled(&mut self.problem, &mut source, sched, &self.cfg, pool)
     }
 }
 

@@ -57,7 +57,7 @@ use std::sync::Arc;
 use std::time::Duration;
 
 use crate::coordinator::{Decision, Scheduler};
-use crate::linalg::nrm2_sq;
+use crate::linalg::par::ComputePool;
 use crate::metrics::{Curve, Span, SpanOutcome, Trace};
 use crate::opt::StochasticProblem;
 use crate::sim::ClusterStats;
@@ -253,12 +253,32 @@ pub trait GradientSource<P: StochasticProblem + ?Sized> {
 }
 
 /// Run `sched` against `source` and `problem` until a stopping condition —
-/// the single authoritative parameter-server loop.
+/// the single authoritative parameter-server loop (serial compute path).
 pub fn run<P, S>(
     problem: &mut P,
     source: &mut S,
     sched: &mut dyn Scheduler,
     cfg: &DriverConfig,
+) -> RunRecord
+where
+    P: StochasticProblem + ?Sized,
+    S: GradientSource<P> + ?Sized,
+{
+    run_pooled(problem, source, sched, cfg, ComputePool::serial_ref())
+}
+
+/// [`run`] with an explicit [`ComputePool`] for the O(d) server-side work
+/// (evaluation gradients, norm records, server updates, accumulator
+/// folds). Bit-identical to [`run`] at every pool width: every pooled
+/// kernel matches its serial counterpart bitwise (`linalg::par`), and
+/// `pool.axpy(1.0, g, acc)` replaces the accumulate loop exactly
+/// (`1.0 * g ≡ g` in IEEE-754).
+pub fn run_pooled<P, S>(
+    problem: &mut P,
+    source: &mut S,
+    sched: &mut dyn Scheduler,
+    cfg: &DriverConfig,
+    pool: &ComputePool,
 ) -> RunRecord
 where
     P: StochasticProblem + ?Sized,
@@ -320,11 +340,12 @@ where
         problem: &mut P,
         f_star: Option<f64>,
         scratch: &mut [f64],
+        pool: &ComputePool,
         sinks: &mut RecordSinks<'_>,
     ) -> (f64, f64) {
-        let v = problem.eval_value_grad(x, scratch);
+        let v = problem.eval_value_grad_pooled(x, scratch, pool);
         let gap = f_star.map(|fs| v - fs).unwrap_or(v);
-        let gn = nrm2_sq(scratch);
+        let gn = pool.nrm2_sq(scratch);
         sinks.gap.push_always(t, gap);
         sinks.gradnorm.push_always(t, gn);
         if let Some(curves) = sinks.shards.as_deref_mut() {
@@ -359,6 +380,7 @@ where
         &mut *problem,
         f_star,
         &mut eval_scratch,
+        pool,
         &mut RecordSinks {
             gap: &mut gap_curve,
             gradnorm: &mut gradnorm_curve,
@@ -413,25 +435,24 @@ where
         }
         match decision {
             Decision::Step { gamma } => {
-                server.apply(&mut x, &grad_buf, gamma, Some(worker));
+                server.apply_with(&mut x, &grad_buf, gamma, Some(worker), pool);
                 k += 1;
                 applied += 1;
                 stepped = true;
             }
             Decision::Accumulate { flush_gamma } => {
-                for (a, gi) in acc.iter_mut().zip(&grad_buf) {
-                    *a += gi;
-                }
+                // `acc += 1.0 * g` — bit-identical to the += loop
+                pool.axpy(1.0, &grad_buf, &mut acc);
                 acc_count += 1;
                 accumulated += 1;
                 if let Some(gamma) = flush_gamma {
                     // average in place — no clone of the accumulator on
                     // the hot path
                     let inv = 1.0 / acc_count as f64;
-                    crate::linalg::scale(inv, &mut acc);
+                    pool.scale(inv, &mut acc);
                     // a flushed batch mixes several workers' gradients, so
                     // per-worker rescaling does not apply (worker = None)
-                    server.apply(&mut x, &acc, gamma, None);
+                    server.apply_with(&mut x, &acc, gamma, None, pool);
                     acc.fill(0.0);
                     acc_count = 0;
                     k += 1;
@@ -507,6 +528,7 @@ where
                     &mut *problem,
                     f_star,
                     &mut eval_scratch,
+                    pool,
                     &mut RecordSinks {
                         gap: &mut gap_curve,
                         gradnorm: &mut gradnorm_curve,
@@ -545,6 +567,7 @@ where
         &mut *problem,
         f_star,
         &mut eval_scratch,
+        pool,
         &mut RecordSinks {
             gap: &mut gap_curve,
             gradnorm: &mut gradnorm_curve,

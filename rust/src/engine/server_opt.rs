@@ -10,7 +10,7 @@
 //! The DriverConfig default is [`ServerOpt::Sgd`], which reproduces the
 //! paper's algorithms exactly.
 
-use crate::linalg::axpy;
+use crate::linalg::par::ComputePool;
 
 /// A server-side first-order update rule.
 #[derive(Clone, Debug, PartialEq)]
@@ -104,13 +104,29 @@ impl ServerOptState {
     /// by [`ServerOpt::Rescaled`]); pass `None` for batched updates whose
     /// accumulator mixes several workers.
     pub fn apply(&mut self, x: &mut [f64], g: &[f64], gamma: f64, worker: Option<usize>) {
+        self.apply_with(x, g, gamma, worker, ComputePool::serial_ref());
+    }
+
+    /// [`Self::apply`] with an explicit compute pool for the O(d) axpys —
+    /// bit-identical to the serial path at every width. `Momentum`'s
+    /// m-update and `Adam` stay serial (their per-element recurrences are
+    /// not the pooled kernels' shapes, and the determinism contract is
+    /// about the kernels we *do* parallelize).
+    pub fn apply_with(
+        &mut self,
+        x: &mut [f64],
+        g: &[f64],
+        gamma: f64,
+        worker: Option<usize>,
+        pool: &ComputePool,
+    ) {
         match self.rule {
-            ServerOpt::Sgd => axpy(-gamma, g, x),
+            ServerOpt::Sgd => pool.axpy(-gamma, g, x),
             ServerOpt::Momentum { beta } => {
                 for (mi, gi) in self.m.iter_mut().zip(g) {
                     *mi = beta * *mi + gi;
                 }
-                axpy(-gamma, &self.m, x);
+                pool.axpy(-gamma, &self.m, x);
             }
             ServerOpt::Adam { beta1, beta2, eps } => {
                 self.t += 1;
@@ -126,7 +142,7 @@ impl ServerOptState {
             }
             ServerOpt::Rescaled { .. } => {
                 let scale = self.scale_for(worker);
-                axpy(-gamma * scale, g, x);
+                pool.axpy(-gamma * scale, g, x);
                 if let Some(w) = worker {
                     self.hits[w] += 1;
                     self.hits_total += 1;

@@ -26,12 +26,30 @@ use std::sync::{mpsc, Mutex};
 pub fn sweep_threads() -> usize {
     std::env::var("RINGMASTER_SWEEP_THREADS")
         .ok()
-        .and_then(|s| s.parse::<usize>().ok())
+        .and_then(|s| s.trim().parse::<usize>().ok())
         .filter(|&n| n > 0)
         .unwrap_or_else(|| {
             std::thread::available_parallelism()
                 .map(|n| n.get())
                 .unwrap_or(1)
+        })
+}
+
+/// Intra-cell compute-pool width: `RINGMASTER_CELL_THREADS` or the
+/// machine's cores divided by the number of sweep workers running cells
+/// concurrently, floored at 1 — so nested sweep-level × cell-level
+/// parallelism never oversubscribes the host. A sweep at full width gets
+/// serial cells; a single-cell run gets the whole machine.
+pub fn cell_threads(active_sweep_workers: usize) -> usize {
+    std::env::var("RINGMASTER_CELL_THREADS")
+        .ok()
+        .and_then(|s| s.trim().parse::<usize>().ok())
+        .filter(|&n| n > 0)
+        .unwrap_or_else(|| {
+            let cores = std::thread::available_parallelism()
+                .map(|n| n.get())
+                .unwrap_or(1);
+            (cores / active_sweep_workers.max(1)).max(1)
         })
 }
 
@@ -179,6 +197,20 @@ where
 mod tests {
     use super::*;
     use std::sync::atomic::AtomicU64;
+
+    #[test]
+    fn cell_threads_is_at_least_one_and_shrinks_with_sweep_width() {
+        // robust to an externally-set RINGMASTER_CELL_THREADS: the floor
+        // and (absent the override) the anti-oversubscription division are
+        // the invariants worth pinning
+        assert!(cell_threads(1) >= 1);
+        assert!(cell_threads(0) >= 1, "0 active workers treated as 1");
+        assert!(cell_threads(usize::MAX) >= 1);
+        if std::env::var("RINGMASTER_CELL_THREADS").is_err() {
+            assert!(cell_threads(usize::MAX) == 1);
+            assert!(cell_threads(1) >= cell_threads(64));
+        }
+    }
 
     #[test]
     fn parallel_map_preserves_order() {

@@ -45,6 +45,7 @@ use std::thread;
 use std::time::{Duration, Instant};
 
 use super::{Delivery, GradientSource};
+use crate::linalg::par::ComputePool;
 use crate::opt::{shard_draw, Problem, SampleProblem, StochasticProblem, WorkerCtx};
 use crate::prng::Prng;
 use crate::sim::{ClusterStats, ComputeModel};
@@ -66,6 +67,13 @@ pub struct ThreadPoolConfig {
     /// to the simulator at the cost of serializing delivery *release*
     /// (worker computation still overlaps).
     pub deterministic: bool,
+    /// Shared compute pool whose [`crate::linalg::par::Arena`] recycles
+    /// the per-assignment gradient buffers (worker threads allocate one
+    /// `Vec<f64>` per delivery otherwise). Worker threads use only the
+    /// arena — never the pooled kernels, which would serialize all
+    /// workers through the pool's submit lock. `None` keeps the old
+    /// allocate-per-assignment behavior.
+    pub compute: Option<Arc<ComputePool>>,
 }
 
 impl Default for ThreadPoolConfig {
@@ -76,6 +84,7 @@ impl Default for ThreadPoolConfig {
             seed: 0,
             noise_sigma: 0.0,
             deterministic: false,
+            compute: None,
         }
     }
 }
@@ -96,6 +105,7 @@ impl ThreadPoolConfig {
             seed,
             noise_sigma,
             deterministic: true,
+            compute: None,
         }
     }
 }
@@ -185,6 +195,10 @@ pub struct ThreadSource {
     stats: ClusterStats,
     /// Gradient of the most recent valid delivery, awaiting `materialize`.
     pending: Vec<f64>,
+    /// Pool whose arena the delivery gradients came from (recycled on the
+    /// next delivery / on stale-buffer invalidation); `None` ⇒ plain
+    /// allocation.
+    compute: Option<Arc<ComputePool>>,
     // --- deterministic (virtual-time) mode state ---
     deterministic: bool,
     /// Virtual clock: vt of the last released delivery.
@@ -259,6 +273,7 @@ impl ThreadSource {
             let scale = cfg.time_scale;
             let seed = cfg.seed;
             let deterministic = cfg.deterministic;
+            let compute = cfg.compute.clone();
             scope.spawn(move || {
                 let t0 = Instant::now();
                 // per-worker assignment ordinal: one mailbox message per
@@ -296,7 +311,10 @@ impl ThreadSource {
                         // keyed by ordinal, so skipping it shifts nothing
                         continue;
                     }
-                    let mut g = vec![0.0; a.point.len()];
+                    let mut g = match &compute {
+                        Some(p) => p.arena().take(a.point.len()),
+                        None => vec![0.0; a.point.len()],
+                    };
                     let mut draw = Prng::assignment_stream(seed, w as u64, ordinal);
                     sampler.sample(&a.point, &mut draw, &mut g);
                     if tx
@@ -329,11 +347,22 @@ impl ThreadSource {
             max_wall: cfg.max_wall,
             stats: ClusterStats::default(),
             pending: Vec::new(),
+            compute: cfg.compute.clone(),
             deterministic: cfg.deterministic,
             vnow: 0.0,
             assign_seq: 0,
             seqs: vec![0; n],
             buffered: (0..n).map(|_| None).collect(),
+        }
+    }
+
+    /// Return a spent delivery-gradient buffer to the pool arena (no-op
+    /// without a pool, or for the initial empty `pending`).
+    fn recycle(&self, buf: Vec<f64>) {
+        if let Some(p) = &self.compute {
+            if !buf.is_empty() {
+                p.arena().put(buf);
+            }
         }
     }
 
@@ -370,6 +399,7 @@ impl ThreadSource {
             };
             // stale by generation ⇒ a cancellation raced the send; drop
             if self.gens[msg.worker].load(Ordering::Acquire) != msg.gen {
+                self.recycle(msg.grad);
                 continue;
             }
             self.buffered[msg.worker] = Some(msg);
@@ -398,7 +428,8 @@ impl ThreadSource {
         self.busy[w] = false;
         self.stats.arrivals += 1;
         self.vnow = msg.vt;
-        self.pending = msg.grad;
+        let old = std::mem::replace(&mut self.pending, msg.grad);
+        self.recycle(old);
         Some(Delivery {
             worker: w,
             start_k: msg.start_k,
@@ -423,7 +454,10 @@ impl<P: StochasticProblem + ?Sized> GradientSource<P> for ThreadSource {
         };
         self.assign_seq += 1;
         self.seqs[worker] = self.assign_seq;
-        self.buffered[worker] = None; // any buffered completion is stale now
+        // any buffered completion is stale now; reclaim its gradient
+        if let Some(stale) = self.buffered[worker].take() {
+            self.recycle(stale.grad);
+        }
         self.stats.assignments += 1;
         let _ = self.mailboxes[worker].send(Assignment {
             start_k,
@@ -448,11 +482,13 @@ impl<P: StochasticProblem + ?Sized> GradientSource<P> for ThreadSource {
             };
             // stale by generation ⇒ a cancellation raced the send; drop
             if self.gens[msg.worker].load(Ordering::Acquire) != msg.gen {
+                self.recycle(msg.grad);
                 continue;
             }
             self.busy[msg.worker] = false;
             self.stats.arrivals += 1;
-            self.pending = msg.grad;
+            let old = std::mem::replace(&mut self.pending, msg.grad);
+            self.recycle(old);
             return Some(Delivery {
                 worker: msg.worker,
                 start_k: msg.start_k,
@@ -526,6 +562,10 @@ impl<'a, P: Problem + ?Sized> StochasticProblem for WallclockEval<'a, P> {
 
     fn eval_value_grad(&mut self, x: &[f64], grad: &mut [f64]) -> f64 {
         self.0.value_grad(x, grad)
+    }
+
+    fn eval_value_grad_pooled(&mut self, x: &[f64], grad: &mut [f64], pool: &ComputePool) -> f64 {
+        self.0.value_grad_pooled(x, grad, pool)
     }
 
     fn f_star(&self) -> Option<f64> {

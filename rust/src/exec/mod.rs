@@ -14,6 +14,7 @@
 //! Used by the integration suite (`tests/engine_parity.rs`) and by the
 //! CLI's `exec-demo` subcommand.
 
+use std::sync::Arc;
 use std::thread;
 use std::time::Duration;
 
@@ -23,6 +24,7 @@ use crate::engine::{
     self, DriverConfig, RunRecord, ServerOpt, ShardSampler, ThreadPoolConfig, ThreadSource,
     WallclockEval,
 };
+use crate::linalg::par::ComputePool;
 use crate::opt::{Problem, SampleProblem, Sharded};
 use crate::sim::ComputeModel;
 
@@ -51,6 +53,10 @@ pub struct ExecConfig {
     pub deterministic: bool,
     /// Server-side update rule (default: the paper's plain SGD step).
     pub server_opt: ServerOpt,
+    /// Compute pool for the server-side O(d) work (curve evaluation,
+    /// accumulator axpys) and worker gradient-scratch recycling. `None`
+    /// runs serially; results are bit-identical either way.
+    pub compute: Option<Arc<ComputePool>>,
 }
 
 impl Default for ExecConfig {
@@ -66,6 +72,7 @@ impl Default for ExecConfig {
             record_trace: false,
             deterministic: false,
             server_opt: ServerOpt::Sgd,
+            compute: None,
         }
     }
 }
@@ -78,6 +85,7 @@ impl ExecConfig {
             seed: self.seed,
             noise_sigma: self.noise_sigma,
             deterministic: self.deterministic,
+            compute: self.compute.clone(),
         }
     }
 
@@ -134,10 +142,14 @@ pub fn run_wallclock_engine<P: Problem + Sync>(
     dcfg: &DriverConfig,
 ) -> RunRecord {
     let active = active_workers(sched, model.n_workers());
+    let cpool = pool
+        .compute
+        .as_deref()
+        .unwrap_or_else(|| ComputePool::serial_ref());
     thread::scope(|scope| {
         let mut source = ThreadSource::spawn(scope, problem, model, &active, pool);
         let mut eval = WallclockEval(problem);
-        let rec = engine::run(&mut eval, &mut source, sched, dcfg);
+        let rec = engine::run_pooled(&mut eval, &mut source, sched, dcfg, cpool);
         source.shutdown();
         rec
     })
@@ -203,6 +215,10 @@ where
         "every worker needs a non-empty shard"
     );
     let active = active_workers(sched, n);
+    let cpool = pool
+        .compute
+        .as_deref()
+        .unwrap_or_else(|| ComputePool::serial_ref());
     thread::scope(|scope| {
         let samplers: Vec<ShardSampler<'_, P>> = (0..n)
             .map(|w| ShardSampler {
@@ -215,7 +231,7 @@ where
         // borrow, don't clone: `&P` is a `SampleProblem` via the blanket
         // reference impl, so server-side eval reads the caller's dataset
         let mut eval = Sharded::new(problem, partition.clone(), batch);
-        let rec = engine::run(&mut eval, &mut source, sched, dcfg);
+        let rec = engine::run_pooled(&mut eval, &mut source, sched, dcfg, cpool);
         source.shutdown();
         rec
     })

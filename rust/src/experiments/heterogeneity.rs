@@ -160,16 +160,25 @@ mod tests {
         let lines: Vec<&str> = csv.trim_end().lines().collect();
         assert_eq!(lines.len(), 1 + run.rows.len());
         assert!(lines[0].starts_with("scheduler,alpha,seed,concentration"));
-        assert!(lines[0].ends_with("shard_loss_min,shard_loss_max,shard_loss_spread,substrate"));
+        assert!(lines[0].ends_with(
+            "shard_loss_min,shard_loss_max,shard_loss_spread,substrate,wall_median,wall_min"
+        ));
         assert!(lines[1].contains("ringmaster"));
-        assert!(lines[1].ends_with(",sim"));
+        assert!(lines[1].ends_with(",sim,,"));
         assert!(lines.iter().skip(1).any(|l| l.contains(",inf,")));
         assert!(lines.iter().skip(1).any(|l| l.contains(",0.1,")));
-        // every data row has the full column count, fairness included
+        // every data row has the full column count; the fairness columns
+        // (immediately before the substrate tag) are filled for sharded
+        // cells, while the trailing wall-time columns stay empty for
+        // deterministic substrates
         let n_cols = lines[0].split(',').count();
         for l in &lines[1..] {
-            assert_eq!(l.split(',').count(), n_cols, "{l}");
-            assert!(!l.ends_with(','), "fairness columns must be filled: {l}");
+            let cols: Vec<&str> = l.split(',').collect();
+            assert_eq!(cols.len(), n_cols, "{l}");
+            for c in &cols[n_cols - 6..n_cols - 3] {
+                assert!(!c.is_empty(), "fairness columns must be filled: {l}");
+            }
+            assert!(cols[n_cols - 2].is_empty() && cols[n_cols - 1].is_empty(), "{l}");
         }
     }
 

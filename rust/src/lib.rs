@@ -37,17 +37,23 @@
 //!        │ resume: diff vs CellStore JSONL journal; --shard i/n fan-out;
 //!        │ transient-failure RetryPolicy (attempts journaled);
 //!        │ cross-machine: shard journals → merge_journals → one CSV
-//!        ▼  cells stream through sweep::parallel_map (panic-propagating)
+//!        ▼  cells stream through sweep::parallel_map (panic-propagating);
+//!           each cell leases a ComputePool from the grid's PoolSet
+//!           (width = sweep::cell_threads: cores / sweep workers)
 //!            Scheduler (policy)            coordinator::*
 //!                  │ Decision
 //!                  ▼
-//!            engine::run (one loop)        engine
-//!             │              │
-//!       SimSource      ThreadSource        engine::{sim_source,thread_source}
+//!            engine::run_pooled (one loop) engine
+//!             │              │      │
+//!       SimSource      ThreadSource │     engine::{sim_source,thread_source}
 //!       (sim clock)    (wall / virtual clock)
 //!        Substrate::Sim  Substrate::Wallclock{deterministic,threads}
-//!             │              │  (det: bit-identical to Sim, scale-0 sleeps)
-//!             │              │
+//!             │              │      │  (det: bit-identical to Sim)
+//!             │              │      ▼
+//!             │              │  linalg::par::ComputePool   (persistent pool;
+//!             │              │  fixed CHUNK boundaries + ascending-index
+//!             │              │  partial folds ⇒ bit-identical to serial
+//!             │              │  at any width; scratch from per-pool arena)
 //!        sim::Cluster   GradSampler per thread
 //!        (timing-wheel EventQueue;
 //!         stamped lazy cancellation)
@@ -61,7 +67,8 @@
 //!             RunRecord (unified, per-worker hits, per-shard loss curves)
 //!                  │
 //!             RunSummary → CellStore / grid_csv   scenario::store
-//!                  │            (…,substrate column; wall_secs journaled)
+//!                  │   (…,substrate,wall_median,wall_min columns;
+//!                  │    wall_secs + --repeats wall_all journaled)
 //! ```
 //!
 //! Data heterogeneity (Ringleader ASGD's regime) is first-class: worker

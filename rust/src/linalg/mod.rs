@@ -11,8 +11,11 @@
 //! # Determinism contract
 //!
 //! Reduction kernels ([`dot`], [`nrm2_sq`]) sum in a **fixed,
-//! input-independent order**: four strided accumulators over the blocked
-//! body, a sequential tail, and one fixed combining tree. The result can
+//! input-independent order**: the input is cut into [`CHUNK`]-sized
+//! chunks (a function of the length only — never of thread count), each
+//! chunk runs a 4-accumulator blocked block kernel with a sequential
+//! tail and one fixed combining tree, and chunk partials fold in
+//! ascending index order seeded with the first partial. The result can
 //! differ from a naive left-to-right sum by ordinary floating-point
 //! reassociation (covered by tolerance tests below) but is bit-identical
 //! across runs, platforms with IEEE-754 doubles, and input *values* — it
@@ -20,11 +23,25 @@
 //! [`sub`], [`TridiagToeplitz::matvec`]) have no reductions: unrolling
 //! cannot change their results, which stay bit-identical to the naive
 //! loops.
+//!
+//! The same chunking is what the parallel pool ([`par::ComputePool`])
+//! distributes across threads: every pooled kernel is bit-identical to
+//! its serial counterpart here at **any** pool width, because chunk
+//! boundaries and the partial fold order are identical — only *who*
+//! computes each chunk changes.
 
-/// Dot product — 4-accumulator blocked reduction (see module docs for the
-/// determinism contract).
+pub mod par;
+
+/// Fixed reduction/parallelization chunk length (in elements). Part of
+/// the determinism contract: changing this value changes ulp-level
+/// results of reductions over inputs longer than one chunk.
+pub const CHUNK: usize = 1024;
+
+/// Single-chunk dot body: the 4-accumulator blocked reduction. Callers
+/// ([`dot`], [`par::ComputePool::dot`]) apply it per [`CHUNK`] and fold
+/// the partials in ascending order.
 #[inline]
-pub fn dot(a: &[f64], b: &[f64]) -> f64 {
+pub(crate) fn dot_block(a: &[f64], b: &[f64]) -> f64 {
     debug_assert_eq!(a.len(), b.len());
     let n = a.len();
     let split = n - n % 4;
@@ -40,6 +57,27 @@ pub fn dot(a: &[f64], b: &[f64]) -> f64 {
         tail += a[i] * b[i];
     }
     (acc[0] + acc[2]) + (acc[1] + acc[3]) + tail
+}
+
+/// Dot product — chunked 4-accumulator blocked reduction (see module
+/// docs for the determinism contract).
+#[inline]
+pub fn dot(a: &[f64], b: &[f64]) -> f64 {
+    debug_assert_eq!(a.len(), b.len());
+    let n = a.len();
+    if n <= CHUNK {
+        return dot_block(a, b);
+    }
+    // Seed with the first chunk's partial (not 0.0): the parallel fold
+    // does the same, and `0.0 + (-0.0)` would flip a sign bit.
+    let mut acc = dot_block(&a[..CHUNK], &b[..CHUNK]);
+    let mut start = CHUNK;
+    while start < n {
+        let end = (start + CHUNK).min(n);
+        acc += dot_block(&a[start..end], &b[start..end]);
+        start = end;
+    }
+    acc
 }
 
 /// `y += alpha * x`. Elementwise (no reduction): the 4-wide unroll is
@@ -68,10 +106,9 @@ pub fn scale(alpha: f64, x: &mut [f64]) {
     }
 }
 
-/// Squared Euclidean norm — same 4-accumulator blocked reduction (and
-/// therefore the same fixed summation order) as [`dot`].
+/// Single-chunk squared-norm body — see [`dot_block`].
 #[inline]
-pub fn nrm2_sq(x: &[f64]) -> f64 {
+pub(crate) fn nrm2_sq_block(x: &[f64]) -> f64 {
     let n = x.len();
     let split = n - n % 4;
     let mut acc = [0.0f64; 4];
@@ -86,6 +123,25 @@ pub fn nrm2_sq(x: &[f64]) -> f64 {
         tail += v * v;
     }
     (acc[0] + acc[2]) + (acc[1] + acc[3]) + tail
+}
+
+/// Squared Euclidean norm — same chunked 4-accumulator blocked reduction
+/// (and therefore the same fixed summation order) as [`dot`], so
+/// `nrm2_sq(a)` is bit-identical to `dot(a, a)` at every length.
+#[inline]
+pub fn nrm2_sq(x: &[f64]) -> f64 {
+    let n = x.len();
+    if n <= CHUNK {
+        return nrm2_sq_block(x);
+    }
+    let mut acc = nrm2_sq_block(&x[..CHUNK]);
+    let mut start = CHUNK;
+    while start < n {
+        let end = (start + CHUNK).min(n);
+        acc += nrm2_sq_block(&x[start..end]);
+        start = end;
+    }
+    acc
 }
 
 /// Euclidean norm.
@@ -127,29 +183,41 @@ impl TridiagToeplitz {
 
     /// `out = A x`. Hot path of the native quadratic gradient.
     pub fn matvec(&self, x: &[f64], out: &mut [f64]) {
+        debug_assert_eq!(x.len(), self.d);
+        debug_assert_eq!(out.len(), self.d);
+        self.matvec_range(x, out, 0);
+    }
+
+    /// Compute rows `[start, start + out.len())` of `A x` into `out`.
+    /// Each row's value depends only on the row index (same expressions,
+    /// same operand order as the full [`Self::matvec`]), so splitting a
+    /// matvec into ranges is bit-identical to computing it whole — this
+    /// is what lets [`par::ComputePool::matvec`] parallelize by chunk.
+    pub(crate) fn matvec_range(&self, x: &[f64], out: &mut [f64], start: usize) {
         let d = self.d;
         debug_assert_eq!(x.len(), d);
-        debug_assert_eq!(out.len(), d);
-        if d == 0 {
+        debug_assert!(start + out.len() <= d);
+        if out.is_empty() {
             return;
         }
-        if d == 1 {
-            out[0] = self.di * x[0];
-            return;
-        }
+        let end = start + out.len();
         let (lo, di, up) = (self.lo, self.di, self.up);
-        out[0] = di * x[0] + up * x[1];
+        if start == 0 {
+            out[0] = if d == 1 { di * x[0] } else { di * x[0] + up * x[1] };
+        }
         // Interior stencil as three shifted views of `x`, unrolled 4-wide.
         // Elementwise (no reduction), so results are bit-identical to the
         // naive indexed loop — the unroll only lines the body up for the
         // vectorizer and hoists the bounds checks.
-        {
-            let interior = d - 2;
+        let ilo = start.max(1);
+        let ihi = end.min(d - 1);
+        if ilo < ihi {
+            let interior = ihi - ilo;
             let split = interior - interior % 4;
-            let o = &mut out[1..d - 1];
-            let xl = &x[..d - 2];
-            let xm = &x[1..d - 1];
-            let xr = &x[2..d];
+            let o = &mut out[ilo - start..ihi - start];
+            let xl = &x[ilo - 1..ihi - 1];
+            let xm = &x[ilo..ihi];
+            let xr = &x[ilo + 1..ihi + 1];
             let mut j = 0;
             while j < split {
                 o[j] = lo * xl[j] + di * xm[j] + up * xr[j];
@@ -163,7 +231,9 @@ impl TridiagToeplitz {
                 j += 1;
             }
         }
-        out[d - 1] = lo * x[d - 2] + di * x[d - 1];
+        if end == d && d > 1 {
+            out[out.len() - 1] = lo * x[d - 2] + di * x[d - 1];
+        }
     }
 
     /// Solve `A x = rhs` by the Thomas algorithm. Requires `A` to be
@@ -313,6 +383,51 @@ mod tests {
             assert!((nrm2_sq(&a) - naive_sq).abs() <= 1e-12 * scale, "n={n}");
             assert_eq!(nrm2_sq(&a).to_bits(), dot(&a, &a).to_bits(), "same fixed order");
         });
+    }
+
+    #[test]
+    fn chunked_reductions_fold_partials_in_ascending_order() {
+        // Above CHUNK elements, dot/nrm2_sq are defined as the ascending
+        // first-partial-seeded fold of per-chunk block reductions — the
+        // exact combine the parallel pool uses. Pin that equivalence.
+        let mut rng = Prng::seed_from_u64(4);
+        for n in [CHUNK - 1, CHUNK, CHUNK + 1, 2 * CHUNK, 2 * CHUNK + 5, 3 * CHUNK + 17] {
+            let a: Vec<f64> = (0..n).map(|_| rng.normal(0.0, 1.0)).collect();
+            let b: Vec<f64> = (0..n).map(|_| rng.normal(0.0, 1.0)).collect();
+            let mut want = dot_block(&a[..CHUNK.min(n)], &b[..CHUNK.min(n)]);
+            let mut start = CHUNK.min(n);
+            while start < n {
+                let end = (start + CHUNK).min(n);
+                want += dot_block(&a[start..end], &b[start..end]);
+                start = end;
+            }
+            assert_eq!(dot(&a, &b).to_bits(), want.to_bits(), "n={n}");
+            assert_eq!(nrm2_sq(&a).to_bits(), dot(&a, &a).to_bits(), "n={n}");
+        }
+    }
+
+    #[test]
+    fn matvec_range_pieces_reassemble_the_full_matvec() {
+        let mut rng = Prng::seed_from_u64(5);
+        for d in [1usize, 2, 5, 100, CHUNK + 3] {
+            let a = TridiagToeplitz::paper(d);
+            let x: Vec<f64> = (0..d).map(|_| rng.normal(0.0, 1.0)).collect();
+            let mut whole = vec![0.0; d];
+            a.matvec(&x, &mut whole);
+            for step in [1usize, 3, CHUNK] {
+                let mut pieced = vec![0.0; d];
+                let mut s = 0;
+                while s < d {
+                    let e = (s + step).min(d);
+                    a.matvec_range(&x, &mut pieced[s..e], s);
+                    s = e;
+                }
+                assert!(
+                    whole.iter().zip(&pieced).all(|(p, q)| p.to_bits() == q.to_bits()),
+                    "d={d} step={step}"
+                );
+            }
+        }
     }
 
     #[test]

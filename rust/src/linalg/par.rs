@@ -1,0 +1,661 @@
+//! Persistent compute pool with **bit-stable parallel reductions**.
+//!
+//! Zero-dependency fork-join pool used to parallelize the hot linalg
+//! kernels inside a cell. The cross-thread determinism contract extends
+//! PR 6's serial contract:
+//!
+//! * Chunk boundaries are a fixed function of **vector length only**
+//!   ([`super::CHUNK`]) — never of pool width.
+//! * Each chunk runs the existing 4-accumulator serial block kernel
+//!   ([`super::dot_block`] / [`super::nrm2_sq_block`]).
+//! * Chunk partials combine in **ascending index order**, seeded with the
+//!   first partial (`acc = p[0]; acc += p[1]; …`) — the exact fold the
+//!   serial kernels use — so every reduction is bit-identical to the
+//!   serial path at *any* pool width.
+//! * Elementwise kernels ([`ComputePool::axpy`] etc.) write disjoint
+//!   chunks with the serial kernel per chunk; each output element is the
+//!   same expression in the same operand order as serial, hence
+//!   bit-identical under any chunking.
+//!
+//! The pool is **persistent**: `width - 1` helper threads are spawned once
+//! (per grid, in the scenario runner) and parked on a condvar between
+//! kernels, so per-kernel overhead is a mutex round-trip plus wakeups —
+//! no thread spawns on the hot path. Chunks are claimed dynamically from
+//! an atomic counter, which load-balances without affecting results
+//! (chunk *identity* determines the work; claim order does not).
+//!
+//! A per-pool [`Arena`] recycles scratch vectors (gradient buffers,
+//! reduction partials) so steady-state kernel calls allocate nothing.
+
+use std::panic::{catch_unwind, resume_unwind, AssertUnwindSafe};
+use std::sync::atomic::{AtomicUsize, Ordering};
+use std::sync::{Arc, Condvar, Mutex, MutexGuard, OnceLock};
+use std::thread::JoinHandle;
+
+use super::{TridiagToeplitz, CHUNK};
+
+/// Below this length the pooled kernels delegate to serial directly:
+/// a single chunk has no parallelism to exploit and the fork-join
+/// round-trip would dominate.
+const PAR_MIN: usize = 2 * CHUNK;
+
+/// Type-erased pointer to the current task closure. Only valid for the
+/// duration of one [`ComputePool::for_chunks`] call; the epoch protocol
+/// below guarantees no helper dereferences it outside that window.
+#[derive(Clone, Copy)]
+struct TaskPtr(*const (dyn Fn(usize) + Sync));
+// SAFETY: the pointee is `Sync` (shared by reference across helpers) and
+// `for_chunks` keeps it alive until every helper has finished the round.
+unsafe impl Send for TaskPtr {}
+
+/// Raw mutable base pointer smuggled into task closures so disjoint
+/// chunks of one output slice can be written from multiple threads.
+/// Callers guarantee disjointness (chunk ranges never overlap).
+pub(crate) struct SendPtr(pub(crate) *mut f64);
+unsafe impl Send for SendPtr {}
+unsafe impl Sync for SendPtr {}
+
+struct Ctrl {
+    /// Bumped once per `for_chunks` round; helpers run every epoch exactly
+    /// once (missed-wakeup-proof: checked under the lock, not the condvar).
+    epoch: u64,
+    shutdown: bool,
+    task: Option<TaskPtr>,
+    n_chunks: usize,
+    /// Helpers still inside the current round. Pre-charged to the helper
+    /// count when the round opens; the round closes at zero.
+    in_flight: usize,
+    /// A helper's chunk panicked (the panic itself is swallowed in the
+    /// helper to keep the protocol live; re-raised on the caller).
+    panicked: bool,
+}
+
+struct Shared {
+    ctrl: Mutex<Ctrl>,
+    work: Condvar,
+    done: Condvar,
+    /// Next unclaimed chunk index for the current round.
+    next: AtomicUsize,
+}
+
+fn lock(m: &Mutex<Ctrl>) -> MutexGuard<'_, Ctrl> {
+    m.lock().unwrap_or_else(|e| e.into_inner())
+}
+
+fn helper_loop(shared: Arc<Shared>) {
+    let mut my_epoch = 0u64;
+    loop {
+        let (task, n_chunks) = {
+            let mut ctrl = lock(&shared.ctrl);
+            loop {
+                if ctrl.shutdown {
+                    return;
+                }
+                if ctrl.epoch != my_epoch && ctrl.task.is_some() {
+                    my_epoch = ctrl.epoch;
+                    break (ctrl.task.unwrap(), ctrl.n_chunks);
+                }
+                ctrl = shared
+                    .work
+                    .wait(ctrl)
+                    .unwrap_or_else(|e| e.into_inner());
+            }
+        };
+        // SAFETY: `for_chunks` keeps the closure alive until `in_flight`
+        // (which we decrement only after our last use) reaches zero.
+        let f = unsafe { &*task.0 };
+        let mut hit_panic = false;
+        loop {
+            let i = shared.next.fetch_add(1, Ordering::Relaxed);
+            if i >= n_chunks {
+                break;
+            }
+            if catch_unwind(AssertUnwindSafe(|| f(i))).is_err() {
+                hit_panic = true;
+            }
+        }
+        let mut ctrl = lock(&shared.ctrl);
+        if hit_panic {
+            ctrl.panicked = true;
+        }
+        ctrl.in_flight -= 1;
+        if ctrl.in_flight == 0 {
+            shared.done.notify_all();
+        }
+    }
+}
+
+/// Persistent fork-join pool. See the module docs for the determinism
+/// contract. Cheap to share behind an `Arc`; one kernel runs at a time
+/// per pool (serialized by an internal submit lock).
+pub struct ComputePool {
+    shared: Arc<Shared>,
+    handles: Vec<JoinHandle<()>>,
+    /// Serializes `for_chunks` rounds from concurrent callers.
+    submit: Mutex<()>,
+    width: usize,
+    arena: Arena,
+}
+
+impl std::fmt::Debug for ComputePool {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        f.debug_struct("ComputePool").field("width", &self.width).finish()
+    }
+}
+
+impl ComputePool {
+    /// Pool with `width` total lanes (the caller participates, so
+    /// `width - 1` helper threads are spawned). `width <= 1` is a fully
+    /// serial pool with zero threads.
+    pub fn new(width: usize) -> Self {
+        let width = width.max(1);
+        let shared = Arc::new(Shared {
+            ctrl: Mutex::new(Ctrl {
+                epoch: 0,
+                shutdown: false,
+                task: None,
+                n_chunks: 0,
+                in_flight: 0,
+                panicked: false,
+            }),
+            work: Condvar::new(),
+            done: Condvar::new(),
+            next: AtomicUsize::new(0),
+        });
+        let handles = (1..width)
+            .map(|_| {
+                let sh = Arc::clone(&shared);
+                std::thread::spawn(move || helper_loop(sh))
+            })
+            .collect();
+        ComputePool { shared, handles, submit: Mutex::new(()), width, arena: Arena::default() }
+    }
+
+    /// A zero-thread pool: every pooled kernel takes the serial path.
+    pub fn serial() -> Self {
+        Self::new(1)
+    }
+
+    /// Process-wide shared serial pool, for call sites that need *a*
+    /// pool but were not handed one (default paths, tests).
+    pub fn serial_ref() -> &'static ComputePool {
+        static SERIAL: OnceLock<ComputePool> = OnceLock::new();
+        SERIAL.get_or_init(ComputePool::serial)
+    }
+
+    /// Total lanes (helpers + caller).
+    pub fn width(&self) -> usize {
+        self.width
+    }
+
+    /// Scratch-buffer arena shared by users of this pool.
+    pub fn arena(&self) -> &Arena {
+        &self.arena
+    }
+
+    /// Run `task(i)` for every `i in 0..n_chunks` across the pool. The
+    /// caller participates. Blocks until all chunks are done. Chunk
+    /// *claim order* is nondeterministic; callers must make chunk `i`'s
+    /// effect independent of claim order (write disjoint data indexed by
+    /// `i`).
+    pub(crate) fn for_chunks(&self, n_chunks: usize, task: &(dyn Fn(usize) + Sync)) {
+        if self.handles.is_empty() || n_chunks <= 1 {
+            for i in 0..n_chunks {
+                task(i);
+            }
+            return;
+        }
+        let _round = self.submit.lock().unwrap_or_else(|e| e.into_inner());
+        // SAFETY: transmute only erases the lifetime; the round protocol
+        // below keeps every dereference inside this call's scope (we wait
+        // for all helpers before returning — even if our own chunk
+        // panics).
+        let ptr = TaskPtr(unsafe {
+            std::mem::transmute::<&(dyn Fn(usize) + Sync), *const (dyn Fn(usize) + Sync)>(task)
+        });
+        let helpers = self.handles.len();
+        {
+            let mut ctrl = lock(&self.shared.ctrl);
+            ctrl.task = Some(ptr);
+            ctrl.n_chunks = n_chunks;
+            ctrl.in_flight = helpers;
+            ctrl.panicked = false;
+            ctrl.epoch = ctrl.epoch.wrapping_add(1);
+            self.shared.next.store(0, Ordering::Relaxed);
+            self.shared.work.notify_all();
+        }
+        // Caller claims chunks too. Panics are deferred until the round
+        // has drained so helpers never touch a dead closure.
+        let caller_result = catch_unwind(AssertUnwindSafe(|| loop {
+            let i = self.shared.next.fetch_add(1, Ordering::Relaxed);
+            if i >= n_chunks {
+                break;
+            }
+            task(i);
+        }));
+        let helper_panicked = {
+            let mut ctrl = lock(&self.shared.ctrl);
+            while ctrl.in_flight != 0 {
+                ctrl = self
+                    .shared
+                    .done
+                    .wait(ctrl)
+                    .unwrap_or_else(|e| e.into_inner());
+            }
+            ctrl.task = None;
+            ctrl.panicked
+        };
+        if let Err(p) = caller_result {
+            resume_unwind(p);
+        }
+        if helper_panicked {
+            panic!("compute pool task panicked");
+        }
+    }
+
+    /// Pooled dot product — bit-identical to [`super::dot`] at any width.
+    pub fn dot(&self, a: &[f64], b: &[f64]) -> f64 {
+        let n = a.len();
+        if self.width <= 1 || n <= PAR_MIN {
+            return super::dot(a, b);
+        }
+        let k = n.div_ceil(CHUNK);
+        let mut partials = self.arena.take(k);
+        {
+            let parts = SendPtr(partials.as_mut_ptr());
+            let task = move |i: usize| {
+                let start = i * CHUNK;
+                let end = (start + CHUNK).min(n);
+                let p = super::dot_block(&a[start..end], &b[start..end]);
+                // SAFETY: chunk i exclusively owns partials[i].
+                unsafe { *parts.0.add(i) = p };
+            };
+            self.for_chunks(k, &task);
+        }
+        let out = fold_partials(&partials);
+        self.arena.put(partials);
+        out
+    }
+
+    /// Pooled squared norm — bit-identical to [`super::nrm2_sq`].
+    pub fn nrm2_sq(&self, a: &[f64]) -> f64 {
+        let n = a.len();
+        if self.width <= 1 || n <= PAR_MIN {
+            return super::nrm2_sq(a);
+        }
+        let k = n.div_ceil(CHUNK);
+        let mut partials = self.arena.take(k);
+        {
+            let parts = SendPtr(partials.as_mut_ptr());
+            let task = move |i: usize| {
+                let start = i * CHUNK;
+                let end = (start + CHUNK).min(n);
+                let p = super::nrm2_sq_block(&a[start..end]);
+                // SAFETY: chunk i exclusively owns partials[i].
+                unsafe { *parts.0.add(i) = p };
+            };
+            self.for_chunks(k, &task);
+        }
+        let out = fold_partials(&partials);
+        self.arena.put(partials);
+        out
+    }
+
+    /// Pooled `y += alpha * x` — bit-identical to [`super::axpy`].
+    pub fn axpy(&self, alpha: f64, x: &[f64], y: &mut [f64]) {
+        let n = y.len();
+        if self.width <= 1 || n < PAR_MIN {
+            super::axpy(alpha, x, y);
+            return;
+        }
+        let k = n.div_ceil(CHUNK);
+        let yp = SendPtr(y.as_mut_ptr());
+        let task = move |i: usize| {
+            let start = i * CHUNK;
+            let end = (start + CHUNK).min(n);
+            // SAFETY: chunk ranges are disjoint; each claims its own
+            // sub-slice of y exactly once.
+            let yc = unsafe { std::slice::from_raw_parts_mut(yp.0.add(start), end - start) };
+            super::axpy(alpha, &x[start..end], yc);
+        };
+        self.for_chunks(k, &task);
+    }
+
+    /// Pooled `x *= alpha` — bit-identical to [`super::scale`].
+    pub fn scale(&self, alpha: f64, x: &mut [f64]) {
+        let n = x.len();
+        if self.width <= 1 || n < PAR_MIN {
+            super::scale(alpha, x);
+            return;
+        }
+        let k = n.div_ceil(CHUNK);
+        let xp = SendPtr(x.as_mut_ptr());
+        let task = move |i: usize| {
+            let start = i * CHUNK;
+            let end = (start + CHUNK).min(n);
+            // SAFETY: disjoint chunk sub-slices.
+            let xc = unsafe { std::slice::from_raw_parts_mut(xp.0.add(start), end - start) };
+            super::scale(alpha, xc);
+        };
+        self.for_chunks(k, &task);
+    }
+
+    /// Pooled `out = a - b` — bit-identical to [`super::sub`].
+    pub fn sub(&self, a: &[f64], b: &[f64], out: &mut [f64]) {
+        let n = out.len();
+        if self.width <= 1 || n < PAR_MIN {
+            super::sub(a, b, out);
+            return;
+        }
+        let k = n.div_ceil(CHUNK);
+        let op = SendPtr(out.as_mut_ptr());
+        let task = move |i: usize| {
+            let start = i * CHUNK;
+            let end = (start + CHUNK).min(n);
+            // SAFETY: disjoint chunk sub-slices.
+            let oc = unsafe { std::slice::from_raw_parts_mut(op.0.add(start), end - start) };
+            super::sub(&a[start..end], &b[start..end], oc);
+        };
+        self.for_chunks(k, &task);
+    }
+
+    /// Pooled tridiagonal matvec — bit-identical to
+    /// [`TridiagToeplitz::matvec`] (each row's value depends only on the
+    /// row, never on chunk boundaries).
+    pub fn matvec(&self, m: &TridiagToeplitz, x: &[f64], out: &mut [f64]) {
+        let n = out.len();
+        if self.width <= 1 || n < PAR_MIN {
+            m.matvec(x, out);
+            return;
+        }
+        let k = n.div_ceil(CHUNK);
+        let op = SendPtr(out.as_mut_ptr());
+        let task = move |i: usize| {
+            let start = i * CHUNK;
+            let end = (start + CHUNK).min(n);
+            // SAFETY: disjoint chunk sub-slices of out.
+            let oc = unsafe { std::slice::from_raw_parts_mut(op.0.add(start), end - start) };
+            m.matvec_range(x, oc, start);
+        };
+        self.for_chunks(k, &task);
+    }
+}
+
+impl Drop for ComputePool {
+    fn drop(&mut self) {
+        {
+            let mut ctrl = lock(&self.shared.ctrl);
+            ctrl.shutdown = true;
+            self.shared.work.notify_all();
+        }
+        for h in self.handles.drain(..) {
+            let _ = h.join();
+        }
+    }
+}
+
+/// Ascending-index fold seeded with the first partial — the exact
+/// combine order the chunked serial kernels use, so serial and parallel
+/// reductions agree bitwise (seeding with `0.0` would not: `0.0 + (-0.0)`
+/// is `+0.0`).
+pub(crate) fn fold_partials(p: &[f64]) -> f64 {
+    let mut acc = p[0];
+    for &v in &p[1..] {
+        acc += v;
+    }
+    acc
+}
+
+/// Lock-protected free list of scratch `Vec<f64>`s. `take` returns a
+/// zeroed vector of the requested length (recycled capacity when
+/// available); `put` returns it for reuse.
+#[derive(Default)]
+pub struct Arena {
+    free: Mutex<Vec<Vec<f64>>>,
+}
+
+impl Arena {
+    /// Capped so a pathological workload can't hoard memory forever.
+    const MAX_FREE: usize = 64;
+
+    pub fn take(&self, len: usize) -> Vec<f64> {
+        let mut buf = {
+            let mut free = self.free.lock().unwrap_or_else(|e| e.into_inner());
+            free.pop().unwrap_or_default()
+        };
+        buf.clear();
+        buf.resize(len, 0.0);
+        buf
+    }
+
+    pub fn put(&self, buf: Vec<f64>) {
+        let mut free = self.free.lock().unwrap_or_else(|e| e.into_inner());
+        if free.len() < Self::MAX_FREE {
+            free.push(buf);
+        }
+    }
+}
+
+/// Fixed set of compute pools built once per grid and leased to cells,
+/// so helper threads are spawned once rather than per cell and total
+/// thread count stays `sweep_workers × cell_width`.
+pub struct PoolSet {
+    pools: Mutex<Vec<Arc<ComputePool>>>,
+}
+
+impl PoolSet {
+    /// `n_pools` pools of `width` lanes each (both floored at 1).
+    pub fn new(n_pools: usize, width: usize) -> Self {
+        let n_pools = n_pools.max(1);
+        let width = width.max(1);
+        let pools = (0..n_pools).map(|_| Arc::new(ComputePool::new(width))).collect();
+        PoolSet { pools: Mutex::new(pools) }
+    }
+
+    /// Borrow a pool for one cell; returned to the set on drop. If the
+    /// set is exhausted (more concurrent leases than `n_pools` — should
+    /// not happen under the sweep budget) a serial fallback is minted.
+    pub fn lease(&self) -> PoolLease<'_> {
+        let pool = {
+            let mut pools = self.pools.lock().unwrap_or_else(|e| e.into_inner());
+            pools.pop()
+        }
+        .unwrap_or_else(|| Arc::new(ComputePool::new(1)));
+        PoolLease { set: self, pool: Some(pool) }
+    }
+}
+
+/// RAII lease of one [`ComputePool`] from a [`PoolSet`].
+pub struct PoolLease<'a> {
+    set: &'a PoolSet,
+    pool: Option<Arc<ComputePool>>,
+}
+
+impl PoolLease<'_> {
+    pub fn pool(&self) -> &Arc<ComputePool> {
+        self.pool.as_ref().expect("pool present until drop")
+    }
+}
+
+impl Drop for PoolLease<'_> {
+    fn drop(&mut self) {
+        if let Some(pool) = self.pool.take() {
+            let mut pools = self.set.pools.lock().unwrap_or_else(|e| e.into_inner());
+            pools.push(pool);
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::linalg;
+
+    /// Lengths straddling every chunk boundary the kernels care about.
+    const LENS: [usize; 12] = [
+        0,
+        1,
+        3,
+        4,
+        5,
+        CHUNK - 1,
+        CHUNK,
+        CHUNK + 1,
+        2 * CHUNK,
+        2 * CHUNK + 1,
+        2 * CHUNK + 5,
+        3 * CHUNK + 17,
+    ];
+
+    fn vec_for(n: usize, stream: u64) -> Vec<f64> {
+        // Deterministic, mixes magnitudes and signs so any reassociation
+        // would actually show up in the bits.
+        (0..n)
+            .map(|i| {
+                let t = (i as f64 + 1.0) * (stream as f64 + 0.618);
+                t.sin() * 10f64.powi((i % 7) as i32 - 3)
+            })
+            .collect()
+    }
+
+    #[test]
+    fn pooled_reductions_are_bit_identical_to_serial_at_every_width() {
+        for &w in &[1usize, 2, 3, 8] {
+            let pool = ComputePool::new(w);
+            for &n in &LENS {
+                if n == 0 {
+                    continue; // dot/nrm2 of empty slices not used in-tree
+                }
+                let a = vec_for(n, 1);
+                let b = vec_for(n, 2);
+                assert_eq!(
+                    pool.dot(&a, &b).to_bits(),
+                    linalg::dot(&a, &b).to_bits(),
+                    "dot mismatch at width {w}, n {n}"
+                );
+                assert_eq!(
+                    pool.nrm2_sq(&a).to_bits(),
+                    linalg::nrm2_sq(&a).to_bits(),
+                    "nrm2_sq mismatch at width {w}, n {n}"
+                );
+                assert_eq!(
+                    pool.nrm2_sq(&a).to_bits(),
+                    pool.dot(&a, &a).to_bits(),
+                    "nrm2_sq(a) must equal dot(a,a) bitwise at width {w}, n {n}"
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn pooled_elementwise_kernels_are_bit_identical_to_serial() {
+        for &w in &[1usize, 2, 3, 8] {
+            let pool = ComputePool::new(w);
+            for &n in &LENS {
+                let x = vec_for(n, 3);
+                let b = vec_for(n, 4);
+
+                let mut y_ser = vec_for(n, 5);
+                let mut y_par = y_ser.clone();
+                linalg::axpy(-0.75, &x, &mut y_ser);
+                pool.axpy(-0.75, &x, &mut y_par);
+                assert!(bits_eq(&y_ser, &y_par), "axpy mismatch at width {w}, n {n}");
+
+                let mut s_ser = vec_for(n, 6);
+                let mut s_par = s_ser.clone();
+                linalg::scale(1.0 / 3.0, &mut s_ser);
+                pool.scale(1.0 / 3.0, &mut s_par);
+                assert!(bits_eq(&s_ser, &s_par), "scale mismatch at width {w}, n {n}");
+
+                let mut d_ser = vec![0.0; n];
+                let mut d_par = vec![0.0; n];
+                linalg::sub(&x, &b, &mut d_ser);
+                pool.sub(&x, &b, &mut d_par);
+                assert!(bits_eq(&d_ser, &d_par), "sub mismatch at width {w}, n {n}");
+            }
+        }
+    }
+
+    #[test]
+    fn pooled_matvec_is_bit_identical_to_serial() {
+        for &w in &[1usize, 2, 3, 8] {
+            let pool = ComputePool::new(w);
+            for &n in &LENS {
+                if n == 0 {
+                    continue;
+                }
+                let m = TridiagToeplitz::paper(n);
+                let x = vec_for(n, 7);
+                let mut out_ser = vec![0.0; n];
+                let mut out_par = vec![0.0; n];
+                m.matvec(&x, &mut out_ser);
+                pool.matvec(&m, &x, &mut out_par);
+                assert!(bits_eq(&out_ser, &out_par), "matvec mismatch at width {w}, n {n}");
+            }
+        }
+    }
+
+    fn bits_eq(a: &[f64], b: &[f64]) -> bool {
+        a.len() == b.len() && a.iter().zip(b).all(|(x, y)| x.to_bits() == y.to_bits())
+    }
+
+    #[test]
+    fn for_chunks_covers_every_chunk_exactly_once() {
+        for &w in &[1usize, 2, 3, 8] {
+            let pool = ComputePool::new(w);
+            for &k in &[0usize, 1, 2, 7, 64] {
+                let hits: Vec<AtomicUsize> = (0..k).map(|_| AtomicUsize::new(0)).collect();
+                pool.for_chunks(k, &|i| {
+                    hits[i].fetch_add(1, Ordering::Relaxed);
+                });
+                for (i, h) in hits.iter().enumerate() {
+                    assert_eq!(h.load(Ordering::Relaxed), 1, "chunk {i} at width {w}, k {k}");
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn pool_survives_a_panicking_task_and_stays_usable() {
+        let pool = ComputePool::new(3);
+        let r = catch_unwind(AssertUnwindSafe(|| {
+            pool.for_chunks(8, &|i| {
+                if i == 5 {
+                    panic!("boom");
+                }
+            });
+        }));
+        assert!(r.is_err(), "panic must propagate to the caller");
+        // The pool must still work after the failed round.
+        let a = vec_for(3 * CHUNK + 17, 8);
+        assert_eq!(pool.dot(&a, &a).to_bits(), linalg::dot(&a, &a).to_bits());
+    }
+
+    #[test]
+    fn arena_recycles_and_zeroes_buffers() {
+        let arena = Arena::default();
+        let mut b = arena.take(8);
+        b.iter_mut().for_each(|v| *v = 7.0);
+        arena.put(b);
+        let b2 = arena.take(16);
+        assert_eq!(b2.len(), 16);
+        assert!(b2.iter().all(|&v| v == 0.0), "recycled buffers must be zeroed");
+    }
+
+    #[test]
+    fn pool_set_leases_round_trip_and_fall_back() {
+        let set = PoolSet::new(2, 2);
+        {
+            let l1 = set.lease();
+            let l2 = set.lease();
+            assert_eq!(l1.pool().width(), 2);
+            assert_eq!(l2.pool().width(), 2);
+            // Exhausted: fallback is a serial pool, not a panic.
+            let l3 = set.lease();
+            assert_eq!(l3.pool().width(), 1);
+        }
+        // All leases returned; width-2 pools are back.
+        let l = set.lease();
+        assert_eq!(l.pool().width(), 2);
+    }
+}

@@ -87,6 +87,13 @@ fn print_help() {
                                                 (bit-identical to --substrate sim)\n\
                         --wc-threads K          cap concurrent wall-clock cells\n\
                         --retries K             retry transient cell failures K times\n\
+                        --repeats k             run live wallclock cells k times; CSV\n\
+                                                gains wall_median/wall_min timing columns\n\
+                                                (deterministic cells always run once)\n\
+                        RINGMASTER_SWEEP_THREADS  cells run concurrently (default: cores)\n\
+                        RINGMASTER_CELL_THREADS   compute-pool lanes inside each cell\n\
+                                                (default: cores / sweep threads; results\n\
+                                                are bit-identical at any width)\n\
            sweep merge  union shard journals: sweep merge --out m.jsonl a.jsonl b.jsonl\n\n\
          common flags: --seed N --csv-out path.csv --plot --config file.toml\n\
          run/compare also accept --substrate sim|wallclock [--deterministic]"
@@ -686,6 +693,11 @@ fn cmd_sweep(args: &Args) -> Result<()> {
 
     // --retries K = up to K extra attempts per transiently-failing cell
     let retry = RetryPolicy::new(1 + args.usize_or("retries", 1)? as u32);
+    // --repeats k = run each live (wallclock, non-deterministic) cell k
+    // times and journal every repeat's wall seconds; deterministic cells
+    // always run once, so their CSVs are byte-identical at any k
+    let repeats = args.usize_or("repeats", 1)? as u32;
+    ensure!(repeats >= 1, "--repeats must be at least 1");
 
     eprintln!(
         "sweep: {} schedulers × {} α × {} seeds = {} grid points (n={}, n-data={}, \
@@ -705,7 +717,8 @@ fn cmd_sweep(args: &Args) -> Result<()> {
             .map(|s| format!(", journal {} [{} done]", s.path().display(), s.completed().len()))
             .unwrap_or_default(),
     );
-    let run = scenario::run_grid_retrying(&spec, shard, store.as_mut(), max_cells, retry)?;
+    let run =
+        scenario::run_grid_repeating(&spec, shard, store.as_mut(), max_cells, retry, repeats)?;
     if run.retries > 0 {
         eprintln!("sweep: {} transient cell failure(s) retried", run.retries);
     }

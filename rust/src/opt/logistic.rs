@@ -6,7 +6,8 @@
 //! behaviour on, and it exercises the `Problem` trait with data-dependent
 //! gradients.
 
-use crate::linalg::dot;
+use crate::linalg::par::{ComputePool, SendPtr};
+use crate::linalg::{axpy, dot};
 use crate::prng::Prng;
 
 use super::{Problem, SampleProblem};
@@ -81,6 +82,11 @@ impl LogisticProblem {
         &self.xs[i * self.d..(i + 1) * self.d]
     }
 
+    /// Samples per parallel work unit in the full-gradient evaluation.
+    /// Fixed (never a function of pool width) so the chunked fold is part
+    /// of the determinism contract, like `linalg::CHUNK`.
+    const SAMPLE_CHUNK: usize = 64;
+
     /// Stable `log(1 + e^{−m})`.
     fn softplus_neg(m: f64) -> f64 {
         if m > 0.0 {
@@ -123,28 +129,60 @@ impl Problem for LogisticProblem {
     }
 
     fn value_grad(&self, w: &[f64], grad: &mut [f64]) -> f64 {
+        self.value_grad_pooled(w, grad, ComputePool::serial_ref())
+    }
+
+    /// Full objective as a fixed sample-chunked fold: chunk `c` owns
+    /// samples `[c·SAMPLE_CHUNK, …)`, accumulates its own loss and
+    /// gradient partials, and partials combine in ascending chunk order —
+    /// so any pool width reproduces the serial bits exactly (`axpy` with
+    /// `alpha = 1.0` adds each partial verbatim: `1.0 * x ≡ x`).
+    fn value_grad_pooled(&self, w: &[f64], grad: &mut [f64], pool: &ComputePool) -> f64 {
         debug_assert_eq!(w.len(), self.d);
         for (g, wi) in grad.iter_mut().zip(w) {
             *g = self.lambda * wi;
         }
-        let mut loss = 0.5 * self.lambda * dot(w, w);
-        let inv_n = 1.0 / self.n as f64;
-        for i in 0..self.n {
-            let xi = self.row(i);
-            let m = self.ys[i] * dot(xi, w);
-            // stable log(1 + e^{-m})
-            loss += inv_n * if m > 0.0 {
-                (-m).exp().ln_1p()
-            } else {
-                -m + m.exp().ln_1p()
-            };
-            // d/dw = −y σ(−m) x
-            let s = 1.0 / (1.0 + m.exp()); // σ(−m)
-            let coeff = -self.ys[i] * s * inv_n;
-            for (g, x) in grad.iter_mut().zip(xi) {
-                *g += coeff * x;
-            }
+        let reg_loss = 0.5 * self.lambda * dot(w, w);
+        if self.n == 0 {
+            return reg_loss;
         }
+        let d = self.d;
+        let inv_n = 1.0 / self.n as f64;
+        let k = self.n.div_ceil(Self::SAMPLE_CHUNK);
+        let mut part_loss = pool.arena().take(k);
+        let mut part_grad = pool.arena().take(k * d);
+        {
+            let lp = SendPtr(part_loss.as_mut_ptr());
+            let gp = SendPtr(part_grad.as_mut_ptr());
+            let task = move |c: usize| {
+                let lo = c * Self::SAMPLE_CHUNK;
+                let hi = (lo + Self::SAMPLE_CHUNK).min(self.n);
+                // SAFETY: chunk c exclusively owns part_loss[c] and
+                // part_grad[c*d..(c+1)*d].
+                let gc = unsafe { std::slice::from_raw_parts_mut(gp.0.add(c * d), d) };
+                let mut loss = 0.0;
+                for i in lo..hi {
+                    let xi = self.row(i);
+                    let m = self.ys[i] * dot(xi, w);
+                    loss += inv_n * Self::softplus_neg(m);
+                    // d/dw = −y σ(−m) x
+                    let s = 1.0 / (1.0 + m.exp()); // σ(−m)
+                    let coeff = -self.ys[i] * s * inv_n;
+                    for (g, x) in gc.iter_mut().zip(xi) {
+                        *g += coeff * x;
+                    }
+                }
+                unsafe { *lp.0.add(c) = loss };
+            };
+            pool.for_chunks(k, &task);
+        }
+        let mut loss = reg_loss;
+        for c in 0..k {
+            loss += part_loss[c];
+            axpy(1.0, &part_grad[c * d..(c + 1) * d], grad);
+        }
+        pool.arena().put(part_loss);
+        pool.arena().put(part_grad);
         loss
     }
 
@@ -227,6 +265,26 @@ mod tests {
         let mut wq = vec![0.0; p.dim()];
         let v = p.value_grad(&p.init_point(), &mut wq);
         assert!((v - 2f64.ln()).abs() < 1e-12, "loss at 0 is ln 2, got {v}");
+    }
+
+    #[test]
+    fn pooled_value_grad_is_bit_identical_to_serial() {
+        // n = 200 straddles several SAMPLE_CHUNK = 64 boundaries.
+        let p = LogisticProblem::synthetic(200, 7, 0.1, 0.03, 11);
+        let mut rng = Prng::seed_from_u64(12);
+        let w: Vec<f64> = (0..7).map(|_| rng.normal(0.0, 0.5)).collect();
+        let mut g_ser = vec![0.0; 7];
+        let v_ser = p.value_grad(&w, &mut g_ser);
+        for width in [2usize, 3, 8] {
+            let pool = ComputePool::new(width);
+            let mut g_par = vec![0.0; 7];
+            let v_par = p.value_grad_pooled(&w, &mut g_par, &pool);
+            assert_eq!(v_ser.to_bits(), v_par.to_bits(), "width {width}");
+            assert!(
+                g_ser.iter().zip(&g_par).all(|(a, b)| a.to_bits() == b.to_bits()),
+                "gradient bits differ at width {width}"
+            );
+        }
     }
 
     #[test]

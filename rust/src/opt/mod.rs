@@ -33,6 +33,7 @@ pub use pjrt::PjrtQuadratic;
 pub use quadratic::QuadraticProblem;
 pub use sharded::{shard_draw, SampleProblem, Sharded};
 
+use crate::linalg::par::ComputePool;
 use crate::prng::Prng;
 
 /// Identity + randomness of one stochastic-gradient draw.
@@ -54,6 +55,14 @@ pub trait Problem {
 
     /// Exact `f(x)` and `∇f(x)` (gradient written into `grad`).
     fn value_grad(&self, x: &[f64], grad: &mut [f64]) -> f64;
+
+    /// [`Self::value_grad`] with an explicit compute pool. The contract
+    /// is strict: implementations must return **bit-identical** results
+    /// to the serial path at every pool width (the pooled linalg kernels
+    /// guarantee this — see `linalg::par`). Default: ignore the pool.
+    fn value_grad_pooled(&self, x: &[f64], grad: &mut [f64], _pool: &ComputePool) -> f64 {
+        self.value_grad(x, grad)
+    }
 
     /// Exact `f(x)` only (default: via `value_grad`).
     fn value(&self, x: &[f64]) -> f64 {
@@ -90,6 +99,13 @@ impl<P: Problem + ?Sized> Problem for &P {
         (**self).value_grad(x, grad)
     }
 
+    // Must forward explicitly: inheriting the trait default here would
+    // route `&P` through the serial path even when `P` overrides the
+    // pooled one.
+    fn value_grad_pooled(&self, x: &[f64], grad: &mut [f64], pool: &ComputePool) -> f64 {
+        (**self).value_grad_pooled(x, grad, pool)
+    }
+
     fn value(&self, x: &[f64]) -> f64 {
         (**self).value(x)
     }
@@ -122,6 +138,13 @@ pub trait StochasticProblem {
     /// Exact (or best-effort deterministic) `f(x)` and `∇f(x)` for curve
     /// recording and ε-stationarity checks.
     fn eval_value_grad(&mut self, x: &[f64], grad: &mut [f64]) -> f64;
+
+    /// [`Self::eval_value_grad`] with an explicit compute pool; must be
+    /// bit-identical to the serial path at every pool width. Default:
+    /// ignore the pool.
+    fn eval_value_grad_pooled(&mut self, x: &[f64], grad: &mut [f64], _pool: &ComputePool) -> f64 {
+        self.eval_value_grad(x, grad)
+    }
 
     fn f_star(&self) -> Option<f64> {
         None
@@ -182,6 +205,10 @@ impl<P: Problem> StochasticProblem for Noisy<P> {
 
     fn eval_value_grad(&mut self, x: &[f64], grad: &mut [f64]) -> f64 {
         self.inner.value_grad(x, grad)
+    }
+
+    fn eval_value_grad_pooled(&mut self, x: &[f64], grad: &mut [f64], pool: &ComputePool) -> f64 {
+        self.inner.value_grad_pooled(x, grad, pool)
     }
 
     fn f_star(&self) -> Option<f64> {

@@ -6,6 +6,7 @@
 //! form — so the theory-side constants (`Δ`, `L`, `σ²`) used by the
 //! complexity calculators are not estimates.
 
+use crate::linalg::par::ComputePool;
 use crate::linalg::{dot, TridiagToeplitz};
 
 use super::Problem;
@@ -69,6 +70,18 @@ impl Problem for QuadraticProblem {
         for (g, bi) in grad.iter_mut().zip(&self.b) {
             *g -= bi;
         }
+        0.5 * x_ax - bx
+    }
+
+    fn value_grad_pooled(&self, x: &[f64], grad: &mut [f64], pool: &ComputePool) -> f64 {
+        // Bit-identical to `value_grad`: pooled matvec/dot match serial
+        // by the linalg contract, and `axpy(-1.0, b, g)` computes
+        // `g + (-1.0)*b` per element — IEEE-754 makes `-1.0 * b` an exact
+        // negation and `g - b ≡ g + (-b)`.
+        pool.matvec(&self.a, x, grad);
+        let x_ax = pool.dot(x, grad);
+        let bx = pool.dot(&self.b, x);
+        pool.axpy(-1.0, &self.b, grad);
         0.5 * x_ax - bx
     }
 
@@ -171,6 +184,25 @@ mod tests {
             let diff_g: Vec<f64> = gx.iter().zip(&gy).map(|(a, b)| a - b).collect();
             let diff_x: Vec<f64> = x.iter().zip(&y).map(|(a, b)| a - b).collect();
             assert!(nrm2(&diff_g) <= l * nrm2(&diff_x) + 1e-10);
+        }
+    }
+
+    #[test]
+    fn pooled_value_grad_is_bit_identical_to_serial() {
+        let pool = ComputePool::new(3);
+        for d in [1729usize, 2 * crate::linalg::CHUNK + 5] {
+            let p = QuadraticProblem::paper(d);
+            let mut rng = crate::prng::Prng::seed_from_u64(6);
+            let x: Vec<f64> = (0..d).map(|_| rng.normal(0.0, 1.0)).collect();
+            let mut g_ser = vec![0.0; d];
+            let mut g_par = vec![0.0; d];
+            let v_ser = p.value_grad(&x, &mut g_ser);
+            let v_par = p.value_grad_pooled(&x, &mut g_par, &pool);
+            assert_eq!(v_ser.to_bits(), v_par.to_bits(), "d={d}");
+            assert!(
+                g_ser.iter().zip(&g_par).all(|(a, b)| a.to_bits() == b.to_bits()),
+                "gradient bits differ at d={d}"
+            );
         }
     }
 

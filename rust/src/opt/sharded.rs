@@ -160,6 +160,15 @@ impl<P: SampleProblem> StochasticProblem for Sharded<P> {
         self.problem.value_grad(x, grad)
     }
 
+    fn eval_value_grad_pooled(
+        &mut self,
+        x: &[f64],
+        grad: &mut [f64],
+        pool: &crate::linalg::par::ComputePool,
+    ) -> f64 {
+        self.problem.value_grad_pooled(x, grad, pool)
+    }
+
     fn shard_losses(&mut self, x: &[f64]) -> Option<Vec<f64>> {
         // one pass over the full dataset in total: Σ_w |shard_w| = n
         let mut out = Vec::with_capacity(self.shards.len());

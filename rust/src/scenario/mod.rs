@@ -94,8 +94,8 @@ mod spec;
 mod store;
 
 pub use runner::{
-    alpha_partition, grid_csv, run_cell, run_cells, run_grid, run_grid_retrying, run_grid_with,
-    CellOutcome, GridRun, RetryPolicy,
+    alpha_partition, grid_csv, run_cell, run_cells, run_grid, run_grid_repeating,
+    run_grid_retrying, run_grid_with, CellOutcome, GridRun, RetryPolicy,
 };
 pub use spec::{
     fnv1a64, parse_shard, parse_substrate, Cell, GridAxes, GridSpec, ProblemSpec, RunBudget,

@@ -20,15 +20,18 @@
 
 use std::collections::BTreeMap;
 use std::panic::{catch_unwind, resume_unwind, AssertUnwindSafe};
-use std::sync::OnceLock;
+use std::sync::{Arc, OnceLock};
 use std::time::Duration;
 
 use crate::data::partition::label_skew;
 use crate::data::{synthetic_mnist, N_CLASSES};
 use crate::driver::Driver;
-use crate::engine::sweep::{parallel_map_streaming_with, parallel_map_with, sweep_threads};
+use crate::engine::sweep::{
+    cell_threads, parallel_map_streaming_with, parallel_map_with, sweep_threads,
+};
 use crate::engine::{RunRecord, ThreadPoolConfig};
 use crate::exec;
+use crate::linalg::par::{ComputePool, PoolSet};
 use crate::opt::{LogisticProblem, Noisy, QuadraticProblem, Sharded};
 use crate::util::error::Result;
 
@@ -166,7 +169,12 @@ fn pool_threads(cells: &[Cell]) -> usize {
         .map_or(base, |cap| base.min(cap))
 }
 
-fn run_cell_with(cell: &Cell, budget: &RunBudget, cache: &DataCache) -> (RunRecord, Option<f64>) {
+fn run_cell_with(
+    cell: &Cell,
+    budget: &RunBudget,
+    cache: &DataCache,
+    pool: &Arc<ComputePool>,
+) -> (RunRecord, Option<f64>) {
     let server_opt = cell.scheduler.server_opt.clone();
     let mut sched = cell.scheduler.kind.build();
     match &cell.problem {
@@ -176,16 +184,17 @@ fn run_cell_with(cell: &Cell, budget: &RunBudget, cache: &DataCache) -> (RunReco
                 Substrate::Sim => {
                     let problem = Noisy::new(QuadraticProblem::paper(*d), *noise_sigma);
                     let mut driver = Driver::new(problem, cell.model.clone(), dcfg);
-                    driver.run(sched.as_mut())
+                    driver.run_pooled(sched.as_mut(), pool)
                 }
                 Substrate::Wallclock { deterministic, .. } => {
                     let problem = QuadraticProblem::paper(*d);
-                    let pool = wallclock_pool(deterministic, cell.seed, *noise_sigma, budget);
+                    let mut tp = wallclock_pool(deterministic, cell.seed, *noise_sigma, budget);
+                    tp.compute = Some(pool.clone());
                     exec::run_wallclock_engine(
                         &problem,
                         &cell.model,
                         sched.as_mut(),
-                        &pool,
+                        &tp,
                         &dcfg,
                     )
                 }
@@ -222,17 +231,18 @@ fn run_cell_with(cell: &Cell, budget: &RunBudget, cache: &DataCache) -> (RunReco
                     // the dataset is shared, not cloned, across the pool
                     let sharded = Sharded::new(&data.problem, part.clone(), *batch);
                     let mut driver = Driver::new(sharded, cell.model.clone(), dcfg);
-                    driver.run(sched.as_mut())
+                    driver.run_pooled(sched.as_mut(), pool)
                 }
                 Substrate::Wallclock { deterministic, .. } => {
-                    let pool = wallclock_pool(deterministic, cell.seed, 0.0, budget);
+                    let mut tp = wallclock_pool(deterministic, cell.seed, 0.0, budget);
+                    tp.compute = Some(pool.clone());
                     exec::run_wallclock_sharded_engine(
                         &data.problem,
                         part,
                         *batch,
                         &cell.model,
                         sched.as_mut(),
-                        &pool,
+                        &tp,
                         &dcfg,
                     )
                 }
@@ -249,7 +259,12 @@ fn run_cell_with(cell: &Cell, budget: &RunBudget, cache: &DataCache) -> (RunReco
 /// sharded cells.
 pub fn run_cell(cell: &Cell, budget: &RunBudget) -> (RunRecord, Option<f64>) {
     let cache = build_cache(std::slice::from_ref(cell));
-    run_cell_with(cell, budget, &cache)
+    // budget the pool as if a full-width sweep were running: ad-hoc cells
+    // are often invoked from callers that fan out themselves (experiments,
+    // benches), so the conservative width never oversubscribes; a lone
+    // cell wanting the whole machine sets RINGMASTER_CELL_THREADS
+    let pool = Arc::new(ComputePool::new(cell_threads(sweep_threads())));
+    run_cell_with(cell, budget, &cache, &pool)
 }
 
 /// One completed cell with its full in-memory record.
@@ -264,8 +279,14 @@ pub struct CellOutcome {
 /// (curves, iterates): stepsize tuning, head-to-head tables, benches.
 pub fn run_cells(spec: &GridSpec) -> Vec<CellOutcome> {
     let cache = build_cache(&spec.cells);
-    let out = parallel_map_with(pool_threads(&spec.cells), &spec.cells, |_, cell| {
-        let (record, concentration) = run_cell_with(cell, &spec.budget, &cache);
+    let threads = pool_threads(&spec.cells);
+    // one persistent compute pool per sweep worker, spawned once for the
+    // whole grid and leased per cell — never per-cell thread spawns, and
+    // sweep-level × cell-level parallelism stays within the core budget
+    let pools = PoolSet::new(threads, cell_threads(threads));
+    let out = parallel_map_with(threads, &spec.cells, |_, cell| {
+        let lease = pools.lease();
+        let (record, concentration) = run_cell_with(cell, &spec.budget, &cache, lease.pool());
         (record, concentration)
     });
     spec.cells
@@ -393,6 +414,24 @@ pub fn run_grid_retrying(
     max_cells: Option<usize>,
     retry: RetryPolicy,
 ) -> Result<GridRun> {
+    run_grid_repeating(spec, shard, store, max_cells, retry, 1)
+}
+
+/// [`run_grid_retrying`] with per-cell repeats (the CLI's `--repeats`):
+/// each pending cell runs `repeats` times **if its substrate is live**
+/// (`wallclock-live` — real sleeps, nondeterministic timing), journaling
+/// every repeat's wall seconds in [`RunSummary::wall_all`] so the CSV can
+/// report `wall_median`/`wall_min` robust to host noise. Deterministic
+/// substrates (sim, `wallclock-det`) are repeat-invariant by construction,
+/// so they always run once and their CSVs stay byte-identical at any `k`.
+pub fn run_grid_repeating(
+    spec: &GridSpec,
+    shard: ShardSel,
+    store: Option<&mut CellStore>,
+    max_cells: Option<usize>,
+    retry: RetryPolicy,
+    repeats: u32,
+) -> Result<GridRun> {
     // diff the shard against the journal up front so the data cache only
     // ever covers cells that may actually run: a resumed sweep never
     // regenerates a completed cell's dataset, and a fully-journaled
@@ -408,9 +447,14 @@ pub fn run_grid_retrying(
         }
     };
     let cache: OnceLock<DataCache> = OnceLock::new();
-    run_grid_with(spec, shard, store, max_cells, retry, |cell, budget| {
+    let threads = pool_threads(&pending);
+    // persistent intra-cell compute pools, one per sweep worker, spawned
+    // once per grid invocation (never per cell) and leased cell-by-cell
+    let pools = PoolSet::new(threads, cell_threads(threads));
+    run_grid_with(spec, shard, store, max_cells, retry, repeats, |cell, budget| {
         let cache = cache.get_or_init(|| build_cache(&pending));
-        run_cell_with(cell, budget, cache)
+        let lease = pools.lease();
+        run_cell_with(cell, budget, cache, lease.pool())
     })
 }
 
@@ -425,6 +469,7 @@ pub fn run_grid_with<F>(
     store: Option<&mut CellStore>,
     max_cells: Option<usize>,
     retry: RetryPolicy,
+    repeats: u32,
     exec_cell: F,
 ) -> Result<GridRun>
 where
@@ -446,7 +491,9 @@ where
     let pending: Vec<Cell> = pending_idx.iter().map(|&i| cells[i].clone()).collect();
     let ran = pending.len();
 
-    let run_one = |cell: &Cell| -> (RunSummary, u32) {
+    // One repeat of one cell, with the transient-retry loop. Returns the
+    // summary plus how many attempts this repeat burned.
+    let run_once = |cell: &Cell| -> (RunSummary, u32) {
         let mut attempt = 1u32;
         loop {
             match catch_unwind(AssertUnwindSafe(|| exec_cell(cell, &spec.budget))) {
@@ -463,6 +510,33 @@ where
                 }
             }
         }
+    };
+
+    // Only live wall-clock cells repeat — their wall timings are the one
+    // nondeterministic output. Deterministic substrates would journal k
+    // identical results, so they keep k = 1 and byte-identical CSVs. The
+    // journaled attempt count stays `1 + transient retries` (repeats are
+    // not retries), so the retry audit trail is repeat-invariant too.
+    let run_one = |cell: &Cell| -> (RunSummary, u32) {
+        let live = matches!(
+            cell.substrate,
+            Substrate::Wallclock { deterministic: false, .. }
+        );
+        let k = if live { repeats.max(1) } else { 1 };
+        let mut extra_attempts = 0u32;
+        let mut wall_all = Vec::new();
+        let mut first: Option<RunSummary> = None;
+        for _ in 0..k {
+            let (summary, attempts) = run_once(cell);
+            extra_attempts += attempts - 1;
+            if live {
+                wall_all.extend(summary.wall_secs);
+            }
+            first.get_or_insert(summary);
+        }
+        let mut s = first.expect("k >= 1 repeats always produce a summary");
+        s.wall_all = wall_all;
+        (s, 1 + extra_attempts)
     };
 
     let mut store = store;
@@ -526,6 +600,18 @@ fn fmt_alpha(alpha: Option<f64>) -> String {
     }
 }
 
+/// Median of an unsorted sample (mean of the middle pair for even sizes).
+fn median(xs: &[f64]) -> f64 {
+    let mut v = xs.to_vec();
+    v.sort_by(f64::total_cmp);
+    let n = v.len();
+    if n % 2 == 1 {
+        v[n / 2]
+    } else {
+        0.5 * (v[n / 2 - 1] + v[n / 2])
+    }
+}
+
 /// Long-form CSV: one row per completed grid cell, in row order.
 ///
 /// The column prefix is the historical `sweep` contract
@@ -545,7 +631,7 @@ pub fn grid_csv(rows: &[(Cell, RunSummary)]) -> String {
         "scheduler,alpha,seed,concentration,iters,sim_time,final_loss,\
          final_gradnorm_sq,applied,accumulated,discarded,cancellations,\
          min_worker_hits,max_worker_hits,shard_loss_min,shard_loss_max,\
-         shard_loss_spread,substrate\n",
+         shard_loss_spread,substrate,wall_median,wall_min\n",
     );
     for (cell, s) in rows {
         let min_hits = s.worker_hits.iter().copied().min().unwrap_or(0);
@@ -565,8 +651,16 @@ pub fn grid_csv(rows: &[(Cell, RunSummary)]) -> String {
                 .fold(f64::NEG_INFINITY, f64::max);
             format!("{lo:.6e},{hi:.6e},{:.6e}", hi - lo)
         };
+        // wall-time columns only for repeated live cells: deterministic
+        // rows stay timing-free so they remain byte-stable across hosts
+        let walls = if s.wall_all.is_empty() {
+            ",".to_string()
+        } else {
+            let lo = s.wall_all.iter().copied().fold(f64::INFINITY, f64::min);
+            format!("{:.6e},{lo:.6e}", median(&s.wall_all))
+        };
         out.push_str(&format!(
-            "{},{},{},{conc},{},{:.4},{:.6e},{:.6e},{},{},{},{},{},{},{fairness},{}\n",
+            "{},{},{},{conc},{},{:.4},{:.6e},{:.6e},{},{},{},{},{},{},{fairness},{},{walls}\n",
             s.scheduler.replace(',', ";"),
             fmt_alpha(cell.problem.alpha()),
             cell.seed,
@@ -691,9 +785,40 @@ mod tests {
             assert_eq!(l.split(',').count(), n_cols, "{l}");
         }
         // quadratic cells have no α / concentration / fairness values,
-        // and every row carries its substrate tag
+        // and every row carries its substrate tag followed by empty
+        // wall-time columns (sim cells never repeat)
         assert!(lines[1].contains("ringmaster"));
-        assert!(lines[1].ends_with(",,,sim"), "{}", lines[1]);
+        assert!(lines[1].ends_with(",,,sim,,"), "{}", lines[1]);
+    }
+
+    #[test]
+    fn repeats_journal_wall_times_for_live_cells_only() {
+        let mut spec = quad_spec();
+        for cell in &mut spec.cells {
+            cell.seed = 0;
+        }
+        spec.cells.truncate(1);
+        spec.cells.push(Cell {
+            substrate: Substrate::Wallclock { deterministic: false, threads: 1 },
+            ..spec.cells[0].clone()
+        });
+        spec.budget.max_iters = 40;
+        let run = run_grid_repeating(&spec, ShardSel::ALL, None, None, RetryPolicy::none(), 3)
+            .unwrap();
+        assert!(run.is_complete());
+        assert_eq!(run.retries, 0, "repeats must not count as retries");
+        let (sim, live) = (&run.rows[0].1, &run.rows[1].1);
+        assert!(sim.wall_all.is_empty(), "deterministic cells never repeat");
+        assert_eq!(live.wall_all.len(), 3, "one wall sample per repeat");
+        assert!(live.wall_all.iter().all(|&w| w > 0.0));
+        let csv = grid_csv(&run.rows);
+        let lines: Vec<&str> = csv.trim_end().lines().collect();
+        assert!(lines[0].ends_with(",substrate,wall_median,wall_min"));
+        assert!(lines[1].ends_with(",sim,,"), "{}", lines[1]);
+        let cols: Vec<&str> = lines[2].split(',').collect();
+        let med: f64 = cols[cols.len() - 2].parse().unwrap();
+        let min: f64 = cols[cols.len() - 1].parse().unwrap();
+        assert!(min > 0.0 && med >= min, "median {med} min {min}");
     }
 
     #[test]
@@ -726,8 +851,8 @@ mod tests {
         let lines: Vec<&str> = csv.trim_end().lines().collect();
         assert_eq!(lines.len(), 1 + 8);
         for pair in lines[1..].chunks(2) {
-            let sim = pair[0].strip_suffix(",sim").expect(pair[0]);
-            let wc = pair[1].strip_suffix(",wallclock-det").expect(pair[1]);
+            let sim = pair[0].strip_suffix(",sim,,").expect(pair[0]);
+            let wc = pair[1].strip_suffix(",wallclock-det,,").expect(pair[1]);
             assert_eq!(sim, wc, "substrate parity broken");
         }
         // wall-clock runs carry a host duration in their summaries

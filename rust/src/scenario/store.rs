@@ -53,6 +53,12 @@ pub struct RunSummary {
     /// excluded from merge conflict detection ([`RunSummary::content_eq`]):
     /// it records how long the host took, not what the cell computed.
     pub wall_secs: Option<f64>,
+    /// Wall seconds of *every* repeat of a live (`wallclock-live`) cell
+    /// run under `sweep --repeats k` (length `k`; empty for deterministic
+    /// substrates and un-repeated runs). Like `wall_secs`, timing only:
+    /// feeds the `wall_median`/`wall_min` CSV columns but never content
+    /// equality — repeats measure the host, the seed decides the math.
+    pub wall_all: Vec<f64>,
 }
 
 /// JSON `Num`s cannot carry non-finite values; encode them as strings.
@@ -116,13 +122,15 @@ impl RunSummary {
                 .filter_map(|c| c.last().map(|(_, v)| v))
                 .collect(),
             wall_secs: rec.wall.map(|d| d.as_secs_f64()),
+            wall_all: Vec::new(),
         }
     }
 
-    /// Equality on result *content*: every field except `wall_secs`.
-    /// Compared through the canonical JSON rendering so non-finite values
-    /// (NaN fairness losses, infinite gradnorms) compare equal to
-    /// themselves — exactly the identity journal merging dedups by.
+    /// Equality on result *content*: every field except the timing ones
+    /// (`wall_secs`, `wall_all`). Compared through the canonical JSON
+    /// rendering so non-finite values (NaN fairness losses, infinite
+    /// gradnorms) compare equal to themselves — exactly the identity
+    /// journal merging dedups by.
     pub fn content_eq(&self, other: &RunSummary) -> bool {
         json::write(&self.content_json()) == json::write(&other.content_json())
     }
@@ -130,6 +138,7 @@ impl RunSummary {
     fn content_json(&self) -> Json {
         let mut c = self.clone();
         c.wall_secs = None;
+        c.wall_all = Vec::new();
         c.to_json()
     }
 
@@ -157,6 +166,10 @@ impl RunSummary {
                 Json::Arr(self.shard_final_losses.iter().map(|&l| num(l)).collect()),
             ),
             ("wall_secs", opt_num(self.wall_secs)),
+            (
+                "wall_all",
+                Json::Arr(self.wall_all.iter().map(|&w| num(w)).collect()),
+            ),
         ])
     }
 
@@ -193,6 +206,15 @@ impl RunSummary {
                 .collect::<Option<Vec<_>>>()?,
             // absent in pre-substrate journals ⇒ `get` yields Null ⇒ None
             wall_secs: opt("wall_secs")?,
+            // absent in pre-repeats journals ⇒ no per-repeat timings
+            wall_all: match j.get("wall_all") {
+                Json::Null => Vec::new(),
+                arr => arr
+                    .as_arr()?
+                    .iter()
+                    .map(get_num)
+                    .collect::<Option<Vec<_>>>()?,
+            },
         })
     }
 }
@@ -499,6 +521,7 @@ mod tests {
             concentration: Some(0.62),
             shard_final_losses: vec![0.3, 0.7, f64::NAN],
             wall_secs: None,
+            wall_all: Vec::new(),
         }
     }
 
@@ -506,6 +529,7 @@ mod tests {
     fn summary_roundtrips_through_json_including_nonfinite() {
         let mut s = sample_summary();
         s.wall_secs = Some(0.125);
+        s.wall_all = vec![0.125, 0.25, 0.0625];
         let j = json::parse(&json::write(&s.to_json())).unwrap();
         let back = RunSummary::from_json(&j).unwrap();
         assert_eq!(back.scheduler, s.scheduler);
@@ -520,6 +544,13 @@ mod tests {
         assert_eq!(back.shard_final_losses[..2], s.shard_final_losses[..2]);
         assert!(back.shard_final_losses[2].is_nan());
         assert_eq!(back.wall_secs, Some(0.125));
+        assert_eq!(back.wall_all, s.wall_all);
+        // pre-repeats journal lines (no wall_all key) still load
+        let old = json::parse(
+            &json::write(&sample_summary().to_json()).replace(",\"wall_all\":[]", ""),
+        )
+        .unwrap();
+        assert!(RunSummary::from_json(&old).unwrap().wall_all.is_empty());
     }
 
     #[test]
@@ -527,6 +558,7 @@ mod tests {
         let a = sample_summary();
         let mut b = sample_summary();
         b.wall_secs = Some(2.0);
+        b.wall_all = vec![2.0, 3.0];
         // NaN fairness entries still compare equal to themselves (JSON
         // canonical form), and wall time is not content
         assert!(a.content_eq(&b));

@@ -224,10 +224,14 @@ fn sweep_wallclock_deterministic_matches_sim_in_shared_columns() {
             })
             .collect()
     };
-    assert!(sim.lines().next().unwrap().ends_with(",substrate"));
+    assert!(sim
+        .lines()
+        .next()
+        .unwrap()
+        .ends_with(",substrate,wall_median,wall_min"));
     assert_eq!(
-        strip(&sim, ",sim"),
-        strip(&wc, ",wallclock-det"),
+        strip(&sim, ",sim,,"),
+        strip(&wc, ",wallclock-det,,"),
         "deterministic wall-clock sweep must match sim in every shared column"
     );
 

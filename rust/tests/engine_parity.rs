@@ -288,6 +288,80 @@ fn sharded_runs_are_bitwise_identical_across_substrates() {
     }
 }
 
+/// The determinism contract of the intra-cell compute pool
+/// (`linalg::par`): the same sharded cell run serially and at pool width
+/// N must produce bit-identical trajectories, on both substrates. Chunk
+/// boundaries are a function of vector length only and chunk partials
+/// fold in ascending index order, so the pool width is unobservable in
+/// the math.
+#[test]
+fn sharded_trajectories_are_bitwise_identical_across_pool_widths() {
+    use ringmaster::linalg::par::ComputePool;
+    use std::sync::Arc;
+
+    let n = 4;
+    let seed = 5;
+    let ds = synthetic_mnist(240, 0.15, 3);
+    let problem = LogisticProblem::from_dataset(&ds, 0.01);
+    let part = partition::label_skew(&ds.labels, N_CLASSES, n, 0.3, 7);
+    let model = ComputeModel::random_paper(n);
+    let batch = 4;
+    let kind = SchedulerKind::Ringmaster { r: 3, gamma: 0.02, cancel: true };
+    let dcfg = DriverConfig {
+        seed,
+        max_iters: 60,
+        record_every: 10,
+        ..Default::default()
+    };
+
+    // simulator substrate: serial `run` vs `run_pooled` at width 3
+    let mut driver = Driver::new(
+        Sharded::new(problem.clone(), part.clone(), batch),
+        model.clone(),
+        dcfg.clone(),
+    );
+    let mut s1 = kind.build();
+    let serial = driver.run(s1.as_mut());
+    let pool = ComputePool::new(3);
+    let mut s2 = kind.build();
+    let pooled = driver.run_pooled(s2.as_mut(), &pool);
+    assert!(serial.iters > 0, "progress");
+    assert_eq!(serial.iters, pooled.iters, "sim: iterate count");
+    assert_eq!(serial.x_final, pooled.x_final, "sim: iterate trajectory");
+    assert_eq!(serial.worker_hits, pooled.worker_hits, "sim: shard hits");
+    assert_eq!(serial.gap_curve.t, pooled.gap_curve.t, "sim: record times");
+    assert_eq!(serial.gap_curve.v, pooled.gap_curve.v, "sim: record values");
+
+    // deterministic wall-clock substrate: no pool vs a width-3 pool
+    let wall = |compute: Option<Arc<ComputePool>>| {
+        let mut s = kind.build();
+        run_wallclock_sharded(
+            &problem,
+            &part,
+            batch,
+            &model,
+            s.as_mut(),
+            &ExecConfig {
+                time_scale: 1e-4,
+                max_iters: 60,
+                seed,
+                record_every: 10,
+                deterministic: true,
+                compute,
+                ..Default::default()
+            },
+        )
+    };
+    let wc_serial = wall(None);
+    let wc_pooled = wall(Some(Arc::new(ComputePool::new(3))));
+    assert_eq!(wc_serial.iters, wc_pooled.iters, "wallclock: iterate count");
+    assert_eq!(wc_serial.x_final, wc_pooled.x_final, "wallclock: trajectory");
+    assert_eq!(wc_serial.worker_hits, wc_pooled.worker_hits, "wallclock: hits");
+    assert_eq!(wc_serial.gap_curve.v, wc_pooled.gap_curve.v, "wallclock: curves");
+    // and the two substrates still agree with each other under pooling
+    assert_eq!(pooled.x_final, wc_pooled.x_final, "cross-substrate parity");
+}
+
 /// Deterministic mode is not sharding-specific: the classic §G noisy
 /// quadratic also reproduces bit-for-bit across substrates.
 #[test]

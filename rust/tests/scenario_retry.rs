@@ -73,6 +73,7 @@ fn transient_failure_retries_and_csv_is_byte_identical_to_clean_run() {
         Some(&mut store),
         None,
         RetryPolicy::default(),
+        1,
         |cell, budget| {
             if cell.key() == victim && victim_calls.fetch_add(1, Ordering::SeqCst) == 0 {
                 panic!("{}: failure injected for test", RetryPolicy::TRANSIENT_MARKER);
@@ -137,6 +138,7 @@ fn permanent_panics_are_not_retried() {
             None,
             None,
             RetryPolicy::new(5),
+            1,
             |cell, budget| {
                 if cell.key() == victim {
                     victim_calls.fetch_add(1, Ordering::SeqCst);
@@ -209,6 +211,7 @@ fn merge_refuses_conflicting_payloads_under_the_same_key() {
         Some(&mut store),
         Some(1),
         RetryPolicy::none(),
+        1,
         |cell, budget| {
             let (mut rec, conc) = scenario::run_cell(cell, budget);
             rec.iters += 1; // different result, same key
@@ -246,8 +249,8 @@ fn deterministic_wallclock_grid_matches_sim_grid_on_a_sharded_problem() {
             .collect()
     };
     assert_eq!(
-        strip(&sim_csv, ",sim"),
-        strip(&wc_csv, ",wallclock-det"),
+        strip(&sim_csv, ",sim,,"),
+        strip(&wc_csv, ",wallclock-det,,"),
         "every shared CSV column must be substrate-invariant"
     );
 }

@@ -1,14 +1,17 @@
 #!/usr/bin/env python3
 """Perf-trajectory gate for the `bench-smoke` CI job.
 
-Usage: bench_regression.py <fresh.json> <baseline-dir>
+Usage:
+  bench_regression.py <fresh.json> <baseline-dir>   # gate (exit 1 on regression)
+  bench_regression.py trend <baseline-dir>          # print PR-over-PR trajectories
 
-Validates the freshly measured BENCH report against the schema and fails
-(exit 1) when its throughput regresses more than REGRESSION_FACTOR against
-any *comparable, measured* committed baseline (`BENCH_*.json` in
-<baseline-dir>). Baselines are comparable when bench, scale, substrate and
-n_workers all match; baselines with provenance "placeholder" (schema
-committed before a measured value exists) or null metrics are skipped.
+Gate mode validates the freshly measured BENCH report against the schema
+and fails (exit 1) when its throughput regresses more than
+REGRESSION_FACTOR against any *comparable, measured* committed baseline
+(`BENCH_*.json` in <baseline-dir>). Baselines are comparable when bench,
+scale, substrate and n_workers all match; baselines with provenance
+"placeholder" (schema committed before a measured value exists) or null
+metrics are skipped.
 
 Two throughput surfaces are gated, both higher-is-better at the same
 threshold:
@@ -19,6 +22,11 @@ threshold:
   **both** the fresh report and the baseline. Metrics only one side
   carries are reported but not gated, so adding a new metric never fails
   the gate against older baselines.
+
+Trend mode never fails: it sorts the committed `BENCH_<pr>.json` reports
+by PR number, groups them by (bench, scale, substrate, n_workers), and
+prints each named metric's trajectory across PRs — the human-readable
+perf history that the gate's pairwise ratios can't show.
 """
 
 import glob
@@ -80,7 +88,60 @@ def gate_ratio(name, base_value, fresh_value, failures, path):
         failures.append(f"{path}:{name}")
 
 
+def pr_number(path):
+    """BENCH_<pr>.json → <pr> as int (for chronological sorting)."""
+    stem = os.path.basename(path)
+    digits = "".join(c for c in stem if c.isdigit())
+    return int(digits) if digits else -1
+
+
+def trend(baseline_dir):
+    """Print PR-over-PR metric trajectories. Informational only: exit 0."""
+    paths = sorted(
+        glob.glob(os.path.join(baseline_dir, "BENCH_*.json")), key=pr_number
+    )
+    if not paths:
+        print(f"no BENCH_*.json reports in {baseline_dir}")
+        return
+    groups = {}  # (bench, scale, substrate, n_workers) -> [(pr, report)]
+    for path in paths:
+        report = load(path)
+        check_schema(report, path)
+        key = (
+            report["bench"],
+            report["scale"],
+            report["substrate"],
+            report["n_workers"],
+        )
+        groups.setdefault(key, []).append((pr_number(path), report))
+    for (bench, scale, substrate, n_workers), runs in sorted(groups.items()):
+        print(f"== {bench}/{scale}/{substrate} n={n_workers} ==")
+        names = ["cells_per_sec"]
+        for _, report in runs:
+            for name in report.get("metrics") or {}:
+                if name not in names:
+                    names.append(name)
+        for name in names:
+            points = []
+            for pr, report in runs:
+                if report["provenance"] != "measured":
+                    points.append(f"PR{pr}: placeholder")
+                    continue
+                value = (
+                    report["cells_per_sec"]
+                    if name == "cells_per_sec"
+                    else (report.get("metrics") or {}).get(name)
+                )
+                if is_number(value):
+                    points.append(f"PR{pr}: {value:.3f}")
+            if points:
+                print(f"  {name}: " + "  ".join(points))
+
+
 def main():
+    if len(sys.argv) == 3 and sys.argv[1] == "trend":
+        trend(sys.argv[2])
+        return
     if len(sys.argv) != 3:
         sys.exit(__doc__)
     fresh_path, baseline_dir = sys.argv[1], sys.argv[2]

@@ -9,9 +9,15 @@
 //! * end-to-end simulated events/s on the §G quadratic at several n;
 //! * PJRT quadratic gradient (artifact call overhead), when artifacts exist.
 //!
+//! * the full monomorphized engine loop at n = 1,000,000
+//!   (`run_pooled_kind` + slab-recycled [`ringmaster::engine::SimSource`])
+//!   with a small real gradient, one configuration per server decision
+//!   path (step / accumulate / discard);
+//!
 //! With `RINGMASTER_BENCH_JSON=path` set (CI's `bench-smoke` job), writes
 //! a schema-v1 report whose `"metrics"` object carries the named
 //! throughputs (`sim_events_per_sec`, `sim_1m_events_per_sec`,
+//! `engine_events_{step,accumulate,discard}_per_sec`,
 //! `driver_updates_per_sec_n*`, `matvec_gb_per_sec`) that
 //! `tools/bench_regression.py` gates against the committed baseline.
 
@@ -153,6 +159,59 @@ fn main() {
             cells: 1,
             wall_seconds: m.median_s,
         });
+    }
+
+    // 2b. full engine hot path at n = 1,000,000: the monomorphized server
+    //     loop (`run_pooled_kind` — static scheduler dispatch), slab-
+    //     recycled sim assignments, incremental per-worker RNG streams and
+    //     lazy side tables (`record_worker_hits: false` ⇒ no 8 MB hit
+    //     table), with a real d = 8 gradient materialized per delivery.
+    //     One config per decision path: ASGD steps on every arrival,
+    //     Rennala accumulates b-sized batches, small-R Ringmaster without
+    //     cancellation discards nearly everything at this scale. Events =
+    //     initial assigns + consumed arrivals; cluster construction is
+    //     deliberately inside the timed region, as in bench 2.
+    {
+        use ringmaster::engine::{run_pooled_kind, SimSource};
+        let n = 1_000_000usize;
+        let configs: [(&str, SchedulerKind, u64); 3] = [
+            ("step", SchedulerKind::Asgd { gamma: 1e-4 }, 200_000),
+            ("accumulate", SchedulerKind::Rennala { b: 256, gamma: 1e-4 }, 800),
+            (
+                "discard",
+                SchedulerKind::Ringmaster { r: 1, gamma: 1e-4, cancel: false },
+                15_000,
+            ),
+        ];
+        let pool = ComputePool::new(1);
+        for (path, kind, max_iters) in configs {
+            let cfg = DriverConfig {
+                seed: 1,
+                max_iters,
+                record_every: 1_000_000_000,
+                record_worker_hits: false,
+                ..Default::default()
+            };
+            let mut events = 0.0f64;
+            let m = bench(&format!("engine events (n=1M, d=8, {path} path)"), 0, 3, || {
+                let mut problem = Noisy::new(QuadraticProblem::paper(8), 0.0);
+                let mut source = SimSource::new(ComputeModel::fixed_linear(n), cfg.seed);
+                let rec = run_pooled_kind(&mut problem, &mut source, &kind, &cfg, &pool);
+                events = n as f64 + (rec.applied + rec.accumulated + rec.discarded) as f64;
+                bb(rec.iters);
+            });
+            report(&m);
+            println!(
+                "    → {:.2} M events/s ({events:.0} events incl. {n} initial assigns)",
+                m.throughput(events) / 1e6
+            );
+            metrics.push((format!("engine_events_{path}_per_sec"), m.throughput(events)));
+            stats.push(SchedulerStat {
+                name: format!("engine_events_{path}_n1m"),
+                cells: 1,
+                wall_seconds: m.median_s,
+            });
+        }
     }
 
     // 3. native quadratic gradient at the paper's d

@@ -98,7 +98,48 @@ pub enum SchedulerKind {
     Minibatch { m: usize, gamma: f64 },
 }
 
+/// Rank-2 visitor over the concrete scheduler type behind a
+/// [`SchedulerKind`] — the statically-typed twin of
+/// [`SchedulerKind::build`]. `visit` is generic in `S`, so whatever loop
+/// the visitor runs is monomorphized once per scheduler family: the
+/// per-call virtual dispatch of a `Box<dyn Scheduler>` disappears.
+/// `engine::run_pooled_kind` uses this to specialize the per-arrival hot
+/// loop.
+pub trait SchedulerVisitor {
+    type Out;
+    fn visit<S: Scheduler>(self, sched: S) -> Self::Out;
+}
+
 impl SchedulerKind {
+    /// Build the concrete scheduler and hand it to `v` with its static
+    /// type intact — one `match` per run instead of one virtual call per
+    /// arrival. Constructs exactly the same scheduler as
+    /// [`SchedulerKind::build`] (kept in lockstep; see
+    /// `visit_built_matches_build`).
+    pub fn visit_built<V: SchedulerVisitor>(&self, v: V) -> V::Out {
+        match *self {
+            SchedulerKind::Ringmaster { r, gamma, cancel } => {
+                v.visit(RingmasterScheduler::new(r, gamma, cancel))
+            }
+            SchedulerKind::Asgd { gamma } => {
+                v.visit(AsgdScheduler::new(StepsizeRule::Constant(gamma)))
+            }
+            SchedulerKind::DelayAdaptive { gamma } => {
+                v.visit(AsgdScheduler::new(StepsizeRule::DelayAdaptive { gamma }))
+            }
+            SchedulerKind::Rennala { b, gamma } => v.visit(RennalaScheduler::new(b, gamma)),
+            SchedulerKind::Buffered { b, gamma } => v.visit(BufferedAsgdScheduler::new(
+                b,
+                gamma,
+                StalenessWeight::Polynomial { p: 0.5 },
+            )),
+            SchedulerKind::Naive { m_star, gamma } => {
+                v.visit(NaiveOptimalScheduler::with_m_star(m_star, gamma))
+            }
+            SchedulerKind::Minibatch { m, gamma } => v.visit(MinibatchScheduler::new(m, gamma)),
+        }
+    }
+
     pub fn build(&self) -> Box<dyn Scheduler> {
         match *self {
             SchedulerKind::Ringmaster { r, gamma, cancel } => {
@@ -186,5 +227,48 @@ mod tests {
         uniq.sort();
         uniq.dedup();
         assert_eq!(uniq.len(), 7, "{names:?}");
+    }
+
+    #[test]
+    fn visit_built_matches_build() {
+        // the static and dynamic factories must construct the same
+        // scheduler: identical names and identical decision streams on a
+        // shared arrival sequence
+        struct Probe {
+            arrivals: Vec<(usize, u64)>,
+        }
+        impl SchedulerVisitor for Probe {
+            type Out = (String, Vec<Decision>, bool, Option<u64>);
+            fn visit<S: Scheduler>(self, mut s: S) -> Self::Out {
+                let ds = self
+                    .arrivals
+                    .iter()
+                    .map(|&(w, d)| s.on_arrival(w, d))
+                    .collect();
+                (s.name(), ds, s.reassign_after_arrival(), s.cancel_threshold(100))
+            }
+        }
+        let kinds = [
+            SchedulerKind::Ringmaster { r: 4, gamma: 0.1, cancel: true },
+            SchedulerKind::Asgd { gamma: 0.1 },
+            SchedulerKind::DelayAdaptive { gamma: 0.1 },
+            SchedulerKind::Rennala { b: 3, gamma: 0.1 },
+            SchedulerKind::Buffered { b: 3, gamma: 0.1 },
+            SchedulerKind::Naive { m_star: 3, gamma: 0.1 },
+            SchedulerKind::Minibatch { m: 4, gamma: 0.1 },
+        ];
+        let arrivals: Vec<(usize, u64)> =
+            (0..32).map(|i| (i % 4, (i % 5) as u64)).collect();
+        for kind in kinds {
+            let (name, ds, reassign, thr) =
+                kind.visit_built(Probe { arrivals: arrivals.clone() });
+            let mut b = kind.build();
+            assert_eq!(name, b.name(), "{kind:?}");
+            let bds: Vec<Decision> =
+                arrivals.iter().map(|&(w, d)| b.on_arrival(w, d)).collect();
+            assert_eq!(ds, bds, "{kind:?}: decision streams diverge");
+            assert_eq!(reassign, b.reassign_after_arrival(), "{kind:?}");
+            assert_eq!(thr, b.cancel_threshold(100), "{kind:?}");
+        }
     }
 }

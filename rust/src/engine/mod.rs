@@ -56,7 +56,7 @@ pub use thread_source::{
 use std::sync::Arc;
 use std::time::Duration;
 
-use crate::coordinator::{Decision, Scheduler};
+use crate::coordinator::{Decision, Scheduler, SchedulerKind, SchedulerVisitor};
 use crate::linalg::par::ComputePool;
 use crate::metrics::{Curve, Span, SpanOutcome, Trace};
 use crate::opt::StochasticProblem;
@@ -87,6 +87,15 @@ pub struct DriverConfig {
     /// Record per-worker execution spans (bounded ring buffer + running
     /// utilization totals). Off by default.
     pub record_trace: bool,
+    /// Ring capacity of the execution trace (spans retained when
+    /// `record_trace` is set). Previously hard-coded at 65 536.
+    pub trace_capacity: usize,
+    /// Maintain `RunRecord::worker_hits` (per-worker consumed-delivery
+    /// counts — the shard-hit accounting). On by default; disabling it
+    /// frees a million-worker cell from the O(n) side table when the
+    /// output is not consumed. The table is also allocated lazily, on the
+    /// first consumed delivery.
+    pub record_worker_hits: bool,
     /// Record per-shard loss curves at every record point (fairness
     /// diagnostics for [`crate::opt::Sharded`]-style problems; a no-op for
     /// problems whose [`crate::opt::StochasticProblem::shard_losses`]
@@ -107,6 +116,8 @@ impl Default for DriverConfig {
             record_every: 100,
             record_update_times: false,
             record_trace: false,
+            trace_capacity: 65_536,
+            record_worker_hits: true,
             record_shard_losses: false,
             server_opt: ServerOpt::Sgd,
         }
@@ -284,6 +295,63 @@ where
     P: StochasticProblem + ?Sized,
     S: GradientSource<P> + ?Sized,
 {
+    run_inner(problem, source, sched, cfg, pool)
+}
+
+/// [`run_pooled`] with the scheduler family dispatched **once**: the
+/// `match` over [`SchedulerKind`] happens here, outside the loop, and each
+/// arm runs a monomorphized copy of [`run_inner`] specialized to its
+/// concrete scheduler type — the per-arrival virtual calls
+/// (`on_arrival`, `reassign_after_arrival`, `cancel_threshold`)
+/// devirtualize and inline. Produces the same record, bit for bit, as
+/// `run_pooled(problem, source, kind.build().as_mut(), cfg, pool)`:
+/// [`SchedulerKind::visit_built`] constructs the identical scheduler and
+/// the loop body is shared.
+pub fn run_pooled_kind<P, G>(
+    problem: &mut P,
+    source: &mut G,
+    kind: &SchedulerKind,
+    cfg: &DriverConfig,
+    pool: &ComputePool,
+) -> RunRecord
+where
+    P: StochasticProblem + ?Sized,
+    G: GradientSource<P> + ?Sized,
+{
+    struct V<'a, P: ?Sized, G: ?Sized> {
+        problem: &'a mut P,
+        source: &'a mut G,
+        cfg: &'a DriverConfig,
+        pool: &'a ComputePool,
+    }
+    impl<P, G> SchedulerVisitor for V<'_, P, G>
+    where
+        P: StochasticProblem + ?Sized,
+        G: GradientSource<P> + ?Sized,
+    {
+        type Out = RunRecord;
+        fn visit<S: Scheduler>(self, mut sched: S) -> RunRecord {
+            run_inner(self.problem, self.source, &mut sched, self.cfg, self.pool)
+        }
+    }
+    kind.visit_built(V { problem, source, cfg, pool })
+}
+
+/// The authoritative per-delivery loop, generic over the scheduler type:
+/// called with `Sch = dyn Scheduler` by the classic entry points and with
+/// the concrete scheduler family by [`run_pooled_kind`] (static dispatch).
+fn run_inner<P, Sch, Src>(
+    problem: &mut P,
+    source: &mut Src,
+    sched: &mut Sch,
+    cfg: &DriverConfig,
+    pool: &ComputePool,
+) -> RunRecord
+where
+    P: StochasticProblem + ?Sized,
+    Sch: Scheduler + ?Sized,
+    Src: GradientSource<P> + ?Sized,
+{
     let dim = problem.dim();
     let n = source.n_workers();
     let f_star = problem.f_star();
@@ -296,7 +364,7 @@ where
     let mut grad_buf = vec![0.0; dim];
     let mut acc = vec![0.0; dim];
     let mut server = ServerOptState::new(cfg.server_opt.clone(), dim, n);
-    let mut trace = cfg.record_trace.then(|| Trace::new(n, 65_536));
+    let mut trace = cfg.record_trace.then(|| Trace::new(n, cfg.trace_capacity));
     let mut cancel_spans: Vec<(usize, f64, u64)> = Vec::new();
     let mut acc_count = 0u64;
     let mut k = 0u64;
@@ -319,7 +387,11 @@ where
     let mut applied = 0u64;
     let mut accumulated = 0u64;
     let mut discarded = 0u64;
-    let mut worker_hits = vec![0u64; n];
+    // O(n) side table, allocated lazily on the first consumed delivery
+    // (and not at all when `record_worker_hits` is off) — a million-worker
+    // cell that never consumes, or whose caller disabled the output, pays
+    // nothing for it
+    let mut worker_hits: Vec<u64> = Vec::new();
     let mut time_to_eps: Option<f64> = None;
 
     // reusable evaluation scratch — `record` runs every `record_every`
@@ -388,13 +460,20 @@ where
         },
     );
 
-    // initial assignments: active subset or everyone, at x^0
-    let active: Vec<usize> = match sched.active_workers() {
-        Some(ws) => ws.to_vec(),
-        None => (0..n).collect(),
-    };
-    for &w in &active {
-        source.assign(w, 0, &snap);
+    // initial assignments: active subset or everyone, at x^0 — iterate
+    // the scheduler's set directly instead of collecting an O(n) index
+    // buffer
+    match sched.active_workers() {
+        Some(ws) => {
+            for &w in ws {
+                source.assign(w, 0, &snap);
+            }
+        }
+        None => {
+            for w in 0..n {
+                source.assign(w, 0, &snap);
+            }
+        }
     }
     let mut idle: Vec<usize> = Vec::new();
 
@@ -431,7 +510,12 @@ where
         // Discard skips the O(d) work entirely (on the simulator)
         if !matches!(decision, Decision::Discard) {
             source.materialize(&mut *problem, &arrival, &mut grad_buf);
-            worker_hits[worker] += 1;
+            if cfg.record_worker_hits {
+                if worker_hits.is_empty() {
+                    worker_hits.resize(n, 0);
+                }
+                worker_hits[worker] += 1;
+            }
         }
         match decision {
             Decision::Step { gamma } => {
@@ -679,6 +763,120 @@ mod tests {
             // timestamps stay monotone after the clamp
             assert!(curve.t.windows(2).all(|w| w[0] <= w[1]));
         }
+    }
+
+    #[test]
+    fn kind_dispatch_matches_dyn_dispatch_bitwise() {
+        // the monomorphized family dispatch must be byte-identical to the
+        // classic dyn path on every scheduler kind — same scheduler, same
+        // loop, so every curve sample and the final iterate agree exactly
+        use crate::coordinator::SchedulerKind;
+        use crate::opt::{Noisy, QuadraticProblem};
+        use crate::sim::ComputeModel;
+        let kinds = [
+            SchedulerKind::Ringmaster { r: 3, gamma: 0.2, cancel: true },
+            SchedulerKind::Ringmaster { r: 3, gamma: 0.2, cancel: false },
+            SchedulerKind::Asgd { gamma: 0.15 },
+            SchedulerKind::DelayAdaptive { gamma: 0.2 },
+            SchedulerKind::Rennala { b: 3, gamma: 0.3 },
+            SchedulerKind::Buffered { b: 3, gamma: 0.2 },
+            SchedulerKind::Naive { m_star: 2, gamma: 0.2 },
+            SchedulerKind::Minibatch { m: 6, gamma: 0.4 },
+        ];
+        for kind in kinds {
+            let model = ComputeModel::random_paper(6);
+            let cfg = DriverConfig {
+                seed: 7,
+                max_iters: 250,
+                record_every: 25,
+                ..Default::default()
+            };
+            let cancels = kind.build().cancel_threshold(u64::MAX).is_some();
+
+            let mut p1 = Noisy::new(QuadraticProblem::paper(8), 1e-3);
+            let mut src1 = SimSource::new(model.clone(), cfg.seed);
+            src1.set_track_stale(cancels);
+            let mut sched = kind.build();
+            let a = run(&mut p1, &mut src1, sched.as_mut(), &cfg);
+
+            let mut p2 = Noisy::new(QuadraticProblem::paper(8), 1e-3);
+            let mut src2 = SimSource::new(model.clone(), cfg.seed);
+            src2.set_track_stale(cancels);
+            let b = run_pooled_kind(&mut p2, &mut src2, &kind, &cfg, ComputePool::serial_ref());
+
+            let name = kind.build().name();
+            assert!(a.iters > 0, "{name}: progress");
+            assert_eq!(a.iters, b.iters, "{name}");
+            assert_eq!(a.x_final, b.x_final, "{name}: iterate trajectory");
+            assert_eq!(a.gap_curve.t, b.gap_curve.t, "{name}: record times");
+            assert_eq!(a.gap_curve.v, b.gap_curve.v, "{name}: record values");
+            assert_eq!(a.gradnorm_curve.v, b.gradnorm_curve.v, "{name}");
+            assert_eq!(a.worker_hits, b.worker_hits, "{name}");
+            assert_eq!(
+                (a.applied, a.accumulated, a.discarded),
+                (b.applied, b.accumulated, b.discarded),
+                "{name}"
+            );
+            assert_eq!(a.cluster, b.cluster, "{name}: source counters");
+            assert_eq!(a.scheduler, b.scheduler, "{name}: display name");
+        }
+    }
+
+    #[test]
+    fn large_n_run_skips_side_tables_when_disabled() {
+        // regression for the unconditional vec![0u64; n] / Trace::new(n, _)
+        // allocations: a big-n cell with per-worker outputs disabled must
+        // not materialize any O(n) accounting table
+        use crate::coordinator::SchedulerKind;
+        use crate::driver::Driver;
+        use crate::opt::{Noisy, QuadraticProblem};
+        use crate::sim::ComputeModel;
+        let n = 200_000;
+        let mut d = Driver::new(
+            Noisy::new(QuadraticProblem::paper(4), 0.0),
+            ComputeModel::fixed_linear(n),
+            DriverConfig {
+                seed: 1,
+                max_iters: 25,
+                record_every: 10,
+                record_worker_hits: false,
+                ..Default::default()
+            },
+        );
+        let mut s = SchedulerKind::Asgd { gamma: 0.05 }.build();
+        let rec = d.run(s.as_mut());
+        assert!(rec.iters > 0, "budget admits work");
+        assert!(
+            rec.worker_hits.is_empty(),
+            "hits table must stay unallocated when disabled"
+        );
+        assert!(rec.trace.is_none());
+    }
+
+    #[test]
+    fn trace_capacity_comes_from_config() {
+        use crate::coordinator::SchedulerKind;
+        use crate::driver::Driver;
+        use crate::opt::{Noisy, QuadraticProblem};
+        use crate::sim::ComputeModel;
+        let cap = 100;
+        let mut d = Driver::new(
+            Noisy::new(QuadraticProblem::paper(4), 0.0),
+            ComputeModel::fixed_linear(4),
+            DriverConfig {
+                seed: 2,
+                max_iters: 400,
+                record_every: 100,
+                record_trace: true,
+                trace_capacity: cap,
+                ..Default::default()
+            },
+        );
+        let mut s = SchedulerKind::Asgd { gamma: 0.05 }.build();
+        let rec = d.run(s.as_mut());
+        let tr = rec.trace.expect("trace requested");
+        assert!(tr.len() <= cap.max(16), "ring respects configured capacity");
+        assert!(tr.dropped() > 0, "400 spans must overflow a 100-slot ring");
     }
 
     #[test]

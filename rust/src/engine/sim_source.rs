@@ -13,7 +13,6 @@ use std::sync::Arc;
 
 use super::{Delivery, GradientSource};
 use crate::opt::{StochasticProblem, WorkerCtx};
-use crate::prng::Prng;
 use crate::sim::{Cluster, ClusterStats, ComputeModel};
 
 /// Simulated-clock gradient source.
@@ -75,11 +74,9 @@ impl<P: StochasticProblem + ?Sized> GradientSource<P> for SimSource {
         // reference now — once every worker has moved off an iterate the
         // engine can recycle that snapshot's allocation via `Arc::get_mut`
         let point = self.cluster.take_point(delivery.worker);
-        let mut rng = Prng::assignment_stream(
-            self.cluster.data_seed(),
-            delivery.worker as u64,
-            self.cluster.assign_ordinal(delivery.worker),
-        );
+        // incremental derivation from the per-worker cached base key —
+        // bit-identical to re-keying the (seed, worker, ordinal) triple
+        let mut rng = self.cluster.assignment_rng(delivery.worker);
         problem.stoch_grad(
             &point,
             WorkerCtx {

@@ -40,7 +40,7 @@
 
 use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
 use std::sync::mpsc;
-use std::sync::Arc;
+use std::sync::{Arc, Mutex};
 use std::thread;
 use std::time::{Duration, Instant};
 
@@ -68,11 +68,12 @@ pub struct ThreadPoolConfig {
     /// (worker computation still overlaps).
     pub deterministic: bool,
     /// Shared compute pool whose [`crate::linalg::par::Arena`] recycles
-    /// the per-assignment gradient buffers (worker threads allocate one
-    /// `Vec<f64>` per delivery otherwise). Worker threads use only the
+    /// the per-assignment gradient buffers. Worker threads use only the
     /// arena — never the pooled kernels, which would serialize all
-    /// workers through the pool's submit lock. `None` keeps the old
-    /// allocate-per-assignment behavior.
+    /// workers through the pool's submit lock. With `None`, buffers are
+    /// recycled through the source's own per-worker slab instead (see
+    /// [`ThreadSource`]); either way steady-state delivery churn performs
+    /// no heap allocation.
     pub compute: Option<Arc<ComputePool>>,
 }
 
@@ -195,10 +196,20 @@ pub struct ThreadSource {
     stats: ClusterStats,
     /// Gradient of the most recent valid delivery, awaiting `materialize`.
     pending: Vec<f64>,
+    /// Worker the current `pending` gradient came from — the slab slot it
+    /// is returned to once the next delivery replaces it.
+    pending_from: usize,
     /// Pool whose arena the delivery gradients came from (recycled on the
-    /// next delivery / on stale-buffer invalidation); `None` ⇒ plain
-    /// allocation.
+    /// next delivery / on stale-buffer invalidation); `None` ⇒ the
+    /// per-worker `slabs` below recycle them instead.
     compute: Option<Arc<ComputePool>>,
+    /// Per-worker free lists of gradient envelopes, shared with the worker
+    /// threads: the server returns each spent buffer to the slot of the
+    /// worker that produced it, and that worker reuses it for its next
+    /// delivery — steady-state churn allocates nothing even without a
+    /// compute pool. One lock per worker slot, contended only between the
+    /// server and that single worker.
+    slabs: Arc<Vec<Mutex<Vec<Vec<f64>>>>>,
     // --- deterministic (virtual-time) mode state ---
     deterministic: bool,
     /// Virtual clock: vt of the last released delivery.
@@ -254,6 +265,9 @@ impl ThreadSource {
         let stop = Arc::new(AtomicBool::new(false));
         // per-worker assignment generation (bumped to cancel, Algorithm 5)
         let gens: Arc<Vec<AtomicU64>> = Arc::new((0..n).map(|_| AtomicU64::new(0)).collect());
+        // per-worker gradient-envelope slab (no-pool recycling path)
+        let slabs: Arc<Vec<Mutex<Vec<Vec<f64>>>>> =
+            Arc::new((0..n).map(|_| Mutex::new(Vec::new())).collect());
         let mut mailboxes: Vec<mpsc::Sender<Assignment>> = Vec::with_capacity(n);
 
         let mut root_rng = Prng::seed_from_u64(cfg.seed);
@@ -274,12 +288,18 @@ impl ThreadSource {
             let seed = cfg.seed;
             let deterministic = cfg.deterministic;
             let compute = cfg.compute.clone();
+            let slabs = slabs.clone();
             scope.spawn(move || {
                 let t0 = Instant::now();
                 // per-worker assignment ordinal: one mailbox message per
                 // server-side assign, so this matches the simulator's
                 // per-worker assignment count exactly
                 let mut ordinal: u64 = 0;
+                // stage-1 key of this worker's assignment streams — a
+                // function of (seed, w) only, so hoist it out of the loop;
+                // assignment_stream_at(base, ordinal) is bit-identical to
+                // re-keying the full triple per delivery
+                let stream_base = Prng::assignment_stream_base(seed, w as u64);
                 while let Ok(a) = arx.recv() {
                     if stop.load(Ordering::Relaxed) {
                         break;
@@ -311,11 +331,24 @@ impl ThreadSource {
                         // keyed by ordinal, so skipping it shifts nothing
                         continue;
                     }
+                    // gradient envelope: pool arena, or this worker's own
+                    // slab slot — both return a zeroed buffer (recycled
+                    // capacity when available), bit-identical to a fresh
+                    // `vec![0.0; d]`
                     let mut g = match &compute {
                         Some(p) => p.arena().take(a.point.len()),
-                        None => vec![0.0; a.point.len()],
+                        None => {
+                            let mut g = slabs[w]
+                                .lock()
+                                .unwrap_or_else(|e| e.into_inner())
+                                .pop()
+                                .unwrap_or_default();
+                            g.clear();
+                            g.resize(a.point.len(), 0.0);
+                            g
+                        }
                     };
-                    let mut draw = Prng::assignment_stream(seed, w as u64, ordinal);
+                    let mut draw = Prng::assignment_stream_at(stream_base, ordinal);
                     sampler.sample(&a.point, &mut draw, &mut g);
                     if tx
                         .send(WorkerMsg {
@@ -347,7 +380,9 @@ impl ThreadSource {
             max_wall: cfg.max_wall,
             stats: ClusterStats::default(),
             pending: Vec::new(),
+            pending_from: 0,
             compute: cfg.compute.clone(),
+            slabs,
             deterministic: cfg.deterministic,
             vnow: 0.0,
             assign_seq: 0,
@@ -356,12 +391,25 @@ impl ThreadSource {
         }
     }
 
-    /// Return a spent delivery-gradient buffer to the pool arena (no-op
-    /// without a pool, or for the initial empty `pending`).
-    fn recycle(&self, buf: Vec<f64>) {
-        if let Some(p) = &self.compute {
-            if !buf.is_empty() {
-                p.arena().put(buf);
+    /// Slab depth cap per worker slot: at most one gradient is in flight
+    /// per worker plus one buffered plus the server's `pending`, so a
+    /// deeper free list would only hoard memory.
+    const SLAB_MAX_FREE: usize = 4;
+
+    /// Return a spent delivery-gradient buffer to the pool arena, or —
+    /// without a pool — to the slab slot of the worker that produced it
+    /// (no-op for the initial empty `pending`).
+    fn recycle(&self, worker: usize, buf: Vec<f64>) {
+        if buf.is_empty() {
+            return;
+        }
+        match &self.compute {
+            Some(p) => p.arena().put(buf),
+            None => {
+                let mut slab = self.slabs[worker].lock().unwrap_or_else(|e| e.into_inner());
+                if slab.len() < Self::SLAB_MAX_FREE {
+                    slab.push(buf);
+                }
             }
         }
     }
@@ -399,7 +447,8 @@ impl ThreadSource {
             };
             // stale by generation ⇒ a cancellation raced the send; drop
             if self.gens[msg.worker].load(Ordering::Acquire) != msg.gen {
-                self.recycle(msg.grad);
+                let (w, grad) = (msg.worker, msg.grad);
+                self.recycle(w, grad);
                 continue;
             }
             self.buffered[msg.worker] = Some(msg);
@@ -429,7 +478,8 @@ impl ThreadSource {
         self.stats.arrivals += 1;
         self.vnow = msg.vt;
         let old = std::mem::replace(&mut self.pending, msg.grad);
-        self.recycle(old);
+        let from = std::mem::replace(&mut self.pending_from, w);
+        self.recycle(from, old);
         Some(Delivery {
             worker: w,
             start_k: msg.start_k,
@@ -456,7 +506,7 @@ impl<P: StochasticProblem + ?Sized> GradientSource<P> for ThreadSource {
         self.seqs[worker] = self.assign_seq;
         // any buffered completion is stale now; reclaim its gradient
         if let Some(stale) = self.buffered[worker].take() {
-            self.recycle(stale.grad);
+            self.recycle(worker, stale.grad);
         }
         self.stats.assignments += 1;
         let _ = self.mailboxes[worker].send(Assignment {
@@ -482,13 +532,15 @@ impl<P: StochasticProblem + ?Sized> GradientSource<P> for ThreadSource {
             };
             // stale by generation ⇒ a cancellation raced the send; drop
             if self.gens[msg.worker].load(Ordering::Acquire) != msg.gen {
-                self.recycle(msg.grad);
+                let (w, grad) = (msg.worker, msg.grad);
+                self.recycle(w, grad);
                 continue;
             }
             self.busy[msg.worker] = false;
             self.stats.arrivals += 1;
             let old = std::mem::replace(&mut self.pending, msg.grad);
-            self.recycle(old);
+            let from = std::mem::replace(&mut self.pending_from, msg.worker);
+            self.recycle(from, old);
             return Some(Delivery {
                 worker: msg.worker,
                 start_k: msg.start_k,

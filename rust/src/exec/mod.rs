@@ -102,6 +102,7 @@ impl ExecConfig {
             record_trace: self.record_trace,
             record_shard_losses: false,
             server_opt: self.server_opt.clone(),
+            ..Default::default()
         }
     }
 }

@@ -37,13 +37,20 @@
 //!        │ resume: diff vs CellStore JSONL journal; --shard i/n fan-out;
 //!        │ transient-failure RetryPolicy (attempts journaled);
 //!        │ cross-machine: shard journals → merge_journals → one CSV
+//!        │ LPT cost-model dispatch: journaled wall_secs × attempts per
+//!        │ cost class (axes fallback) order pending cells longest-first;
+//!        │ stable sort + grid-order CSV assembly ⇒ output bytes unchanged
 //!        ▼  cells stream through sweep::parallel_map (panic-propagating);
 //!           each cell leases a ComputePool from the grid's PoolSet
 //!           (width = sweep::cell_threads: cores / sweep workers)
 //!            Scheduler (policy)            coordinator::*
-//!                  │ Decision
-//!                  ▼
+//!                  │ Decision                (SchedulerKind::visit_built:
+//!                  ▼                          static per-family dispatch)
 //!            engine::run_pooled (one loop) engine
+//!            engine::run_pooled_kind (the same loop, monomorphized per
+//!             scheduler family; slab-recycled sources, incremental
+//!             per-worker RNG streams, lazy worker_hits/trace tables —
+//!             the allocation-free n=1M event hot path)
 //!             │              │      │
 //!       SimSource      ThreadSource │     engine::{sim_source,thread_source}
 //!       (sim clock)    (wall / virtual clock)

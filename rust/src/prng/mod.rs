@@ -120,14 +120,30 @@ impl Prng {
     /// the thread pool's eager computation stay bit-identical even when
     /// they race Algorithm 5's calculation stops differently.
     pub fn assignment_stream(seed: u64, worker: u64, ordinal: u64) -> Prng {
+        Self::assignment_stream_at(Self::assignment_stream_base(seed, worker), ordinal)
+    }
+
+    /// Stage 1 of [`Prng::assignment_stream`]: the per-worker base key,
+    /// a function of `(run seed, worker)` only. Hot paths compute it once
+    /// per worker (at cluster construction / thread spawn) and advance
+    /// through ordinals with [`Prng::assignment_stream_at`], which is
+    /// bit-identical to re-keying the full triple on every assignment.
+    #[inline]
+    pub fn assignment_stream_base(seed: u64, worker: u64) -> u64 {
         let mut sm = SplitMix64::new(
             seed ^ worker
                 .wrapping_add(1)
                 .wrapping_mul(0x9E6C_63D0_4F9A_7B21),
         );
-        let base = sm.next_u64();
-        let mut sm2 = SplitMix64::new(base ^ ordinal.wrapping_mul(0xA24B_AED4_963E_E407));
-        Prng::seed_from_u64(sm2.next_u64())
+        sm.next_u64()
+    }
+
+    /// Stage 2 of [`Prng::assignment_stream`]: the ordinal-keyed stream
+    /// derived from a cached [`Prng::assignment_stream_base`] value.
+    #[inline]
+    pub fn assignment_stream_at(base: u64, ordinal: u64) -> Prng {
+        let mut sm = SplitMix64::new(base ^ ordinal.wrapping_mul(0xA24B_AED4_963E_E407));
+        Prng::seed_from_u64(sm.next_u64())
     }
 
     #[inline]
@@ -268,6 +284,31 @@ mod tests {
             let mut r = Prng::assignment_stream(seed, worker, ordinal);
             let c: Vec<u64> = (0..8).map(|_| r.next_u64()).collect();
             assert_ne!(a, c, "({seed},{worker},{ordinal})");
+        }
+    }
+
+    #[test]
+    fn incremental_assignment_stream_matches_rekeyed_triple() {
+        // property: caching the per-worker base and advancing by ordinal
+        // is bit-identical to re-keying the full (seed, worker, ordinal)
+        // triple on every assignment — the contract the hot paths rely on.
+        let mut g = Prng::seed_from_u64(0xA55E55ED);
+        for _ in 0..64 {
+            let seed = g.next_u64();
+            let worker = g.next_u64() % 1_000_000;
+            let base = Prng::assignment_stream_base(seed, worker);
+            let start = g.next_u64() % 1_000;
+            for ordinal in start..start + 16 {
+                let mut inc = Prng::assignment_stream_at(base, ordinal);
+                let mut full = Prng::assignment_stream(seed, worker, ordinal);
+                for _ in 0..8 {
+                    assert_eq!(
+                        inc.next_u64(),
+                        full.next_u64(),
+                        "(seed={seed}, worker={worker}, ordinal={ordinal})"
+                    );
+                }
+            }
         }
     }
 

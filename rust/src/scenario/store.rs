@@ -48,10 +48,14 @@ pub struct RunSummary {
     pub concentration: Option<f64>,
     /// Final per-shard losses (fairness metrics; empty when not recorded).
     pub shard_final_losses: Vec<f64>,
-    /// Host wall-clock seconds of the run (`Some` only for wall-clock
-    /// substrate cells). Diagnostics only — never a CSV column, and
-    /// excluded from merge conflict detection ([`RunSummary::content_eq`]):
-    /// it records how long the host took, not what the cell computed.
+    /// Host wall-clock seconds of the run, on *every* substrate: wall-clock
+    /// cells journal the engine's own reading, sim / deterministic cells
+    /// are stamped by the grid runner — the observations the cost model's
+    /// LPT dispatch learns per-class cell costs from on resume. (`None`
+    /// only in legacy journals predating the stamp.) Diagnostics and
+    /// scheduling only — never a CSV column, and excluded from merge
+    /// conflict detection ([`RunSummary::content_eq`]): it records how
+    /// long the host took, not what the cell computed.
     pub wall_secs: Option<f64>,
     /// Wall seconds of *every* repeat of a live (`wallclock-live`) cell
     /// run under `sweep --repeats k` (length `k`; empty for deterministic

@@ -62,6 +62,11 @@ struct WorkerState {
     /// Shared snapshot of the iterate the worker is computing at.
     point: Arc<Vec<f64>>,
     rng: Prng,
+    /// Cached stage-1 key of the worker's assignment draw streams
+    /// ([`crate::prng::Prng::assignment_stream_base`]) — a function of
+    /// `(data_seed, worker)` only, computed once at construction so the
+    /// per-delivery stream derivation skips the re-keying SplitMix64 pass.
+    stream_base: u64,
 }
 
 /// The simulated cluster: workers + event queue + compute model.
@@ -112,6 +117,7 @@ impl Cluster {
                 assign_time: 0.0,
                 point: empty.clone(),
                 rng: root.split(i as u64),
+                stream_base: Prng::assignment_stream_base(seed, i as u64),
             })
             .collect();
         Self {
@@ -178,6 +184,16 @@ impl Cluster {
     /// private draw stream ([`crate::prng::Prng::assignment_stream`]).
     pub fn assign_ordinal(&self, worker: usize) -> u64 {
         self.workers[worker].ordinal
+    }
+
+    /// The private draw stream of the worker's current (or just-delivered)
+    /// assignment, derived incrementally from the cached per-worker base
+    /// key — bit-identical to
+    /// `Prng::assignment_stream(data_seed, worker, assign_ordinal(worker))`
+    /// (property `incremental_assignment_stream_matches_rekeyed_triple`).
+    pub fn assignment_rng(&self, worker: usize) -> Prng {
+        let w = &self.workers[worker];
+        Prng::assignment_stream_at(w.stream_base, w.ordinal)
     }
 
     pub fn is_busy(&self, worker: usize) -> bool {

@@ -404,6 +404,83 @@ fn deterministic_noisy_runs_are_bitwise_identical_across_substrates() {
     assert_eq!(sim.gap_curve.v, wall.gap_curve.v);
 }
 
+/// The hot-path rework's golden-curve contract, end to end: for every
+/// `SchedulerKind`, the monomorphized engine loop (`run_pooled_kind` —
+/// static dispatch, slab-recycled sim assignments, incremental per-worker
+/// RNG streams, lazy side tables) must reproduce the dynamic-dispatch
+/// `Driver::run` trajectory bit for bit on the simulator, *and* agree with
+/// the deterministic wall-clock substrate (whose worker threads derive the
+/// same per-assignment streams independently). Any allocation-recycling or
+/// RNG-caching bug that moves a single sampled bit fails here.
+#[test]
+fn monomorphized_kind_path_matches_dyn_path_on_both_substrates() {
+    use ringmaster::engine::{run_pooled_kind, SimSource};
+    use ringmaster::linalg::par::ComputePool;
+
+    // continuous durations ⇒ tie-free virtual times, the regime where the
+    // deterministic wall-clock release order equals the simulator's
+    let model = ComputeModel::random_paper(N);
+    let iters = 120u64;
+    let seed = 9u64;
+    let pool = ComputePool::new(1);
+
+    for kind in all_seven_kinds() {
+        // dynamic dispatch through the Driver (the historical path)
+        let mut s1 = kind.build();
+        let dyn_rec = sim_run(s1.as_mut(), &model, iters, seed);
+
+        // static dispatch straight through the engine
+        let mut problem = Noisy::new(QuadraticProblem::paper(D), NOISE);
+        let mut source = SimSource::new(model.clone(), seed);
+        source.set_track_stale(kind.build().cancel_threshold(u64::MAX).is_some());
+        let cfg = DriverConfig {
+            seed,
+            max_iters: iters,
+            record_every: 50,
+            ..Default::default()
+        };
+        let kind_rec = run_pooled_kind(&mut problem, &mut source, &kind, &cfg, &pool);
+
+        let name = kind.name();
+        assert!(dyn_rec.iters > 0, "{name}: progress");
+        assert_eq!(dyn_rec.iters, kind_rec.iters, "{name}: iterate count");
+        assert_eq!(dyn_rec.x_final, kind_rec.x_final, "{name}: trajectory");
+        assert_eq!(dyn_rec.worker_hits, kind_rec.worker_hits, "{name}: hits");
+        assert_eq!(dyn_rec.gap_curve.t, kind_rec.gap_curve.t, "{name}: record times");
+        assert_eq!(dyn_rec.gap_curve.v, kind_rec.gap_curve.v, "{name}: record values");
+        assert_eq!(
+            (dyn_rec.applied, dyn_rec.accumulated, dyn_rec.discarded),
+            (kind_rec.applied, kind_rec.accumulated, kind_rec.discarded),
+            "{name}: decision accounting"
+        );
+        assert_eq!(
+            dyn_rec.cluster.cancellations, kind_rec.cluster.cancellations,
+            "{name}: Algorithm 5 parity"
+        );
+
+        // deterministic wall-clock twin agrees with the static sim path
+        let mut s2 = kind.build();
+        let wall = run_wallclock(
+            &QuadraticProblem::paper(D),
+            &model,
+            s2.as_mut(),
+            &ExecConfig {
+                time_scale: 1e-4,
+                max_iters: iters,
+                noise_sigma: NOISE,
+                seed,
+                record_every: 50,
+                deterministic: true,
+                ..Default::default()
+            },
+        );
+        assert_eq!(kind_rec.iters, wall.iters, "{name}: wallclock iterate count");
+        assert_eq!(kind_rec.x_final, wall.x_final, "{name}: wallclock trajectory");
+        assert_eq!(kind_rec.worker_hits, wall.worker_hits, "{name}: wallclock hits");
+        assert_eq!(kind_rec.gap_curve.v, wall.gap_curve.v, "{name}: wallclock curves");
+    }
+}
+
 #[test]
 fn noise_free_runs_agree_on_counts_and_neighborhood() {
     // with σ = 0 both substrates apply the same number of exact gradients;

@@ -176,4 +176,23 @@ fn million_worker_cluster_constructs_and_drains() {
     // All snapshots share the one allocation (lazy gradients): the Arc is
     // held once per in-flight assignment plus the caller's handle.
     assert!(Arc::strong_count(&x) <= N + 1);
+
+    // The incremental per-worker draw streams hold at full scale: the
+    // cached-base derivation (`assignment_rng`) must be bit-identical to
+    // re-keying the (seed, worker, ordinal) triple from scratch — the
+    // contract that let the hot path drop one SplitMix64 pass per
+    // delivery without moving a single sampled bit.
+    use ringmaster::prng::Prng;
+    for w in [0usize, 1, 4_242, N / 2, N - 1, a.worker] {
+        let ordinal = cluster.assign_ordinal(w);
+        let mut inc = cluster.assignment_rng(w);
+        let mut rekeyed = Prng::assignment_stream(cluster.data_seed(), w as u64, ordinal);
+        for draw in 0..8 {
+            assert_eq!(
+                inc.next_u64(),
+                rekeyed.next_u64(),
+                "worker {w} ordinal {ordinal} draw {draw}: incremental stream diverged"
+            );
+        }
+    }
 }

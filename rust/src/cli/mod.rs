@@ -1,13 +1,21 @@
 //! Command-line argument substrate (no `clap` in the offline environment).
 //!
 //! Grammar: `ringmaster <subcommand> [--key value | --key=value | --flag] ...`
-//! Unrecognized `--key value` pairs are *collected*, not rejected — the
-//! launcher forwards them as [`crate::config::ConfigMap`] overrides, which is
-//! how every experiment knob stays reachable from the command line without a
-//! central registry.
+//! The parser is permissive — it *collects* any `--key value` pair — and
+//! the declarative [`spec`] registry is the strict half: one
+//! [`CommandSpec`] per subcommand names every valid flag with its type,
+//! default and help line, from which [`help_text`] is generated and
+//! against which [`spec::validate`] rejects unknown flags (with a
+//! did-you-mean suggestion) before dispatch. Dotted keys (`--cluster.n`)
+//! stay exempt: they are [`crate::config::ConfigMap`] override paths,
+//! forwarded by design.
 
 use std::collections::BTreeMap;
 use std::fmt;
+
+pub mod spec;
+
+pub use spec::{help_text, ArgType, CommandSpec, FlagSpec};
 
 /// Parsed command line: subcommand + options + positionals.
 #[derive(Clone, Debug, Default, PartialEq)]
@@ -40,6 +48,8 @@ const SWITCHES: &[&str] = &[
     "json",
     "plot",
     "deterministic",
+    "small",
+    "provenance",
 ];
 
 /// Parse an argv slice (without the program name).

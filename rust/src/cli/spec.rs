@@ -1,0 +1,510 @@
+//! Declarative command registry: every subcommand and flag the binary
+//! accepts, as data.
+//!
+//! Historically each `cmd_*` function in `main.rs` pulled flags out of the
+//! stringly [`Args.options`](super::Args) map, so the set of valid flags
+//! existed only as scattered `args.usize_or(...)` call sites — a typo'd
+//! flag was silently ignored and `--help` was a hand-maintained string
+//! that drifted from the code. The [`CommandSpec`] table is the single
+//! source of truth instead: `--help` is generated from it
+//! ([`help_text`]), and [`validate`] rejects unknown flags (with a
+//! did-you-mean suggestion) and type-checks values *before* dispatch.
+//!
+//! Dotted keys (`--cluster.n 20`) are exempt: they are
+//! [`crate::config::ConfigMap`] override paths, forwarded by design
+//! without a central registry.
+
+use std::fmt::Write as _;
+
+use super::{Args, CliError};
+
+/// Value shape of one flag, checked by [`validate`] before dispatch.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum ArgType {
+    /// No argument; bare `--flag` means `true`.
+    Switch,
+    /// Unsigned integer.
+    Int,
+    /// Floating-point number (`inf` accepted).
+    Num,
+    /// Free-form string (lists like `0.1,1.0,inf` validate downstream).
+    Str,
+    /// Filesystem path.
+    Path,
+}
+
+impl ArgType {
+    fn check(self, flag: &str, value: &str) -> Result<(), CliError> {
+        match self {
+            ArgType::Switch => match value {
+                "true" | "false" | "1" | "0" | "yes" | "no" => Ok(()),
+                other => Err(CliError(format!(
+                    "--{flag} is a switch, got '{other}'"
+                ))),
+            },
+            ArgType::Int => value.parse::<u64>().map(|_| ()).map_err(|_| {
+                CliError(format!("--{flag} expects an integer, got '{value}'"))
+            }),
+            ArgType::Num => value.parse::<f64>().map(|_| ()).map_err(|_| {
+                CliError(format!("--{flag} expects a number, got '{value}'"))
+            }),
+            ArgType::Str | ArgType::Path => Ok(()),
+        }
+    }
+
+    fn placeholder(self) -> &'static str {
+        match self {
+            ArgType::Switch => "",
+            ArgType::Int => " <int>",
+            ArgType::Num => " <num>",
+            ArgType::Str => " <str>",
+            ArgType::Path => " <path>",
+        }
+    }
+}
+
+/// One flag a subcommand accepts.
+#[derive(Clone, Copy)]
+pub struct FlagSpec {
+    pub name: &'static str,
+    pub ty: ArgType,
+    /// Default shown in `--help` (`""` = no default / unset).
+    pub default: &'static str,
+    pub help: &'static str,
+}
+
+const fn f(
+    name: &'static str,
+    ty: ArgType,
+    default: &'static str,
+    help: &'static str,
+) -> FlagSpec {
+    FlagSpec { name, ty, default, help }
+}
+
+use ArgType::{Int, Num, Path, Str, Switch};
+
+/// Flags every subcommand accepts.
+pub const COMMON: &[FlagSpec] = &[
+    f("help", Switch, "", "print the generated help and exit"),
+    f("version", Switch, "", "print the crate version and exit"),
+    f("config", Path, "", "TOML file of experiment defaults (CLI flags override)"),
+    f("seed", Int, "0", "base RNG seed"),
+    f("csv-out", Path, "", "write the command's CSV artifact here"),
+    f("plot", Switch, "", "render an ASCII convergence plot"),
+    f("quiet", Switch, "", "reserved: reduce logging"),
+    f("verbose", Switch, "", "reserved: increase logging"),
+];
+
+const SUBSTRATE: [FlagSpec; 3] = [
+    f("substrate", Str, "sim", "execution substrate: sim|wallclock"),
+    f(
+        "deterministic",
+        Switch,
+        "",
+        "wallclock: virtual-time release order (bit-identical to sim)",
+    ),
+    f("wc-threads", Int, "0", "cap concurrent wall-clock cells (0 = no cap)"),
+];
+
+const RUN_FLAGS: &[FlagSpec] = &[
+    f(
+        "scheduler",
+        Str,
+        "ringmaster",
+        "ringmaster|asgd|delay-adaptive|rennala|naive|minibatch|rescaled",
+    ),
+    f("model", Str, "paper", "compute model: paper|linear|sqrt|equal"),
+    f("tau", Num, "1.0", "τ for --model equal"),
+    f("d", Int, "256", "quadratic dimension"),
+    f("n", Int, "64", "number of workers"),
+    f("noise", Num, "0.01", "per-coordinate gradient noise σ"),
+    f("gamma", Num, "", "stepsize (default: theorem value)"),
+    f("r", Int, "0", "Ringmaster batch cap R (0 = theory)"),
+    f("b", Int, "", "Rennala batch size B (default: R)"),
+    f("eps", Num, "1e-4", "target accuracy ε for the theory constants"),
+    f("max-iters", Int, "200000", "iteration budget"),
+    f("target-gap", Num, "1e-8", "stop when f-f* reaches this"),
+    f("cancel", Switch, "", "enable stale-gradient cancellation (default)"),
+    f("no-cancel", Switch, "", "disable stale-gradient cancellation"),
+    f("trace-out", Path, "", "stream structured spans (JSONL) of the run here"),
+    f("trace-spans", Int, "1000000", "span cap of --trace-out"),
+    SUBSTRATE[0],
+    SUBSTRATE[1],
+    SUBSTRATE[2],
+];
+
+const COMPARE_FLAGS: &[FlagSpec] = &[
+    f("d", Int, "256", "quadratic dimension"),
+    f("n", Int, "64", "number of workers"),
+    f("noise", Num, "0.01", "per-coordinate gradient noise σ"),
+    f("eps", Num, "1e-4", "target accuracy ε for the theory constants"),
+    f("max-iters", Int, "300000", "iteration budget"),
+    f("target-gap", Num, "1e-7", "stop when f-f* reaches this"),
+    f("model", Str, "paper", "compute model: paper|linear|sqrt|equal"),
+    f("tau", Num, "1.0", "τ for --model equal"),
+    SUBSTRATE[0],
+    SUBSTRATE[1],
+    SUBSTRATE[2],
+];
+
+const COMPLEXITY_FLAGS: &[FlagSpec] = &[
+    f("n", Int, "6174", "number of workers"),
+    f("d", Int, "1729", "quadratic dimension"),
+    f("noise", Num, "0.01", "per-coordinate gradient noise σ"),
+    f("eps", Num, "1e-4", "target accuracy ε"),
+    f("profile", Str, "", "restrict to one τ profile: linear|sqrt|equal"),
+];
+
+const FIG1_FLAGS: &[FlagSpec] = &[
+    f("small", Switch, "", "quick pass (n=500)"),
+    f("d", Int, "200", "quadratic dimension"),
+    f("n", Int, "10000", "number of workers"),
+    f("max-iters", Int, "400000", "iteration budget"),
+];
+
+const FIG2_FLAGS: &[FlagSpec] = &[
+    f("small", Switch, "", "quick pass (n=128)"),
+    f("target-gap", Num, "1e-6", "stop when f-f* reaches this"),
+    f("eps", Num, "1e-4", "target accuracy ε"),
+];
+
+const FIG3_FLAGS: &[FlagSpec] = &[
+    f("n", Int, "64", "number of workers"),
+    f("max-iters", Int, "600", "iteration budget"),
+    f("n-data", Int, "2000", "synthetic-MNIST samples"),
+    f("gamma", Num, "0.1", "stepsize"),
+    f("r", Int, "16", "Ringmaster batch cap R"),
+];
+
+const TRAIN_FLAGS: &[FlagSpec] = &[
+    f("steps", Int, "400", "SGD steps"),
+    f("gamma", Num, "0.2", "stepsize"),
+    f("n-data", Int, "2000", "synthetic-MNIST samples"),
+];
+
+const EXEC_DEMO_FLAGS: &[FlagSpec] = &[
+    f("n", Int, "8", "number of worker threads"),
+    f("d", Int, "64", "quadratic dimension"),
+    f("max-iters", Int, "2000", "iteration budget"),
+    f("time-scale", Num, "2e-4", "wall seconds per simulated second"),
+];
+
+const SWEEP_FLAGS: &[FlagSpec] = &[
+    f("alpha", Str, "0.1,1.0,inf", "comma list of Dirichlet α ('inf' = IID)"),
+    f("seeds", Str, "0,1", "comma list of seeds"),
+    f("n", Int, "16", "workers per cell"),
+    f("n-data", Int, "400", "synthetic-MNIST samples"),
+    f("batch", Int, "8", "per-gradient minibatch size"),
+    f("max-iters", Int, "2000", "iteration budget per cell"),
+    f("gamma", Num, "0.02", "stepsize"),
+    f(
+        "schedulers",
+        Str,
+        "ringmaster,rennala,asgd",
+        "comma list: ringmaster|rennala|asgd|delay-adaptive|minibatch|rescaled",
+    ),
+    f("r", Int, "", "Ringmaster batch cap R (default: n)"),
+    f("b", Int, "", "Rennala batch size B (default: n/2)"),
+    f("journal", Path, "", "checkpoint journal; rerun resumes from it"),
+    f("shard", Str, "", "run the i-th of n disjoint grid slices: i/n"),
+    f("max-cells", Int, "", "stop after K cells (requires --journal)"),
+    f("retries", Int, "1", "extra attempts per transiently-failing cell"),
+    f("repeats", Int, "1", "runs per live wallclock cell (wall_median/wall_min)"),
+    f(
+        "provenance",
+        Switch,
+        "",
+        "record a .prov sidecar next to --journal (code/host/timing per cell)",
+    ),
+    f(
+        "trace-dir",
+        Path,
+        "",
+        "stream per-cell span traces (<cellhash>.spans.jsonl) into this dir",
+    ),
+    f("trace-spans", Int, "1000000", "per-cell span cap of --trace-dir files"),
+    f("out", Path, "", "merge: write the merged journal here"),
+    f("md-out", Path, "", "report: write the Markdown report here"),
+    f("eps", Num, "1e-3", "report: ε for the closed-form T_A/T_R columns"),
+    f("sigma-sq", Num, "1.0", "report: σ² for the closed-form T_A/T_R columns"),
+    SUBSTRATE[0],
+    SUBSTRATE[1],
+    SUBSTRATE[2],
+];
+
+/// One subcommand: name, summary line, and the flags it accepts (on top
+/// of [`COMMON`]).
+pub struct CommandSpec {
+    pub name: &'static str,
+    pub summary: &'static str,
+    pub flags: &'static [FlagSpec],
+}
+
+impl CommandSpec {
+    fn flag(&self, name: &str) -> Option<&FlagSpec> {
+        self.flags
+            .iter()
+            .chain(COMMON)
+            .find(|fl| fl.name == name)
+    }
+
+    /// Check every parsed option against this command's registry: unknown
+    /// flags error with a did-you-mean suggestion; known flags get their
+    /// values type-checked. Dotted keys pass through as config overrides.
+    pub fn validate(&self, args: &Args) -> Result<(), CliError> {
+        for (key, value) in &args.options {
+            if key.contains('.') {
+                continue; // ConfigMap override path, e.g. --cluster.n 20
+            }
+            match self.flag(key) {
+                Some(fl) => fl.ty.check(key, value)?,
+                None => {
+                    let known = self.flags.iter().chain(COMMON).map(|fl| fl.name);
+                    let mut msg =
+                        format!("unknown flag --{key} for '{}'", self.name);
+                    if let Some(s) = nearest(key, known) {
+                        let _ = write!(msg, " — did you mean --{s}?");
+                    }
+                    msg.push_str(" (try --help)");
+                    return Err(CliError(msg));
+                }
+            }
+        }
+        Ok(())
+    }
+}
+
+/// The full registry, one entry per subcommand, in help order.
+pub const COMMANDS: &[CommandSpec] = &[
+    CommandSpec {
+        name: "run",
+        summary: "one scheduler on the §G quadratic",
+        flags: RUN_FLAGS,
+    },
+    CommandSpec {
+        name: "compare",
+        summary: "all schedulers head-to-head, tuned over the paper's stepsize grid",
+        flags: COMPARE_FLAGS,
+    },
+    CommandSpec {
+        name: "complexity",
+        summary: "closed-form theory (eqs. 3/4/9) for the standard τ profiles",
+        flags: COMPLEXITY_FLAGS,
+    },
+    CommandSpec {
+        name: "table1",
+        summary: "Table 1: theory + measured ratios (see also `cargo bench`)",
+        flags: COMPLEXITY_FLAGS,
+    },
+    CommandSpec {
+        name: "fig1",
+        summary: "Figure 1: ASGD slowdown at n=10000",
+        flags: FIG1_FLAGS,
+    },
+    CommandSpec {
+        name: "fig2",
+        summary: "Figure 2: quadratic d=1729 n=6174",
+        flags: FIG2_FLAGS,
+    },
+    CommandSpec {
+        name: "fig3",
+        summary: "Figure 3: MLP on synthetic MNIST via PJRT artifacts",
+        flags: FIG3_FLAGS,
+    },
+    CommandSpec {
+        name: "train",
+        summary: "end-to-end PJRT MLP training (single-stream SGD)",
+        flags: TRAIN_FLAGS,
+    },
+    CommandSpec {
+        name: "exec-demo",
+        summary: "wall-clock (threaded) executor demo",
+        flags: EXEC_DEMO_FLAGS,
+    },
+    CommandSpec {
+        name: "sweep",
+        summary: "heterogeneity matrix → CSV; also `sweep merge` / `sweep report`",
+        flags: SWEEP_FLAGS,
+    },
+];
+
+/// Look a subcommand up in the registry.
+pub fn find(name: &str) -> Option<&'static CommandSpec> {
+    COMMANDS.iter().find(|c| c.name == name)
+}
+
+/// Validate a parsed command line against the registry: unknown
+/// subcommands and unknown/ill-typed flags become errors (with
+/// did-you-mean suggestions) before any dispatch. A bare invocation (no
+/// subcommand) passes — the launcher prints help for it.
+pub fn validate(args: &Args) -> Result<(), CliError> {
+    let Some(sub) = args.subcommand.as_deref() else {
+        return Ok(());
+    };
+    match find(sub) {
+        Some(spec) => spec.validate(args),
+        None => {
+            let mut msg = format!("unknown subcommand '{sub}'");
+            if let Some(s) = nearest(sub, COMMANDS.iter().map(|c| c.name)) {
+                let _ = write!(msg, " — did you mean '{s}'?");
+            }
+            msg.push_str(" (try --help)");
+            Err(CliError(msg))
+        }
+    }
+}
+
+/// `--help`, generated from the registry so it can never drift from what
+/// [`validate`] accepts.
+pub fn help_text() -> String {
+    let mut out = String::from(
+        "ringmaster — Ringmaster ASGD framework (ICML 2025 reproduction)\n\n\
+         usage: ringmaster <subcommand> [--key value | --key=value | --flag] ...\n\n\
+         subcommands:\n",
+    );
+    for c in COMMANDS {
+        let _ = writeln!(out, "  {:<11} {}", c.name, c.summary);
+        for fl in c.flags {
+            let default = if fl.default.is_empty() {
+                String::new()
+            } else {
+                format!(" [{}]", fl.default)
+            };
+            let _ = writeln!(
+                out,
+                "    --{}{}  {}{default}",
+                fl.name,
+                fl.ty.placeholder(),
+                fl.help
+            );
+        }
+    }
+    out.push_str("\ncommon flags (every subcommand):\n");
+    for fl in COMMON {
+        let _ = writeln!(
+            out,
+            "  --{}{}  {}",
+            fl.name,
+            fl.ty.placeholder(),
+            fl.help
+        );
+    }
+    out.push_str(
+        "\nsweep merge:  sweep merge --out merged.jsonl shard1.jsonl shard2.jsonl ...\n\
+         sweep report: sweep report <journal.jsonl> [--md-out r.md] [--csv-out r.csv]\n\n\
+         dotted flags (--section.key value) are config overrides and always pass.\n\
+         env: RINGMASTER_SWEEP_THREADS (concurrent cells, default: cores),\n\
+         \x20    RINGMASTER_CELL_THREADS (compute lanes per cell; results are\n\
+         \x20    bit-identical at any width)\n",
+    );
+    out
+}
+
+/// Smallest-edit-distance candidate within a distance budget of 2 —
+/// enough to catch transpositions and one-letter typos without
+/// suggesting unrelated flags.
+fn nearest<'a>(input: &str, candidates: impl Iterator<Item = &'a str>) -> Option<&'a str> {
+    candidates
+        .map(|c| (levenshtein(input, c), c))
+        .filter(|&(d, _)| d <= 2)
+        .min_by_key(|&(d, _)| d)
+        .map(|(_, c)| c)
+}
+
+fn levenshtein(a: &str, b: &str) -> usize {
+    let a: Vec<char> = a.chars().collect();
+    let b: Vec<char> = b.chars().collect();
+    let mut prev: Vec<usize> = (0..=b.len()).collect();
+    let mut cur = vec![0usize; b.len() + 1];
+    for (i, &ca) in a.iter().enumerate() {
+        cur[0] = i + 1;
+        for (j, &cb) in b.iter().enumerate() {
+            let sub = prev[j] + usize::from(ca != cb);
+            cur[j + 1] = sub.min(prev[j + 1] + 1).min(cur[j] + 1);
+        }
+        std::mem::swap(&mut prev, &mut cur);
+    }
+    prev[b.len()]
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::cli::parse;
+
+    fn argv(items: &[&str]) -> Vec<String> {
+        items.iter().map(|s| s.to_string()).collect()
+    }
+
+    #[test]
+    fn known_flags_pass_unknown_flags_suggest() {
+        let ok = parse(&argv(&["run", "--gamma", "0.2", "--no-cancel"])).unwrap();
+        validate(&ok).unwrap();
+        let typo = parse(&argv(&["run", "--gamm", "0.2"])).unwrap();
+        let err = validate(&typo).unwrap_err();
+        assert!(err.0.contains("unknown flag --gamm"), "{err}");
+        assert!(err.0.contains("did you mean --gamma"), "{err}");
+        let sub = parse(&argv(&["swep", "--gamma", "0.2"])).unwrap();
+        let err = validate(&sub).unwrap_err();
+        assert!(err.0.contains("unknown subcommand"), "{err}");
+        assert!(err.0.contains("did you mean 'sweep'"), "{err}");
+    }
+
+    #[test]
+    fn values_are_type_checked() {
+        let bad_int = parse(&argv(&["run", "--d", "many"])).unwrap();
+        assert!(validate(&bad_int).unwrap_err().0.contains("--d"));
+        let bad_num = parse(&argv(&["run", "--gamma", "fast"])).unwrap();
+        assert!(validate(&bad_num).unwrap_err().0.contains("--gamma"));
+        // inf is a number (α lists live in Str flags, checked downstream)
+        let inf = parse(&argv(&["run", "--target-gap", "inf"])).unwrap();
+        validate(&inf).unwrap();
+    }
+
+    #[test]
+    fn dotted_keys_are_config_overrides() {
+        let a = parse(&argv(&["run", "--cluster.n", "20"])).unwrap();
+        validate(&a).unwrap();
+    }
+
+    #[test]
+    fn every_switch_flag_is_a_parser_switch() {
+        // a Switch in the registry must parse bare (`--flag`), i.e. be in
+        // the parser's SWITCHES list — otherwise `--flag` would swallow
+        // the next token as its value
+        for c in COMMANDS {
+            for fl in c.flags.iter().chain(COMMON) {
+                if fl.ty == ArgType::Switch {
+                    let a = parse(&argv(&[c.name, &format!("--{}", fl.name)]))
+                        .unwrap_or_else(|e| panic!("--{} must parse bare: {e}", fl.name));
+                    assert!(a.flag(fl.name), "--{} must read as true", fl.name);
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn help_covers_every_command_and_new_surfaces() {
+        let h = help_text();
+        for c in COMMANDS {
+            assert!(h.contains(c.name), "help missing {}", c.name);
+        }
+        assert!(h.contains("usage:"));
+        for s in ["--provenance", "--trace-dir", "sweep report", "--journal"] {
+            assert!(h.contains(s), "help missing {s}");
+        }
+    }
+
+    #[test]
+    fn registry_has_no_duplicate_flags_per_command() {
+        for c in COMMANDS {
+            let mut names: Vec<&str> =
+                c.flags.iter().chain(COMMON).map(|fl| fl.name).collect();
+            let total = names.len();
+            names.sort_unstable();
+            names.dedup();
+            assert_eq!(names.len(), total, "duplicate flag in '{}'", c.name);
+        }
+    }
+}

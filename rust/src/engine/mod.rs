@@ -101,6 +101,16 @@ pub struct DriverConfig {
     /// problems whose [`crate::opt::StochasticProblem::shard_losses`]
     /// returns `None`). One extra full-data pass per record, off by default.
     pub record_shard_losses: bool,
+    /// Streaming structured-span sink ([`crate::metrics::SpanWriter`]):
+    /// every span the in-memory [`Trace`] would record —
+    /// assignment→compute→{applied,accumulated,discarded,cancelled} — is
+    /// also emitted here as one JSONL line, on **any** substrate (the
+    /// engine stamps spans from the source's own clock). Independent of
+    /// `record_trace`: either, both, or neither may be on. Shared via
+    /// `Arc<Mutex<..>>` so one writer can serve a run regardless of which
+    /// thread drives the loop; `None` (the default) keeps the hot path
+    /// span-free.
+    pub span_sink: Option<Arc<std::sync::Mutex<crate::metrics::SpanWriter>>>,
     /// Server-side update rule (default: the paper's plain SGD step).
     pub server_opt: ServerOpt,
 }
@@ -119,6 +129,7 @@ impl Default for DriverConfig {
             trace_capacity: 65_536,
             record_worker_hits: true,
             record_shard_losses: false,
+            span_sink: None,
             server_opt: ServerOpt::Sgd,
         }
     }
@@ -365,6 +376,10 @@ where
     let mut acc = vec![0.0; dim];
     let mut server = ServerOptState::new(cfg.server_opt.clone(), dim, n);
     let mut trace = cfg.record_trace.then(|| Trace::new(n, cfg.trace_capacity));
+    let sink = cfg.span_sink.clone();
+    // one span stream feeds both consumers; when neither is on, the hot
+    // path never constructs a Span
+    let spans_on = trace.is_some() || sink.is_some();
     let mut cancel_spans: Vec<(usize, f64, u64)> = Vec::new();
     let mut acc_count = 0u64;
     let mut k = 0u64;
@@ -547,8 +562,8 @@ where
                 discarded += 1;
             }
         }
-        if let Some(tr) = trace.as_mut() {
-            tr.record(Span {
+        if spans_on {
+            let span = Span {
                 worker,
                 start: source.assign_time(worker),
                 end: arrival.time,
@@ -558,7 +573,15 @@ where
                     Decision::Accumulate { .. } => SpanOutcome::Accumulated,
                     Decision::Discard => SpanOutcome::Discarded,
                 },
-            });
+            };
+            if let Some(tr) = trace.as_mut() {
+                tr.record(span);
+            }
+            if let Some(s) = &sink {
+                if let Ok(mut writer) = s.lock() {
+                    writer.emit(&span);
+                }
+            }
         }
         if stepped {
             snap_fresh = false; // x^k moved; next assignment resnapshots
@@ -585,17 +608,25 @@ where
             }
             // Algorithm 5: stop computations that just became too stale
             if let Some(threshold) = sched.cancel_threshold(k) {
-                if let Some(tr) = trace.as_mut() {
+                if spans_on {
                     cancel_spans.clear();
                     source.cancel_stale(threshold, k, &snap, Some(&mut cancel_spans));
                     for &(w, t0, sk) in &cancel_spans {
-                        tr.record(Span {
+                        let span = Span {
                             worker: w,
                             start: t0,
                             end: arrival.time,
                             start_k: sk,
                             outcome: SpanOutcome::Cancelled,
-                        });
+                        };
+                        if let Some(tr) = trace.as_mut() {
+                            tr.record(span);
+                        }
+                        if let Some(s) = &sink {
+                            if let Ok(mut writer) = s.lock() {
+                                writer.emit(&span);
+                            }
+                        }
                     }
                 } else {
                     source.cancel_stale(threshold, k, &snap, None);

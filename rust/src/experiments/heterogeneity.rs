@@ -15,8 +15,9 @@
 //! for every cell and summarized into the sweep CSV's trailing columns.
 
 use crate::coordinator::SchedulerKind;
-use crate::scenario::{GridAxes, GridSpec, ProblemSpec, RunBudget, SchedSpec, Substrate};
+use crate::scenario::{GridSpec, ProblemSpec, RunBudget, SchedSpec, Substrate};
 use crate::sim::ComputeModel;
+use crate::util::error::Result;
 
 /// Grid + problem knobs of one heterogeneity study.
 #[derive(Clone, Debug)]
@@ -39,6 +40,11 @@ pub struct HetConfig {
     /// Execution substrate every cell of the matrix runs on (the CLI's
     /// `sweep --substrate ...`; default: the discrete-event simulator).
     pub substrate: Substrate,
+    /// Optional accuracy target ε: cells additionally record
+    /// `time_to_eps` (first time `‖∇f‖² ≤ ε`), the metric `sweep report`
+    /// prefers. `None` keeps the historical budget — and the historical
+    /// grid fingerprints, so existing journals resume unchanged.
+    pub eps: Option<f64>,
 }
 
 impl HetConfig {
@@ -60,42 +66,36 @@ impl HetConfig {
                 SchedulerKind::Asgd { gamma }.into(),
             ],
             substrate: Substrate::Sim,
+            eps: None,
         }
     }
 
     /// Expand the study into a scenario grid (schedulers outermost, then
     /// α, seeds innermost — the historical matrix order), with per-shard
-    /// fairness recording enabled.
-    pub fn grid_spec(&self) -> GridSpec {
-        GridSpec::new(
-            &GridAxes {
-                schedulers: self.schedulers.clone(),
-                gammas: vec![],
-                models: vec![(
-                    "paper".to_string(),
-                    ComputeModel::random_paper(self.n_workers),
-                )],
-                problems: self
-                    .alphas
-                    .iter()
-                    .map(|&alpha| ProblemSpec::ShardedLogistic {
-                        n_data: self.n_data,
-                        n_workers: self.n_workers,
-                        batch: self.batch,
-                        lambda: self.lambda,
-                        alpha,
-                    })
-                    .collect(),
-                seeds: self.seeds.clone(),
-                substrates: vec![self.substrate],
-            },
-            RunBudget {
+    /// fairness recording enabled. Goes through [`GridSpec::builder`], so
+    /// an inconsistent study (e.g. no schedulers) is an error here, not a
+    /// panic mid-sweep.
+    pub fn grid_spec(&self) -> Result<GridSpec> {
+        GridSpec::builder()
+            .schedulers(self.schedulers.iter().cloned())
+            .model("paper", ComputeModel::random_paper(self.n_workers))
+            .problems(self.alphas.iter().map(|&alpha| ProblemSpec::ShardedLogistic {
+                n_data: self.n_data,
+                n_workers: self.n_workers,
+                batch: self.batch,
+                lambda: self.lambda,
+                alpha,
+            }))
+            .seeds(self.seeds.iter().copied())
+            .substrate(self.substrate)
+            .budget(RunBudget {
                 max_iters: self.max_iters,
                 record_every: self.record_every,
                 record_shard_losses: true,
+                eps: self.eps,
                 ..Default::default()
-            },
-        )
+            })
+            .build()
     }
 }
 
@@ -119,12 +119,13 @@ mod tests {
                 SchedulerKind::Rennala { b: 2, gamma: 0.02 }.into(),
             ],
             substrate: Substrate::Sim,
+            eps: None,
         }
     }
 
     #[test]
     fn matrix_covers_the_grid_in_order() {
-        let spec = tiny().grid_spec();
+        let spec = tiny().grid_spec().unwrap();
         let run = scenario::run_grid(&spec, ShardSel::ALL, None, None).unwrap();
         assert!(run.is_complete());
         assert_eq!(run.rows.len(), 4); // 2 schedulers × 2 α × 1 seed
@@ -154,7 +155,7 @@ mod tests {
 
     #[test]
     fn csv_is_long_form_one_row_per_cell() {
-        let spec = tiny().grid_spec();
+        let spec = tiny().grid_spec().unwrap();
         let run = scenario::run_grid(&spec, ShardSel::ALL, None, None).unwrap();
         let csv = scenario::grid_csv(&run.rows);
         let lines: Vec<&str> = csv.trim_end().lines().collect();
@@ -184,7 +185,7 @@ mod tests {
 
     #[test]
     fn matrix_is_deterministic() {
-        let spec = tiny().grid_spec();
+        let spec = tiny().grid_spec().unwrap();
         let a = scenario::run_cells(&spec);
         let b = scenario::run_cells(&spec);
         for (x, y) in a.iter().zip(&b) {

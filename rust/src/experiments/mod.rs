@@ -187,14 +187,14 @@ where
     F: Fn(f64) -> SchedulerKind + Sync,
 {
     assert!(!grid.is_empty());
-    let cells: Vec<Cell> = grid
-        .iter()
-        .map(|&gamma| {
+    let spec = GridSpec::builder()
+        .cells(grid.iter().map(|&gamma| {
             cfg.cell("tune", model.clone(), &make(gamma), ServerOpt::Sgd)
                 .on(substrate)
-        })
-        .collect();
-    let spec = GridSpec::from_cells(cells, cfg.budget());
+        }))
+        .budget(cfg.budget())
+        .build()
+        .expect("stepsize-tuning grid failed validation");
     let records: Vec<RunRecord> = scenario::run_cells(&spec)
         .into_iter()
         .map(|o| o.record)
@@ -231,10 +231,20 @@ where
 /// experiments in parallel, preserving cell order in the results.
 ///
 /// `cfg` provides the shared budget; the cells (typically built with
-/// [`QuadExpConfig::cell`] or a [`scenario::GridAxes`] expansion) carry
-/// scheduler, compute model, problem and seed.
+/// [`QuadExpConfig::cell`] or a [`GridSpec::builder`] expansion) carry
+/// scheduler, compute model, problem and seed. An empty slice is a no-op;
+/// malformed cells fail [`crate::scenario::GridSpecBuilder::build`]
+/// validation and panic with the offending cell key.
 pub fn sweep_quadratic(cfg: &QuadExpConfig, cells: &[Cell]) -> Vec<CellOutcome> {
-    scenario::run_cells(&GridSpec::from_cells(cells.to_vec(), cfg.budget()))
+    if cells.is_empty() {
+        return Vec::new();
+    }
+    let spec = GridSpec::builder()
+        .cells(cells.to_vec())
+        .budget(cfg.budget())
+        .build()
+        .expect("quadratic sweep grid failed validation");
+    scenario::run_cells(&spec)
 }
 
 /// The paper's stepsize grid `{5^p : p ∈ [-5, 5]}`.
@@ -381,18 +391,15 @@ mod tests {
         cfg.n_workers = 4;
         cfg.noise_sigma = 0.001;
         cfg.max_iters = 500;
-        let cells = crate::scenario::GridAxes {
-            schedulers: vec![
-                SchedulerKind::Ringmaster { r: 4, gamma: 0.2, cancel: true }.into(),
-                SchedulerKind::Asgd { gamma: 0.1 }.into(),
-            ],
-            gammas: vec![],
-            models: vec![("linear".to_string(), ComputeModel::fixed_linear(4))],
-            problems: vec![cfg.problem_spec()],
-            seeds: vec![0, 1],
-            substrates: vec![],
-        }
-        .expand();
+        let cells = GridSpec::builder()
+            .scheduler(SchedulerKind::Ringmaster { r: 4, gamma: 0.2, cancel: true })
+            .scheduler(SchedulerKind::Asgd { gamma: 0.1 })
+            .model("linear", ComputeModel::fixed_linear(4))
+            .problem(cfg.problem_spec())
+            .seeds([0, 1])
+            .build()
+            .unwrap()
+            .cells;
         let results = sweep_quadratic(&cfg, &cells);
         assert_eq!(results.len(), 4);
         for (cell, res) in cells.iter().zip(&results) {

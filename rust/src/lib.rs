@@ -76,6 +76,18 @@
 //!             RunSummary → CellStore / grid_csv   scenario::store
 //!                  │   (…,substrate,wall_median,wall_min columns;
 //!                  │    wall_secs + --repeats wall_all journaled)
+//!                  ├─ provenance sidecar <journal>.prov  scenario::provenance
+//!                  │   (--provenance: code fingerprint, host, wall/cpu
+//!                  │    seconds, retry history per cell — journal and CSV
+//!                  │    bytes untouched; merged alongside merge_journals)
+//!                  ├─ span traces <cellhash>.spans.jsonl metrics::SpanWriter
+//!                  │   (--trace-dir / run --trace-out: assignment→compute→
+//!                  │    deliver|cancel|discard spans, bounded JSONL writer,
+//!                  │    any substrate)
+//!                  ▼
+//!             sweep report (Table-1 / Fig-1 analogue)    scenario::report
+//!                  (per-scheduler time-to-ε tables, measured vs closed-form
+//!                   T_A/T_R speedups, fairness spreads → Markdown + CSV)
 //! ```
 //!
 //! Data heterogeneity (Ringleader ASGD's regime) is first-class: worker
@@ -86,7 +98,11 @@
 //! ([`engine::ServerOpt::Rescaled`]). Every grid entry point — the
 //! heterogeneity matrix, stepsize tuning, the quadratic sweeps, the
 //! paper-table bench, the `sweep`/`compare` subcommands — runs through
-//! [`scenario`]'s checkpointed, resumable, shardable cell runner.
+//! [`scenario`]'s checkpointed, resumable, shardable cell runner, and is
+//! constructed via [`GridSpec::builder`] so malformed grids fail at build
+//! time with the offending axis named. The CLI surface itself is declared
+//! once in the [`cli::spec`] registry (typed flags, generated `--help`,
+//! unknown-flag rejection with did-you-mean).
 
 pub mod bench_util;
 pub mod cli;
@@ -108,3 +124,11 @@ pub mod sim;
 pub mod testkit;
 pub mod train;
 pub mod util;
+
+// Canonical scenario entry points, re-exported at the crate root so
+// downstream users (benches, external harnesses) reach the orchestration
+// layer without spelling out the module path.
+pub use scenario::{
+    journal_report, run_grid, run_grid_configured, GridOptions, GridSpec, GridSpecBuilder,
+    ReportOptions, ShardSel,
+};

@@ -20,7 +20,17 @@
 //!                        retrying transient cell failures (--retries)
 //! ringmaster sweep merge union N shard journals into one (--out), for
 //!                        cross-machine fan-out: shard → merge → CSV
+//!                        (provenance sidecars merge along)
+//! ringmaster sweep report  journal (+ sidecar) → Table-1-style Markdown/CSV:
+//!                        per-scheduler time-to-ε, speedup vs plain ASGD,
+//!                        closed-form T_A/T_R, fairness, provenance summary
 //! ```
+//!
+//! Observability (opt-in, output-byte-neutral): `sweep --provenance`
+//! records a `.prov` sidecar next to the journal; `sweep --trace-dir D` /
+//! `run --trace-out f.jsonl` stream structured per-span JSONL.
+//! The flag registry lives in [`ringmaster::cli::spec`]; `--help` is
+//! generated from it and unknown flags are rejected with suggestions.
 
 use std::path::PathBuf;
 
@@ -35,9 +45,12 @@ use ringmaster::driver::{Driver, DriverConfig};
 use ringmaster::experiments::{
     self, paper_rb_grid, paper_stepsize_grid, standard_profiles, QuadExpConfig,
 };
-use ringmaster::metrics::{ascii_plot, write_curves_csv};
+use ringmaster::metrics::{ascii_plot, write_curves_csv, SpanWriter};
 use ringmaster::opt::{Problem, QuadraticProblem};
-use ringmaster::scenario::{self, CellStore, RetryPolicy, SchedSpec, ShardSel, Substrate};
+use ringmaster::scenario::{
+    self, Cell, CellStore, GridOptions, ProblemSpec, ReportOptions, RetryPolicy, RunBudget,
+    SchedSpec, ShardSel, Substrate,
+};
 use ringmaster::sim::ComputeModel;
 use ringmaster::util::fmt_secs;
 
@@ -49,55 +62,27 @@ fn main() {
             std::process::exit(2);
         }
     };
-    if args.flag("help") || args.subcommand.is_none() {
-        print_help();
+    if args.flag("version") {
+        println!("ringmaster {}", env!("CARGO_PKG_VERSION"));
         return;
+    }
+    if args.flag("help") || args.subcommand.is_none() {
+        // --help is generated from the cli::spec registry, so it can
+        // never drift from what validation accepts
+        print!("{}", ringmaster::cli::help_text());
+        return;
+    }
+    // registry validation before dispatch: unknown subcommands/flags and
+    // ill-typed values fail here with did-you-mean suggestions
+    if let Err(e) = ringmaster::cli::spec::validate(&args) {
+        eprintln!("error: {e}");
+        std::process::exit(2);
     }
     let result = dispatch(&args);
     if let Err(e) = result {
         eprintln!("error: {e:#}");
         std::process::exit(1);
     }
-}
-
-fn print_help() {
-    println!(
-        "ringmaster — Ringmaster ASGD framework (ICML 2025 reproduction)\n\n\
-         usage: ringmaster <subcommand> [--key value ...]\n\n\
-         subcommands:\n\
-           run          one scheduler on the §G quadratic\n\
-                        --scheduler ringmaster|asgd|delay-adaptive|rennala|naive|minibatch|rescaled\n\
-                        --n 64 --d 256 --gamma 0.2 --r 0 (0=theory) --cancel\n\
-           compare      all schedulers, tuned over the paper's stepsize grid\n\
-           complexity   closed-form theory for a τ profile (--profile linear|sqrt|equal)\n\
-           table1       Table 1: theory + measured ratios\n\
-           fig1         Figure 1: ASGD slowdown at n=10000\n\
-           fig2         Figure 2: quadratic d=1729 n=6174 (use --small for a quick pass)\n\
-           fig3         Figure 3: MLP on synthetic MNIST via PJRT artifacts\n\
-           train        end-to-end PJRT MLP training (single-stream SGD)\n\
-           exec-demo    wall-clock threaded executor demo\n\
-           sweep        data-heterogeneity scenario matrix → long-form CSV\n\
-                        --alpha 0.1,1.0,inf --seeds 0,1 --n 16 --n-data 400\n\
-                        --schedulers ringmaster,rennala,asgd,rescaled --gamma 0.02\n\
-                        --journal sweep.jsonl   checkpoint completed cells; rerun resumes\n\
-                        --shard i/n             run the i-th of n disjoint grid slices\n\
-                        --max-cells K           stop after K cells (budgeted invocation)\n\
-                        --substrate sim|wallclock  execution substrate of every cell\n\
-                        --deterministic         wallclock: virtual-time release order\n\
-                                                (bit-identical to --substrate sim)\n\
-                        --wc-threads K          cap concurrent wall-clock cells\n\
-                        --retries K             retry transient cell failures K times\n\
-                        --repeats k             run live wallclock cells k times; CSV\n\
-                                                gains wall_median/wall_min timing columns\n\
-                                                (deterministic cells always run once)\n\
-                        RINGMASTER_SWEEP_THREADS  cells run concurrently (default: cores)\n\
-                        RINGMASTER_CELL_THREADS   compute-pool lanes inside each cell\n\
-                                                (default: cores / sweep threads; results\n\
-                                                are bit-identical at any width)\n\
-           sweep merge  union shard journals: sweep merge --out m.jsonl a.jsonl b.jsonl\n\n\
-         common flags: --seed N --csv-out path.csv --plot --config file.toml\n\
-         run/compare also accept --substrate sim|wallclock [--deterministic]"
-    );
 }
 
 fn load_config(args: &Args) -> Result<ConfigMap> {
@@ -207,13 +192,48 @@ fn cmd_run(args: &Args) -> Result<()> {
         cfg.n_workers,
         substrate.name()
     );
-    let rec = experiments::run_quadratic_on(
-        &cfg,
-        model,
-        &sched.kind,
-        sched.server_opt.clone(),
-        substrate,
-    );
+    let rec = match args.get("trace-out") {
+        // traced runs go through the scenario cell path — the very engine
+        // invocation sweep cells use — streaming every assignment→outcome
+        // span to --trace-out as it closes
+        Some(trace_out) => {
+            let budget = RunBudget {
+                max_iters: cfg.max_iters,
+                max_time: cfg.max_time,
+                record_every: cfg.record_every,
+                target_gap: cfg.target_gap,
+                ..Default::default()
+            };
+            let cell = Cell {
+                scheduler: sched.clone(),
+                model_label: args.str_or("model", "paper").to_string(),
+                model,
+                problem: ProblemSpec::Quadratic { d: cfg.d, noise_sigma: cfg.noise_sigma },
+                seed: cfg.seed,
+                substrate,
+            };
+            let cap = args.usize_or("trace-spans", 1_000_000)? as u64;
+            let writer = SpanWriter::create(std::path::Path::new(trace_out), cap)?;
+            let sink = std::sync::Arc::new(std::sync::Mutex::new(writer));
+            let (rec, _) = scenario::run_cell_traced(&cell, &budget, Some(sink.clone()));
+            if let Ok(mut w) = sink.lock() {
+                let _ = w.finish();
+                println!(
+                    "  wrote {} span(s) to {trace_out} ({} past --trace-spans cap)",
+                    w.written(),
+                    w.dropped()
+                );
+            }
+            rec
+        }
+        None => experiments::run_quadratic_on(
+            &cfg,
+            model,
+            &sched.kind,
+            sched.server_opt.clone(),
+            substrate,
+        ),
+    };
     println!(
         "  iters={} sim_time={} applied={} accumulated={} discarded={} cancelled={}",
         rec.iters,
@@ -590,6 +610,44 @@ fn cmd_sweep_merge(args: &Args) -> Result<()> {
         "merged {} journals → {out}: {} cells ({} duplicate entries dropped)",
         stats.inputs, stats.cells, stats.duplicates
     );
+    // provenance sidecars ride along: union whichever inputs carry one
+    // (merge_journals already proved all inputs share this fingerprint)
+    let (fingerprint, _) = scenario::read_journal(&inputs[0])?;
+    let prov = scenario::merge_provenance(&inputs, std::path::Path::new(out), &fingerprint)?;
+    if prov > 0 {
+        eprintln!("merged provenance sidecars → {out}.prov: {prov} record(s)");
+    }
+    Ok(())
+}
+
+/// `sweep report <journal.jsonl> [--md-out r.md] [--csv-out r.csv]` —
+/// turn a (possibly merged) sweep journal plus its optional provenance
+/// sidecar into the paper-style comparison: per-scheduler time-to-ε
+/// medians with measured speedups over the plain-ASGD baseline, the
+/// closed-form T_A/T_R ratios per compute model, fairness spreads, and a
+/// provenance summary. Markdown to stdout; `--md-out`/`--csv-out` write
+/// the artifacts.
+fn cmd_sweep_report(args: &Args) -> Result<()> {
+    let journal = args.positionals.get(1).ok_or_else(|| {
+        ringmaster::anyhow!(
+            "sweep report expects a journal: \
+             sweep report <journal.jsonl> [--md-out r.md] [--csv-out r.csv]"
+        )
+    })?;
+    let opts = ReportOptions {
+        eps: args.f64_or("eps", 1e-3)?,
+        sigma_sq: args.f64_or("sigma-sq", 1.0)?,
+    };
+    let report = scenario::journal_report(std::path::Path::new(journal), &opts)?;
+    if let Some(path) = args.get("md-out") {
+        std::fs::write(path, &report.markdown)?;
+        eprintln!("wrote {path}");
+    }
+    if let Some(path) = args.get("csv-out") {
+        std::fs::write(path, &report.csv)?;
+        eprintln!("wrote {path}");
+    }
+    print!("{}", report.markdown);
     Ok(())
 }
 
@@ -598,6 +656,9 @@ fn cmd_sweep(args: &Args) -> Result<()> {
 
     if args.positionals.first().map(String::as_str) == Some("merge") {
         return cmd_sweep_merge(args);
+    }
+    if args.positionals.first().map(String::as_str) == Some("report") {
+        return cmd_sweep_report(args);
     }
 
     // f64::from_str already accepts "inf"/"infinity" case-insensitively
@@ -669,7 +730,10 @@ fn cmd_sweep(args: &Args) -> Result<()> {
         })
         .collect::<Result<Vec<SchedSpec>>>()?;
 
-    let spec = cfg.grid_spec();
+    // --eps ε: cells record time_to_eps (the metric `sweep report`
+    // prefers); unset keeps the historical grid fingerprints
+    cfg.eps = args.f64("eps")?;
+    let spec = cfg.grid_spec()?;
     let shard = match args.get("shard") {
         Some(s) => scenario::parse_shard(s).map_err(|e| ringmaster::anyhow!("{e}"))?,
         None => ShardSel::ALL,
@@ -698,6 +762,18 @@ fn cmd_sweep(args: &Args) -> Result<()> {
     // always run once, so their CSVs are byte-identical at any k
     let repeats = args.usize_or("repeats", 1)? as u32;
     ensure!(repeats >= 1, "--repeats must be at least 1");
+    let gopts = GridOptions {
+        retry,
+        repeats,
+        provenance: args.flag("provenance"),
+        trace_dir: args.get("trace-dir").map(PathBuf::from),
+        trace_spans: args.usize_or("trace-spans", 1_000_000)? as u64,
+    };
+    // provenance records are keyed by journal cell, so they need one
+    ensure!(
+        !gopts.provenance || store.is_some(),
+        "--provenance requires --journal (records are keyed to journal cells)"
+    );
 
     eprintln!(
         "sweep: {} schedulers × {} α × {} seeds = {} grid points (n={}, n-data={}, \
@@ -717,8 +793,7 @@ fn cmd_sweep(args: &Args) -> Result<()> {
             .map(|s| format!(", journal {} [{} done]", s.path().display(), s.completed().len()))
             .unwrap_or_default(),
     );
-    let run =
-        scenario::run_grid_repeating(&spec, shard, store.as_mut(), max_cells, retry, repeats)?;
+    let run = scenario::run_grid_configured(&spec, shard, store.as_mut(), max_cells, &gopts)?;
     if run.retries > 0 {
         eprintln!("sweep: {} transient cell failure(s) retried", run.retries);
     }

@@ -7,7 +7,7 @@
 
 pub mod trace;
 
-pub use trace::{Span, SpanOutcome, Trace};
+pub use trace::{Span, SpanOutcome, SpanWriter, Trace};
 
 use std::fs::File;
 use std::io::{BufWriter, Write as _};

@@ -1,9 +1,16 @@
 //! Per-worker execution traces: what each worker was doing, when, and what
 //! became of its gradient — the observability layer of the framework.
 //!
-//! Recording is opt-in (`DriverConfig::record_trace`), ring-buffered to a
-//! bounded number of spans, and exports both a utilization summary and a
-//! Chrome-trace-style CSV (`worker,start,end,outcome,start_k`).
+//! Two opt-in consumers share one [`Span`] vocabulary:
+//!
+//! * [`Trace`] (`DriverConfig::record_trace`) — an in-memory ring buffer
+//!   with utilization summaries and a Chrome-trace-style CSV export
+//!   (`worker,start,end,outcome,start_k`).
+//! * [`SpanWriter`] (`DriverConfig::span_sink`) — a bounded streaming
+//!   JSONL writer: one object per span, flushed on drop, hard-capped at
+//!   `max_spans` lines so a runaway run can never fill a disk. Works on
+//!   every substrate because the engine emits the same spans from the
+//!   simulator clock and the (virtual or live) wall clock.
 
 use std::collections::VecDeque;
 use std::io::Write as _;
@@ -132,6 +139,84 @@ impl Trace {
     }
 }
 
+/// Render a span time for JSONL: shortest round-trip decimal, `null` for
+/// the non-finite values JSON numbers cannot carry (never produced by the
+/// engine, but the writer must not emit invalid JSON either way).
+fn jnum(v: f64) -> String {
+    if v.is_finite() {
+        format!("{v}")
+    } else {
+        "null".into()
+    }
+}
+
+/// Bounded streaming JSONL span sink.
+///
+/// Each [`emit`](SpanWriter::emit) appends one line
+/// `{"worker":W,"start":S,"end":E,"start_k":K,"outcome":"..."}`; once
+/// `max_spans` lines are written further spans are counted in
+/// [`dropped`](SpanWriter::dropped) instead of written, so the file size
+/// is bounded no matter how long the run is. Buffered I/O; the buffer is
+/// flushed by [`finish`](SpanWriter::finish) or on drop.
+#[derive(Debug)]
+pub struct SpanWriter {
+    w: std::io::BufWriter<std::fs::File>,
+    max_spans: u64,
+    written: u64,
+    dropped: u64,
+}
+
+impl SpanWriter {
+    pub fn create(path: &Path, max_spans: u64) -> std::io::Result<Self> {
+        if let Some(parent) = path.parent() {
+            if !parent.as_os_str().is_empty() {
+                std::fs::create_dir_all(parent)?;
+            }
+        }
+        Ok(Self {
+            w: std::io::BufWriter::new(std::fs::File::create(path)?),
+            max_spans: max_spans.max(1),
+            written: 0,
+            dropped: 0,
+        })
+    }
+
+    /// Append one span as a JSONL line (or count it as dropped once the
+    /// cap is reached). I/O errors are deliberately swallowed: the sink is
+    /// diagnostics, and must never abort or perturb the run it observes.
+    pub fn emit(&mut self, s: &Span) {
+        if self.written >= self.max_spans {
+            self.dropped += 1;
+            return;
+        }
+        let _ = writeln!(
+            self.w,
+            "{{\"worker\":{},\"start\":{},\"end\":{},\"start_k\":{},\"outcome\":\"{}\"}}",
+            s.worker,
+            jnum(s.start),
+            jnum(s.end),
+            s.start_k,
+            s.outcome.as_str()
+        );
+        self.written += 1;
+    }
+
+    /// Spans written so far.
+    pub fn written(&self) -> u64 {
+        self.written
+    }
+
+    /// Spans dropped after the cap was hit.
+    pub fn dropped(&self) -> u64 {
+        self.dropped
+    }
+
+    /// Flush the buffered lines (also happens on drop).
+    pub fn finish(&mut self) -> std::io::Result<()> {
+        self.w.flush()
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -174,11 +259,43 @@ mod tests {
     fn csv_round_trip() {
         let mut t = Trace::new(2, 8);
         t.record(span(1, 1.5, 2.5, SpanOutcome::Accumulated));
-        let path = std::env::temp_dir().join("ringmaster_trace_test.csv");
+        // per-test unique path: a fixed name collides when several test
+        // binaries (lib + integration) run this file's suite concurrently
+        let path = std::env::temp_dir().join(format!(
+            "ringmaster_trace_csv_round_trip_{}.csv",
+            std::process::id()
+        ));
         t.write_csv(&path).unwrap();
         let body = std::fs::read_to_string(&path).unwrap();
         assert!(body.starts_with("worker,start,end,start_k,outcome"));
         assert!(body.contains("1,1.5,2.5,0,accumulated"));
+        std::fs::remove_file(path).ok();
+    }
+
+    #[test]
+    fn span_writer_streams_bounded_jsonl() {
+        let path = std::env::temp_dir().join(format!(
+            "ringmaster_trace_span_writer_{}.jsonl",
+            std::process::id()
+        ));
+        let mut w = SpanWriter::create(&path, 3).unwrap();
+        for i in 0..5 {
+            w.emit(&span(i % 2, i as f64, i as f64 + 0.5, SpanOutcome::Applied));
+        }
+        assert_eq!(w.written(), 3);
+        assert_eq!(w.dropped(), 2);
+        w.finish().unwrap();
+        drop(w);
+        let body = std::fs::read_to_string(&path).unwrap();
+        let lines: Vec<&str> = body.lines().collect();
+        assert_eq!(lines.len(), 3, "cap bounds the file");
+        for line in &lines {
+            let j = crate::util::json::parse(line).unwrap();
+            assert!(j.get("worker").as_f64().is_some());
+            assert_eq!(j.get("outcome").as_str(), Some("applied"));
+        }
+        assert!(lines[1].contains("\"start\":1"));
+        assert!(lines[1].contains("\"end\":1.5"));
         std::fs::remove_file(path).ok();
     }
 }

@@ -40,34 +40,24 @@
 //!
 //! ```no_run
 //! use ringmaster::coordinator::SchedulerKind;
-//! use ringmaster::scenario::{
-//!     CellStore, GridAxes, GridSpec, ProblemSpec, RunBudget, ShardSel,
-//! };
+//! use ringmaster::scenario::{CellStore, GridSpec, ProblemSpec, RunBudget, ShardSel};
 //! use ringmaster::sim::ComputeModel;
 //!
-//! let spec = GridSpec::new(
-//!     &GridAxes {
-//!         schedulers: vec![
-//!             SchedulerKind::Ringmaster { r: 8, gamma: 0.02, cancel: true }.into(),
-//!             SchedulerKind::Rennala { b: 4, gamma: 0.02 }.into(),
-//!         ],
-//!         gammas: vec![], // keep each scheduler's own γ
-//!         models: vec![("paper".into(), ComputeModel::random_paper(8))],
-//!         problems: vec![
-//!             ProblemSpec::ShardedLogistic {
-//!                 n_data: 400, n_workers: 8, batch: 8, lambda: 0.01,
-//!                 alpha: f64::INFINITY, // IID baseline
-//!             },
-//!             ProblemSpec::ShardedLogistic {
-//!                 n_data: 400, n_workers: 8, batch: 8, lambda: 0.01,
-//!                 alpha: 0.1, // near single-class shards
-//!             },
-//!         ],
-//!         seeds: vec![0, 1, 2],
-//!         substrates: vec![], // default: the discrete-event simulator
-//!     },
-//!     RunBudget { max_iters: 1500, record_shard_losses: true, ..Default::default() },
-//! );
+//! let spec = GridSpec::builder()
+//!     .scheduler(SchedulerKind::Ringmaster { r: 8, gamma: 0.02, cancel: true })
+//!     .scheduler(SchedulerKind::Rennala { b: 4, gamma: 0.02 })
+//!     .model("paper", ComputeModel::random_paper(8))
+//!     .problem(ProblemSpec::ShardedLogistic {
+//!         n_data: 400, n_workers: 8, batch: 8, lambda: 0.01,
+//!         alpha: f64::INFINITY, // IID baseline
+//!     })
+//!     .problem(ProblemSpec::ShardedLogistic {
+//!         n_data: 400, n_workers: 8, batch: 8, lambda: 0.01,
+//!         alpha: 0.1, // near single-class shards
+//!     })
+//!     .seeds([0, 1, 2])
+//!     .budget(RunBudget { max_iters: 1500, record_shard_losses: true, ..Default::default() })
+//!     .build()?; // validation at build: axis mistakes fail here, not mid-sweep
 //!
 //! // First invocation: killed (or budget-limited) partway through — every
 //! // finished cell is already in the journal.
@@ -89,16 +79,24 @@
 //! # Ok::<(), ringmaster::util::error::Error>(())
 //! ```
 
+mod provenance;
+mod report;
 mod runner;
 mod spec;
 mod store;
 
+pub use provenance::{
+    capture, code_fingerprint, merge_provenance, process_cpu_secs, read_sidecar, Provenance,
+    ProvenanceStore,
+};
+pub use report::{journal_report, Report, ReportOptions};
 pub use runner::{
-    alpha_partition, grid_csv, run_cell, run_cells, run_grid, run_grid_repeating,
-    run_grid_retrying, run_grid_with, CellOutcome, GridRun, RetryPolicy,
+    alpha_partition, grid_csv, run_cell, run_cell_traced, run_cells, run_grid,
+    run_grid_configured, run_grid_repeating, run_grid_retrying, run_grid_with, CellOutcome,
+    GridOptions, GridRun, RetryPolicy,
 };
 pub use spec::{
-    fnv1a64, parse_shard, parse_substrate, Cell, GridAxes, GridSpec, ProblemSpec, RunBudget,
-    SchedSpec, ShardSel, Substrate,
+    fnv1a64, parse_shard, parse_substrate, Cell, GridAxes, GridSpec, GridSpecBuilder, ProblemSpec,
+    RunBudget, SchedSpec, ShardSel, Substrate,
 };
-pub use store::{merge_journals, CellStore, MergeStats, RunSummary};
+pub use store::{merge_journals, read_journal, CellStore, MergeStats, RunSummary};

@@ -1,0 +1,513 @@
+//! Run provenance: *how* each journaled cell was produced, as a sidecar
+//! JSONL next to the journal.
+//!
+//! The journal records what a cell computed; the [`Provenance`] sidecar
+//! records the conditions — code fingerprint, host/OS/core count, wall and
+//! CPU seconds, retry/repeat history, and the bench-relevant
+//! `RINGMASTER_*` environment. It lives in a **separate file**
+//! ([`ProvenanceStore::sidecar_path`]: `<journal>.prov`) keyed by the same
+//! `CellKey`s, so journal bytes, content keys, CSV output and merge
+//! semantics stay byte-identical whether or not provenance is enabled —
+//! and journals without sidecars load exactly as before.
+//!
+//! Like the journal, the sidecar is append-only JSONL with a header line,
+//! flushed per cell, tolerant of a truncated trailing line, and mergeable
+//! across `--shard i/n` fan-out ([`merge_provenance`] rides along with
+//! [`super::merge_journals`]).
+
+use std::collections::BTreeMap;
+use std::fs::{File, OpenOptions};
+use std::io::Write as _;
+use std::path::{Path, PathBuf};
+use std::sync::OnceLock;
+
+use super::spec::{fnv1a64, Cell};
+use super::store::{get_num, get_u64, num};
+use crate::util::error::Result;
+use crate::util::json::{self, Json};
+
+/// Everything recorded about one cell run. The cell's full configuration
+/// is its content `key` (the canonical encoding of scheduler, model,
+/// problem, seed and substrate — see [`Cell::key`]); the remaining fields
+/// describe the execution environment, which is deliberately *not* part
+/// of the key: same key + different host must still merge cleanly.
+#[derive(Clone, Debug, PartialEq)]
+pub struct Provenance {
+    /// The journal `CellKey` this record is about.
+    pub key: String,
+    /// Display name of the scheduler (matches the CSV column).
+    pub scheduler: String,
+    /// Substrate name (`sim` / `wallclock-det` / `wallclock-live`).
+    pub substrate: String,
+    pub seed: u64,
+    /// Code fingerprint: crate version + FNV-64 of the running binary.
+    pub code: String,
+    pub host: String,
+    /// `os/arch`, e.g. `linux/x86_64`.
+    pub os: String,
+    /// Available hardware parallelism on the host.
+    pub cores: usize,
+    /// Retry attempts that produced the journaled result (1 = first try).
+    pub attempts: u32,
+    /// `--repeats` re-runs folded into the result (1 when not repeated).
+    pub repeats: usize,
+    /// Host wall seconds spent producing the result (all attempts and
+    /// repeats included).
+    pub wall_secs: f64,
+    /// Process CPU seconds consumed while this cell ran (best effort from
+    /// `/proc/self/stat`; `None` off Linux). Process-wide, so concurrent
+    /// cells overlap — treat as an upper bound, not an exact charge.
+    pub cpu_secs: Option<f64>,
+    /// Bench-relevant environment at run time (`RINGMASTER_*` variables,
+    /// e.g. `RINGMASTER_CELL_THREADS`).
+    pub env: BTreeMap<String, String>,
+}
+
+impl Provenance {
+    pub fn to_json(&self) -> Json {
+        json::obj(vec![
+            ("key", Json::Str(self.key.clone())),
+            ("scheduler", Json::Str(self.scheduler.clone())),
+            ("substrate", Json::Str(self.substrate.clone())),
+            ("seed", num(self.seed as f64)),
+            ("code", Json::Str(self.code.clone())),
+            ("host", Json::Str(self.host.clone())),
+            ("os", Json::Str(self.os.clone())),
+            ("cores", num(self.cores as f64)),
+            ("attempts", num(self.attempts as f64)),
+            ("repeats", num(self.repeats as f64)),
+            ("wall_secs", num(self.wall_secs)),
+            (
+                "cpu_secs",
+                self.cpu_secs.map(num).unwrap_or(Json::Null),
+            ),
+            (
+                "env",
+                Json::Obj(
+                    self.env
+                        .iter()
+                        .map(|(k, v)| (k.clone(), Json::Str(v.clone())))
+                        .collect(),
+                ),
+            ),
+        ])
+    }
+
+    pub fn from_json(j: &Json) -> Option<Self> {
+        let mut env = BTreeMap::new();
+        if let Json::Obj(map) = j.get("env") {
+            for (k, v) in map {
+                if let Json::Str(s) = v {
+                    env.insert(k.clone(), s.clone());
+                }
+            }
+        }
+        Some(Self {
+            key: j.get("key").as_str()?.to_string(),
+            scheduler: j.get("scheduler").as_str().unwrap_or_default().to_string(),
+            substrate: j.get("substrate").as_str().unwrap_or_default().to_string(),
+            seed: get_u64(j.get("seed")).unwrap_or(0),
+            code: j.get("code").as_str().unwrap_or_default().to_string(),
+            host: j.get("host").as_str().unwrap_or_default().to_string(),
+            os: j.get("os").as_str().unwrap_or_default().to_string(),
+            cores: get_u64(j.get("cores")).unwrap_or(0) as usize,
+            attempts: get_u64(j.get("attempts"))
+                .and_then(|a| u32::try_from(a).ok())
+                .filter(|&a| a >= 1)
+                .unwrap_or(1),
+            repeats: get_u64(j.get("repeats")).unwrap_or(1).max(1) as usize,
+            wall_secs: get_num(j.get("wall_secs")).unwrap_or(0.0),
+            cpu_secs: match j.get("cpu_secs") {
+                Json::Null => None,
+                other => get_num(other),
+            },
+            env,
+        })
+    }
+}
+
+/// Crate version + FNV-64 digest of the running executable — a code
+/// fingerprint that changes whenever the binary does, without needing git
+/// at run time. Computed once per process.
+pub fn code_fingerprint() -> &'static str {
+    static FP: OnceLock<String> = OnceLock::new();
+    FP.get_or_init(|| {
+        let digest = std::env::current_exe()
+            .ok()
+            .and_then(|p| std::fs::read(p).ok())
+            .map(|bytes| format!("{:016x}", fnv1a64(&bytes)))
+            .unwrap_or_else(|| "unknown".into());
+        format!("{}+bin:{digest}", env!("CARGO_PKG_VERSION"))
+    })
+}
+
+fn hostname() -> String {
+    if let Ok(h) = std::env::var("HOSTNAME") {
+        if !h.is_empty() {
+            return h;
+        }
+    }
+    for path in ["/proc/sys/kernel/hostname", "/etc/hostname"] {
+        if let Ok(h) = std::fs::read_to_string(path) {
+            let h = h.trim();
+            if !h.is_empty() {
+                return h.to_string();
+            }
+        }
+    }
+    "unknown".into()
+}
+
+/// Process CPU seconds (user + system) from `/proc/self/stat`, assuming
+/// the Linux-universal `USER_HZ = 100`. `None` where unavailable.
+pub fn process_cpu_secs() -> Option<f64> {
+    let stat = std::fs::read_to_string("/proc/self/stat").ok()?;
+    // fields 14/15 (utime/stime) counted after the parenthesized comm
+    // field, which may itself contain spaces — split after the last ')'
+    let rest = stat.get(stat.rfind(')')? + 1..)?;
+    let mut fields = rest.split_ascii_whitespace();
+    let utime: f64 = fields.nth(11)?.parse().ok()?;
+    let stime: f64 = fields.next()?.parse().ok()?;
+    Some((utime + stime) / 100.0)
+}
+
+/// Build the provenance record for one finished cell.
+pub fn capture(
+    cell: &Cell,
+    key: &str,
+    attempts: u32,
+    repeats: usize,
+    wall_secs: f64,
+    cpu_secs: Option<f64>,
+) -> Provenance {
+    let env: BTreeMap<String, String> = std::env::vars()
+        .filter(|(k, _)| k.starts_with("RINGMASTER_"))
+        .collect();
+    Provenance {
+        key: key.to_string(),
+        scheduler: cell.scheduler.name(),
+        substrate: cell.substrate.name().to_string(),
+        seed: cell.seed,
+        code: code_fingerprint().to_string(),
+        host: hostname(),
+        os: format!("{}/{}", std::env::consts::OS, std::env::consts::ARCH),
+        cores: std::thread::available_parallelism()
+            .map(|n| n.get())
+            .unwrap_or(1),
+        attempts,
+        repeats: repeats.max(1),
+        wall_secs,
+        cpu_secs,
+        env,
+    }
+}
+
+fn header_json(fingerprint: &str) -> Json {
+    json::obj(vec![
+        ("version", Json::Num(1.0)),
+        ("kind", Json::Str("provenance".into())),
+        ("grid", Json::Str(fingerprint.to_string())),
+    ])
+}
+
+/// Parse a sidecar file: header fingerprint + records, skipping
+/// unparseable lines (most importantly a truncated trailing line).
+fn parse_sidecar(path: &Path, text: &str) -> Result<(String, Vec<Provenance>)> {
+    let mut lines = text.lines();
+    let grid = match lines.next().map(json::parse) {
+        Some(Ok(h)) if h.get("grid").as_str().is_some() => {
+            h.get("grid").as_str().unwrap_or_default().to_string()
+        }
+        _ => crate::bail!(
+            "provenance sidecar {} has no readable header",
+            path.display()
+        ),
+    };
+    let mut records = Vec::new();
+    for line in lines {
+        let Ok(entry) = json::parse(line) else { continue };
+        if let Some(p) = Provenance::from_json(&entry) {
+            records.push(p);
+        }
+    }
+    Ok((grid, records))
+}
+
+/// Append-only sidecar of per-cell [`Provenance`] records, one journal's
+/// worth, keyed by `CellKey`. Mirrors [`super::CellStore`]'s semantics:
+/// header-fingerprint guard, per-record flush, truncated-tail tolerance,
+/// dedup-by-key on reload (last record wins — a rerun restates its
+/// provenance).
+pub struct ProvenanceStore {
+    path: PathBuf,
+    file: File,
+    recorded: BTreeMap<String, Provenance>,
+}
+
+impl ProvenanceStore {
+    /// Sidecar path for a journal: `<journal>.prov` (extension appended,
+    /// so `sweep.jsonl` → `sweep.jsonl.prov` and the pairing is obvious
+    /// in a directory listing).
+    pub fn sidecar_path(journal: &Path) -> PathBuf {
+        let mut name = journal
+            .file_name()
+            .and_then(|n| n.to_str())
+            .unwrap_or("journal")
+            .to_string();
+        name.push_str(".prov");
+        journal.with_file_name(name)
+    }
+
+    /// Open (or create) the sidecar next to `journal` for the grid
+    /// identified by `fingerprint`. A sidecar written for a different
+    /// grid is refused, exactly like the journal itself.
+    pub fn open(journal: &Path, fingerprint: &str) -> Result<ProvenanceStore> {
+        let path = Self::sidecar_path(journal);
+        let mut recorded = BTreeMap::new();
+        let text = if path.exists() {
+            std::fs::read_to_string(&path)?
+        } else {
+            String::new()
+        };
+        let fresh = text.is_empty();
+        if !fresh {
+            let (grid, records) = parse_sidecar(&path, &text)?;
+            if grid != fingerprint {
+                crate::bail!(
+                    "provenance sidecar {} was written for a different grid \
+                     (sidecar fingerprint {grid}, current {fingerprint}); \
+                     delete it or rerun with the original parameters",
+                    path.display()
+                );
+            }
+            for p in records {
+                recorded.insert(p.key.clone(), p);
+            }
+        }
+        if let Some(parent) = path.parent() {
+            if !parent.as_os_str().is_empty() {
+                std::fs::create_dir_all(parent)?;
+            }
+        }
+        let mut file = OpenOptions::new().create(true).append(true).open(&path)?;
+        if fresh {
+            writeln!(file, "{}", json::write(&header_json(fingerprint)))?;
+            file.flush()?;
+        } else if !text.ends_with('\n') {
+            writeln!(file)?;
+        }
+        Ok(ProvenanceStore {
+            path,
+            file,
+            recorded,
+        })
+    }
+
+    pub fn path(&self) -> &Path {
+        &self.path
+    }
+
+    /// Records loaded + appended so far, keyed by `CellKey`.
+    pub fn recorded(&self) -> &BTreeMap<String, Provenance> {
+        &self.recorded
+    }
+
+    /// Append one record and flush.
+    pub fn append(&mut self, p: &Provenance) -> Result<()> {
+        writeln!(self.file, "{}", json::write(&p.to_json()))?;
+        self.file.flush()?;
+        self.recorded.insert(p.key.clone(), p.clone());
+        Ok(())
+    }
+}
+
+/// Read a journal's sidecar without creating or modifying anything:
+/// `Ok(None)` when the journal has no sidecar (pre-provenance journals),
+/// `Ok(Some((grid, records)))` otherwise. The read-only face used by
+/// `sweep report`.
+pub fn read_sidecar(journal: &Path) -> Result<Option<(String, Vec<Provenance>)>> {
+    let path = ProvenanceStore::sidecar_path(journal);
+    if !path.exists() {
+        return Ok(None);
+    }
+    let text = std::fs::read_to_string(&path)?;
+    if text.is_empty() {
+        return Ok(None);
+    }
+    parse_sidecar(&path, &text).map(Some)
+}
+
+/// Merge the provenance sidecars of `inputs` (journal paths) into the
+/// sidecar of `out_journal` — the provenance half of
+/// [`super::merge_journals`]. Inputs without a sidecar contribute nothing
+/// (journals without provenance merge exactly as before); if **no** input
+/// has one, nothing is written. First-seen wins per key, matching the
+/// journal merge's ordering; provenance is environment metadata, so
+/// duplicate keys from different hosts are expected, not a conflict.
+/// Returns the number of records in the merged sidecar (0 = none written).
+pub fn merge_provenance(inputs: &[PathBuf], out_journal: &Path, fingerprint: &str) -> Result<usize> {
+    let mut order: Vec<String> = Vec::new();
+    let mut merged: BTreeMap<String, Provenance> = BTreeMap::new();
+    let mut any = false;
+    for journal in inputs {
+        let sidecar = ProvenanceStore::sidecar_path(journal);
+        if !sidecar.exists() {
+            continue;
+        }
+        let text = std::fs::read_to_string(&sidecar)
+            .map_err(|e| crate::anyhow!("reading {}: {e}", sidecar.display()))?;
+        if text.is_empty() {
+            continue;
+        }
+        let (grid, records) = parse_sidecar(&sidecar, &text)?;
+        crate::ensure!(
+            grid == fingerprint,
+            "provenance sidecar {} was written for a different grid \
+             (fingerprint {grid}, expected {fingerprint})",
+            sidecar.display()
+        );
+        any = true;
+        for p in records {
+            if let std::collections::btree_map::Entry::Vacant(slot) = merged.entry(p.key.clone()) {
+                order.push(p.key.clone());
+                slot.insert(p);
+            }
+        }
+    }
+    if !any {
+        return Ok(0);
+    }
+    let out = ProvenanceStore::sidecar_path(out_journal);
+    let mut text = String::new();
+    text.push_str(&json::write(&header_json(fingerprint)));
+    text.push('\n');
+    for key in &order {
+        text.push_str(&json::write(&merged[key].to_json()));
+        text.push('\n');
+    }
+    let tmp = out.with_file_name(format!(
+        "{}.tmp",
+        out.file_name()
+            .and_then(|n| n.to_str())
+            .unwrap_or("merged.prov")
+    ));
+    std::fs::write(&tmp, text).map_err(|e| crate::anyhow!("writing {}: {e}", tmp.display()))?;
+    std::fs::rename(&tmp, &out)
+        .map_err(|e| crate::anyhow!("renaming {} → {}: {e}", tmp.display(), out.display()))?;
+    Ok(order.len())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::coordinator::SchedulerKind;
+    use crate::scenario::{ProblemSpec, SchedSpec, Substrate};
+    use crate::sim::ComputeModel;
+
+    fn cell(seed: u64) -> Cell {
+        Cell {
+            scheduler: SchedSpec::plain(SchedulerKind::Asgd { gamma: 0.1 }),
+            model_label: "lin".into(),
+            model: ComputeModel::fixed_linear(3),
+            problem: ProblemSpec::Quadratic {
+                d: 8,
+                noise_sigma: 0.0,
+            },
+            seed,
+            substrate: Substrate::Sim,
+        }
+    }
+
+    fn record(seed: u64) -> Provenance {
+        let c = cell(seed);
+        capture(&c, &c.key(), 2, 1, 0.25, Some(0.125))
+    }
+
+    #[test]
+    fn record_roundtrips_through_json() {
+        let p = record(7);
+        assert!(p.code.contains("+bin:"));
+        assert!(!p.host.is_empty());
+        assert!(p.os.contains('/'));
+        let j = json::parse(&json::write(&p.to_json())).unwrap();
+        let back = Provenance::from_json(&j).unwrap();
+        assert_eq!(back, p);
+        // missing optional fields degrade, key is the only hard requirement
+        let sparse = json::parse("{\"key\":\"k\"}").unwrap();
+        let p2 = Provenance::from_json(&sparse).unwrap();
+        assert_eq!(p2.key, "k");
+        assert_eq!(p2.attempts, 1);
+        assert_eq!(p2.cpu_secs, None);
+        assert!(Provenance::from_json(&json::parse("{}").unwrap()).is_none());
+    }
+
+    #[test]
+    fn store_persists_resumes_and_guards_fingerprint() {
+        let dir = std::env::temp_dir().join(format!("ringmaster_prov_{}", std::process::id()));
+        std::fs::create_dir_all(&dir).unwrap();
+        let journal = dir.join("j.jsonl");
+        let sidecar = ProvenanceStore::sidecar_path(&journal);
+        assert_eq!(sidecar, dir.join("j.jsonl.prov"));
+        std::fs::remove_file(&sidecar).ok();
+
+        let mut st = ProvenanceStore::open(&journal, "fp").unwrap();
+        st.append(&record(0)).unwrap();
+        st.append(&record(1)).unwrap();
+        drop(st);
+        // truncated tail tolerated, records reload
+        {
+            let mut f = OpenOptions::new().append(true).open(&sidecar).unwrap();
+            write!(f, "{{\"key\":\"half").unwrap();
+        }
+        let st = ProvenanceStore::open(&journal, "fp").unwrap();
+        assert_eq!(st.recorded().len(), 2);
+        assert!(st.recorded().contains_key(&cell(0).key()));
+        drop(st);
+        // wrong grid refused
+        let err = ProvenanceStore::open(&journal, "other").unwrap_err();
+        assert!(format!("{err}").contains("different grid"), "{err}");
+        std::fs::remove_dir_all(&dir).ok();
+    }
+
+    #[test]
+    fn merge_unions_sidecars_and_tolerates_absent_ones() {
+        let dir = std::env::temp_dir().join(format!("ringmaster_provmerge_{}", std::process::id()));
+        std::fs::create_dir_all(&dir).unwrap();
+        let (a, b, out) = (dir.join("a.jsonl"), dir.join("b.jsonl"), dir.join("m.jsonl"));
+        for j in [&a, &b, &out] {
+            std::fs::remove_file(ProvenanceStore::sidecar_path(j)).ok();
+        }
+        // no sidecars anywhere: nothing written
+        assert_eq!(merge_provenance(&[a.clone(), b.clone()], &out, "fp").unwrap(), 0);
+        assert!(!ProvenanceStore::sidecar_path(&out).exists());
+
+        let mut sa = ProvenanceStore::open(&a, "fp").unwrap();
+        sa.append(&record(0)).unwrap();
+        sa.append(&record(2)).unwrap();
+        drop(sa);
+        let mut sb = ProvenanceStore::open(&b, "fp").unwrap();
+        sb.append(&record(1)).unwrap();
+        sb.append(&record(2)).unwrap(); // duplicate key: first-seen wins
+        drop(sb);
+        let n = merge_provenance(&[a.clone(), b.clone()], &out, "fp").unwrap();
+        assert_eq!(n, 3);
+        let merged = ProvenanceStore::open(&out, "fp").unwrap();
+        assert_eq!(merged.recorded().len(), 3);
+        for s in [0, 1, 2] {
+            assert!(merged.recorded().contains_key(&cell(s).key()), "seed {s}");
+        }
+        // mixed: one input with a sidecar, one without, still merges
+        std::fs::remove_file(ProvenanceStore::sidecar_path(&b)).unwrap();
+        let n = merge_provenance(&[a, b], &out, "fp").unwrap();
+        assert_eq!(n, 2);
+        std::fs::remove_dir_all(&dir).ok();
+    }
+
+    #[test]
+    fn cpu_clock_reads_on_linux() {
+        if cfg!(target_os = "linux") {
+            let c = process_cpu_secs().expect("/proc/self/stat readable");
+            assert!(c >= 0.0);
+        }
+    }
+}

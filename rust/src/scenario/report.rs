@@ -1,0 +1,636 @@
+//! `sweep report`: turn a checkpoint journal (plus its optional
+//! provenance sidecar) into the paper's Table-1 / Figure-1 analogues —
+//! a per-scheduler time-to-ε comparison with measured speedups over the
+//! plain-ASGD baseline, the closed-form `T_A`/`T_R` ratios from
+//! [`crate::complexity`] they should track, and fairness/discard
+//! summaries — rendered as Markdown (human) and CSV (machine).
+//!
+//! The report is **read-only**: it goes through the same tolerant parser
+//! as resume ([`super::store::read_journal`]) and never writes the
+//! journal or its sidecar, so reporting on a half-finished sweep is
+//! always safe.
+
+use std::collections::BTreeMap;
+use std::fmt::Write as _;
+use std::path::Path;
+
+use crate::complexity::{t_asgd, t_optimal, Constants};
+use crate::sim::ComputeModel;
+use crate::util::error::Result;
+
+use super::provenance::read_sidecar;
+use super::store::{read_journal, RunSummary};
+
+/// Knobs of [`journal_report`]: the nominal problem constants the
+/// closed-form Table-1 columns are evaluated at (`L = Δ = 1`).
+#[derive(Clone, Copy, Debug)]
+pub struct ReportOptions {
+    /// Target accuracy ε of the closed-form time complexities.
+    pub eps: f64,
+    /// Gradient-noise variance σ² of the closed-form time complexities.
+    pub sigma_sq: f64,
+}
+
+impl Default for ReportOptions {
+    fn default() -> Self {
+        Self {
+            eps: 1e-3,
+            sigma_sq: 1.0,
+        }
+    }
+}
+
+/// A rendered report: the same content in two serializations.
+#[derive(Clone, Debug)]
+pub struct Report {
+    /// Human-facing Markdown (tables + provenance appendix).
+    pub markdown: String,
+    /// Machine-facing CSV of the per-scheduler comparison rows.
+    pub csv: String,
+}
+
+/// The slice of a cell key the report groups by. Keys are canonical
+/// ([`super::Cell::key`]: `sched|label#digest|problem|seed=N[|wc(..)]`),
+/// so this parse can never disagree with the runner about cell identity.
+struct RowMeta {
+    /// Scheduler key with server-opt, e.g. `asgd(g=0.1)/sgd` — the
+    /// canonical form baseline detection matches on.
+    sched_key: String,
+    /// Partition α as it appears in the key (`inf` = IID); `-` for
+    /// unsharded problems.
+    alpha: String,
+    /// `sim` / `wallclock-det` / `wallclock-live`.
+    substrate: String,
+    /// Compute-model display label (the part before the content digest).
+    model: String,
+    /// Worker count (from the recorded per-worker hits, falling back to
+    /// the sharded problem's `w=` field).
+    n: usize,
+}
+
+fn parse_key(key: &str, summary: &RunSummary) -> RowMeta {
+    let parts: Vec<&str> = key.split('|').collect();
+    let sched_key = parts.first().copied().unwrap_or("?").to_string();
+    let model = parts
+        .get(1)
+        .and_then(|m| m.split('#').next())
+        .unwrap_or("?")
+        .to_string();
+    let problem = parts.get(2).copied().unwrap_or("");
+    let alpha = problem
+        .strip_prefix("shlog(")
+        .and_then(|p| p.strip_suffix(')'))
+        .and_then(|p| {
+            p.split(',')
+                .find_map(|field| field.strip_prefix("a="))
+                .map(str::to_string)
+        })
+        .unwrap_or_else(|| "-".into());
+    let substrate = match parts.get(4).copied() {
+        Some("wc(det)") => "wallclock-det",
+        Some("wc(live)") => "wallclock-live",
+        _ => "sim",
+    }
+    .to_string();
+    let n = if summary.worker_hits.is_empty() {
+        problem
+            .strip_prefix("shlog(")
+            .and_then(|p| {
+                p.split(',')
+                    .find_map(|field| field.strip_prefix("w="))
+                    .and_then(|w| w.trim_end_matches(')').parse().ok())
+            })
+            .unwrap_or(0)
+    } else {
+        summary.worker_hits.len()
+    };
+    RowMeta {
+        sched_key,
+        alpha,
+        substrate,
+        model,
+        n,
+    }
+}
+
+/// One aggregation bucket: every journaled cell of a
+/// (scheduler, α, substrate) combination across seeds.
+#[derive(Default)]
+struct Group {
+    sched_key: String,
+    model: String,
+    n: usize,
+    cells: usize,
+    time_to_eps: Vec<Option<f64>>,
+    time_to_target: Vec<Option<f64>>,
+    sim_time: Vec<f64>,
+    final_gap: Vec<f64>,
+    applied: u64,
+    accumulated: u64,
+    discarded: u64,
+    fairness: Vec<f64>,
+    diverged: usize,
+}
+
+impl Group {
+    /// The most informative time metric *every* cell of the group
+    /// recorded, so medians are never mixed across metrics:
+    /// time-to-ε → time-to-target → total simulated time.
+    fn time_metric(&self) -> (&'static str, Vec<f64>) {
+        if let Some(t) = self.time_to_eps.iter().copied().collect::<Option<Vec<_>>>() {
+            return ("time_to_eps", t);
+        }
+        if let Some(t) = self
+            .time_to_target
+            .iter()
+            .copied()
+            .collect::<Option<Vec<_>>>()
+        {
+            return ("time_to_target", t);
+        }
+        ("sim_time", self.sim_time.clone())
+    }
+}
+
+fn median(xs: &[f64]) -> Option<f64> {
+    let mut v: Vec<f64> = xs.iter().copied().filter(|x| x.is_finite()).collect();
+    if v.is_empty() {
+        return None;
+    }
+    v.sort_by(|a, b| a.partial_cmp(b).unwrap());
+    let mid = v.len() / 2;
+    Some(if v.len() % 2 == 1 {
+        v[mid]
+    } else {
+        (v[mid - 1] + v[mid]) / 2.0
+    })
+}
+
+/// Reconstruct the τ profile a compute-model label denotes, when the
+/// label is one of the repo's canonical families. Content digests make
+/// the *keys* exact; the report only needs τ means for the closed-form
+/// columns, so unknown labels simply skip the theory table.
+fn taus_for_label(label: &str, n: usize) -> Option<Vec<f64>> {
+    if n == 0 {
+        return None;
+    }
+    if label.starts_with("paper") {
+        Some(ComputeModel::random_paper(n).tau_means())
+    } else if label.starts_with("lin") {
+        Some(ComputeModel::fixed_linear(n).tau_means())
+    } else if label.starts_with("sqrt") {
+        Some(ComputeModel::fixed_sqrt(n).tau_means())
+    } else if label.starts_with("eq") {
+        Some(vec![1.0; n])
+    } else {
+        None
+    }
+}
+
+fn fmt_e(v: Option<f64>) -> String {
+    match v {
+        Some(v) if v.is_finite() => format!("{v:.4e}"),
+        Some(v) => format!("{v}"),
+        None => "-".into(),
+    }
+}
+
+fn fmt_ratio(v: Option<f64>) -> String {
+    match v {
+        Some(v) if v.is_finite() => format!("{v:.2}"),
+        _ => "-".into(),
+    }
+}
+
+/// CSV-quote a field that may contain commas (scheduler names do).
+fn csv_field(s: &str) -> String {
+    if s.contains(',') || s.contains('"') {
+        format!("\"{}\"", s.replace('"', "\"\""))
+    } else {
+        s.to_string()
+    }
+}
+
+/// Render the Table-1 / Fig-1 analogue report of a sweep journal.
+///
+/// * Groups journaled cells by (scheduler, partition α, substrate) and
+///   medians the best available time metric across seeds.
+/// * Measured speedup of every scheduler over the **plain ASGD**
+///   baseline of the same (α, substrate) stratum, when one is journaled
+///   with the same metric.
+/// * Closed-form `T_A` (ASGD) and `T_R = Θ(t_opt)` (Ringmaster) per
+///   compute model from [`crate::complexity`], at nominal constants
+///   `L = Δ = 1` and the `opts` ε/σ² — the theoretical ratio the
+///   measured speedups should track.
+/// * A provenance appendix when the journal has a sidecar
+///   ([`super::ProvenanceStore`]); journals predating provenance render
+///   fine without one.
+pub fn journal_report(journal: &Path, opts: &ReportOptions) -> Result<Report> {
+    crate::ensure!(
+        opts.eps.is_finite() && opts.eps > 0.0,
+        "report ε must be finite and positive, got {}",
+        opts.eps
+    );
+    crate::ensure!(
+        opts.sigma_sq.is_finite() && opts.sigma_sq >= 0.0,
+        "report σ² must be finite and ≥ 0, got {}",
+        opts.sigma_sq
+    );
+    let (grid, entries) = read_journal(journal)?;
+    let sidecar = read_sidecar(journal)?;
+    if let Some((prov_grid, _)) = &sidecar {
+        crate::ensure!(
+            *prov_grid == grid,
+            "provenance sidecar of {} was written for a different grid \
+             (sidecar {prov_grid}, journal {grid})",
+            journal.display()
+        );
+    }
+
+    // ---- aggregate journal order into (scheduler, α, substrate) groups
+    let mut order: Vec<(String, String, String)> = Vec::new();
+    let mut groups: BTreeMap<(String, String, String), Group> = BTreeMap::new();
+    let mut retried = 0usize;
+    for (key, summary, attempts) in &entries {
+        if *attempts > 1 {
+            retried += 1;
+        }
+        let meta = parse_key(key, summary);
+        let gk = (
+            summary.scheduler.clone(),
+            meta.alpha.clone(),
+            meta.substrate.clone(),
+        );
+        let g = groups.entry(gk.clone()).or_insert_with(|| {
+            order.push(gk);
+            Group {
+                sched_key: meta.sched_key.clone(),
+                model: meta.model.clone(),
+                n: meta.n,
+                ..Group::default()
+            }
+        });
+        g.cells += 1;
+        g.time_to_eps.push(summary.time_to_eps);
+        g.time_to_target.push(summary.time_to_target);
+        g.sim_time.push(summary.sim_time);
+        g.final_gap.push(summary.final_gap);
+        g.applied += summary.applied;
+        g.accumulated += summary.accumulated;
+        g.discarded += summary.discarded;
+        if summary.diverged {
+            g.diverged += 1;
+        }
+        let finite: Vec<f64> = summary
+            .shard_final_losses
+            .iter()
+            .copied()
+            .filter(|l| l.is_finite())
+            .collect();
+        if finite.len() >= 2 {
+            let (mut lo, mut hi) = (f64::INFINITY, f64::NEG_INFINITY);
+            for l in finite {
+                lo = lo.min(l);
+                hi = hi.max(l);
+            }
+            g.fairness.push(hi - lo);
+        }
+    }
+
+    // ---- per-(α, substrate) plain-ASGD baseline for measured speedups
+    let mut baseline: BTreeMap<(String, String), (&'static str, f64)> = BTreeMap::new();
+    for gk in &order {
+        let g = &groups[gk];
+        if g.sched_key.starts_with("asgd(") && g.sched_key.ends_with("/sgd") {
+            let (metric, times) = g.time_metric();
+            if let Some(m) = median(&times) {
+                baseline
+                    .entry((gk.1.clone(), gk.2.clone()))
+                    .or_insert((metric, m));
+            }
+        }
+    }
+
+    // ---- closed-form T_A / T_R per reconstructible compute model
+    let c = Constants::new(1.0, 1.0, opts.sigma_sq, opts.eps);
+    let mut theory: BTreeMap<(String, usize), Option<(f64, f64, usize)>> = BTreeMap::new();
+    for gk in &order {
+        let g = &groups[gk];
+        theory
+            .entry((g.model.clone(), g.n))
+            .or_insert_with(|| {
+                taus_for_label(&g.model, g.n).map(|taus| {
+                    let ta = t_asgd(&taus, c);
+                    let (tr, m_star) = t_optimal(&taus, c);
+                    (ta, tr, m_star)
+                })
+            });
+    }
+
+    // ---- render
+    let name = journal
+        .file_name()
+        .and_then(|f| f.to_str())
+        .unwrap_or("journal");
+    let mut md = String::new();
+    let _ = writeln!(md, "# Sweep report: `{name}`");
+    let _ = writeln!(md);
+    let _ = writeln!(
+        md,
+        "- grid fingerprint `{grid}` — {} journaled cell(s), {retried} retried",
+        entries.len()
+    );
+    let _ = writeln!(
+        md,
+        "- closed-form constants: L = 1, Δ = 1, σ² = {}, ε = {} \
+         (override with `--sigma-sq` / `--eps`)",
+        opts.sigma_sq, opts.eps
+    );
+    let _ = writeln!(md);
+    let _ = writeln!(md, "## Per-scheduler comparison");
+    let _ = writeln!(md);
+    let _ = writeln!(
+        md,
+        "| scheduler | α | substrate | cells | metric | time (median) \
+         | final gap (median) | discard % | fairness spread | speedup ×asgd | theory T_A/T_R |"
+    );
+    let _ = writeln!(
+        md,
+        "|---|---|---|---|---|---|---|---|---|---|---|"
+    );
+    let mut csv = String::from(
+        "scheduler,alpha,substrate,cells,metric,time_median,final_gap_median,\
+         discard_pct,fairness_spread_median,speedup_vs_asgd,theory_speedup\n",
+    );
+    for gk in &order {
+        let g = &groups[gk];
+        let (metric, times) = g.time_metric();
+        let time_med = median(&times);
+        let gap_med = median(&g.final_gap);
+        let grads = g.applied + g.accumulated + g.discarded;
+        let discard_pct = (grads > 0).then(|| 100.0 * g.discarded as f64 / grads as f64);
+        let fairness = median(&g.fairness);
+        let speedup = baseline.get(&(gk.1.clone(), gk.2.clone())).and_then(
+            |&(base_metric, base)| match time_med {
+                Some(t) if base_metric == metric && t > 0.0 => Some(base / t),
+                _ => None,
+            },
+        );
+        let th_ratio = theory
+            .get(&(g.model.clone(), g.n))
+            .and_then(|t| t.as_ref())
+            .map(|(ta, tr, _)| ta / tr);
+        let _ = writeln!(
+            md,
+            "| {} | {} | {} | {} | {metric} | {} | {} | {} | {} | {} | {} |",
+            gk.0,
+            gk.1,
+            gk.2,
+            g.cells,
+            fmt_e(time_med),
+            fmt_e(gap_med),
+            discard_pct
+                .map(|p| format!("{p:.2}%"))
+                .unwrap_or_else(|| "-".into()),
+            fmt_e(fairness),
+            fmt_ratio(speedup),
+            fmt_ratio(th_ratio),
+        );
+        let _ = writeln!(
+            csv,
+            "{},{},{},{},{metric},{},{},{},{},{},{}",
+            csv_field(&gk.0),
+            gk.1,
+            gk.2,
+            g.cells,
+            time_med.map(|t| format!("{t}")).unwrap_or_default(),
+            gap_med.map(|v| format!("{v}")).unwrap_or_default(),
+            discard_pct.map(|p| format!("{p}")).unwrap_or_default(),
+            fairness.map(|f| format!("{f}")).unwrap_or_default(),
+            speedup.map(|s| format!("{s}")).unwrap_or_default(),
+            th_ratio.map(|r| format!("{r}")).unwrap_or_default(),
+        );
+    }
+    if baseline.is_empty() {
+        let _ = writeln!(md);
+        let _ = writeln!(
+            md,
+            "*No plain-ASGD baseline in this journal — measured speedups omitted.*"
+        );
+    }
+
+    let _ = writeln!(md);
+    let _ = writeln!(md, "## Closed-form time complexity (per compute model)");
+    let _ = writeln!(md);
+    let _ = writeln!(
+        md,
+        "| model | n | T_A (ASGD) | T_R (Ringmaster) | m* | T_A/T_R |"
+    );
+    let _ = writeln!(md, "|---|---|---|---|---|---|");
+    for ((model, n), t) in &theory {
+        match t {
+            Some((ta, tr, m_star)) => {
+                let _ = writeln!(
+                    md,
+                    "| {model} | {n} | {} | {} | {m_star} | {} |",
+                    fmt_e(Some(*ta)),
+                    fmt_e(Some(*tr)),
+                    fmt_ratio(Some(ta / tr)),
+                );
+            }
+            None => {
+                let _ = writeln!(
+                    md,
+                    "| {model} | {n} | - | - | - | - (τ profile not reconstructible from label) |"
+                );
+            }
+        }
+    }
+
+    let _ = writeln!(md);
+    let _ = writeln!(md, "## Provenance");
+    let _ = writeln!(md);
+    match &sidecar {
+        None => {
+            let _ = writeln!(
+                md,
+                "No provenance sidecar next to this journal — run the sweep \
+                 with `--provenance` to capture code/host/timing metadata."
+            );
+        }
+        Some((_, records)) => {
+            let hosts: std::collections::BTreeSet<&str> =
+                records.iter().map(|p| p.host.as_str()).collect();
+            let codes: std::collections::BTreeSet<&str> =
+                records.iter().map(|p| p.code.as_str()).collect();
+            let wall: f64 = records.iter().map(|p| p.wall_secs).sum();
+            let cpu: f64 = records.iter().filter_map(|p| p.cpu_secs).sum();
+            let retried = records.iter().filter(|p| p.attempts > 1).count();
+            let _ = writeln!(md, "- {} record(s), {retried} retried", records.len());
+            let _ = writeln!(
+                md,
+                "- host(s): {}",
+                hosts.into_iter().collect::<Vec<_>>().join(", ")
+            );
+            let _ = writeln!(
+                md,
+                "- code: {}",
+                codes.into_iter().collect::<Vec<_>>().join(", ")
+            );
+            let _ = writeln!(
+                md,
+                "- total wall {:.3} s, cpu {:.3} s across recorded cells",
+                wall, cpu
+            );
+        }
+    }
+
+    Ok(Report { markdown: md, csv })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::super::provenance::ProvenanceStore;
+    use super::super::store::CellStore;
+    use super::super::{Cell, ProblemSpec, Provenance, Substrate};
+    use super::*;
+    use crate::coordinator::SchedulerKind;
+
+    fn cell(kind: SchedulerKind) -> Cell {
+        Cell {
+            scheduler: kind.into(),
+            model_label: "lin".into(),
+            model: ComputeModel::fixed_linear(4),
+            problem: ProblemSpec::ShardedLogistic {
+                n_data: 120,
+                n_workers: 4,
+                batch: 4,
+                lambda: 0.01,
+                alpha: f64::INFINITY,
+            },
+            seed: 0,
+            substrate: Substrate::Sim,
+        }
+    }
+
+    fn summ(name: &str, time_to_eps: Option<f64>, sim_time: f64) -> RunSummary {
+        RunSummary {
+            scheduler: name.into(),
+            iters: 100,
+            sim_time,
+            applied: 90,
+            accumulated: 0,
+            discarded: 10,
+            cancellations: 0,
+            worker_hits: vec![25; 4],
+            final_gap: 1e-3,
+            final_gradnorm_sq: 1e-4,
+            time_to_target: None,
+            time_to_eps,
+            diverged: false,
+            concentration: None,
+            shard_final_losses: vec![0.2, 0.5, 0.3, 0.4],
+            wall_secs: Some(0.25),
+            wall_all: Vec::new(),
+        }
+    }
+
+    #[test]
+    fn report_tables_speedups_and_theory() {
+        let dir = std::env::temp_dir().join(format!("ringmaster_report_{}", std::process::id()));
+        std::fs::create_dir_all(&dir).unwrap();
+        let path = dir.join("journal.jsonl");
+        std::fs::remove_file(&path).ok();
+
+        let asgd = cell(SchedulerKind::Asgd { gamma: 0.1 });
+        let mut ring = cell(SchedulerKind::Ringmaster {
+            r: 4,
+            gamma: 0.1,
+            cancel: true,
+        });
+        let mut store = CellStore::open(&path, "fp", 4).unwrap();
+        store
+            .append(&asgd.key(), &summ("asgd", Some(10.0), 20.0), 1)
+            .unwrap();
+        ring.seed = 1;
+        store
+            .append(&ring.key(), &summ("ringmaster", Some(4.0), 9.0), 1)
+            .unwrap();
+        ring.seed = 2;
+        store
+            .append(&ring.key(), &summ("ringmaster", Some(6.0), 11.0), 2)
+            .unwrap();
+        drop(store);
+
+        let rep = journal_report(&path, &ReportOptions::default()).unwrap();
+        // both schedulers appear, grouped per (scheduler, α, substrate)
+        assert!(rep.markdown.contains("| asgd | inf | sim | 1 |"), "{}", rep.markdown);
+        assert!(rep.markdown.contains("| ringmaster | inf | sim | 2 |"), "{}", rep.markdown);
+        // measured speedup: asgd median 10 / ringmaster median 5 = 2.00
+        assert!(rep.markdown.contains("2.00"), "{}", rep.markdown);
+        // theory table reconstructs the τ profile from the label
+        assert!(rep.markdown.contains("T_A/T_R"), "{}", rep.markdown);
+        assert!(rep.markdown.contains("| lin | 4 |"), "{}", rep.markdown);
+        // no sidecar yet: the report says so instead of erroring
+        assert!(rep.markdown.contains("No provenance sidecar"), "{}", rep.markdown);
+        // CSV carries the same rows machine-readably
+        assert!(rep.csv.starts_with("scheduler,alpha,substrate,"), "{}", rep.csv);
+        assert!(rep.csv.contains("time_to_eps"), "{}", rep.csv);
+        assert!(rep.csv.contains(",2,"), "{}", rep.csv);
+
+        // with a provenance sidecar the appendix lists hosts and code
+        let mut prov = ProvenanceStore::open(&path, "fp").unwrap();
+        let rec = Provenance {
+            key: asgd.key(),
+            scheduler: "asgd".into(),
+            substrate: "sim".into(),
+            seed: 0,
+            code: "0.0.0+bin:test".into(),
+            host: "testhost".into(),
+            os: "linux/x86_64".into(),
+            cores: 1,
+            attempts: 1,
+            repeats: 1,
+            wall_secs: 0.5,
+            cpu_secs: None,
+            env: Default::default(),
+        };
+        prov.append(&rec).unwrap();
+        drop(prov);
+        let rep = journal_report(&path, &ReportOptions::default()).unwrap();
+        assert!(rep.markdown.contains("testhost"), "{}", rep.markdown);
+        assert!(rep.markdown.contains("0.0.0+bin:test"), "{}", rep.markdown);
+        std::fs::remove_dir_all(&dir).ok();
+    }
+
+    #[test]
+    fn metric_falls_back_when_time_to_eps_is_partial() {
+        let dir =
+            std::env::temp_dir().join(format!("ringmaster_report_fb_{}", std::process::id()));
+        std::fs::create_dir_all(&dir).unwrap();
+        let path = dir.join("journal.jsonl");
+        std::fs::remove_file(&path).ok();
+
+        let mut ring = cell(SchedulerKind::Ringmaster {
+            r: 4,
+            gamma: 0.1,
+            cancel: true,
+        });
+        let mut store = CellStore::open(&path, "fp", 2).unwrap();
+        store
+            .append(&ring.key(), &summ("ringmaster", Some(4.0), 9.0), 1)
+            .unwrap();
+        ring.seed = 1;
+        // one seed never hit ε ⇒ the whole group reports sim_time
+        store
+            .append(&ring.key(), &summ("ringmaster", None, 11.0), 1)
+            .unwrap();
+        drop(store);
+
+        let rep = journal_report(&path, &ReportOptions::default()).unwrap();
+        assert!(rep.markdown.contains("| sim_time |"), "{}", rep.markdown);
+        // no asgd baseline journaled ⇒ the report says so
+        assert!(rep.markdown.contains("No plain-ASGD baseline"), "{}", rep.markdown);
+        std::fs::remove_dir_all(&dir).ok();
+    }
+}

@@ -28,7 +28,8 @@
 
 use std::collections::BTreeMap;
 use std::panic::{catch_unwind, resume_unwind, AssertUnwindSafe};
-use std::sync::{Arc, OnceLock};
+use std::path::PathBuf;
+use std::sync::{Arc, Mutex, OnceLock};
 use std::time::{Duration, Instant};
 
 use crate::data::partition::label_skew;
@@ -40,10 +41,12 @@ use crate::engine::sweep::{
 use crate::engine::{RunRecord, ThreadPoolConfig};
 use crate::exec;
 use crate::linalg::par::{ComputePool, PoolSet};
+use crate::metrics::SpanWriter;
 use crate::opt::{LogisticProblem, Noisy, QuadraticProblem, Sharded};
 use crate::util::error::Result;
 
-use super::spec::{Cell, GridSpec, ProblemSpec, RunBudget, ShardSel, Substrate};
+use super::provenance::{capture, process_cpu_secs, ProvenanceStore};
+use super::spec::{fnv1a64, Cell, GridSpec, ProblemSpec, RunBudget, ShardSel, Substrate};
 use super::store::{CellStore, RunSummary};
 
 /// Build the label-skew partition of one sharded cell. `α = ∞`
@@ -269,12 +272,14 @@ fn run_cell_with(
     budget: &RunBudget,
     cache: &DataCache,
     pool: &Arc<ComputePool>,
+    sink: Option<&Arc<Mutex<SpanWriter>>>,
 ) -> (RunRecord, Option<f64>) {
     let server_opt = cell.scheduler.server_opt.clone();
     let mut sched = cell.scheduler.kind.build();
     match &cell.problem {
         ProblemSpec::Quadratic { d, noise_sigma } => {
-            let dcfg = budget.driver_config(cell.seed, server_opt, false);
+            let mut dcfg = budget.driver_config(cell.seed, server_opt, false);
+            dcfg.span_sink = sink.cloned();
             let rec = match cell.substrate {
                 Substrate::Sim => {
                     let problem = Noisy::new(QuadraticProblem::paper(*d), *noise_sigma);
@@ -318,7 +323,8 @@ fn run_cell_with(
                 .partitions
                 .get(&(*n_workers, alpha.to_bits()))
                 .expect("partition cache covers every sharded cell");
-            let dcfg = budget.driver_config(cell.seed, server_opt, true);
+            let mut dcfg = budget.driver_config(cell.seed, server_opt, true);
+            dcfg.span_sink = sink.cloned();
             let rec = match cell.substrate {
                 Substrate::Sim => {
                     // borrow the cached problem — `&LogisticProblem` is a
@@ -353,13 +359,26 @@ fn run_cell_with(
 /// diverge. Returns the full record plus the partition concentration for
 /// sharded cells.
 pub fn run_cell(cell: &Cell, budget: &RunBudget) -> (RunRecord, Option<f64>) {
+    run_cell_traced(cell, budget, None)
+}
+
+/// [`run_cell`] with an optional structured-span sink: every
+/// assignment→outcome span of the run ([`crate::metrics::Span`]) is
+/// streamed into the shared [`SpanWriter`] as it closes, on *any*
+/// substrate — the single-cell form of `sweep --trace-dir`. Pass `None`
+/// to run untraced (identical to [`run_cell`]).
+pub fn run_cell_traced(
+    cell: &Cell,
+    budget: &RunBudget,
+    sink: Option<Arc<Mutex<SpanWriter>>>,
+) -> (RunRecord, Option<f64>) {
     let cache = build_cache(std::slice::from_ref(cell));
     // budget the pool as if a full-width sweep were running: ad-hoc cells
     // are often invoked from callers that fan out themselves (experiments,
     // benches), so the conservative width never oversubscribes; a lone
     // cell wanting the whole machine sets RINGMASTER_CELL_THREADS
     let pool = Arc::new(ComputePool::new(cell_threads(sweep_threads())));
-    run_cell_with(cell, budget, &cache, &pool)
+    run_cell_with(cell, budget, &cache, &pool, sink.as_ref())
 }
 
 /// One completed cell with its full in-memory record.
@@ -381,7 +400,8 @@ pub fn run_cells(spec: &GridSpec) -> Vec<CellOutcome> {
     let pools = PoolSet::new(threads, cell_threads(threads));
     let out = parallel_map_with(threads, &spec.cells, |_, cell| {
         let lease = pools.lease();
-        let (record, concentration) = run_cell_with(cell, &spec.budget, &cache, lease.pool());
+        let (record, concentration) =
+            run_cell_with(cell, &spec.budget, &cache, lease.pool(), None);
         (record, concentration)
     });
     spec.cells
@@ -479,6 +499,46 @@ impl GridRun {
     }
 }
 
+/// Execution options of one checkpointed grid invocation — the single
+/// bundle behind every `run_grid*` entry point ([`run_grid_configured`]),
+/// mapping 1:1 onto the `sweep` CLI's execution flags. The options govern
+/// *how* cells run and what observability artifacts ride along; they
+/// never change *what* a cell computes, so journals and CSVs stay
+/// byte-identical across any combination.
+#[derive(Clone, Debug)]
+pub struct GridOptions {
+    /// Transient-failure retry policy (`--retries`).
+    pub retry: RetryPolicy,
+    /// Per-cell repeats for live wall-clock cells (`--repeats`);
+    /// deterministic substrates always run once.
+    pub repeats: u32,
+    /// Record a [`super::provenance`] sidecar next to the journal
+    /// (`--provenance`): one record per cell executed by this invocation,
+    /// keyed by cell key, in a separate `<journal>.prov` file — the
+    /// journal's own bytes are untouched. Requires a store (provenance is
+    /// keyed to journal cells); ignored for store-less runs.
+    pub provenance: bool,
+    /// Stream per-cell structured span traces (`--trace-dir`): one
+    /// `<fnv64(cell key)>.spans.jsonl` of [`crate::metrics::Span`] lines
+    /// per executed cell, on any substrate.
+    pub trace_dir: Option<PathBuf>,
+    /// Per-cell span cap of the trace files (`--trace-spans`); spans past
+    /// the cap are counted but not written.
+    pub trace_spans: u64,
+}
+
+impl Default for GridOptions {
+    fn default() -> Self {
+        Self {
+            retry: RetryPolicy::default(),
+            repeats: 1,
+            provenance: false,
+            trace_dir: None,
+            trace_spans: 1_000_000,
+        }
+    }
+}
+
 /// Run (this shard of) a grid, resuming from — and streaming checkpoints
 /// into — `store` when given. Transient cell failures are retried with
 /// the default [`RetryPolicy`].
@@ -509,7 +569,8 @@ pub fn run_grid_retrying(
     max_cells: Option<usize>,
     retry: RetryPolicy,
 ) -> Result<GridRun> {
-    run_grid_repeating(spec, shard, store, max_cells, retry, 1)
+    let opts = GridOptions { retry, ..GridOptions::default() };
+    run_grid_configured(spec, shard, store, max_cells, &opts)
 }
 
 /// [`run_grid_retrying`] with per-cell repeats (the CLI's `--repeats`):
@@ -526,6 +587,31 @@ pub fn run_grid_repeating(
     max_cells: Option<usize>,
     retry: RetryPolicy,
     repeats: u32,
+) -> Result<GridRun> {
+    let opts = GridOptions { retry, repeats, ..GridOptions::default() };
+    run_grid_configured(spec, shard, store, max_cells, &opts)
+}
+
+/// The canonical checkpointed grid entry point: every `run_grid*` wrapper
+/// funnels here with its [`GridOptions`] bundle. Beyond the resume /
+/// shard / retry / repeat machinery this is where the observability
+/// side-channels attach:
+///
+/// * `opts.provenance` — each cell executed by this invocation appends a
+///   [`super::Provenance`] record (code fingerprint, host, wall + CPU
+///   seconds, attempt/repeat counts) to the journal's `.prov` sidecar.
+/// * `opts.trace_dir` — each executed cell streams its structured spans
+///   into `<fnv64(cell key)>.spans.jsonl` under the directory, capped at
+///   `opts.trace_spans` lines, on any substrate.
+///
+/// Neither artifact feeds back into execution, so enabling them changes
+/// no journal, CSV, or summary byte.
+pub fn run_grid_configured(
+    spec: &GridSpec,
+    shard: ShardSel,
+    store: Option<&mut CellStore>,
+    max_cells: Option<usize>,
+    opts: &GridOptions,
 ) -> Result<GridRun> {
     // diff the shard against the journal up front so the data cache only
     // ever covers cells that may actually run: a resumed sweep never
@@ -546,10 +632,28 @@ pub fn run_grid_repeating(
     // persistent intra-cell compute pools, one per sweep worker, spawned
     // once per grid invocation (never per cell) and leased cell-by-cell
     let pools = PoolSet::new(threads, cell_threads(threads));
-    run_grid_with(spec, shard, store, max_cells, retry, repeats, |cell, budget| {
+    if let Some(dir) = &opts.trace_dir {
+        std::fs::create_dir_all(dir)?;
+    }
+    let (trace_dir, trace_spans) = (opts.trace_dir.clone(), opts.trace_spans);
+    run_grid_inner(spec, shard, store, max_cells, opts, |cell, budget| {
         let cache = cache.get_or_init(|| build_cache(&pending));
         let lease = pools.lease();
-        run_cell_with(cell, budget, cache, lease.pool())
+        // per-cell span stream, named by the cell-key hash so resumed
+        // invocations overwrite (not append) their own cell's trace
+        let sink = trace_dir.as_ref().map(|dir| {
+            let path = dir.join(format!("{:016x}.spans.jsonl", fnv1a64(cell.key().as_bytes())));
+            let writer = SpanWriter::create(&path, trace_spans)
+                .unwrap_or_else(|e| panic!("span trace {}: {e}", path.display()));
+            Arc::new(Mutex::new(writer))
+        });
+        let out = run_cell_with(cell, budget, cache, lease.pool(), sink.as_ref());
+        if let Some(s) = &sink {
+            if let Ok(mut w) = s.lock() {
+                let _ = w.finish();
+            }
+        }
+        out
     })
 }
 
@@ -557,7 +661,9 @@ pub fn run_grid_repeating(
 /// interruption, retry-with-journaled-attempts — over a caller-supplied
 /// cell executor. [`run_grid`]/[`run_grid_retrying`] pass the standard
 /// substrate-dispatching executor; tests inject failing executors to
-/// exercise the retry path deterministically.
+/// exercise the retry path deterministically. (Provenance/trace options
+/// belong to [`run_grid_configured`], which owns the standard executor —
+/// this hook runs with them off.)
 pub fn run_grid_with<F>(
     spec: &GridSpec,
     shard: ShardSel,
@@ -570,6 +676,23 @@ pub fn run_grid_with<F>(
 where
     F: Fn(&Cell, &RunBudget) -> (RunRecord, Option<f64>) + Sync,
 {
+    let opts = GridOptions { retry, repeats, ..GridOptions::default() };
+    run_grid_inner(spec, shard, store, max_cells, &opts, exec_cell)
+}
+
+fn run_grid_inner<F>(
+    spec: &GridSpec,
+    shard: ShardSel,
+    store: Option<&mut CellStore>,
+    max_cells: Option<usize>,
+    opts: &GridOptions,
+    exec_cell: F,
+) -> Result<GridRun>
+where
+    F: Fn(&Cell, &RunBudget) -> (RunRecord, Option<f64>) + Sync,
+{
+    let retry = opts.retry;
+    let repeats = opts.repeats;
     let cells = spec.shard_cells(shard);
     let keys: Vec<String> = cells.iter().map(Cell::key).collect();
     let done: BTreeMap<String, RunSummary> = store
@@ -595,6 +718,16 @@ where
     pending = order.iter().map(|&p| pending[p].clone()).collect();
     pending_idx = order.iter().map(|&p| pending_idx[p]).collect();
     let ran = pending.len();
+
+    // The provenance sidecar rides *next to* the journal (separate
+    // `.prov` file): one record per cell this invocation executes, keyed
+    // by cell key — the journal's own bytes, and every resume/merge
+    // contract built on them, are untouched. Store-less runs have no
+    // journal to key against, so provenance is a no-op there.
+    let mut prov: Option<ProvenanceStore> = match (&store, opts.provenance) {
+        (Some(st), true) => Some(ProvenanceStore::open(st.path(), &spec.fingerprint())?),
+        _ => None,
+    };
 
     // One repeat of one cell, with the transient-retry loop. Returns the
     // summary plus how many attempts this repeat burned.
@@ -631,12 +764,16 @@ where
     // identical results, so they keep k = 1 and byte-identical CSVs. The
     // journaled attempt count stays `1 + transient retries` (repeats are
     // not retries), so the retry audit trail is repeat-invariant too.
-    let run_one = |cell: &Cell| -> (RunSummary, u32) {
+    let run_one = |cell: &Cell| -> (RunSummary, u32, f64, Option<f64>) {
         let live = matches!(
             cell.substrate,
             Substrate::Wallclock { deterministic: false, .. }
         );
         let k = if live { repeats.max(1) } else { 1 };
+        // host wall + process-CPU readings bracket the whole cell (every
+        // repeat and retry) — provenance metadata only, never output
+        let host0 = Instant::now();
+        let cpu0 = process_cpu_secs();
         let mut extra_attempts = 0u32;
         let mut wall_all = Vec::new();
         let mut first: Option<RunSummary> = None;
@@ -650,7 +787,12 @@ where
         }
         let mut s = first.expect("k >= 1 repeats always produce a summary");
         s.wall_all = wall_all;
-        (s, 1 + extra_attempts)
+        let wall = host0.elapsed().as_secs_f64();
+        let cpu = match (cpu0, process_cpu_secs()) {
+            (Some(a), Some(b)) => Some((b - a).max(0.0)),
+            _ => None,
+        };
+        (s, 1 + extra_attempts, wall, cpu)
     };
 
     let mut store = store;
@@ -659,12 +801,28 @@ where
         pool_threads(&pending),
         &pending,
         |_, cell| run_one(cell),
-        |i, (summary, attempts)| {
+        |i, (summary, attempts, wall, cpu)| {
             // checkpoint in completion order, while other cells still run;
             // a failing journal halts the pool (Break) so a dead disk
             // costs at most the in-flight cells, not the rest of the grid
             if let Some(st) = store.as_deref_mut() {
                 if let Err(e) = st.append(&keys[pending_idx[i]], summary, *attempts) {
+                    append_err = Some(e);
+                    return std::ops::ControlFlow::Break(());
+                }
+            }
+            if let Some(ps) = prov.as_mut() {
+                let cell = &pending[i];
+                let reps = if matches!(
+                    cell.substrate,
+                    Substrate::Wallclock { deterministic: false, .. }
+                ) {
+                    repeats.max(1) as usize
+                } else {
+                    1
+                };
+                let rec = capture(cell, &keys[pending_idx[i]], *attempts, reps, *wall, *cpu);
+                if let Err(e) = ps.append(&rec) {
                     append_err = Some(e);
                     return std::ops::ControlFlow::Break(());
                 }
@@ -681,7 +839,7 @@ where
         .into_iter()
         .zip(summaries)
         .filter_map(|(i, s)| {
-            s.map(|(s, attempts)| {
+            s.map(|(s, attempts, _wall, _cpu)| {
                 retries += u64::from(attempts) - 1;
                 (i, s)
             })
@@ -1042,6 +1200,61 @@ mod tests {
 
         let plain = run_grid(&spec, ShardSel::ALL, None, None).unwrap();
         assert_eq!(grid_csv(&second.rows), grid_csv(&plain.rows));
+        std::fs::remove_dir_all(&dir).ok();
+    }
+
+    #[test]
+    fn configured_runs_record_provenance_and_span_traces() {
+        let dir = std::env::temp_dir().join(format!("ringmaster_obs_{}", std::process::id()));
+        std::fs::create_dir_all(&dir).unwrap();
+        let path = dir.join("journal.jsonl");
+        std::fs::remove_file(&path).ok();
+        std::fs::remove_file(ProvenanceStore::sidecar_path(&path)).ok();
+        let spans_dir = dir.join("spans");
+        std::fs::remove_dir_all(&spans_dir).ok();
+        let spec = quad_spec();
+        let fp = spec.fingerprint();
+        let opts = GridOptions {
+            provenance: true,
+            trace_dir: Some(spans_dir.clone()),
+            trace_spans: 10_000,
+            ..GridOptions::default()
+        };
+
+        let mut store = CellStore::open(&path, &fp, spec.len()).unwrap();
+        let run =
+            run_grid_configured(&spec, ShardSel::ALL, Some(&mut store), None, &opts).unwrap();
+        assert!(run.is_complete());
+        drop(store);
+
+        // one provenance record per executed cell, keyed by cell key
+        let prov = ProvenanceStore::open(&path, &fp).unwrap();
+        assert_eq!(prov.recorded().len(), spec.len());
+        for (key, p) in prov.recorded() {
+            assert_eq!(&p.key, key);
+            assert!(p.wall_secs >= 0.0);
+            assert_eq!(p.attempts, 1);
+            assert_eq!(p.repeats, 1);
+            assert!(p.code.contains("+bin:"));
+        }
+
+        // one span trace per cell, every line a well-formed span object
+        let traces: Vec<_> = std::fs::read_dir(&spans_dir)
+            .unwrap()
+            .map(|e| e.unwrap().path())
+            .collect();
+        assert_eq!(traces.len(), spec.len());
+        for t in &traces {
+            let text = std::fs::read_to_string(t).unwrap();
+            let first = text.lines().next().expect("non-empty trace");
+            let j = crate::util::json::parse(first).unwrap();
+            assert!(j.get("outcome").as_str().is_some(), "{first}");
+        }
+
+        // the observability side-channels never touch the results: the
+        // CSV is byte-identical to a plain store-less run's
+        let plain = run_grid(&spec, ShardSel::ALL, None, None).unwrap();
+        assert_eq!(grid_csv(&run.rows), grid_csv(&plain.rows));
         std::fs::remove_dir_all(&dir).ok();
     }
 

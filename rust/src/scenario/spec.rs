@@ -424,6 +424,18 @@ impl GridSpec {
         }
     }
 
+    /// Typed, validated grid construction — the canonical entry point.
+    ///
+    /// Every grid producer (the heterogeneity matrix, stepsize tuning, the
+    /// quadratic sweeps, benches, the CLI) goes through the builder so
+    /// axis mistakes (empty axes, a compute model whose width disagrees
+    /// with the sharded problem, α ≤ 0, zero batch) fail at build time
+    /// with a message naming the axis — not as a panic deep inside a
+    /// worker thread.
+    pub fn builder() -> GridSpecBuilder {
+        GridSpecBuilder::default()
+    }
+
     pub fn from_cells(cells: Vec<Cell>, budget: RunBudget) -> Self {
         Self { cells, budget }
     }
@@ -460,6 +472,193 @@ impl GridSpec {
             .map(|(_, c)| c.clone())
             .collect()
     }
+}
+
+/// Builder behind [`GridSpec::builder`]: typed axis setters, explicit
+/// cells, and validation at [`build`](GridSpecBuilder::build).
+///
+/// Two construction modes compose freely:
+/// * **axes** — the setters mirror [`GridAxes`] and expand to the same
+///   deterministic cross-product order;
+/// * **explicit cells** — [`cell`](GridSpecBuilder::cell)/
+///   [`cells`](GridSpecBuilder::cells) append fully-formed [`Cell`]s
+///   after the axis expansion (the stepsize-tuning / quadratic-sweep
+///   shape, where each cell differs in more than one axis at once).
+#[derive(Clone, Debug, Default)]
+pub struct GridSpecBuilder {
+    axes: GridAxes,
+    extra: Vec<Cell>,
+    budget: RunBudget,
+}
+
+impl GridSpecBuilder {
+    pub fn scheduler(mut self, s: impl Into<SchedSpec>) -> Self {
+        self.axes.schedulers.push(s.into());
+        self
+    }
+
+    pub fn schedulers(mut self, s: impl IntoIterator<Item = SchedSpec>) -> Self {
+        self.axes.schedulers.extend(s);
+        self
+    }
+
+    /// Re-tune every scheduler on the axis to each of these stepsizes
+    /// (empty = every scheduler keeps its own γ).
+    pub fn gammas(mut self, g: impl IntoIterator<Item = f64>) -> Self {
+        self.axes.gammas.extend(g);
+        self
+    }
+
+    pub fn model(mut self, label: impl Into<String>, m: ComputeModel) -> Self {
+        self.axes.models.push((label.into(), m));
+        self
+    }
+
+    pub fn problem(mut self, p: ProblemSpec) -> Self {
+        self.axes.problems.push(p);
+        self
+    }
+
+    pub fn problems(mut self, p: impl IntoIterator<Item = ProblemSpec>) -> Self {
+        self.axes.problems.extend(p);
+        self
+    }
+
+    pub fn seed(mut self, s: u64) -> Self {
+        self.axes.seeds.push(s);
+        self
+    }
+
+    pub fn seeds(mut self, s: impl IntoIterator<Item = u64>) -> Self {
+        self.axes.seeds.extend(s);
+        self
+    }
+
+    pub fn substrate(mut self, s: Substrate) -> Self {
+        self.axes.substrates.push(s);
+        self
+    }
+
+    pub fn substrates(mut self, s: impl IntoIterator<Item = Substrate>) -> Self {
+        self.axes.substrates.extend(s);
+        self
+    }
+
+    /// Append one fully-formed cell (validated at build like every
+    /// expanded cell).
+    pub fn cell(mut self, c: Cell) -> Self {
+        self.extra.push(c);
+        self
+    }
+
+    pub fn cells(mut self, c: impl IntoIterator<Item = Cell>) -> Self {
+        self.extra.extend(c);
+        self
+    }
+
+    pub fn budget(mut self, b: RunBudget) -> Self {
+        self.budget = b;
+        self
+    }
+
+    /// Expand, validate, and produce the [`GridSpec`]. Errors name the
+    /// offending axis/cell instead of panicking mid-sweep.
+    pub fn build(self) -> crate::util::error::Result<GridSpec> {
+        let has_axes = !self.axes.schedulers.is_empty()
+            || !self.axes.models.is_empty()
+            || !self.axes.problems.is_empty()
+            || !self.axes.seeds.is_empty();
+        if has_axes {
+            crate::ensure!(
+                !self.axes.schedulers.is_empty(),
+                "grid axes need at least one scheduler"
+            );
+            crate::ensure!(
+                !self.axes.models.is_empty(),
+                "grid axes need at least one compute model"
+            );
+            crate::ensure!(
+                !self.axes.problems.is_empty(),
+                "grid axes need at least one problem"
+            );
+            crate::ensure!(
+                !self.axes.seeds.is_empty(),
+                "grid axes need at least one seed"
+            );
+        }
+        for &g in &self.axes.gammas {
+            crate::ensure!(
+                g.is_finite() && g > 0.0,
+                "every stepsize on the γ axis must be finite and positive, got {g}"
+            );
+        }
+        let mut cells = self.axes.expand();
+        cells.extend(self.extra);
+        crate::ensure!(
+            !cells.is_empty(),
+            "grid expands to zero cells — set axes or add explicit cells"
+        );
+        for cell in &cells {
+            validate_cell(cell)?;
+        }
+        Ok(GridSpec::from_cells(cells, self.budget))
+    }
+}
+
+/// Per-cell structural validation shared by both builder modes.
+fn validate_cell(cell: &Cell) -> crate::util::error::Result<()> {
+    let gamma = cell.scheduler.kind.gamma();
+    crate::ensure!(
+        gamma.is_finite() && gamma > 0.0,
+        "cell '{}': scheduler stepsize must be finite and positive, got {gamma}",
+        cell.key()
+    );
+    crate::ensure!(
+        cell.model.n_workers() >= 1,
+        "cell '{}': compute model has no workers",
+        cell.key()
+    );
+    match &cell.problem {
+        ProblemSpec::Quadratic { d, noise_sigma } => {
+            crate::ensure!(*d >= 1, "cell '{}': quadratic needs d ≥ 1", cell.key());
+            crate::ensure!(
+                noise_sigma.is_finite() && *noise_sigma >= 0.0,
+                "cell '{}': noise σ must be finite and ≥ 0, got {noise_sigma}",
+                cell.key()
+            );
+        }
+        ProblemSpec::ShardedLogistic {
+            n_data,
+            n_workers,
+            batch,
+            alpha,
+            ..
+        } => {
+            crate::ensure!(
+                *batch >= 1,
+                "cell '{}': minibatch size must be at least 1",
+                cell.key()
+            );
+            crate::ensure!(
+                *alpha > 0.0,
+                "cell '{}': Dirichlet α must be positive (inf = IID), got {alpha}",
+                cell.key()
+            );
+            crate::ensure!(
+                *n_workers >= 1 && n_data >= n_workers,
+                "cell '{}': need n_data ≥ n_workers ≥ 1 (got {n_data} data / {n_workers} workers)",
+                cell.key()
+            );
+            crate::ensure!(
+                cell.model.n_workers() == *n_workers,
+                "cell '{}': compute model is {} workers wide but the sharded \
+                 problem partitions across {n_workers}",
+                cell.key(),
+                cell.model.n_workers()
+            );
+        }
+    }
+    Ok(())
 }
 
 /// Which slice of the grid this process owns (`--shard i/n`, 1-based on
@@ -659,6 +858,74 @@ mod tests {
             Substrate::Wallclock { deterministic: false, threads: 0 }.name(),
             "wallclock-live"
         );
+    }
+
+    #[test]
+    fn builder_matches_axes_expansion() {
+        let a = axes();
+        let via_axes = GridSpec::new(&a, RunBudget::default());
+        let built = GridSpec::builder()
+            .schedulers(a.schedulers.clone())
+            .model("lin", ComputeModel::fixed_linear(4))
+            .problems(a.problems.clone())
+            .seeds([0, 1, 2])
+            .build()
+            .unwrap();
+        assert_eq!(built.len(), via_axes.len());
+        assert_eq!(built.fingerprint(), via_axes.fingerprint());
+        // explicit cells append after the axis expansion
+        let extra = via_axes.cells[0].clone().on(Substrate::Wallclock {
+            deterministic: true,
+            threads: 0,
+        });
+        let with_cell = GridSpec::builder()
+            .cells(via_axes.cells.clone())
+            .cell(extra.clone())
+            .build()
+            .unwrap();
+        assert_eq!(with_cell.len(), via_axes.len() + 1);
+        assert_eq!(with_cell.cells.last().unwrap().key(), extra.key());
+    }
+
+    #[test]
+    fn builder_validates_at_build() {
+        let a = axes();
+        // model width disagrees with the sharded partition
+        let err = GridSpec::builder()
+            .scheduler(SchedulerKind::Asgd { gamma: 0.1 })
+            .model("narrow", ComputeModel::fixed_linear(2))
+            .problem(a.problems[0].clone())
+            .seed(0)
+            .build()
+            .unwrap_err();
+        assert!(format!("{err}").contains("workers"), "{err}");
+        // empty grid
+        assert!(GridSpec::builder().build().is_err());
+        // missing axis named in the error
+        let err = GridSpec::builder()
+            .scheduler(SchedulerKind::Asgd { gamma: 0.1 })
+            .build()
+            .unwrap_err();
+        assert!(format!("{err}").contains("compute model"), "{err}");
+        // non-positive Dirichlet α
+        let err = GridSpec::builder()
+            .scheduler(SchedulerKind::Asgd { gamma: 0.1 })
+            .model("lin", ComputeModel::fixed_linear(4))
+            .problem(a.problems[0].with_alpha(0.0))
+            .seed(0)
+            .build()
+            .unwrap_err();
+        assert!(format!("{err}").contains("positive"), "{err}");
+        // zero stepsize on the γ axis
+        let err = GridSpec::builder()
+            .scheduler(SchedulerKind::Asgd { gamma: 0.1 })
+            .gammas([0.0])
+            .model("lin", ComputeModel::fixed_linear(4))
+            .problem(a.problems[0].clone())
+            .seed(0)
+            .build()
+            .unwrap_err();
+        assert!(format!("{err}").contains("stepsize"), "{err}");
     }
 
     #[test]

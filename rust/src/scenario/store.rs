@@ -66,7 +66,8 @@ pub struct RunSummary {
 }
 
 /// JSON `Num`s cannot carry non-finite values; encode them as strings.
-fn num(v: f64) -> Json {
+/// (Shared with the provenance sidecar, which uses the same encoding.)
+pub(crate) fn num(v: f64) -> Json {
     if v.is_finite() {
         Json::Num(v)
     } else if v.is_nan() {
@@ -78,7 +79,7 @@ fn num(v: f64) -> Json {
     }
 }
 
-fn get_num(j: &Json) -> Option<f64> {
+pub(crate) fn get_num(j: &Json) -> Option<f64> {
     match j {
         Json::Num(n) => Some(*n),
         Json::Str(s) => match s.as_str() {
@@ -95,7 +96,7 @@ fn opt_num(v: Option<f64>) -> Json {
     v.map(num).unwrap_or(Json::Null)
 }
 
-fn get_u64(j: &Json) -> Option<u64> {
+pub(crate) fn get_u64(j: &Json) -> Option<u64> {
     get_num(j).and_then(|f| {
         (f >= 0.0 && f.fract() == 0.0 && f < 9.0e15).then_some(f as u64)
     })
@@ -268,6 +269,18 @@ fn parse_journal(
         entries.push((key.to_string(), summary, attempts));
     }
     Ok((header, entries))
+}
+
+/// Read a journal file: `(grid fingerprint, entries)` where each entry is
+/// `(cell key, summary, attempts)` in file order. The read-only face of
+/// the same tolerant parser [`CellStore::open`] and [`merge_journals`]
+/// use — analysis tooling (`sweep report`) can never disagree with resume
+/// about what a journal contains.
+pub fn read_journal(path: &Path) -> Result<(String, Vec<(String, RunSummary, u32)>)> {
+    let text = std::fs::read_to_string(path)
+        .map_err(|e| crate::anyhow!("reading {}: {e}", path.display()))?;
+    let (header, entries) = parse_journal(path, &text)?;
+    Ok((header.grid, entries))
 }
 
 fn header_json(fingerprint: &str, version: f64, n_cells: f64) -> Json {

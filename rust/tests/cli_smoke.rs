@@ -310,6 +310,128 @@ fn sweep_merge_reassembles_a_cross_machine_fan_out() {
 }
 
 #[test]
+fn version_flag_prints_version() {
+    let (stdout, _, ok) = run(&["--version"]);
+    assert!(ok);
+    assert!(stdout.trim().starts_with("ringmaster "), "{stdout}");
+}
+
+#[test]
+fn unknown_flag_is_rejected_with_a_suggestion() {
+    let (_, stderr, ok) = run(&["sweep", "--seedz", "0"]);
+    assert!(!ok);
+    assert!(stderr.contains("unknown flag --seedz"), "{stderr}");
+    assert!(stderr.contains("--seeds"), "no did-you-mean in: {stderr}");
+
+    // a dotted key is a config override path, not a registry flag
+    let (_, stderr, ok) = run(&["complexity", "--cluster.n", "64"]);
+    assert!(ok, "{stderr}");
+}
+
+#[test]
+fn help_documents_observability_and_report_surfaces() {
+    let (stdout, _, ok) = run(&["--help"]);
+    assert!(ok);
+    let needles =
+        ["--provenance", "--trace-dir", "--trace-out", "sweep report", "sweep merge", "--journal"];
+    for needle in needles {
+        assert!(stdout.contains(needle), "help missing '{needle}'");
+    }
+}
+
+#[test]
+fn run_trace_out_streams_bounded_spans() {
+    let dir = std::env::temp_dir().join(format!("ringmaster_cli_trace_{}", std::process::id()));
+    std::fs::create_dir_all(&dir).unwrap();
+    let trace = dir.join("run.spans.jsonl");
+    let trace_s = trace.to_str().unwrap();
+    let (stdout, stderr, ok) = run(&[
+        "run",
+        "--scheduler", "ringmaster",
+        "--model", "linear",
+        "--d", "16",
+        "--n", "8",
+        "--gamma", "0.05",
+        "--max-iters", "2000",
+        "--target-gap", "1e-12",
+        "--trace-out", trace_s,
+        "--trace-spans", "500",
+    ]);
+    assert!(ok, "{stdout}\n{stderr}");
+    assert!(stdout.contains("span(s)"), "{stdout}");
+    assert!(stdout.contains("final:"), "tracing must not change the run output: {stdout}");
+    let body = std::fs::read_to_string(&trace).unwrap();
+    let n = body.lines().count();
+    assert!(n > 0 && n <= 500, "cap must bound the file, got {n} lines");
+    assert!(body.lines().next().unwrap().contains("\"outcome\""), "{body}");
+    std::fs::remove_dir_all(&dir).ok();
+}
+
+#[test]
+fn sweep_provenance_and_report_end_to_end() {
+    let dir = std::env::temp_dir().join(format!("ringmaster_cli_report_{}", std::process::id()));
+    std::fs::create_dir_all(&dir).unwrap();
+    let journal = dir.join("sweep.jsonl");
+    std::fs::remove_file(&journal).ok();
+    let journal_s = journal.to_str().unwrap().to_string();
+    let base = [
+        "sweep",
+        "--alpha", "inf,0.1",
+        "--seeds", "0",
+        "--n", "4",
+        "--n-data", "120",
+        "--batch", "4",
+        "--max-iters", "120",
+        "--schedulers", "ringmaster,rennala,asgd",
+    ];
+
+    // ground truth without any observability
+    let (fresh, _, ok) = run(&base);
+    assert!(ok);
+
+    // --provenance requires a journal
+    let mut orphan = base.to_vec();
+    orphan.push("--provenance");
+    let (_, err, ok) = run(&orphan);
+    assert!(!ok);
+    assert!(err.contains("--journal"), "{err}");
+
+    // journaled + provenance run: CSV bytes unchanged, sidecar written
+    let mut instrumented = base.to_vec();
+    instrumented.extend(["--journal", journal_s.as_str(), "--provenance"]);
+    let (out, err, ok) = run(&instrumented);
+    assert!(ok, "{err}");
+    assert_eq!(out, fresh, "--provenance must not change the sweep CSV");
+    let sidecar = dir.join("sweep.jsonl.prov");
+    assert!(sidecar.exists(), "missing provenance sidecar {}", sidecar.display());
+
+    // the report turns journal + sidecar into the paper-style comparison
+    let report_csv = dir.join("report.csv");
+    let (md, err, ok) = run(&[
+        "sweep",
+        "report",
+        journal_s.as_str(),
+        "--csv-out",
+        report_csv.to_str().unwrap(),
+    ]);
+    assert!(ok, "{err}");
+    assert!(md.contains("# Sweep report"), "{md}");
+    assert!(md.contains("## Per-scheduler comparison"), "{md}");
+    assert!(md.contains("## Provenance"), "{md}");
+    assert!(md.contains("ringmaster"), "{md}");
+    let csv = std::fs::read_to_string(&report_csv).unwrap();
+    assert!(csv.starts_with("scheduler,alpha,substrate,"), "{csv}");
+    assert!(csv.lines().any(|l| l.starts_with("rennala")), "{csv}");
+
+    // report without a journal argument is a clean error
+    let (_, err, ok) = run(&["sweep", "report"]);
+    assert!(!ok);
+    assert!(err.contains("sweep report"), "{err}");
+
+    std::fs::remove_dir_all(&dir).ok();
+}
+
+#[test]
 fn exec_demo_runs_real_threads() {
     let (stdout, stderr, ok) = run(&[
         "exec-demo",

@@ -1,0 +1,271 @@
+//! Observability contracts of the scenario layer: provenance sidecars and
+//! span traces are *pure observers* —
+//!
+//! * enabling `--provenance` / a trace dir changes neither the sweep CSV
+//!   nor the journal semantics (resume + merge still reproduce the
+//!   uninterrupted bytes);
+//! * the provenance sidecar round-trips every executed cell, survives a
+//!   resume, and merges across shard journals;
+//! * span traces emitted from the simulator clock and from the
+//!   deterministic wall-clock substrate describe the same execution.
+
+use std::path::PathBuf;
+use std::sync::{Arc, Mutex};
+
+use ringmaster::coordinator::SchedulerKind;
+use ringmaster::experiments::heterogeneity::HetConfig;
+use ringmaster::metrics::SpanWriter;
+use ringmaster::scenario::{
+    self, merge_journals, merge_provenance, read_sidecar, CellStore, GridOptions, GridSpec,
+    ProvenanceStore, ShardSel, Substrate,
+};
+use ringmaster::util::json;
+
+fn tiny_cfg() -> HetConfig {
+    HetConfig {
+        n_data: 120,
+        n_workers: 4,
+        batch: 4,
+        lambda: 0.01,
+        max_iters: 120,
+        record_every: 40,
+        alphas: vec![f64::INFINITY, 0.1],
+        seeds: vec![0],
+        schedulers: vec![
+            SchedulerKind::Ringmaster { r: 4, gamma: 0.02, cancel: true }.into(),
+            SchedulerKind::Rennala { b: 2, gamma: 0.02 }.into(),
+        ],
+        substrate: Substrate::Sim,
+        eps: None,
+    }
+}
+
+fn tiny_spec() -> GridSpec {
+    tiny_cfg().grid_spec().unwrap()
+}
+
+fn tmp_dir(name: &str) -> PathBuf {
+    let dir = std::env::temp_dir().join(format!("ringmaster_obs_{name}_{}", std::process::id()));
+    std::fs::remove_dir_all(&dir).ok();
+    std::fs::create_dir_all(&dir).unwrap();
+    dir
+}
+
+#[test]
+fn provenance_and_traces_leave_csv_bytes_untouched() {
+    let spec = tiny_spec();
+    let dir = tmp_dir("neutral");
+
+    // ground truth: plain journal-free run
+    let fresh = scenario::run_grid(&spec, ShardSel::ALL, None, None).unwrap();
+    let fresh_csv = scenario::grid_csv(&fresh.rows);
+
+    // fully-instrumented run: journal + provenance + span traces
+    let journal = dir.join("sweep.jsonl");
+    let spans = dir.join("spans");
+    let mut store = CellStore::open(&journal, &spec.fingerprint(), spec.len()).unwrap();
+    let opts = GridOptions {
+        provenance: true,
+        trace_dir: Some(spans.clone()),
+        trace_spans: 10_000,
+        ..GridOptions::default()
+    };
+    let run =
+        scenario::run_grid_configured(&spec, ShardSel::ALL, Some(&mut store), None, &opts).unwrap();
+    assert!(run.is_complete());
+    drop(store);
+
+    assert_eq!(
+        scenario::grid_csv(&run.rows).as_bytes(),
+        fresh_csv.as_bytes(),
+        "observers must not perturb the sweep CSV"
+    );
+
+    // sidecar round-trip: one record per executed cell, sane fields
+    let (fp, records) = read_sidecar(&journal).unwrap().expect("sidecar written");
+    assert_eq!(fp, spec.fingerprint());
+    assert_eq!(records.len(), spec.len());
+    let keys: Vec<String> = spec.cells.iter().map(|c| c.key()).collect();
+    for rec in &records {
+        assert!(keys.contains(&rec.key), "unknown cell key {}", rec.key);
+        assert_eq!(rec.attempts, 1);
+        assert_eq!(rec.repeats, 1, "sim cells record a single repeat");
+        assert!(rec.wall_secs >= 0.0);
+        assert!(rec.code.contains("+bin:"), "code fingerprint: {}", rec.code);
+        assert!(!rec.host.is_empty() && !rec.os.is_empty() && rec.cores >= 1);
+        assert_eq!(rec.substrate, "sim");
+    }
+
+    // one span file per cell, every line a parseable span object
+    let mut files: Vec<PathBuf> = std::fs::read_dir(&spans)
+        .unwrap()
+        .map(|e| e.unwrap().path())
+        .collect();
+    files.sort();
+    assert_eq!(files.len(), spec.len(), "one trace file per cell");
+    for f in &files {
+        let body = std::fs::read_to_string(f).unwrap();
+        assert!(!body.is_empty(), "{}", f.display());
+        for line in body.lines() {
+            let j = json::parse(line).unwrap();
+            assert!(j.get("worker").as_f64().is_some());
+            assert!(j.get("outcome").as_str().is_some());
+        }
+    }
+
+    std::fs::remove_dir_all(&dir).ok();
+}
+
+#[test]
+fn provenance_survives_interrupt_resume_with_identical_output() {
+    let spec = tiny_spec();
+    let dir = tmp_dir("resume");
+    let journal = dir.join("sweep.jsonl");
+
+    let fresh = scenario::run_grid(&spec, ShardSel::ALL, None, None).unwrap();
+    let fresh_csv = scenario::grid_csv(&fresh.rows);
+
+    let opts = GridOptions { provenance: true, ..GridOptions::default() };
+
+    // invocation 1: interrupted after 2 of 4 cells
+    let mut store = CellStore::open(&journal, &spec.fingerprint(), spec.len()).unwrap();
+    let partial =
+        scenario::run_grid_configured(&spec, ShardSel::ALL, Some(&mut store), Some(2), &opts)
+            .unwrap();
+    assert!(!partial.is_complete());
+    drop(store);
+    let (_, after_interrupt) = read_sidecar(&journal).unwrap().expect("partial sidecar");
+    assert_eq!(after_interrupt.len(), 2, "interrupted run journaled 2 provenance records");
+
+    // invocation 2: resume — only the missing cells run (and gain records)
+    let mut store = CellStore::open(&journal, &spec.fingerprint(), spec.len()).unwrap();
+    let resumed =
+        scenario::run_grid_configured(&spec, ShardSel::ALL, Some(&mut store), None, &opts).unwrap();
+    assert!(resumed.is_complete());
+    assert_eq!(resumed.ran, 2);
+    drop(store);
+
+    assert_eq!(
+        scenario::grid_csv(&resumed.rows).as_bytes(),
+        fresh_csv.as_bytes(),
+        "resumed provenance-enabled CSV must be byte-identical"
+    );
+    let (_, records) = read_sidecar(&journal).unwrap().expect("full sidecar");
+    assert_eq!(records.len(), spec.len());
+    let mut keys: Vec<&str> = records.iter().map(|r| r.key.as_str()).collect();
+    keys.sort_unstable();
+    keys.dedup();
+    assert_eq!(keys.len(), spec.len(), "exactly one record per cell after resume");
+
+    // reopening the sidecar sees the same records (append-only round trip)
+    let store = ProvenanceStore::open(&journal, &spec.fingerprint()).unwrap();
+    assert_eq!(store.recorded().len(), spec.len());
+
+    std::fs::remove_dir_all(&dir).ok();
+}
+
+#[test]
+fn shard_sidecars_merge_alongside_their_journals() {
+    let spec = tiny_spec();
+    let dir = tmp_dir("merge");
+    let (s1, s2, merged) = (dir.join("s1.jsonl"), dir.join("s2.jsonl"), dir.join("merged.jsonl"));
+
+    let fresh = scenario::run_grid(&spec, ShardSel::ALL, None, None).unwrap();
+    let fresh_csv = scenario::grid_csv(&fresh.rows);
+
+    let opts = GridOptions { provenance: true, ..GridOptions::default() };
+    for (i, journal) in [&s1, &s2].into_iter().enumerate() {
+        let sel = ShardSel { index: i, count: 2 };
+        let mut store = CellStore::open(journal, &spec.fingerprint(), spec.len()).unwrap();
+        let run =
+            scenario::run_grid_configured(&spec, sel, Some(&mut store), None, &opts).unwrap();
+        assert!(run.is_complete());
+    }
+
+    let inputs = vec![s1.clone(), s2.clone()];
+    let stats = merge_journals(&inputs, &merged).unwrap();
+    assert_eq!(stats.cells, spec.len());
+    let n = merge_provenance(&inputs, &merged, &spec.fingerprint()).unwrap();
+    assert_eq!(n, spec.len(), "merged sidecar covers every cell");
+
+    // the merged journal + sidecar reproduce the uninterrupted outputs
+    let mut store = CellStore::open(&merged, &spec.fingerprint(), spec.len()).unwrap();
+    let noop = scenario::run_grid(&spec, ShardSel::ALL, Some(&mut store), None).unwrap();
+    assert_eq!(noop.ran, 0, "merged journal covers the grid");
+    assert_eq!(scenario::grid_csv(&noop.rows).as_bytes(), fresh_csv.as_bytes());
+    let (fp, records) = read_sidecar(&merged).unwrap().expect("merged sidecar");
+    assert_eq!(fp, spec.fingerprint());
+    assert_eq!(records.len(), spec.len());
+
+    std::fs::remove_dir_all(&dir).ok();
+}
+
+#[test]
+fn span_traces_agree_between_sim_and_deterministic_wallclock() {
+    let spec = tiny_spec();
+    let dir = tmp_dir("parity");
+
+    // same cell, two substrates; deterministic wall clock is contractually
+    // bit-identical to the simulator, so the emitted span streams must
+    // describe the same (worker, start_k, outcome) execution
+    let cell = spec.cells[0].clone();
+    let trace_of = |cell: &ringmaster::scenario::Cell, name: &str| -> Vec<(u64, u64, String)> {
+        let path = dir.join(name);
+        let writer = SpanWriter::create(&path, 100_000).unwrap();
+        let sink = Arc::new(Mutex::new(writer));
+        let (rec, _) = scenario::run_cell_traced(cell, &spec.budget, Some(sink.clone()));
+        assert!(rec.iters > 0);
+        sink.lock().unwrap().finish().unwrap();
+        drop(sink);
+        std::fs::read_to_string(&path)
+            .unwrap()
+            .lines()
+            .map(|l| {
+                let j = json::parse(l).unwrap();
+                (
+                    j.get("worker").as_f64().unwrap() as u64,
+                    j.get("start_k").as_f64().unwrap() as u64,
+                    j.get("outcome").as_str().unwrap().to_string(),
+                )
+            })
+            .collect()
+    };
+
+    let sim_spans = trace_of(&cell, "sim.spans.jsonl");
+    let wc = cell.clone().on(Substrate::Wallclock { deterministic: true, threads: 2 });
+    let wc_spans = trace_of(&wc, "wc.spans.jsonl");
+
+    assert!(!sim_spans.is_empty());
+    assert_eq!(sim_spans, wc_spans, "span streams diverge between substrates");
+
+    std::fs::remove_dir_all(&dir).ok();
+}
+
+#[test]
+fn span_cap_bounds_the_trace_without_perturbing_the_run() {
+    let spec = tiny_spec();
+    let dir = tmp_dir("cap");
+    let cell = spec.cells[0].clone();
+
+    // untraced reference
+    let (plain, _) = scenario::run_cell_traced(&cell, &spec.budget, None);
+
+    // hard-capped sink: exactly one line lands on disk, run unchanged
+    let path = dir.join("capped.spans.jsonl");
+    let sink = Arc::new(Mutex::new(SpanWriter::create(&path, 1).unwrap()));
+    let (capped, _) = scenario::run_cell_traced(&cell, &spec.budget, Some(sink.clone()));
+    {
+        let mut w = sink.lock().unwrap();
+        w.finish().unwrap();
+        assert_eq!(w.written(), 1);
+        assert!(w.dropped() > 0, "the tiny run still out-emits a cap of 1");
+    }
+    drop(sink);
+
+    assert_eq!(std::fs::read_to_string(&path).unwrap().lines().count(), 1);
+    assert_eq!(plain.iters, capped.iters);
+    assert_eq!(plain.final_gap, capped.final_gap);
+    assert_eq!(plain.x_final, capped.x_final);
+
+    std::fs::remove_dir_all(&dir).ok();
+}

@@ -27,8 +27,10 @@ fn tiny_spec() -> GridSpec {
             SchedulerKind::Rennala { b: 2, gamma: 0.02 }.into(),
         ],
         substrate: Substrate::Sim,
+        eps: None,
     }
     .grid_spec()
+    .unwrap()
 }
 
 fn tmp(name: &str) -> PathBuf {

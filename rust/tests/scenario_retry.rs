@@ -38,11 +38,12 @@ fn tiny_cfg() -> HetConfig {
             SchedulerKind::Rennala { b: 2, gamma: 0.02 }.into(),
         ],
         substrate: Substrate::Sim,
+        eps: None,
     }
 }
 
 fn tiny_spec() -> GridSpec {
-    tiny_cfg().grid_spec()
+    tiny_cfg().grid_spec().unwrap()
 }
 
 fn tmp(name: &str) -> PathBuf {
@@ -234,7 +235,7 @@ fn deterministic_wallclock_grid_matches_sim_grid_on_a_sharded_problem() {
     let wc_csv = {
         let mut cfg = tiny_cfg();
         cfg.substrate = Substrate::Wallclock { deterministic: true, threads: 2 };
-        let run = scenario::run_grid(&cfg.grid_spec(), ShardSel::ALL, None, None).unwrap();
+        let run = scenario::run_grid(&cfg.grid_spec().unwrap(), ShardSel::ALL, None, None).unwrap();
         scenario::grid_csv(&run.rows)
     };
     let strip = |csv: &str, suffix: &str| -> Vec<String> {

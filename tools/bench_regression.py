@@ -23,6 +23,13 @@ threshold:
   carries are reported but not gated, so adding a new metric never fails
   the gate against older baselines.
 
+Gate mode also refuses *stale placeholders*: a committed baseline with
+provenance "placeholder" whose (bench, scale, substrate, n_workers)
+configuration already has a measured committed baseline is dead weight —
+it silently exempts its slot from the gate while looking covered. The
+gate fails and names the placeholder so it gets replaced (commit a
+measured CI artifact over it) or deleted.
+
 Trend mode never fails: it sorts the committed `BENCH_<pr>.json` reports
 by PR number, groups them by (bench, scale, substrate, n_workers), and
 prints each named metric's trajectory across PRs — the human-readable
@@ -138,6 +145,43 @@ def trend(baseline_dir):
                 print(f"  {name}: " + "  ".join(points))
 
 
+def config_key(report):
+    return (
+        report["bench"],
+        report["scale"],
+        report["substrate"],
+        report["n_workers"],
+    )
+
+
+def check_stale_placeholders(baseline_dir):
+    """Fail when a placeholder baseline shares its configuration with a
+    measured one: the placeholder was the schema stand-in for exactly that
+    measurement and must be replaced (or deleted) once it exists."""
+    measured = {}  # config -> path
+    placeholders = []  # (path, config)
+    for path in sorted(glob.glob(os.path.join(baseline_dir, "BENCH_*.json"))):
+        report = load(path)
+        check_schema(report, path)
+        key = config_key(report)
+        if report["provenance"] == "measured" and is_number(report["cells_per_sec"]):
+            measured[key] = path
+        else:
+            placeholders.append((path, key))
+    stale = [
+        f"{path} (measured twin: {measured[key]})"
+        for path, key in placeholders
+        if key in measured
+    ]
+    if stale:
+        sys.exit(
+            "stale placeholder baseline(s) — a measured report exists for the "
+            "same (bench, scale, substrate, n_workers); commit the measured "
+            "artifact over the placeholder or delete it:\n  "
+            + "\n  ".join(stale)
+        )
+
+
 def main():
     if len(sys.argv) == 3 and sys.argv[1] == "trend":
         trend(sys.argv[2])
@@ -158,6 +202,7 @@ def main():
     for name in sorted(fresh_metrics):
         print(f"fresh metric {name}: {fresh_metrics[name]:.3f}")
 
+    check_stale_placeholders(baseline_dir)
     failures = []
     compared = 0
     for path in sorted(glob.glob(os.path.join(baseline_dir, "BENCH_*.json"))):

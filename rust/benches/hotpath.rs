@@ -20,6 +20,11 @@
 //! `engine_events_{step,accumulate,discard}_per_sec`,
 //! `driver_updates_per_sec_n*`, `matvec_gb_per_sec`) that
 //! `tools/bench_regression.py` gates against the committed baseline.
+//!
+//! `RINGMASTER_HOTPATH_ONLY=proc` switches to the process-substrate
+//! round-trip bench instead: real child workers driven over stdio
+//! frames, emitting `proc_events_per_sec` into a substrate-"process"
+//! report (CI's `BENCH_10.json`) gated the same way.
 
 use ringmaster::bench_util::{
     bb, bench, bench_json_out, bench_scale, report, write_bench_json_with_metrics, SchedulerStat,
@@ -64,6 +69,68 @@ fn emit_curve(path: &str) {
     );
 }
 
+/// Process-substrate round trip: the full parent↔child event cost —
+/// frame serialize → pipe write → child gradient → pipe read → frame
+/// deserialize → server decision — on the deterministic virtual-time
+/// release protocol (no sleeps, so the wire overhead *is* the
+/// measurement). Events counted = initial assigns + consumed arrivals,
+/// matching the engine benches. Writes a substrate-"process" report
+/// when `RINGMASTER_BENCH_JSON` is set.
+fn bench_proc() {
+    use ringmaster::engine::{ProcPoolConfig, SubstrateSpec, WorkerTask};
+    use ringmaster::exec::{noisy_workload, run_on};
+    use std::path::PathBuf;
+    use std::time::Duration;
+
+    let n = 4usize;
+    let d = 64usize;
+    let iters = 2_000u64;
+    let mut cfg = ProcPoolConfig::virtual_time(7, Duration::from_secs(300));
+    // the bench harness binary is not the worker binary — spawn the CLI
+    cfg.worker_bin = Some(PathBuf::from(env!("CARGO_BIN_EXE_ringmaster")));
+    let spec = SubstrateSpec::Process(cfg);
+    let model = ComputeModel::random_paper(n);
+    let problem = QuadraticProblem::paper(d);
+    let task = WorkerTask::Quadratic { d, noise_sigma: 0.01 };
+    let dcfg = DriverConfig {
+        seed: 7,
+        max_iters: iters,
+        record_every: 1_000_000_000,
+        record_worker_hits: false,
+        ..Default::default()
+    };
+    let mut events = 0.0f64;
+    let m = bench(&format!("proc round trip (n={n}, d={d}, {iters} iters)"), 1, 5, || {
+        let (eval, samplers) = noisy_workload(&problem, 0.01, n);
+        let mut s = SchedulerKind::Ringmaster { r: n, gamma: 0.05, cancel: true }.build();
+        let rec = run_on(&spec, eval, samplers, Some(task.clone()), &model, s.as_mut(), &dcfg);
+        events = n as f64 + (rec.applied + rec.accumulated + rec.discarded) as f64;
+        bb(rec.iters);
+    });
+    report(&m);
+    println!(
+        "    → {:.1} k events/s across the wire ({events:.0} events, {n} children)",
+        m.throughput(events) / 1e3
+    );
+    if let Some(path) = bench_json_out() {
+        write_bench_json_with_metrics(
+            &path,
+            "hotpath",
+            bench_scale(),
+            "process",
+            n,
+            &[SchedulerStat {
+                name: format!("proc_round_trip_n{n}"),
+                cells: 1,
+                wall_seconds: m.median_s,
+            }],
+            &[("proc_events_per_sec", m.throughput(events))],
+        )
+        .expect("write bench json");
+        println!("  wrote {}", path.display());
+    }
+}
+
 fn main() {
     println!("— hot-path microbenches —");
 
@@ -73,6 +140,13 @@ fn main() {
     // curve-only mode: the CI determinism smoke wants two quick curve
     // emissions at different pool widths, not the full bench suite
     if std::env::var("RINGMASTER_HOTPATH_ONLY").as_deref() == Ok("curve") {
+        return;
+    }
+    // proc-only mode: the process-substrate wire bench spawns real child
+    // processes, so it runs on request (CI's BENCH_10 step), not as part
+    // of the default suite
+    if std::env::var("RINGMASTER_HOTPATH_ONLY").as_deref() == Ok("proc") {
+        bench_proc();
         return;
     }
 

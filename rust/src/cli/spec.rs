@@ -97,14 +97,14 @@ pub const COMMON: &[FlagSpec] = &[
 ];
 
 const SUBSTRATE: [FlagSpec; 3] = [
-    f("substrate", Str, "sim", "execution substrate: sim|wallclock"),
+    f("substrate", Str, "sim", "execution substrate: sim|wallclock|process"),
     f(
         "deterministic",
         Switch,
         "",
-        "wallclock: virtual-time release order (bit-identical to sim)",
+        "wallclock/process: virtual-time release order (bit-identical to sim)",
     ),
-    f("wc-threads", Int, "0", "cap concurrent wall-clock cells (0 = no cap)"),
+    f("wc-threads", Int, "0", "cap concurrent wallclock/process cells (0 = no cap)"),
 ];
 
 const RUN_FLAGS: &[FlagSpec] = &[
@@ -184,10 +184,17 @@ const TRAIN_FLAGS: &[FlagSpec] = &[
 ];
 
 const EXEC_DEMO_FLAGS: &[FlagSpec] = &[
-    f("n", Int, "8", "number of worker threads"),
+    f("n", Int, "8", "number of workers (threads or child processes)"),
     f("d", Int, "64", "quadratic dimension"),
     f("max-iters", Int, "2000", "iteration budget"),
     f("time-scale", Num, "2e-4", "wall seconds per simulated second"),
+    f(
+        "substrate",
+        Str,
+        "wallclock",
+        "execution substrate: sim|wallclock|process",
+    ),
+    SUBSTRATE[1],
 ];
 
 const SWEEP_FLAGS: &[FlagSpec] = &[
@@ -319,8 +326,13 @@ pub const COMMANDS: &[CommandSpec] = &[
     },
     CommandSpec {
         name: "exec-demo",
-        summary: "wall-clock (threaded) executor demo",
+        summary: "wall-clock executor demo (threads or child processes)",
         flags: EXEC_DEMO_FLAGS,
+    },
+    CommandSpec {
+        name: "worker",
+        summary: "(internal) process-substrate worker: frames on stdin/stdout",
+        flags: &[],
     },
     CommandSpec {
         name: "sweep",
@@ -491,7 +503,14 @@ mod tests {
             assert!(h.contains(c.name), "help missing {}", c.name);
         }
         assert!(h.contains("usage:"));
-        for s in ["--provenance", "--trace-dir", "sweep report", "--journal"] {
+        for s in [
+            "--provenance",
+            "--trace-dir",
+            "sweep report",
+            "--journal",
+            "sim|wallclock|process",
+            "worker",
+        ] {
             assert!(h.contains(s), "help missing {s}");
         }
     }

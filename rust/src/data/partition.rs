@@ -144,6 +144,17 @@ pub fn label_skew(
     Partition { shards }
 }
 
+/// The scenario grid's canonical label-skew construction: [`label_skew`]
+/// over [`super::N_CLASSES`] with the partition seed offset from the run
+/// seed so partition randomness and run randomness stay independent
+/// streams. `α = ∞` degenerates to IID. Lives here (not in
+/// `scenario::runner`, which re-exports it) so a process-substrate child
+/// worker can rebuild the identical shards from nothing but its `SETUP`
+/// frame.
+pub fn alpha_partition(labels: &[u8], n_workers: usize, alpha: f64, seed: u64) -> Partition {
+    label_skew(labels, super::N_CLASSES, n_workers, alpha, seed ^ 0x5EED)
+}
+
 /// Quantity skew: shard sizes proportional to `LogNormal(0, sigma²)`
 /// weights (each shard keeps at least one sample), contents IID.
 pub fn quantity_skew(n: usize, n_shards: usize, sigma: f64, seed: u64) -> Partition {

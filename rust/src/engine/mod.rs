@@ -8,12 +8,14 @@
 //! was a second-class citizen (no curves, no [`ServerOpt`], no
 //! ε-stationarity stopping). This module collapses them:
 //!
-//! * [`GradientSource`] — the substrate abstraction. Exactly two
+//! * [`GradientSource`] — the substrate abstraction. Exactly three
 //!   implementations: [`SimSource`] (wraps [`crate::sim::Cluster`],
-//!   simulated clock, lazy gradient materialization) and [`ThreadSource`]
+//!   simulated clock, lazy gradient materialization), [`ThreadSource`]
 //!   (one OS thread per worker over an mpsc channel, wall clock, atomic
 //!   generation-based cancellation — Algorithm 5's calculation stops as
-//!   real concurrency).
+//!   real concurrency), and [`ProcSource`] (one child *process* per
+//!   worker over [`wire`]'s length-prefixed stdio frames, with bounded
+//!   restart-on-crash and the same generation-stamped cancellation).
 //! * **Worker data identity** — every delivery carries the worker that
 //!   produced it, and both sources route that identity into the gradient
 //!   draw ([`crate::opt::WorkerCtx`]): the simulator through
@@ -42,16 +44,25 @@
 //! `driver::Driver::run` and `exec::run_wallclock` are thin shims over
 //! this module; both return the unified [`RunRecord`].
 
+mod proc_source;
 mod server_opt;
 mod sim_source;
+mod substrate;
 pub mod sweep;
 mod thread_source;
+pub mod wire;
 
+pub use proc_source::{
+    worker_main, ProcFault, ProcPoolConfig, ProcRunStats, ProcSource, TRANSIENT_MARKER,
+    WORKER_BIN_ENV,
+};
 pub use server_opt::{ServerOpt, ServerOptState};
 pub use sim_source::SimSource;
+pub use substrate::{AnySource, SubstrateSpec};
 pub use thread_source::{
     GradSampler, NoisySampler, ShardSampler, ThreadPoolConfig, ThreadSource, WallclockEval,
 };
+pub use wire::{WorkerSetup, WorkerTask};
 
 use std::sync::Arc;
 use std::time::Duration;
@@ -177,6 +188,9 @@ pub struct RunRecord {
     pub diverged: bool,
     /// Wall-clock duration — `Some` only for [`ThreadSource`] runs.
     pub wall: Option<Duration>,
+    /// Child-process bookkeeping (per-worker PIDs, restart counts) —
+    /// `Some` only for [`ProcSource`] runs.
+    pub proc: Option<ProcRunStats>,
 }
 
 impl RunRecord {
@@ -270,6 +284,22 @@ pub trait GradientSource<P: StochasticProblem + ?Sized> {
 
     /// Wall-clock duration so far (`None` for simulated sources).
     fn wall(&self) -> Option<Duration> {
+        None
+    }
+
+    /// Move any wire-cost spans (serialize/transfer/deserialize legs of
+    /// gradient frames crossing a process boundary) accumulated since the
+    /// last call into `out`. Only [`ProcSource`] produces them; the
+    /// default is a no-op so in-process sources pay nothing. The engine
+    /// streams them to the span sink only — never the in-memory
+    /// [`Trace`], whose busy/useful accounting covers compute spans.
+    fn drain_wire_spans(&mut self, _out: &mut Vec<Span>) {}
+
+    /// Per-worker child PIDs and restart counts — `Some` only for
+    /// [`ProcSource`]-backed runs. The engine copies it into
+    /// [`RunRecord::proc`] so provenance can record which processes
+    /// produced a cell and how many crashes were absorbed.
+    fn proc_stats(&self) -> Option<ProcRunStats> {
         None
     }
 }
@@ -508,6 +538,9 @@ where
     let mut done = stop_hit(last_gap, last_gn, cfg);
     let mut diverged = false;
     let initial_gap = last_gap.abs().max(1.0);
+    // wire-cost spans drained from process-substrate sources (no-op
+    // default for in-process sources); emitted to the sink only
+    let mut wire_buf: Vec<Span> = Vec::new();
 
     while !done {
         let Some(arrival) = source.next_delivery() else {
@@ -582,6 +615,17 @@ where
                     writer.emit(&span);
                 }
             }
+        }
+        source.drain_wire_spans(&mut wire_buf);
+        if !wire_buf.is_empty() {
+            if let Some(s) = &sink {
+                if let Ok(mut writer) = s.lock() {
+                    for span in &wire_buf {
+                        writer.emit(span);
+                    }
+                }
+            }
+            wire_buf.clear();
         }
         if stepped {
             snap_fresh = false; // x^k moved; next assignment resnapshots
@@ -671,6 +715,17 @@ where
         }
     }
 
+    // wire spans from the final pump (e.g. stale frames received right as
+    // the budget expired) still reach the sink
+    source.drain_wire_spans(&mut wire_buf);
+    if let Some(s) = &sink {
+        if let Ok(mut writer) = s.lock() {
+            for span in &wire_buf {
+                writer.emit(span);
+            }
+        }
+    }
+
     // final evaluation — a delivery past `max_time` breaks the loop with
     // `source.now()` beyond the budget, so clamp the final record to the
     // configured horizon (curves stay monotone: every in-loop record
@@ -719,6 +774,7 @@ where
         gap_target: cfg.target_gap,
         diverged,
         wall: source.wall(),
+        proc: source.proc_stats(),
     }
 }
 
@@ -749,6 +805,7 @@ mod tests {
             gap_target: None,
             diverged: false,
             wall: None,
+            proc: None,
         };
         // windows of 2: [0→2]=2, [1→7]=6, [2→8]=6  (from predecessor)
         assert_eq!(rec.max_window_time(2), Some(6.0));

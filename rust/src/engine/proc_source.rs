@@ -1,0 +1,888 @@
+//! [`ProcSource`] — child *processes* as a [`GradientSource`].
+//!
+//! The third execution substrate: one OS **process** per active worker,
+//! spawned from the repo's own binary (`ringmaster worker`, resolved via
+//! [`ProcPoolConfig::worker_bin`] → [`WORKER_BIN_ENV`] → the current
+//! executable) and driven over stdio with the length-prefixed frames of
+//! [`super::wire`]. The parent mirrors [`super::ThreadSource`]'s server
+//! discipline move for move — generation-stamped cancellation, the
+//! conservative virtual-time release protocol in deterministic mode, the
+//! same seed layout (`root.split(w)` timing streams, per-assignment
+//! gradient streams) — so a deterministic process run is bit-identical to
+//! the simulator and to a deterministic thread run under the same seed
+//! (`tests/engine_parity.rs` asserts sim ≡ wallclock-det ≡ proc-det).
+//!
+//! ## Crash recovery
+//!
+//! A worker death is a *transient*, not a run failure. Each child is
+//! stateless past its `SETUP` frame: gradient draws are keyed by the
+//! explicit assignment ordinal, and the timing RNG's position is exactly
+//! the number of assignments the child has consumed. The parent therefore
+//! journals the virtual start time of every assignment it sends
+//! (`sent_history`); when a child dies it respawns it (up to
+//! [`ProcPoolConfig::restart_budget`] times per worker) with that history
+//! as the `SETUP` frame's replay list — the fresh child replays one
+//! `ComputeModel::duration` draw per entry, landing its RNG bit-exactly
+//! where the dead child's was — and reissues the in-flight assignment
+//! with its original generation, ordinal, and snapshot. Replay is
+//! draw-exact because per-assignment draw counts depend only on the model
+//! shape, never on the clock. A worker that exhausts its restart budget
+//! panics with the `ringmaster: transient` marker, handing the whole cell
+//! to the scenario layer's retry policy (attempts are journaled).
+//!
+//! ## Wire-cost observability
+//!
+//! Every gradient frame that crosses the pipe is timed in three legs —
+//! child-side encode (measured by the child, shipped in the frame),
+//! parent-side byte transfer, and parent-side decode — and surfaced as
+//! [`SpanOutcome::WireSerialize`]/[`SpanOutcome::WireTransfer`]/
+//! [`SpanOutcome::WireDeserialize`] spans through
+//! [`GradientSource::drain_wire_spans`], so `sweep report` can show where
+//! a process cell's wall time goes on the wire.
+
+use std::io::{self, BufWriter, Write};
+use std::path::PathBuf;
+use std::process::{Child, ChildStdin, ChildStdout, Command, Stdio};
+use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
+use std::sync::mpsc;
+use std::sync::Arc;
+use std::thread;
+use std::time::{Duration, Instant};
+
+use super::thread_source::{GradSampler, NoisySampler, ShardSampler};
+use super::wire::{
+    decode_assign, decode_grad, encode_assign_parts, encode_grad, read_frame, read_frame_body,
+    read_frame_header, write_frame, AssignFrame, GradFrame, WorkerSetup, WorkerTask,
+    GRAD_SER_SECS_OFFSET, SYNTH_MNIST_NOISE, TAG_ASSIGN, TAG_GRAD, TAG_SETUP, TAG_SHUTDOWN,
+};
+use super::{Delivery, GradientSource};
+use crate::data::partition::alpha_partition;
+use crate::data::synthetic_mnist;
+use crate::metrics::{Span, SpanOutcome};
+use crate::opt::{LogisticProblem, QuadraticProblem, StochasticProblem};
+use crate::prng::Prng;
+use crate::sim::{ClusterStats, ComputeModel};
+
+/// Environment variable naming the worker binary (a path). Integration
+/// tests point it at `env!("CARGO_BIN_EXE_ringmaster")`; in production the
+/// parent simply re-executes itself.
+pub const WORKER_BIN_ENV: &str = "RINGMASTER_WORKER_BIN";
+
+/// Panic-message marker the scenario retry layer recognizes as a
+/// transient cell failure (`scenario::RetryPolicy::TRANSIENT_MARKER`
+/// aliases this constant — keep them one value).
+pub const TRANSIENT_MARKER: &str = "ringmaster: transient";
+
+/// Deterministic fault injection: kill `worker`'s child once, right after
+/// the parent has sent it its `after_assigns`-th assignment. The fire
+/// flag is shared across clones so a cloned config still kills exactly
+/// one child — the crash-recovery tests use this to die mid-assignment
+/// at a reproducible point.
+#[derive(Clone, Debug)]
+pub struct ProcFault {
+    worker: usize,
+    after_assigns: u64,
+    fired: Arc<AtomicBool>,
+}
+
+impl ProcFault {
+    pub fn kill_after(worker: usize, after_assigns: u64) -> Self {
+        Self {
+            worker,
+            after_assigns: after_assigns.max(1),
+            fired: Arc::new(AtomicBool::new(false)),
+        }
+    }
+
+    /// Whether the fault has already killed its child.
+    pub fn fired(&self) -> bool {
+        self.fired.load(Ordering::SeqCst)
+    }
+}
+
+/// Process-substrate knobs (the engine-level analogue of
+/// [`super::ThreadPoolConfig`] — per-worker gradient noise lives in the
+/// [`WorkerTask`] instead, because the child rebuilds its own problem).
+#[derive(Clone, Debug)]
+pub struct ProcPoolConfig {
+    pub seed: u64,
+    /// Wall seconds per virtual second (`0` ⇒ children never sleep; only
+    /// meaningful in deterministic mode, exactly like the thread pool).
+    pub time_scale: f64,
+    /// Hard wall-clock cap; `next_delivery` returns `None` past it.
+    pub max_wall: Duration,
+    /// Release deliveries in virtual-time order (conservative protocol),
+    /// bit-identical to the simulator under the same seed.
+    pub deterministic: bool,
+    /// Worker binary; `None` ⇒ [`WORKER_BIN_ENV`], then the current
+    /// executable.
+    pub worker_bin: Option<PathBuf>,
+    /// Respawns allowed per worker before the run is declared transient.
+    pub restart_budget: u32,
+    /// Optional deterministic crash injection (tests).
+    pub fault: Option<ProcFault>,
+}
+
+impl Default for ProcPoolConfig {
+    fn default() -> Self {
+        Self {
+            seed: 0,
+            time_scale: 1e-3,
+            max_wall: Duration::from_secs(30),
+            deterministic: false,
+            worker_bin: None,
+            restart_budget: 2,
+            fault: None,
+        }
+    }
+}
+
+impl ProcPoolConfig {
+    /// Pure virtual-clock pool for grid cells: deterministic release with
+    /// `time_scale = 0` — durations are drawn (stream parity with the
+    /// simulator) but never slept, the process twin of
+    /// [`super::ThreadPoolConfig::virtual_time`].
+    pub fn virtual_time(seed: u64, max_wall: Duration) -> Self {
+        Self {
+            seed,
+            time_scale: 0.0,
+            max_wall,
+            deterministic: true,
+            ..Self::default()
+        }
+    }
+}
+
+/// Per-worker restart/PID accounting for provenance sidecars.
+#[derive(Clone, Debug, Default, PartialEq, Eq)]
+pub struct ProcRunStats {
+    /// Most recent child PID per worker slot (`0` = never spawned).
+    pub pids: Vec<u32>,
+    /// Respawn count per worker slot.
+    pub restarts: Vec<u32>,
+}
+
+impl ProcRunStats {
+    pub fn total_restarts(&self) -> u64 {
+        self.restarts.iter().map(|&r| r as u64).sum()
+    }
+}
+
+/// The parent's view of the in-flight assignment: everything needed to
+/// reissue it verbatim (same generation, ordinal, and snapshot) to a
+/// restarted child.
+#[derive(Clone)]
+struct InFlight {
+    start_k: u64,
+    gen: u64,
+    ordinal: u64,
+    vt_start: f64,
+    point: Arc<Vec<f64>>,
+}
+
+struct ChildWorker {
+    child: Child,
+    stdin: BufWriter<ChildStdin>,
+    reader: Option<thread::JoinHandle<()>>,
+}
+
+enum ProcMsg {
+    Grad {
+        worker: usize,
+        epoch: u64,
+        frame: GradFrame,
+        /// Parent-side wall seconds reading the frame's bytes off the pipe.
+        xfer_secs: f64,
+        /// Parent-side wall seconds decoding the frame.
+        deser_secs: f64,
+    },
+    Died {
+        worker: usize,
+        epoch: u64,
+    },
+}
+
+/// Per-child stdout pump: frame reads are split header/body so the body
+/// read times the *transfer* leg without counting the idle wait for the
+/// child to finish computing. Any read/decode failure — including plain
+/// EOF — is reported as a death; the parent decides whether it was a
+/// clean shutdown (it initiated one) or a crash (restart path).
+fn reader_loop(worker: usize, epoch: u64, stdout: ChildStdout, tx: mpsc::Sender<ProcMsg>) {
+    let mut r = io::BufReader::new(stdout);
+    loop {
+        let len = match read_frame_header(&mut r) {
+            Ok(Some(len)) => len,
+            Ok(None) | Err(_) => break,
+        };
+        let t_xfer = Instant::now();
+        let (tag, body) = match read_frame_body(&mut r, len) {
+            Ok(v) => v,
+            Err(_) => break,
+        };
+        let xfer_secs = t_xfer.elapsed().as_secs_f64();
+        if tag != TAG_GRAD {
+            break; // protocol violation: treat as a crash
+        }
+        let t_deser = Instant::now();
+        let frame = match decode_grad(&body) {
+            Ok(f) => f,
+            Err(_) => break,
+        };
+        let deser_secs = t_deser.elapsed().as_secs_f64();
+        if tx
+            .send(ProcMsg::Grad {
+                worker,
+                epoch,
+                frame,
+                xfer_secs,
+                deser_secs,
+            })
+            .is_err()
+        {
+            return; // parent gone; no one to notify
+        }
+    }
+    let _ = tx.send(ProcMsg::Died { worker, epoch });
+}
+
+/// Process-substrate gradient source. Construct with [`ProcSource::spawn`],
+/// run the engine, then [`ProcSource::shutdown`] (or just drop it — the
+/// children are killed and reaped either way).
+pub struct ProcSource {
+    bin: PathBuf,
+    run_seed: u64,
+    time_scale: f64,
+    max_wall: Duration,
+    restart_budget: u32,
+    fault: Option<ProcFault>,
+    model: ComputeModel,
+    task: WorkerTask,
+    /// Timing-stream seed per worker — `root.split_seed(w)` for every `w`
+    /// in order, the same layout as `Cluster::new`/`ThreadSource::spawn`.
+    worker_seeds: Vec<u64>,
+    active: Vec<usize>,
+    children: Vec<Option<ChildWorker>>,
+    /// Respawn epoch per worker; messages from dead incarnations carry a
+    /// stale epoch and are ignored.
+    epochs: Vec<u64>,
+    tx: mpsc::Sender<ProcMsg>,
+    rx: mpsc::Receiver<ProcMsg>,
+    /// Current assignment generation per worker (frame-stamped; the child
+    /// discards superseded work exactly like a thread worker).
+    gens: Vec<u64>,
+    /// Assignments sent per worker — the explicit gradient-stream ordinal.
+    ordinals: Vec<u64>,
+    /// Virtual start time of every assignment sent, per worker — the
+    /// crash-restart replay journal.
+    sent_history: Vec<Vec<f64>>,
+    inflight: Vec<Option<InFlight>>,
+    start_ks: Vec<u64>,
+    busy: Vec<bool>,
+    assign_times: Vec<f64>,
+    started: Instant,
+    stats: ClusterStats,
+    /// Gradient of the most recent valid delivery, awaiting `materialize`.
+    pending: Vec<f64>,
+    // --- deterministic (virtual-time) mode state ---
+    deterministic: bool,
+    vnow: f64,
+    assign_seq: u64,
+    seqs: Vec<u64>,
+    buffered: Vec<Option<GradFrame>>,
+    // --- accounting ---
+    pids: Vec<u32>,
+    restarts: Vec<u32>,
+    wire_spans: Vec<Span>,
+}
+
+fn resolve_worker_bin(cfg: &ProcPoolConfig) -> io::Result<PathBuf> {
+    if let Some(p) = &cfg.worker_bin {
+        return Ok(p.clone());
+    }
+    if let Ok(p) = std::env::var(WORKER_BIN_ENV) {
+        if !p.is_empty() {
+            return Ok(PathBuf::from(p));
+        }
+    }
+    std::env::current_exe()
+}
+
+impl ProcSource {
+    /// Spawn one child process per active worker, each configured by a
+    /// `SETUP` frame carrying `task` (its problem), `model` (its timing),
+    /// and its two seeds.
+    pub fn spawn(
+        task: WorkerTask,
+        model: &ComputeModel,
+        active: &[usize],
+        cfg: &ProcPoolConfig,
+    ) -> io::Result<ProcSource> {
+        let n = model.n_workers();
+        let mut root = Prng::seed_from_u64(cfg.seed);
+        let worker_seeds: Vec<u64> = (0..n).map(|w| root.split_seed(w as u64)).collect();
+        let (tx, rx) = mpsc::channel();
+        let mut src = ProcSource {
+            bin: resolve_worker_bin(cfg)?,
+            run_seed: cfg.seed,
+            time_scale: cfg.time_scale,
+            max_wall: cfg.max_wall,
+            restart_budget: cfg.restart_budget,
+            fault: cfg.fault.clone(),
+            model: model.clone(),
+            task,
+            worker_seeds,
+            active: active.to_vec(),
+            children: (0..n).map(|_| None).collect(),
+            epochs: vec![0; n],
+            tx,
+            rx,
+            gens: vec![0; n],
+            ordinals: vec![0; n],
+            sent_history: vec![Vec::new(); n],
+            inflight: (0..n).map(|_| None).collect(),
+            start_ks: vec![0; n],
+            busy: vec![false; n],
+            assign_times: vec![0.0; n],
+            started: Instant::now(),
+            stats: ClusterStats::default(),
+            pending: Vec::new(),
+            deterministic: cfg.deterministic,
+            vnow: 0.0,
+            assign_seq: 0,
+            seqs: vec![0; n],
+            buffered: (0..n).map(|_| None).collect(),
+            pids: vec![0; n],
+            restarts: vec![0; n],
+            wire_spans: Vec::new(),
+        };
+        for &w in active {
+            src.spawn_child(w, Vec::new())?;
+        }
+        Ok(src)
+    }
+
+    /// PID/restart accounting for provenance sidecars.
+    pub fn proc_stats(&self) -> ProcRunStats {
+        ProcRunStats {
+            pids: self.pids.clone(),
+            restarts: self.restarts.clone(),
+        }
+    }
+
+    fn spawn_child(&mut self, w: usize, replay: Vec<f64>) -> io::Result<()> {
+        let mut child = Command::new(&self.bin)
+            .arg("worker")
+            .stdin(Stdio::piped())
+            .stdout(Stdio::piped())
+            .stderr(Stdio::inherit())
+            .spawn()?;
+        let pid = child.id();
+        let child_stdin = child.stdin.take().expect("piped stdin");
+        let child_stdout = child.stdout.take().expect("piped stdout");
+        let mut stdin = BufWriter::new(child_stdin);
+        let setup = WorkerSetup {
+            worker: w,
+            n_workers: self.gens.len(),
+            run_seed: self.run_seed,
+            worker_seed: self.worker_seeds[w],
+            deterministic: self.deterministic,
+            time_scale: self.time_scale,
+            model: self.model.clone(),
+            task: self.task.clone(),
+            replay,
+        };
+        write_frame(&mut stdin, TAG_SETUP, &setup.encode())?;
+        stdin.flush()?;
+        let tx = self.tx.clone();
+        let epoch = self.epochs[w];
+        let reader = thread::spawn(move || reader_loop(w, epoch, child_stdout, tx));
+        self.children[w] = Some(ChildWorker {
+            child,
+            stdin,
+            reader: Some(reader),
+        });
+        self.pids[w] = pid;
+        Ok(())
+    }
+
+    fn reap_child(&mut self, w: usize) {
+        if let Some(mut c) = self.children[w].take() {
+            let _ = c.child.kill();
+            let _ = c.child.wait();
+            if let Some(h) = c.reader.take() {
+                let _ = h.join();
+            }
+        }
+    }
+
+    /// A child died (`Died` message with the current epoch): respawn it
+    /// with the timing-replay journal and reissue its in-flight
+    /// assignment, or — past the restart budget — declare the run
+    /// transient so the scenario retry layer re-runs the cell.
+    fn restart(&mut self, w: usize) {
+        self.reap_child(w);
+        self.restarts[w] += 1;
+        if self.restarts[w] > self.restart_budget {
+            panic!(
+                "{TRANSIENT_MARKER}: process worker {w} died {} times \
+                 (restart budget {} exhausted)",
+                self.restarts[w], self.restart_budget
+            );
+        }
+        self.epochs[w] += 1;
+        // Reissue only if the in-flight gradient did not already arrive
+        // (the reader delivers Grad-before-Died in channel order, so a
+        // buffered result means the dead child finished the work).
+        let reissue = self.busy[w] && self.buffered[w].is_none();
+        let mut replay = self.sent_history[w].clone();
+        if reissue {
+            // the reissued assignment is excluded from replay — the fresh
+            // child draws its duration live, as part of processing it
+            replay.pop();
+        }
+        if let Err(e) = self.spawn_child(w, replay) {
+            panic!("{TRANSIENT_MARKER}: respawn of process worker {w} failed: {e}");
+        }
+        if reissue {
+            let inf = self.inflight[w].clone().expect("busy worker has an in-flight record");
+            let body =
+                encode_assign_parts(inf.start_k, inf.gen, inf.ordinal, inf.vt_start, &inf.point);
+            self.send_frame(w, TAG_ASSIGN, &body);
+        }
+    }
+
+    /// Write one frame to a child. Failures are deliberately ignored: a
+    /// broken pipe means the child just died, and its reader thread is
+    /// about to deliver the `Died` that routes through [`Self::restart`].
+    fn send_frame(&mut self, w: usize, tag: u8, body: &[u8]) {
+        if let Some(c) = self.children[w].as_mut() {
+            let _ = write_frame(&mut c.stdin, tag, body).and_then(|_| c.stdin.flush());
+        }
+    }
+
+    fn note_wire_spans(&mut self, worker: usize, frame: &GradFrame, xfer: f64, deser: f64) {
+        // anchored at the delivery's source-time stamp; durations are the
+        // measured wall costs of each leg
+        let anchor = if self.deterministic {
+            frame.vt
+        } else {
+            self.started.elapsed().as_secs_f64()
+        };
+        for (dur, outcome) in [
+            (frame.ser_secs, SpanOutcome::WireSerialize),
+            (xfer, SpanOutcome::WireTransfer),
+            (deser, SpanOutcome::WireDeserialize),
+        ] {
+            self.wire_spans.push(Span {
+                worker,
+                start: anchor,
+                end: anchor + dur.max(0.0),
+                start_k: frame.start_k,
+                outcome,
+            });
+        }
+    }
+
+    /// Receive the next gradient frame from any current-epoch child,
+    /// transparently restarting dead children along the way. `None` when
+    /// the wall budget is exhausted.
+    fn pump(&mut self) -> Option<(usize, GradFrame)> {
+        loop {
+            let elapsed = self.started.elapsed();
+            if elapsed >= self.max_wall {
+                return None;
+            }
+            match self.rx.recv_timeout(self.max_wall - elapsed) {
+                Ok(ProcMsg::Grad {
+                    worker,
+                    epoch,
+                    frame,
+                    xfer_secs,
+                    deser_secs,
+                }) => {
+                    if self.epochs[worker] != epoch {
+                        continue; // a dead incarnation's leftovers
+                    }
+                    self.note_wire_spans(worker, &frame, xfer_secs, deser_secs);
+                    return Some((worker, frame));
+                }
+                Ok(ProcMsg::Died { worker, epoch }) => {
+                    if self.epochs[worker] != epoch {
+                        continue;
+                    }
+                    self.restart(worker);
+                }
+                Err(_) => return None, // budget exhausted
+            }
+        }
+    }
+
+    /// Unblock and reap the children. Equivalent to dropping the source;
+    /// kept as an explicit method for symmetry with
+    /// [`super::ThreadSource::shutdown`].
+    pub fn shutdown(mut self) {
+        for w in 0..self.children.len() {
+            self.send_frame(w, TAG_SHUTDOWN, &[]);
+        }
+        // Drop reaps
+    }
+
+    /// Deterministic delivery: the conservative virtual-time release of
+    /// [`super::ThreadSource`], verbatim — wait until every busy worker's
+    /// current assignment has reported, then release the earliest
+    /// `(vt, assignment seq)`.
+    fn next_delivery_deterministic(&mut self) -> Option<Delivery> {
+        loop {
+            let missing = self
+                .active
+                .iter()
+                .any(|&w| self.busy[w] && self.buffered[w].is_none());
+            if !missing {
+                break;
+            }
+            let (w, frame) = self.pump()?;
+            // stale by generation ⇒ superseded by a cancellation; drop
+            if self.gens[w] != frame.gen {
+                continue;
+            }
+            self.buffered[w] = Some(frame);
+        }
+        let mut best: Option<usize> = None;
+        for &w in &self.active {
+            if self.buffered[w].is_none() {
+                continue;
+            }
+            let better = match best {
+                None => true,
+                Some(b) => {
+                    let (mv, bv) = (
+                        self.buffered[w].as_ref().unwrap().vt,
+                        self.buffered[b].as_ref().unwrap().vt,
+                    );
+                    (mv, self.seqs[w]) < (bv, self.seqs[b])
+                }
+            };
+            if better {
+                best = Some(w);
+            }
+        }
+        let w = best?; // nothing in flight
+        let msg = self.buffered[w].take().expect("buffered message");
+        self.busy[w] = false;
+        self.stats.arrivals += 1;
+        self.vnow = msg.vt;
+        self.pending = msg.grad;
+        Some(Delivery {
+            worker: w,
+            start_k: msg.start_k,
+            time: msg.vt,
+        })
+    }
+}
+
+impl Drop for ProcSource {
+    fn drop(&mut self) {
+        for w in 0..self.children.len() {
+            self.reap_child(w);
+        }
+    }
+}
+
+impl<P: StochasticProblem + ?Sized> GradientSource<P> for ProcSource {
+    fn n_workers(&self) -> usize {
+        self.gens.len()
+    }
+
+    fn assign(&mut self, worker: usize, start_k: u64, point: &Arc<Vec<f64>>) {
+        self.gens[worker] += 1;
+        let gen = self.gens[worker];
+        self.ordinals[worker] += 1;
+        let ordinal = self.ordinals[worker];
+        self.start_ks[worker] = start_k;
+        self.busy[worker] = true;
+        self.assign_times[worker] = if self.deterministic {
+            self.vnow
+        } else {
+            self.started.elapsed().as_secs_f64()
+        };
+        self.assign_seq += 1;
+        self.seqs[worker] = self.assign_seq;
+        self.buffered[worker] = None; // any buffered completion is stale now
+        self.stats.assignments += 1;
+        let vt_start = self.vnow;
+        self.sent_history[worker].push(vt_start);
+        self.inflight[worker] = Some(InFlight {
+            start_k,
+            gen,
+            ordinal,
+            vt_start,
+            point: point.clone(),
+        });
+        let body = encode_assign_parts(start_k, gen, ordinal, vt_start, point);
+        self.send_frame(worker, TAG_ASSIGN, &body);
+        let fault_fires = self.fault.as_ref().is_some_and(|f| {
+            f.worker == worker
+                && self.ordinals[worker] >= f.after_assigns
+                && !f.fired.swap(true, Ordering::SeqCst)
+        });
+        if fault_fires {
+            if let Some(c) = self.children[worker].as_mut() {
+                let _ = c.child.kill(); // reader surfaces the death
+            }
+        }
+    }
+
+    fn next_delivery(&mut self) -> Option<Delivery> {
+        if self.deterministic {
+            return self.next_delivery_deterministic();
+        }
+        loop {
+            let (w, frame) = self.pump()?;
+            if self.gens[w] != frame.gen {
+                continue; // stale by generation: a cancellation raced it
+            }
+            self.busy[w] = false;
+            self.stats.arrivals += 1;
+            self.pending = frame.grad;
+            return Some(Delivery {
+                worker: w,
+                start_k: frame.start_k,
+                time: self.started.elapsed().as_secs_f64(),
+            });
+        }
+    }
+
+    fn materialize(&mut self, _problem: &mut P, _delivery: &Delivery, out: &mut [f64]) {
+        // the child process already computed the gradient
+        out.copy_from_slice(&self.pending);
+    }
+
+    fn assign_time(&self, worker: usize) -> f64 {
+        self.assign_times[worker]
+    }
+
+    fn cancel_stale(
+        &mut self,
+        threshold_k: u64,
+        new_k: u64,
+        point: &Arc<Vec<f64>>,
+        mut collect: Option<&mut Vec<(usize, f64, u64)>>,
+    ) {
+        for i in 0..self.active.len() {
+            let w = self.active[i];
+            if !self.busy[w] || self.start_ks[w] > threshold_k {
+                continue;
+            }
+            if let Some(out) = collect.as_deref_mut() {
+                out.push((w, self.assign_times[w], self.start_ks[w]));
+            }
+            self.stats.cancellations += 1;
+            // bumping the generation invalidates the in-flight computation
+            <ProcSource as GradientSource<P>>::assign(self, w, new_k, point);
+        }
+    }
+
+    fn now(&self) -> f64 {
+        if self.deterministic {
+            self.vnow
+        } else {
+            self.started.elapsed().as_secs_f64()
+        }
+    }
+
+    fn stats(&self) -> ClusterStats {
+        self.stats
+    }
+
+    fn wall(&self) -> Option<Duration> {
+        Some(self.started.elapsed())
+    }
+
+    fn drain_wire_spans(&mut self, out: &mut Vec<Span>) {
+        out.append(&mut self.wire_spans);
+    }
+
+    fn proc_stats(&self) -> Option<ProcRunStats> {
+        Some(ProcSource::proc_stats(self))
+    }
+}
+
+// ---- child side ----
+
+/// Entry point of the `ringmaster worker` subcommand: read the `SETUP`
+/// frame from stdin, rebuild this worker's problem and RNG state, then
+/// loop — assignment in, gradient out — until stdin closes.
+///
+/// The child is a faithful port of a [`super::ThreadSource`] worker
+/// thread: one duration draw per received assignment (kept even for
+/// superseded work, for stream parity), a generation check before *and*
+/// after the optional sleep, and gradient draws from the assignment's
+/// private ordinal-keyed stream.
+pub fn worker_main() -> io::Result<()> {
+    let mut input = io::stdin().lock();
+    let (tag, body) = match read_frame(&mut input)? {
+        Some(f) => f,
+        None => return Ok(()), // parent vanished before setup
+    };
+    if tag != TAG_SETUP {
+        return Err(io::Error::new(
+            io::ErrorKind::InvalidData,
+            format!("worker: expected SETUP frame, got tag {tag}"),
+        ));
+    }
+    let setup = WorkerSetup::decode(&body)?;
+    match setup.task.clone() {
+        WorkerTask::Quadratic { d, noise_sigma } => {
+            let problem = QuadraticProblem::paper(d);
+            let sampler = NoisySampler {
+                problem: &problem,
+                noise_sigma,
+            };
+            worker_loop(&setup, sampler, input)
+        }
+        WorkerTask::ShardedLogistic {
+            n_data,
+            n_workers,
+            batch,
+            lambda,
+            alpha,
+            data_seed,
+        } => {
+            // identical construction to the scenario grid's data cache:
+            // same dataset, same objective, same label-skew partition
+            let ds = synthetic_mnist(n_data, SYNTH_MNIST_NOISE, data_seed);
+            let problem = LogisticProblem::from_dataset(&ds, lambda);
+            let part = alpha_partition(&ds.labels, n_workers, alpha, data_seed);
+            let sampler = ShardSampler {
+                problem: &problem,
+                shard: part.shards[setup.worker].clone(),
+                batch,
+            };
+            worker_loop(&setup, sampler, input)
+        }
+    }
+}
+
+fn worker_loop<S: GradSampler>(
+    setup: &WorkerSetup,
+    mut sampler: S,
+    input: io::StdinLock<'static>,
+) -> io::Result<()> {
+    // stdin pump: frames → channel, newest generation → shared atomic so
+    // a cancellation can reach the compute loop mid-sleep (the process
+    // analogue of ThreadSource's generation atomics)
+    let latest_gen = Arc::new(AtomicU64::new(0));
+    let (tx, rx) = mpsc::channel::<AssignFrame>();
+    let gen_w = latest_gen.clone();
+    let reader = thread::spawn(move || {
+        let mut input = input;
+        loop {
+            match read_frame(&mut input) {
+                Ok(Some((TAG_ASSIGN, body))) => match decode_assign(&body) {
+                    Ok(frame) => {
+                        gen_w.store(frame.gen, Ordering::Release);
+                        if tx.send(frame).is_err() {
+                            break;
+                        }
+                    }
+                    Err(_) => break,
+                },
+                // SHUTDOWN, EOF, unknown tag, or read error all end the
+                // worker; dropping `tx` unblocks the compute loop
+                _ => break,
+            }
+        }
+    });
+
+    let w = setup.worker;
+    let mut rng = Prng::seed_from_u64(setup.worker_seed);
+    // crash-restart determinism: replay the dead incarnation's duration
+    // draws so this RNG lands exactly where its predecessor's was
+    for &t in &setup.replay {
+        let _ = setup.model.duration(w, t, &mut rng);
+    }
+    let stream_base = Prng::assignment_stream_base(setup.run_seed, w as u64);
+    let scale = setup.time_scale;
+    let t0 = Instant::now();
+    let mut out = BufWriter::new(io::stdout().lock());
+    let mut g: Vec<f64> = Vec::new();
+    while let Ok(a) = rx.recv() {
+        // realized compute time first — drawn even for superseded work,
+        // matching the simulator's and thread pool's stream layout
+        let now = if setup.deterministic {
+            a.vt_start
+        } else if scale > 0.0 {
+            t0.elapsed().as_secs_f64() / scale
+        } else {
+            0.0
+        };
+        let dt = setup.model.duration(w, now, &mut rng);
+        if latest_gen.load(Ordering::Acquire) != a.gen {
+            continue; // superseded while queued: keep the draw, skip the work
+        }
+        if scale > 0.0 {
+            thread::sleep(Duration::from_secs_f64(dt * scale));
+        }
+        if latest_gen.load(Ordering::Acquire) != a.gen {
+            continue; // cancelled mid-flight (Algorithm 5)
+        }
+        g.clear();
+        g.resize(a.point.len(), 0.0);
+        let mut draw = Prng::assignment_stream_at(stream_base, a.ordinal);
+        sampler.sample(&a.point, &mut draw, &mut g);
+        let t_ser = Instant::now();
+        let frame = GradFrame {
+            start_k: a.start_k,
+            gen: a.gen,
+            vt: a.vt_start + dt,
+            ser_secs: 0.0,
+            grad: std::mem::take(&mut g),
+        };
+        let mut body = encode_grad(&frame);
+        g = frame.grad; // recycle the gradient buffer
+        let ser = t_ser.elapsed().as_secs_f64();
+        body[GRAD_SER_SECS_OFFSET..GRAD_SER_SECS_OFFSET + 8]
+            .copy_from_slice(&ser.to_bits().to_le_bytes());
+        if write_frame(&mut out, TAG_GRAD, &body)
+            .and_then(|_| out.flush())
+            .is_err()
+        {
+            break; // parent gone
+        }
+    }
+    drop(rx);
+    let _ = reader.join();
+    Ok(())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn fault_fires_exactly_once_across_clones() {
+        let f = ProcFault::kill_after(2, 3);
+        let g = f.clone();
+        assert!(!f.fired());
+        assert!(!f.fired.swap(true, Ordering::SeqCst));
+        assert!(g.fired(), "clones share the fire flag");
+        assert!(g.fired.swap(true, Ordering::SeqCst), "second fire suppressed");
+    }
+
+    #[test]
+    fn transient_marker_matches_retry_policy() {
+        assert_eq!(
+            TRANSIENT_MARKER,
+            crate::scenario::RetryPolicy::TRANSIENT_MARKER
+        );
+    }
+
+    #[test]
+    fn virtual_time_config_is_deterministic_no_sleep() {
+        let cfg = ProcPoolConfig::virtual_time(7, Duration::from_secs(60));
+        assert!(cfg.deterministic);
+        assert_eq!(cfg.time_scale, 0.0);
+        assert_eq!(cfg.seed, 7);
+        assert_eq!(cfg.max_wall, Duration::from_secs(60));
+    }
+}

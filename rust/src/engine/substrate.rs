@@ -1,0 +1,307 @@
+//! [`SubstrateSpec`] — the single seam that names an execution substrate
+//! and builds its [`GradientSource`].
+//!
+//! Historically every entry point (the `driver` facade, `exec`'s
+//! wall-clock functions, the `scenario` grid runner, the CLI) carried its
+//! own ad-hoc substrate dispatch: a `match` over `scenario::Substrate`
+//! here, an `ExecConfig` → `ThreadPoolConfig` translation there. Each copy
+//! could drift — and none of them knew about the process substrate. This
+//! module collapses the trio into one value:
+//!
+//! * [`SubstrateSpec::Sim`] — the discrete-event simulator
+//!   ([`SimSource`]); the seed comes from the run's `DriverConfig`.
+//! * [`SubstrateSpec::Threads`] — one OS thread per worker
+//!   ([`ThreadSource`]), fully parameterized by its [`ThreadPoolConfig`].
+//! * [`SubstrateSpec::Process`] — one child process per worker
+//!   ([`ProcSource`]), fully parameterized by its [`ProcPoolConfig`].
+//!
+//! [`SubstrateSpec::make_source`] is the one constructor: it returns an
+//! [`AnySource`] (an enum over the three sources, itself a
+//! [`GradientSource`]) so a caller can write a single substrate-generic
+//! run loop — `exec::run_on` — instead of three. Thread workers borrow
+//! their samplers for the duration of a [`std::thread::scope`], so the
+//! constructor takes the scope; simulator and process sources simply
+//! ignore it.
+
+use std::thread;
+
+use super::proc_source::{ProcPoolConfig, ProcRunStats, ProcSource, TRANSIENT_MARKER};
+use super::sim_source::SimSource;
+use super::thread_source::{GradSampler, ThreadPoolConfig, ThreadSource};
+use super::wire::WorkerTask;
+use super::{Delivery, GradientSource};
+use crate::linalg::par::ComputePool;
+use crate::metrics::Span;
+use crate::opt::StochasticProblem;
+use crate::sim::{ClusterStats, ComputeModel};
+
+/// Which substrate a run executes on, with everything the substrate needs
+/// beyond the run's own `DriverConfig`.
+#[derive(Clone, Debug)]
+pub enum SubstrateSpec {
+    /// Discrete-event simulator. The cluster is rebuilt from
+    /// `DriverConfig::seed`; `compute` optionally parallelizes the
+    /// server-side O(d) work (bit-identical to serial at any width).
+    Sim {
+        compute: Option<std::sync::Arc<ComputePool>>,
+    },
+    /// One OS thread per worker ([`ThreadSource`]).
+    Threads(ThreadPoolConfig),
+    /// One child process per worker ([`ProcSource`]).
+    Process(ProcPoolConfig),
+}
+
+impl SubstrateSpec {
+    /// The default simulator substrate (serial server-side compute).
+    pub fn sim() -> Self {
+        SubstrateSpec::Sim { compute: None }
+    }
+
+    /// Stable display identifier, aligned with the scenario layer's CSV
+    /// `substrate` column.
+    pub fn name(&self) -> &'static str {
+        match self {
+            SubstrateSpec::Sim { .. } => "sim",
+            SubstrateSpec::Threads(c) if c.deterministic => "wallclock-det",
+            SubstrateSpec::Threads(_) => "wallclock-live",
+            SubstrateSpec::Process(c) if c.deterministic => "process-det",
+            SubstrateSpec::Process(_) => "process-live",
+        }
+    }
+
+    /// The compute pool for the server-side O(d) work under this spec
+    /// (serial when none was configured — results are bit-identical
+    /// either way).
+    pub fn compute_pool(&self) -> &ComputePool {
+        let configured = match self {
+            SubstrateSpec::Sim { compute } => compute.as_deref(),
+            SubstrateSpec::Threads(c) => c.compute.as_deref(),
+            // child processes own the gradient work; the parent's record
+            // evaluations stay serial
+            SubstrateSpec::Process(_) => None,
+        };
+        configured.unwrap_or_else(|| ComputePool::serial_ref())
+    }
+
+    /// Build this spec's [`GradientSource`].
+    ///
+    /// * `samplers` — one per worker slot (only the thread substrate
+    ///   consumes them; cheap borrow-holding structs, so building them
+    ///   unconditionally costs nothing).
+    /// * `task` — the wire description of the workload (only the process
+    ///   substrate consumes it; `None` means the workload cannot be
+    ///   described over the wire and the process substrate is an error).
+    /// * `seed` — simulator cluster seed (the thread/process configs carry
+    ///   their own; callers pass `DriverConfig::seed`, which every entry
+    ///   point keeps equal to the pool seed).
+    /// * `track_stale` — maintain the simulator's stale-assignment index
+    ///   (callers pass `sched.cancel_threshold(u64::MAX).is_some()`).
+    ///
+    /// Panics with [`TRANSIENT_MARKER`] if worker processes cannot be
+    /// spawned (an environmental failure, retryable at the grid layer).
+    pub fn make_source<'scope, 'env, S>(
+        &self,
+        scope: &'scope thread::Scope<'scope, 'env>,
+        samplers: Vec<S>,
+        task: Option<&WorkerTask>,
+        model: &ComputeModel,
+        active: &[usize],
+        seed: u64,
+        track_stale: bool,
+    ) -> AnySource
+    where
+        S: GradSampler + 'env,
+    {
+        match self {
+            SubstrateSpec::Sim { .. } => {
+                let mut src = SimSource::new(model.clone(), seed);
+                src.set_track_stale(track_stale);
+                AnySource::Sim(src)
+            }
+            SubstrateSpec::Threads(cfg) => {
+                AnySource::Threads(ThreadSource::spawn_with(scope, samplers, model, active, cfg))
+            }
+            SubstrateSpec::Process(cfg) => {
+                let task = task.expect(
+                    "process substrate needs a wire-describable workload (WorkerTask)",
+                );
+                match ProcSource::spawn(task.clone(), model, active, cfg) {
+                    Ok(src) => AnySource::Process(src),
+                    Err(e) => panic!("{TRANSIENT_MARKER}: failed to spawn worker processes: {e}"),
+                }
+            }
+        }
+    }
+}
+
+/// A [`GradientSource`] over any substrate — what
+/// [`SubstrateSpec::make_source`] returns.
+pub enum AnySource {
+    Sim(SimSource),
+    Threads(ThreadSource),
+    Process(ProcSource),
+}
+
+impl AnySource {
+    /// Release the substrate's workers. Must be called before the
+    /// enclosing `thread::scope` closes when the source is thread-backed;
+    /// harmless (and still correct) on the others.
+    pub fn shutdown(self) {
+        match self {
+            AnySource::Sim(_) => {}
+            AnySource::Threads(s) => s.shutdown(),
+            AnySource::Process(s) => s.shutdown(),
+        }
+    }
+}
+
+impl<P: StochasticProblem + ?Sized> GradientSource<P> for AnySource {
+    fn n_workers(&self) -> usize {
+        match self {
+            AnySource::Sim(s) => GradientSource::<P>::n_workers(s),
+            AnySource::Threads(s) => GradientSource::<P>::n_workers(s),
+            AnySource::Process(s) => GradientSource::<P>::n_workers(s),
+        }
+    }
+
+    fn assign(&mut self, worker: usize, start_k: u64, point: &std::sync::Arc<Vec<f64>>) {
+        match self {
+            AnySource::Sim(s) => GradientSource::<P>::assign(s, worker, start_k, point),
+            AnySource::Threads(s) => GradientSource::<P>::assign(s, worker, start_k, point),
+            AnySource::Process(s) => GradientSource::<P>::assign(s, worker, start_k, point),
+        }
+    }
+
+    fn next_delivery(&mut self) -> Option<Delivery> {
+        match self {
+            AnySource::Sim(s) => GradientSource::<P>::next_delivery(s),
+            AnySource::Threads(s) => GradientSource::<P>::next_delivery(s),
+            AnySource::Process(s) => GradientSource::<P>::next_delivery(s),
+        }
+    }
+
+    fn materialize(&mut self, problem: &mut P, delivery: &Delivery, out: &mut [f64]) {
+        match self {
+            AnySource::Sim(s) => s.materialize(problem, delivery, out),
+            AnySource::Threads(s) => s.materialize(problem, delivery, out),
+            AnySource::Process(s) => s.materialize(problem, delivery, out),
+        }
+    }
+
+    fn assign_time(&self, worker: usize) -> f64 {
+        match self {
+            AnySource::Sim(s) => GradientSource::<P>::assign_time(s, worker),
+            AnySource::Threads(s) => GradientSource::<P>::assign_time(s, worker),
+            AnySource::Process(s) => GradientSource::<P>::assign_time(s, worker),
+        }
+    }
+
+    fn cancel_stale(
+        &mut self,
+        threshold_k: u64,
+        new_k: u64,
+        point: &std::sync::Arc<Vec<f64>>,
+        collect: Option<&mut Vec<(usize, f64, u64)>>,
+    ) {
+        match self {
+            AnySource::Sim(s) => {
+                GradientSource::<P>::cancel_stale(s, threshold_k, new_k, point, collect)
+            }
+            AnySource::Threads(s) => {
+                GradientSource::<P>::cancel_stale(s, threshold_k, new_k, point, collect)
+            }
+            AnySource::Process(s) => {
+                GradientSource::<P>::cancel_stale(s, threshold_k, new_k, point, collect)
+            }
+        }
+    }
+
+    fn now(&self) -> f64 {
+        match self {
+            AnySource::Sim(s) => GradientSource::<P>::now(s),
+            AnySource::Threads(s) => GradientSource::<P>::now(s),
+            AnySource::Process(s) => GradientSource::<P>::now(s),
+        }
+    }
+
+    fn stats(&self) -> ClusterStats {
+        match self {
+            AnySource::Sim(s) => GradientSource::<P>::stats(s),
+            AnySource::Threads(s) => GradientSource::<P>::stats(s),
+            AnySource::Process(s) => GradientSource::<P>::stats(s),
+        }
+    }
+
+    fn wall(&self) -> Option<std::time::Duration> {
+        match self {
+            AnySource::Sim(s) => GradientSource::<P>::wall(s),
+            AnySource::Threads(s) => GradientSource::<P>::wall(s),
+            AnySource::Process(s) => GradientSource::<P>::wall(s),
+        }
+    }
+
+    fn drain_wire_spans(&mut self, out: &mut Vec<Span>) {
+        match self {
+            AnySource::Sim(s) => GradientSource::<P>::drain_wire_spans(s, out),
+            AnySource::Threads(s) => GradientSource::<P>::drain_wire_spans(s, out),
+            AnySource::Process(s) => GradientSource::<P>::drain_wire_spans(s, out),
+        }
+    }
+
+    fn proc_stats(&self) -> Option<ProcRunStats> {
+        match self {
+            AnySource::Process(s) => Some(ProcSource::proc_stats(s)),
+            _ => None,
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn names_align_with_scenario_substrates() {
+        assert_eq!(SubstrateSpec::sim().name(), "sim");
+        assert_eq!(
+            SubstrateSpec::Threads(ThreadPoolConfig::virtual_time(
+                0,
+                0.0,
+                std::time::Duration::from_secs(1)
+            ))
+            .name(),
+            "wallclock-det"
+        );
+        assert_eq!(
+            SubstrateSpec::Process(ProcPoolConfig::virtual_time(
+                0,
+                std::time::Duration::from_secs(1)
+            ))
+            .name(),
+            "process-det"
+        );
+        let live = SubstrateSpec::Process(ProcPoolConfig::default());
+        assert_eq!(live.name(), "process-live");
+    }
+
+    #[test]
+    fn sim_spec_builds_a_sim_source_with_stale_tracking() {
+        let spec = SubstrateSpec::sim();
+        thread::scope(|scope| {
+            let src = spec.make_source(
+                scope,
+                Vec::<crate::engine::NoisySampler<'_, crate::opt::QuadraticProblem>>::new(),
+                None,
+                &ComputeModel::fixed_linear(3),
+                &[0, 1, 2],
+                7,
+                true,
+            );
+            match &src {
+                AnySource::Sim(s) => assert_eq!(s.cluster().n_workers(), 3),
+                _ => panic!("Sim spec must build a SimSource"),
+            }
+            src.shutdown();
+        });
+    }
+}

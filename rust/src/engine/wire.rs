@@ -1,0 +1,643 @@
+//! Length-prefixed stdio frame protocol of the process substrate.
+//!
+//! [`super::ProcSource`] talks to its child workers over pipes with a
+//! minimal binary framing: every frame is
+//!
+//! ```text
+//! [len: u32 LE] [tag: u8] [body: len-1 bytes]
+//! ```
+//!
+//! Four frame kinds exist. `SETUP` (parent → child, once per spawn) is a
+//! JSON body — the worker index, seed, compute model, problem description
+//! and timing-replay list needed to rebuild the worker's entire state
+//! from scratch; its floats use the journal's non-finite encoding
+//! ([`crate::util::json::fnum`]), so `α = ∞` tasks and NaN diagnostics
+//! survive the wire exactly like they survive the sweep journal. `ASSIGN`
+//! (parent → child) and `GRAD` (child → parent) are hot-path binary
+//! frames whose `f64`s travel as raw IEEE-754 bit patterns
+//! ([`f64::to_bits`], little-endian) — bit-preserving for every value
+//! including NaN payloads, which is what the substrate-parity tests
+//! demand. `SHUTDOWN` (parent → child) has an empty body.
+//!
+//! Decoders never panic on hostile input: truncated tails, trailing
+//! garbage and oversized lengths all surface as `io::Error`s, which the
+//! parent treats as a worker death (a transient, handled by the restart
+//! budget).
+
+use std::io::{self, Read, Write};
+
+use crate::sim::ComputeModel;
+use crate::util::json::{fnum, get_fnum, obj, parse, write as json_write, Json};
+
+/// Parent → child: JSON worker configuration (sent once per spawn).
+pub const TAG_SETUP: u8 = 1;
+/// Parent → child: one generation-stamped assignment.
+pub const TAG_ASSIGN: u8 = 2;
+/// Parent → child: clean shutdown request (empty body).
+pub const TAG_SHUTDOWN: u8 = 3;
+/// Child → parent: one completed stochastic gradient.
+pub const TAG_GRAD: u8 = 4;
+
+/// Hard cap on a single frame — a corrupted length prefix must not drive
+/// a gigabyte allocation.
+pub const MAX_FRAME: usize = 1 << 30;
+
+fn bad(msg: impl Into<String>) -> io::Error {
+    io::Error::new(io::ErrorKind::InvalidData, msg.into())
+}
+
+/// Write one frame. The length prefix covers the tag byte plus the body.
+pub fn write_frame(w: &mut impl Write, tag: u8, body: &[u8]) -> io::Result<()> {
+    let len = body
+        .len()
+        .checked_add(1)
+        .filter(|&l| l <= MAX_FRAME)
+        .ok_or_else(|| bad(format!("frame body too large: {} bytes", body.len())))?;
+    w.write_all(&(len as u32).to_le_bytes())?;
+    w.write_all(&[tag])?;
+    w.write_all(body)?;
+    Ok(())
+}
+
+/// Fill `buf` completely, or report a clean EOF (`Ok(false)`) when the
+/// stream ends *before the first byte*. EOF mid-buffer is an error — a
+/// peer died mid-frame.
+fn read_exact_or_eof(r: &mut impl Read, buf: &mut [u8]) -> io::Result<bool> {
+    let mut filled = 0;
+    while filled < buf.len() {
+        match r.read(&mut buf[filled..]) {
+            Ok(0) if filled == 0 => return Ok(false),
+            Ok(0) => {
+                return Err(io::Error::new(
+                    io::ErrorKind::UnexpectedEof,
+                    "stream ended mid-frame",
+                ))
+            }
+            Ok(n) => filled += n,
+            Err(e) if e.kind() == io::ErrorKind::Interrupted => {}
+            Err(e) => return Err(e),
+        }
+    }
+    Ok(true)
+}
+
+/// Read the 4-byte length prefix. `Ok(None)` on clean EOF at a frame
+/// boundary (the peer closed its end — normal shutdown).
+pub fn read_frame_header(r: &mut impl Read) -> io::Result<Option<u32>> {
+    let mut hdr = [0u8; 4];
+    if !read_exact_or_eof(r, &mut hdr)? {
+        return Ok(None);
+    }
+    let len = u32::from_le_bytes(hdr);
+    if len == 0 || len as usize > MAX_FRAME {
+        return Err(bad(format!("invalid frame length {len}")));
+    }
+    Ok(Some(len))
+}
+
+/// Read the tag + body announced by [`read_frame_header`]. Split from the
+/// header read so the parent can time the transfer leg separately from
+/// the (idle) wait for the child to finish computing.
+pub fn read_frame_body(r: &mut impl Read, len: u32) -> io::Result<(u8, Vec<u8>)> {
+    let mut buf = vec![0u8; len as usize];
+    if !read_exact_or_eof(r, &mut buf)? {
+        return Err(io::Error::new(
+            io::ErrorKind::UnexpectedEof,
+            "stream ended mid-frame",
+        ));
+    }
+    let tag = buf[0];
+    buf.drain(..1);
+    Ok((tag, buf))
+}
+
+/// Read one whole frame; `Ok(None)` on clean EOF at a frame boundary.
+pub fn read_frame(r: &mut impl Read) -> io::Result<Option<(u8, Vec<u8>)>> {
+    match read_frame_header(r)? {
+        None => Ok(None),
+        Some(len) => read_frame_body(r, len).map(Some),
+    }
+}
+
+// ---- binary cursor helpers ----
+
+struct Cursor<'a> {
+    buf: &'a [u8],
+    pos: usize,
+}
+
+impl<'a> Cursor<'a> {
+    fn new(buf: &'a [u8]) -> Self {
+        Self { buf, pos: 0 }
+    }
+
+    fn take(&mut self, n: usize) -> io::Result<&'a [u8]> {
+        let end = self
+            .pos
+            .checked_add(n)
+            .filter(|&e| e <= self.buf.len())
+            .ok_or_else(|| bad("frame body truncated"))?;
+        let s = &self.buf[self.pos..end];
+        self.pos = end;
+        Ok(s)
+    }
+
+    fn u32(&mut self) -> io::Result<u32> {
+        Ok(u32::from_le_bytes(self.take(4)?.try_into().unwrap()))
+    }
+
+    fn u64(&mut self) -> io::Result<u64> {
+        Ok(u64::from_le_bytes(self.take(8)?.try_into().unwrap()))
+    }
+
+    /// Raw bit pattern — NaN payloads round-trip exactly.
+    fn f64(&mut self) -> io::Result<f64> {
+        Ok(f64::from_bits(self.u64()?))
+    }
+
+    fn finish(self) -> io::Result<()> {
+        if self.pos != self.buf.len() {
+            return Err(bad(format!(
+                "frame body has {} trailing bytes",
+                self.buf.len() - self.pos
+            )));
+        }
+        Ok(())
+    }
+}
+
+fn push_u64(out: &mut Vec<u8>, v: u64) {
+    out.extend_from_slice(&v.to_le_bytes());
+}
+
+fn push_f64(out: &mut Vec<u8>, v: f64) {
+    push_u64(out, v.to_bits());
+}
+
+fn push_f64s(out: &mut Vec<u8>, xs: &[f64]) {
+    out.extend_from_slice(&(xs.len() as u32).to_le_bytes());
+    for &x in xs {
+        push_f64(out, x);
+    }
+}
+
+fn take_f64s(c: &mut Cursor) -> io::Result<Vec<f64>> {
+    let n = c.u32()? as usize;
+    let mut out = Vec::with_capacity(n.min(MAX_FRAME / 8));
+    for _ in 0..n {
+        out.push(c.f64()?);
+    }
+    Ok(out)
+}
+
+/// One `ASSIGN` frame: the generation-stamped work order of
+/// [`super::GradientSource::assign`], plus the per-worker `ordinal` that
+/// keys the assignment's gradient-noise stream
+/// ([`crate::prng::Prng::assignment_stream_at`]) — explicit so a restarted
+/// child resumes the exact stream position of its predecessor.
+#[derive(Clone, Debug, PartialEq)]
+pub struct AssignFrame {
+    pub start_k: u64,
+    pub gen: u64,
+    pub ordinal: u64,
+    /// Virtual start time (deterministic mode); the wall-mode child
+    /// ignores it for sleeping but still feeds it to the compute model.
+    pub vt_start: f64,
+    pub point: Vec<f64>,
+}
+
+pub fn encode_assign(f: &AssignFrame) -> Vec<u8> {
+    encode_assign_parts(f.start_k, f.gen, f.ordinal, f.vt_start, &f.point)
+}
+
+/// [`encode_assign`] from borrowed parts — the parent's hot path encodes
+/// straight out of its `Arc<Vec<f64>>` snapshot without cloning the
+/// O(d) point into an [`AssignFrame`] first.
+pub fn encode_assign_parts(
+    start_k: u64,
+    gen: u64,
+    ordinal: u64,
+    vt_start: f64,
+    point: &[f64],
+) -> Vec<u8> {
+    let mut out = Vec::with_capacity(28 + 8 * point.len() + 4);
+    push_u64(&mut out, start_k);
+    push_u64(&mut out, gen);
+    push_u64(&mut out, ordinal);
+    push_f64(&mut out, vt_start);
+    push_f64s(&mut out, point);
+    out
+}
+
+pub fn decode_assign(body: &[u8]) -> io::Result<AssignFrame> {
+    let mut c = Cursor::new(body);
+    let f = AssignFrame {
+        start_k: c.u64()?,
+        gen: c.u64()?,
+        ordinal: c.u64()?,
+        vt_start: c.f64()?,
+        point: take_f64s(&mut c)?,
+    };
+    c.finish()?;
+    Ok(f)
+}
+
+/// Byte offset of `ser_secs` inside a `GRAD` frame body
+/// (`start_k` + `gen` + `vt` precede it): the child measures the encode
+/// *while encoding*, then patches the measurement into the finished body.
+pub const GRAD_SER_SECS_OFFSET: usize = 24;
+
+/// Gradient-noise amplitude of the grid's synthetic-MNIST dataset — one
+/// shared constant so a process-substrate child rebuilds the byte-identical
+/// dataset the parent's `scenario` cache was built from.
+pub const SYNTH_MNIST_NOISE: f64 = 0.15;
+
+/// One `GRAD` frame: a completed stochastic gradient with its completion
+/// time and the child-side serialization cost (the `wire-serialize` span).
+#[derive(Clone, Debug, PartialEq)]
+pub struct GradFrame {
+    pub start_k: u64,
+    pub gen: u64,
+    /// Completion time: virtual seconds (deterministic) or the child's
+    /// scaled wall clock (live).
+    pub vt: f64,
+    /// Seconds the child spent encoding this frame.
+    pub ser_secs: f64,
+    pub grad: Vec<f64>,
+}
+
+pub fn encode_grad(f: &GradFrame) -> Vec<u8> {
+    let mut out = Vec::with_capacity(32 + 8 * f.grad.len() + 4);
+    push_u64(&mut out, f.start_k);
+    push_u64(&mut out, f.gen);
+    push_f64(&mut out, f.vt);
+    push_f64(&mut out, f.ser_secs);
+    push_f64s(&mut out, &f.grad);
+    out
+}
+
+pub fn decode_grad(body: &[u8]) -> io::Result<GradFrame> {
+    let mut c = Cursor::new(body);
+    let f = GradFrame {
+        start_k: c.u64()?,
+        gen: c.u64()?,
+        vt: c.f64()?,
+        ser_secs: c.f64()?,
+        grad: take_f64s(&mut c)?,
+    };
+    c.finish()?;
+    Ok(f)
+}
+
+/// The problem half of a `SETUP` frame: everything a child process needs
+/// to rebuild the objective (and, for sharded problems, the identical
+/// data partition) from scratch — the process-substrate twin of
+/// `scenario::ProblemSpec`.
+#[derive(Clone, Debug, PartialEq)]
+pub enum WorkerTask {
+    /// `QuadraticProblem::paper(d)` + `N(0, σ²I)` gradient noise.
+    Quadratic { d: usize, noise_sigma: f64 },
+    /// Logistic regression on `synthetic_mnist(n_data, 0.15, data_seed)`,
+    /// label-skew sharded by `scenario::alpha_partition` — `data_seed` is
+    /// the cell seed the parent built its own dataset from.
+    ShardedLogistic {
+        n_data: usize,
+        n_workers: usize,
+        batch: usize,
+        lambda: f64,
+        alpha: f64,
+        data_seed: u64,
+    },
+}
+
+/// Encode a `u64` losslessly: JSON numbers are `f64`s, which silently
+/// round integers above 2⁵³ — fatal for hash-derived seeds — so full-range
+/// values travel as decimal strings.
+fn ju64(v: u64) -> Json {
+    Json::Str(v.to_string())
+}
+
+fn get_u64(j: &Json) -> Option<u64> {
+    match j {
+        Json::Str(s) => s.parse().ok(),
+        _ => get_fnum(j)
+            .and_then(|f| (f >= 0.0 && f.fract() == 0.0 && f < 9.0e15).then_some(f as u64)),
+    }
+}
+
+impl WorkerTask {
+    pub fn to_json(&self) -> Json {
+        match *self {
+            WorkerTask::Quadratic { d, noise_sigma } => obj(vec![
+                ("kind", Json::Str("quadratic".into())),
+                ("d", Json::Num(d as f64)),
+                ("noise_sigma", fnum(noise_sigma)),
+            ]),
+            WorkerTask::ShardedLogistic {
+                n_data,
+                n_workers,
+                batch,
+                lambda,
+                alpha,
+                data_seed,
+            } => obj(vec![
+                ("kind", Json::Str("sharded-logistic".into())),
+                ("n_data", Json::Num(n_data as f64)),
+                ("n_workers", Json::Num(n_workers as f64)),
+                ("batch", Json::Num(batch as f64)),
+                ("lambda", fnum(lambda)),
+                ("alpha", fnum(alpha)),
+                ("data_seed", ju64(data_seed)),
+            ]),
+        }
+    }
+
+    pub fn from_json(j: &Json) -> Result<Self, String> {
+        let u = |k: &str| -> Result<u64, String> {
+            get_u64(j.get(k)).ok_or_else(|| format!("WorkerTask: missing/invalid field '{k}'"))
+        };
+        let f = |k: &str| -> Result<f64, String> {
+            get_fnum(j.get(k)).ok_or_else(|| format!("WorkerTask: missing/invalid field '{k}'"))
+        };
+        match j.get("kind").as_str() {
+            Some("quadratic") => Ok(WorkerTask::Quadratic {
+                d: u("d")? as usize,
+                noise_sigma: f("noise_sigma")?,
+            }),
+            Some("sharded-logistic") => Ok(WorkerTask::ShardedLogistic {
+                n_data: u("n_data")? as usize,
+                n_workers: u("n_workers")? as usize,
+                batch: u("batch")? as usize,
+                lambda: f("lambda")?,
+                alpha: f("alpha")?,
+                data_seed: u("data_seed")?,
+            }),
+            other => Err(format!("WorkerTask: unknown kind {other:?}")),
+        }
+    }
+}
+
+/// The `SETUP` frame: one child worker's complete configuration.
+#[derive(Clone, Debug, PartialEq)]
+pub struct WorkerSetup {
+    /// This child's worker index (keys its RNG splits).
+    pub worker: usize,
+    /// Cluster width (the model must have exactly this many workers).
+    pub n_workers: usize,
+    /// The run seed — keys the child's gradient streams via
+    /// `Prng::assignment_stream_base(run_seed, worker)`, exactly like a
+    /// `ThreadSource` worker thread.
+    pub run_seed: u64,
+    /// This worker's timing-stream seed: the parent's
+    /// [`crate::prng::Prng::split_seed`]`(worker)` draw from the shared
+    /// root, so `Prng::seed_from_u64(worker_seed)` in the child is
+    /// bit-identical to the in-process `root.split(worker)`.
+    pub worker_seed: u64,
+    pub deterministic: bool,
+    /// Wall seconds per virtual second (live mode; 0 ⇒ never sleep).
+    pub time_scale: f64,
+    pub model: ComputeModel,
+    pub task: WorkerTask,
+    /// Virtual start times of assignments already consumed by a previous
+    /// incarnation of this worker, in send order. A restarted child
+    /// replays one `model.duration(...)` draw per entry so its timing RNG
+    /// lands exactly where the dead child's was — the heart of
+    /// crash-restart determinism.
+    pub replay: Vec<f64>,
+}
+
+impl WorkerSetup {
+    pub fn to_json(&self) -> Json {
+        obj(vec![
+            ("worker", Json::Num(self.worker as f64)),
+            ("n_workers", Json::Num(self.n_workers as f64)),
+            ("run_seed", ju64(self.run_seed)),
+            ("worker_seed", ju64(self.worker_seed)),
+            ("deterministic", Json::Bool(self.deterministic)),
+            ("time_scale", fnum(self.time_scale)),
+            ("model", self.model.to_json()),
+            ("task", self.task.to_json()),
+            (
+                "replay",
+                Json::Arr(self.replay.iter().map(|&t| fnum(t)).collect()),
+            ),
+        ])
+    }
+
+    pub fn from_json(j: &Json) -> Result<Self, String> {
+        let u = |k: &str| -> Result<u64, String> {
+            get_u64(j.get(k)).ok_or_else(|| format!("WorkerSetup: missing/invalid field '{k}'"))
+        };
+        let deterministic = match j.get("deterministic") {
+            Json::Bool(b) => *b,
+            _ => return Err("WorkerSetup: missing/invalid field 'deterministic'".into()),
+        };
+        Ok(Self {
+            worker: u("worker")? as usize,
+            n_workers: u("n_workers")? as usize,
+            run_seed: u("run_seed")?,
+            worker_seed: u("worker_seed")?,
+            deterministic,
+            time_scale: get_fnum(j.get("time_scale"))
+                .ok_or("WorkerSetup: missing/invalid field 'time_scale'")?,
+            model: ComputeModel::from_json(j.get("model"))?,
+            task: WorkerTask::from_json(j.get("task"))?,
+            replay: j
+                .get("replay")
+                .as_arr()
+                .ok_or("WorkerSetup: missing/invalid field 'replay'")?
+                .iter()
+                .map(|t| get_fnum(t).ok_or_else(|| "WorkerSetup: bad replay entry".to_string()))
+                .collect::<Result<_, _>>()?,
+        })
+    }
+
+    /// Serialize to the `SETUP` frame body (JSON text bytes).
+    pub fn encode(&self) -> Vec<u8> {
+        json_write(&self.to_json()).into_bytes()
+    }
+
+    /// Decode a `SETUP` frame body.
+    pub fn decode(body: &[u8]) -> io::Result<Self> {
+        let text = std::str::from_utf8(body).map_err(|e| bad(format!("setup not UTF-8: {e}")))?;
+        let json = parse(text).map_err(|e| bad(format!("setup not JSON: {e}")))?;
+        Self::from_json(&json).map_err(bad)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::prng::{Prng, TimeDist};
+
+    /// Interesting payload values: every IEEE-754 class, including NaNs
+    /// with distinct payload bits (which must survive bit-for-bit).
+    fn payload_pool() -> Vec<f64> {
+        vec![
+            0.0,
+            -0.0,
+            1.5,
+            -2.25e-300,
+            f64::MIN_POSITIVE,
+            f64::MAX,
+            f64::INFINITY,
+            f64::NEG_INFINITY,
+            f64::NAN,
+            f64::from_bits(0x7ff8_dead_beef_0001),
+            f64::from_bits(0xfff0_0000_0000_0001),
+        ]
+    }
+
+    fn random_assign(rng: &mut Prng, pool: &[f64]) -> AssignFrame {
+        let n = (rng.next_u64() % 9) as usize;
+        AssignFrame {
+            start_k: rng.next_u64(),
+            gen: rng.next_u64(),
+            ordinal: rng.next_u64() % 1_000_000,
+            vt_start: pool[(rng.next_u64() as usize) % pool.len()],
+            point: (0..n)
+                .map(|_| pool[(rng.next_u64() as usize) % pool.len()])
+                .collect(),
+        }
+    }
+
+    fn random_grad(rng: &mut Prng, pool: &[f64]) -> GradFrame {
+        let n = (rng.next_u64() % 9) as usize;
+        GradFrame {
+            start_k: rng.next_u64(),
+            gen: rng.next_u64(),
+            vt: pool[(rng.next_u64() as usize) % pool.len()],
+            ser_secs: pool[(rng.next_u64() as usize) % pool.len()],
+            grad: (0..n)
+                .map(|_| pool[(rng.next_u64() as usize) % pool.len()])
+                .collect(),
+        }
+    }
+
+    fn bits(xs: &[f64]) -> Vec<u64> {
+        xs.iter().map(|x| x.to_bits()).collect()
+    }
+
+    #[test]
+    fn assign_and_grad_frames_round_trip_bit_exactly() {
+        let pool = payload_pool();
+        let mut rng = Prng::seed_from_u64(0xF0F0);
+        for _ in 0..200 {
+            let a = random_assign(&mut rng, &pool);
+            let d = decode_assign(&encode_assign(&a)).unwrap();
+            assert_eq!(d.start_k, a.start_k);
+            assert_eq!(d.gen, a.gen);
+            assert_eq!(d.ordinal, a.ordinal);
+            assert_eq!(d.vt_start.to_bits(), a.vt_start.to_bits());
+            assert_eq!(bits(&d.point), bits(&a.point));
+
+            let g = random_grad(&mut rng, &pool);
+            let d = decode_grad(&encode_grad(&g)).unwrap();
+            assert_eq!(d.start_k, g.start_k);
+            assert_eq!(d.gen, g.gen);
+            assert_eq!(d.vt.to_bits(), g.vt.to_bits());
+            assert_eq!(d.ser_secs.to_bits(), g.ser_secs.to_bits());
+            assert_eq!(bits(&d.grad), bits(&g.grad));
+        }
+    }
+
+    #[test]
+    fn truncated_tails_error_never_panic() {
+        let pool = payload_pool();
+        let mut rng = Prng::seed_from_u64(0xBAD);
+        for _ in 0..20 {
+            let full = encode_assign(&random_assign(&mut rng, &pool));
+            for cut in 0..full.len() {
+                assert!(decode_assign(&full[..cut]).is_err(), "cut at {cut}");
+            }
+            let full = encode_grad(&random_grad(&mut rng, &pool));
+            for cut in 0..full.len() {
+                assert!(decode_grad(&full[..cut]).is_err(), "cut at {cut}");
+            }
+        }
+    }
+
+    #[test]
+    fn trailing_garbage_is_rejected() {
+        let mut body = encode_assign(&AssignFrame {
+            start_k: 1,
+            gen: 2,
+            ordinal: 3,
+            vt_start: 4.0,
+            point: vec![1.0],
+        });
+        body.push(0);
+        assert!(decode_assign(&body).is_err());
+    }
+
+    #[test]
+    fn frame_stream_round_trips_and_detects_truncation() {
+        let mut buf = Vec::new();
+        write_frame(&mut buf, TAG_ASSIGN, b"abc").unwrap();
+        write_frame(&mut buf, TAG_SHUTDOWN, b"").unwrap();
+
+        let mut r = &buf[..];
+        let (tag, body) = read_frame(&mut r).unwrap().unwrap();
+        assert_eq!((tag, body.as_slice()), (TAG_ASSIGN, b"abc".as_slice()));
+        let (tag, body) = read_frame(&mut r).unwrap().unwrap();
+        assert_eq!((tag, body.len()), (TAG_SHUTDOWN, 0));
+        // clean EOF at a frame boundary
+        assert!(read_frame(&mut r).unwrap().is_none());
+
+        // EOF mid-header and mid-body are hard errors, not clean EOFs
+        for cut in 1..buf.len() - 5 {
+            let mut r = &buf[..cut];
+            loop {
+                match read_frame(&mut r) {
+                    Ok(Some(_)) => continue,
+                    Ok(None) => break, // cut landed exactly on a boundary
+                    Err(_) => break,   // truncation surfaced as an error
+                }
+            }
+        }
+        // corrupt length prefix: zero and oversized both rejected
+        let zero = [0u8; 4];
+        assert!(read_frame(&mut &zero[..]).is_err());
+        let huge = (MAX_FRAME as u32 + 1).to_le_bytes();
+        assert!(read_frame(&mut &huge[..]).is_err());
+    }
+
+    #[test]
+    fn setup_round_trips_including_nonfinite_task_params() {
+        let setup = WorkerSetup {
+            worker: 3,
+            n_workers: 8,
+            run_seed: 9,
+            // full-range hash output: must survive JSON without f64 rounding
+            worker_seed: 0xDEAD_BEEF_CAFE_F00D,
+            deterministic: true,
+            time_scale: 0.0,
+            model: crate::sim::ComputeModel::Random {
+                dists: (1..=8)
+                    .map(|i| TimeDist::ShiftedHalfNormal {
+                        base: i as f64,
+                        sigma: (i as f64).sqrt(),
+                    })
+                    .collect(),
+            },
+            task: WorkerTask::ShardedLogistic {
+                n_data: 240,
+                n_workers: 8,
+                batch: 4,
+                lambda: 0.01,
+                alpha: f64::INFINITY, // the IID axis value — must survive JSON
+                data_seed: 7,
+            },
+            replay: vec![0.0, 1.5, f64::INFINITY],
+        };
+        let decoded = WorkerSetup::decode(&setup.encode()).unwrap();
+        assert_eq!(decoded, setup);
+        match decoded.task {
+            WorkerTask::ShardedLogistic { alpha, .. } => assert!(alpha.is_infinite()),
+            _ => panic!("wrong task kind"),
+        }
+        // truncated JSON errors cleanly
+        let body = setup.encode();
+        assert!(WorkerSetup::decode(&body[..body.len() / 2]).is_err());
+    }
+}

@@ -1,18 +1,29 @@
-//! Wall-clock executor — a thin facade over the unified [`crate::engine`].
+//! Substrate-generic executor — a thin facade over the unified
+//! [`crate::engine`].
 //!
-//! [`run_wallclock`] binds a [`Scheduler`] to real concurrency: one OS
-//! thread per worker ([`crate::engine::ThreadSource`]), compute times
-//! realized as sleeps scaled by `time_scale`, Algorithm 5's calculation
-//! stops via atomic assignment generations. The server-policy loop —
-//! Decision application, batch accumulator, cancellation, reassignment,
-//! curve recording, [`ServerOpt`] updates and ε-stationarity stopping — is
-//! [`crate::engine::run`], shared verbatim with the simulator, so every
-//! [`crate::coordinator::SchedulerKind`] behaves identically on both
-//! substrates by construction and returns the same unified [`RunRecord`]
-//! (`wall` set, times in wall seconds).
+//! [`run_on`] is the single entry point: it binds a [`Scheduler`] to any
+//! [`SubstrateSpec`] — the discrete-event simulator, one OS thread per
+//! worker ([`crate::engine::ThreadSource`]), or one child process per
+//! worker ([`crate::engine::ProcSource`]) — through one
+//! [`crate::engine::SubstrateSpec::make_source`] construction and one
+//! shared server loop ([`crate::engine::run`]): Decision application,
+//! batch accumulator, Algorithm 5 cancellation, reassignment, curve
+//! recording, [`ServerOpt`] updates and ε-stationarity stopping behave
+//! identically on every substrate *by construction* and return the same
+//! unified [`RunRecord`].
 //!
-//! Used by the integration suite (`tests/engine_parity.rs`) and by the
-//! CLI's `exec-demo` subcommand.
+//! A workload is three pieces, built once and valid on every substrate:
+//! a server-side evaluation problem (any [`crate::opt::StochasticProblem`]
+//! — also the simulator's gradient oracle), per-worker samplers (consumed
+//! by the thread substrate), and an optional wire-format
+//! [`crate::engine::WorkerTask`] (consumed by the process substrate).
+//! [`noisy_workload`] and [`sharded_workload`] assemble the two standard
+//! shapes.
+//!
+//! The historical wall-clock-only entry points (`run_wallclock*`) survive
+//! as thin deprecated shims over [`run_on`]. Used by the integration
+//! suite (`tests/engine_parity.rs`) and by the CLI's `exec-demo`
+//! subcommand.
 
 use std::sync::Arc;
 use std::thread;
@@ -21,11 +32,10 @@ use std::time::Duration;
 use crate::coordinator::Scheduler;
 use crate::data::partition::Partition;
 use crate::engine::{
-    self, DriverConfig, RunRecord, ServerOpt, ShardSampler, ThreadPoolConfig, ThreadSource,
-    WallclockEval,
+    self, DriverConfig, GradSampler, NoisySampler, RunRecord, ServerOpt, ShardSampler,
+    SubstrateSpec, ThreadPoolConfig, WallclockEval, WorkerTask,
 };
-use crate::linalg::par::ComputePool;
-use crate::opt::{Problem, SampleProblem, Sharded};
+use crate::opt::{Noisy, Problem, SampleProblem, Sharded, StochasticProblem};
 use crate::sim::ComputeModel;
 
 /// Wall-clock run configuration.
@@ -114,27 +124,132 @@ fn active_workers(sched: &dyn Scheduler, n: usize) -> Vec<usize> {
     }
 }
 
+/// Run `sched` on any substrate, through the unified engine loop — the
+/// canonical executor entry point.
+///
+/// * `eval` — the server-side evaluation problem (curve recording,
+///   stopping checks); on the simulator it is also the gradient oracle,
+///   so it must be a real [`StochasticProblem`] there (the thread and
+///   process substrates never call its `stoch_grad`).
+/// * `samplers` — one per worker slot; only the thread substrate consumes
+///   them (its workers compute gradients in-process).
+/// * `task` — the wire description of the workload; only the process
+///   substrate consumes it (its child processes rebuild the problem from
+///   the description). `None` is fine on the other substrates.
+///
+/// [`noisy_workload`] / [`sharded_workload`] build matching
+/// `(eval, samplers)` pairs for the two standard workload shapes, keyed
+/// to the same per-assignment draw streams on every substrate — which is
+/// what makes deterministic runs bit-identical across substrates
+/// (`tests/engine_parity.rs`).
+pub fn run_on<E, S>(
+    spec: &SubstrateSpec,
+    mut eval: E,
+    samplers: Vec<S>,
+    task: Option<WorkerTask>,
+    model: &ComputeModel,
+    sched: &mut dyn Scheduler,
+    dcfg: &DriverConfig,
+) -> RunRecord
+where
+    E: StochasticProblem,
+    S: GradSampler,
+{
+    let active = active_workers(sched, model.n_workers());
+    let cpool = spec.compute_pool();
+    // the stale-assignment index is only worth maintaining for schedulers
+    // that cancel (Algorithm 5)
+    let track_stale = sched.cancel_threshold(u64::MAX).is_some();
+    thread::scope(|scope| {
+        let mut source = spec.make_source(
+            scope,
+            samplers,
+            task.as_ref(),
+            model,
+            &active,
+            dcfg.seed,
+            track_stale,
+        );
+        let rec = engine::run_pooled(&mut eval, &mut source, sched, dcfg, cpool);
+        source.shutdown();
+        rec
+    })
+}
+
+/// The §G noisy workload on any substrate: exact gradients of `problem`
+/// plus i.i.d. `N(0, noise_sigma²)` per-coordinate noise. Returns the
+/// `(eval, samplers)` pair for [`run_on`] — [`crate::opt::Noisy`] serves
+/// the simulator's draws and the server-side evaluations, and each
+/// [`NoisySampler`] is its draw-for-draw thread-substrate twin.
+pub fn noisy_workload<P: Problem + Sync + ?Sized>(
+    problem: &P,
+    noise_sigma: f64,
+    n_workers: usize,
+) -> (Noisy<&P>, Vec<NoisySampler<'_, P>>) {
+    let samplers = (0..n_workers)
+        .map(|_| NoisySampler {
+            problem,
+            noise_sigma,
+        })
+        .collect();
+    (Noisy::new(problem, noise_sigma), samplers)
+}
+
+/// The data-sharded workload on any substrate: worker `w` owns shard `w`
+/// of `partition` and samples `batch`-sized minibatches from it. Returns
+/// the `(eval, samplers)` pair for [`run_on`] — server-side evaluation
+/// goes through the same [`crate::opt::Sharded`] adapter the simulator
+/// substrate draws from, so per-shard fairness recording
+/// (`DriverConfig::record_shard_losses`) works identically everywhere.
+/// The problem is borrowed, never cloned (`&P` is a [`SampleProblem`] via
+/// the blanket reference impl).
+pub fn sharded_workload<'a, P: SampleProblem + Sync + ?Sized>(
+    problem: &'a P,
+    partition: &Partition,
+    batch: usize,
+    n_workers: usize,
+) -> (Sharded<&'a P>, Vec<ShardSampler<'a, P>>) {
+    assert!(batch > 0, "minibatch size must be at least 1");
+    assert_eq!(
+        partition.shards.len(),
+        n_workers,
+        "partition must provide one shard per worker"
+    );
+    assert!(
+        partition.shards.iter().all(|s| !s.is_empty()),
+        "every worker needs a non-empty shard"
+    );
+    let samplers = (0..n_workers)
+        .map(|w| ShardSampler {
+            problem,
+            shard: partition.shards[w].clone(),
+            batch,
+        })
+        .collect();
+    (Sharded::new(problem, partition.clone(), batch), samplers)
+}
+
 /// Run `sched` against `problem` with real threads, through the unified
 /// engine loop.
 ///
 /// The problem must be `Sync` (workers evaluate gradients concurrently);
 /// the iterate is snapshotted per assignment, matching the semantics of
 /// Algorithm 1/4/5 where a worker computes at the point it was handed.
+#[deprecated(note = "use exec::run_on with SubstrateSpec::Threads")]
 pub fn run_wallclock<P: Problem + Sync>(
     problem: &P,
     model: &ComputeModel,
     sched: &mut dyn Scheduler,
     cfg: &ExecConfig,
 ) -> RunRecord {
+    #[allow(deprecated)]
     run_wallclock_engine(problem, model, sched, &cfg.pool_config(), &cfg.driver_config())
 }
 
 /// Engine-level wall-clock entry: the caller supplies the full
 /// [`ThreadPoolConfig`] and [`DriverConfig`] instead of the `ExecConfig`
-/// convenience subset. This is the path the [`crate::scenario`] grid
-/// runner dispatches wall-clock cells through — grid budgets (target gap,
-/// ε-stationarity, shard-loss recording) map directly onto the engine
-/// config, with no `ExecConfig` translation losing knobs.
+/// convenience subset.
+#[deprecated(note = "use exec::run_on with SubstrateSpec::Threads")]
 pub fn run_wallclock_engine<P: Problem + Sync>(
     problem: &P,
     model: &ComputeModel,
@@ -142,27 +257,29 @@ pub fn run_wallclock_engine<P: Problem + Sync>(
     pool: &ThreadPoolConfig,
     dcfg: &DriverConfig,
 ) -> RunRecord {
-    let active = active_workers(sched, model.n_workers());
-    let cpool = pool
-        .compute
-        .as_deref()
-        .unwrap_or_else(|| ComputePool::serial_ref());
-    thread::scope(|scope| {
-        let mut source = ThreadSource::spawn(scope, problem, model, &active, pool);
-        let mut eval = WallclockEval(problem);
-        let rec = engine::run_pooled(&mut eval, &mut source, sched, dcfg, cpool);
-        source.shutdown();
-        rec
-    })
+    let samplers: Vec<NoisySampler<'_, P>> = (0..model.n_workers())
+        .map(|_| NoisySampler {
+            problem,
+            noise_sigma: pool.noise_sigma,
+        })
+        .collect();
+    run_on(
+        &SubstrateSpec::Threads(pool.clone()),
+        WallclockEval(problem),
+        samplers,
+        None,
+        model,
+        sched,
+        dcfg,
+    )
 }
 
 /// Run `sched` against a **data-sharded** finite-sum problem with real
 /// threads: worker `w`'s thread owns shard `w` of `partition` and samples
 /// `batch`-sized minibatches from it — heterogeneous sampling as real
-/// concurrency. The simulator twin is
-/// [`crate::opt::Sharded`] driven through [`crate::driver::Driver`]; with
-/// `cfg.deterministic` the two produce bit-identical trajectories and
-/// shard-hit accounting under the same seed.
+/// concurrency. With `cfg.deterministic` the run is bit-identical to its
+/// simulator twin under the same seed.
+#[deprecated(note = "use exec::run_on with sharded_workload and SubstrateSpec::Threads")]
 pub fn run_wallclock_sharded<P>(
     problem: &P,
     partition: &Partition,
@@ -174,6 +291,7 @@ pub fn run_wallclock_sharded<P>(
 where
     P: SampleProblem + Sync,
 {
+    #[allow(deprecated)]
     run_wallclock_sharded_engine(
         problem,
         partition,
@@ -186,12 +304,7 @@ where
 }
 
 /// Engine-level sharded wall-clock entry (see [`run_wallclock_engine`]).
-///
-/// Worker threads own their shards ([`ShardSampler`]); server-side
-/// evaluation goes through the same [`crate::opt::Sharded`] adapter the
-/// simulator substrate uses, so per-shard fairness recording
-/// (`DriverConfig::record_shard_losses`) works identically here — a grid
-/// cell's CSV row is substrate-invariant column for column.
+#[deprecated(note = "use exec::run_on with sharded_workload and SubstrateSpec::Threads")]
 pub fn run_wallclock_sharded_engine<P>(
     problem: &P,
     partition: &Partition,
@@ -204,45 +317,92 @@ pub fn run_wallclock_sharded_engine<P>(
 where
     P: SampleProblem + Sync,
 {
-    let n = model.n_workers();
-    assert!(batch > 0, "minibatch size must be at least 1");
-    assert_eq!(
-        partition.shards.len(),
-        n,
-        "partition must provide one shard per worker"
-    );
-    assert!(
-        partition.shards.iter().all(|s| !s.is_empty()),
-        "every worker needs a non-empty shard"
-    );
-    let active = active_workers(sched, n);
-    let cpool = pool
-        .compute
-        .as_deref()
-        .unwrap_or_else(|| ComputePool::serial_ref());
-    thread::scope(|scope| {
-        let samplers: Vec<ShardSampler<'_, P>> = (0..n)
-            .map(|w| ShardSampler {
-                problem,
-                shard: partition.shards[w].clone(),
-                batch,
-            })
-            .collect();
-        let mut source = ThreadSource::spawn_with(scope, samplers, model, &active, pool);
-        // borrow, don't clone: `&P` is a `SampleProblem` via the blanket
-        // reference impl, so server-side eval reads the caller's dataset
-        let mut eval = Sharded::new(problem, partition.clone(), batch);
-        let rec = engine::run_pooled(&mut eval, &mut source, sched, dcfg, cpool);
-        source.shutdown();
-        rec
-    })
+    let (eval, samplers) = sharded_workload(problem, partition, batch, model.n_workers());
+    run_on(
+        &SubstrateSpec::Threads(pool.clone()),
+        eval,
+        samplers,
+        None,
+        model,
+        sched,
+        dcfg,
+    )
 }
 
 #[cfg(test)]
+// the deprecated wall-clock shims are exercised on purpose: they must
+// keep producing exactly what they did before the `run_on` collapse
+#[allow(deprecated)]
 mod tests {
     use super::*;
     use crate::coordinator::{AsgdScheduler, RennalaScheduler, RingmasterScheduler, StepsizeRule};
     use crate::opt::QuadraticProblem;
+
+    #[test]
+    fn run_on_sim_matches_the_driver_facade() {
+        // the Sim arm of run_on must replicate Driver::run_pooled exactly:
+        // same SimSource seeding, same stale-tracking decision, same loop
+        let model = ComputeModel::fixed_linear(4);
+        let dcfg = DriverConfig {
+            seed: 3,
+            max_iters: 300,
+            record_every: 50,
+            ..Default::default()
+        };
+        let (eval, samplers) = noisy_workload(&QuadraticProblem::paper(12), 1e-3, 4);
+        let mut sched = RingmasterScheduler::new(4, 0.2, true);
+        let rec = run_on(
+            &SubstrateSpec::sim(),
+            eval,
+            samplers,
+            None,
+            &model,
+            &mut sched,
+            &dcfg,
+        );
+        let mut driver = crate::driver::Driver::new(
+            Noisy::new(QuadraticProblem::paper(12), 1e-3),
+            model,
+            dcfg,
+        );
+        let mut sched2 = RingmasterScheduler::new(4, 0.2, true);
+        let direct = driver.run_pooled(&mut sched2, crate::linalg::par::ComputePool::serial_ref());
+        assert_eq!(rec.iters, direct.iters);
+        assert_eq!(rec.x_final, direct.x_final);
+        assert_eq!(rec.cluster, direct.cluster);
+        assert!(rec.proc.is_none(), "sim runs carry no process stats");
+    }
+
+    #[test]
+    fn run_on_threads_matches_the_deprecated_shim() {
+        // deterministic virtual-time pools are bit-stable, so the shim and
+        // the canonical entry must agree bitwise
+        let problem = QuadraticProblem::paper(10);
+        let model = ComputeModel::fixed_linear(3);
+        let pool = ThreadPoolConfig::virtual_time(5, 1e-3, Duration::from_secs(30));
+        let dcfg = DriverConfig {
+            seed: 5,
+            max_iters: 200,
+            record_every: 50,
+            max_time: f64::INFINITY,
+            ..Default::default()
+        };
+        let (eval, samplers) = noisy_workload(&problem, 1e-3, 3);
+        let mut sched = RingmasterScheduler::new(3, 0.2, true);
+        let via_run_on = run_on(
+            &SubstrateSpec::Threads(pool.clone()),
+            eval,
+            samplers,
+            None,
+            &model,
+            &mut sched,
+            &dcfg,
+        );
+        let mut sched2 = RingmasterScheduler::new(3, 0.2, true);
+        let via_shim = run_wallclock_engine(&problem, &model, &mut sched2, &pool, &dcfg);
+        assert_eq!(via_run_on.iters, via_shim.iters);
+        assert_eq!(via_run_on.x_final, via_shim.x_final);
+    }
 
     #[test]
     fn wallclock_ringmaster_descends() {

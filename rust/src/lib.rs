@@ -9,14 +9,18 @@
 //!   Algorithms 4 & 5) plus every baseline it is compared against
 //!   (Asynchronous SGD / Delay-Adaptive ASGD, Rennala SGD, Naive Optimal
 //!   ASGD, synchronous Minibatch SGD), executed by a **single
-//!   backend-agnostic server loop** ([`engine`]) over two substrates —
+//!   backend-agnostic server loop** ([`engine`]) over three substrates —
 //!   a discrete-event cluster simulator implementing the paper's *fixed*,
 //!   *random* and *universal* computation models ([`sim`], via
 //!   [`engine::SimSource`]; its event core is a hierarchical timing-wheel
 //!   queue with generation-stamped lazy cancellation, sized for
-//!   million-worker clusters) and a real-thread wall-clock pool
-//!   ([`engine::ThreadSource`]) — with thin facades in [`driver`]
-//!   (simulation) and [`exec`] (wall clock), the [`scenario`]
+//!   million-worker clusters), a real-thread wall-clock pool
+//!   ([`engine::ThreadSource`]), and a child-process pool speaking
+//!   length-prefixed binary frames over stdio ([`engine::ProcSource`],
+//!   with bounded restart-on-crash and wire-cost spans) — all selected
+//!   through one [`engine::SubstrateSpec`] seam and driven by one
+//!   substrate-generic entry point ([`exec::run_on`], with a thin
+//!   simulation facade in [`driver`]), the [`scenario`]
 //!   orchestration layer (checkpointed, resumable, `--shard i/n`-able
 //!   experiment grids over a content-keyed cell journal, fanned out on
 //!   [`engine::sweep`]), the closed-form time-complexity theory
@@ -46,28 +50,36 @@
 //!            Scheduler (policy)            coordinator::*
 //!                  │ Decision                (SchedulerKind::visit_built:
 //!                  ▼                          static per-family dispatch)
+//!            exec::run_on(SubstrateSpec, …)  exec (one substrate-generic
+//!                  │                          entry; workloads from
+//!                  │                          noisy_workload/sharded_workload)
+//!                  ▼
 //!            engine::run_pooled (one loop) engine
 //!            engine::run_pooled_kind (the same loop, monomorphized per
 //!             scheduler family; slab-recycled sources, incremental
 //!             per-worker RNG streams, lazy worker_hits/trace tables —
 //!             the allocation-free n=1M event hot path)
-//!             │              │      │
-//!       SimSource      ThreadSource │     engine::{sim_source,thread_source}
-//!       (sim clock)    (wall / virtual clock)
-//!        Substrate::Sim  Substrate::Wallclock{deterministic,threads}
-//!             │              │      │  (det: bit-identical to Sim)
-//!             │              │      ▼
-//!             │              │  linalg::par::ComputePool   (persistent pool;
-//!             │              │  fixed CHUNK boundaries + ascending-index
-//!             │              │  partial folds ⇒ bit-identical to serial
-//!             │              │  at any width; scratch from per-pool arena)
-//!        sim::Cluster   GradSampler per thread
-//!        (timing-wheel EventQueue;
-//!         stamped lazy cancellation)
+//!             │              │              │
+//!       SimSource      ThreadSource    ProcSource   engine::{sim_source,
+//!       (sim clock)    (wall / virt)   (children)    thread_source,proc_source}
+//!        Substrate::Sim  ::Wallclock{…}  ::Process{deterministic,workers}
+//!             │              │              │  (det: bit-identical to Sim)
+//!             │              │              │  wire::Frame over stdio pipes
+//!             │              │              │  (assign/grad/cancel/crash →
+//!             │              │              │   bounded respawn + reissue;
+//!             │              │              │   wire-serialize/transfer/
+//!             │              │              │   deserialize spans)
+//!             │              ├──────────────┴─ linalg::par::ComputePool
+//!             │              │  (persistent pool; fixed CHUNK boundaries +
+//!             │              │  ascending-index partial folds ⇒ bit-identical
+//!             │              │  to serial at any width; per-pool arena)
+//!        sim::Cluster   GradSampler per thread | WorkerTask per child
+//!        (timing-wheel EventQueue;               (wire-describable workload,
+//!         stamped lazy cancellation)              rebuilt in the child)
 //!             │              │ (NoisySampler | ShardSampler)
 //!             └──── WorkerCtx ────┘        opt::{StochasticProblem, Sharded}
 //!          (worker id + per-assignment     prng::assignment_stream
-//!           draw stream, both substrates)
+//!           draw stream, every substrate)
 //!                  │
 //!         data::partition shards           iid | Dirichlet-α | quantity skew
 //!                  │
@@ -125,9 +137,11 @@ pub mod testkit;
 pub mod train;
 pub mod util;
 
-// Canonical scenario entry points, re-exported at the crate root so
-// downstream users (benches, external harnesses) reach the orchestration
-// layer without spelling out the module path.
+// Canonical entry points, re-exported at the crate root so downstream
+// users (benches, external harnesses) reach the executor and the
+// orchestration layer without spelling out the module paths.
+pub use engine::SubstrateSpec;
+pub use exec::run_on;
 pub use scenario::{
     journal_report, run_grid, run_grid_configured, GridOptions, GridSpec, GridSpecBuilder,
     ReportOptions, ShardSel,

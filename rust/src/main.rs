@@ -12,12 +12,15 @@
 //! ringmaster fig2        Figure 2 (d=1729, n=6174 quadratic)
 //! ringmaster fig3        Figure 3 (MLP on synthetic-MNIST, PJRT)
 //! ringmaster train       end-to-end MLP training via PJRT artifacts
-//! ringmaster exec-demo   wall-clock (threaded) executor demo
+//! ringmaster exec-demo   wall-clock executor demo (threads or processes)
+//! ringmaster worker      process-substrate worker entry (spawned by the
+//!                        engine, frames on stdin/stdout — not for hand use)
 //! ringmaster sweep       heterogeneity matrix (scheduler × α × seed) → CSV;
 //!                        checkpointed (--journal), resumable, shardable
 //!                        (--shard i/n), substrate-selectable
-//!                        (--substrate sim|wallclock [--deterministic]),
-//!                        retrying transient cell failures (--retries)
+//!                        (--substrate sim|wallclock|process
+//!                        [--deterministic]), retrying transient cell
+//!                        failures (--retries)
 //! ringmaster sweep merge union N shard journals into one (--out), for
 //!                        cross-machine fan-out: shard → merge → CSV
 //!                        (provenance sidecars merge along)
@@ -105,13 +108,14 @@ fn dispatch(args: &Args) -> Result<()> {
         "fig3" => cmd_fig3(args),
         "train" => cmd_train(args),
         "exec-demo" => cmd_exec_demo(args),
+        "worker" => cmd_worker(),
         "sweep" => cmd_sweep(args),
         other => bail!("unknown subcommand '{other}' (try --help)"),
     }
 }
 
-/// `--substrate sim|wallclock`, refined by the `--deterministic` switch
-/// and the `--wc-threads` concurrency cap.
+/// `--substrate sim|wallclock|process`, refined by the `--deterministic`
+/// switch and the `--wc-threads` concurrency cap.
 fn substrate_from_args(args: &Args) -> Result<Substrate> {
     scenario::parse_substrate(
         args.str_or("substrate", "sim"),
@@ -637,6 +641,9 @@ fn cmd_sweep_report(args: &Args) -> Result<()> {
     let opts = ReportOptions {
         eps: args.f64_or("eps", 1e-3)?,
         sigma_sq: args.f64_or("sigma-sq", 1.0)?,
+        // --trace-dir here points at the sweep's span traces; the report
+        // aggregates their wire-serialize/transfer/deserialize spans
+        trace_dir: args.get("trace-dir").map(PathBuf::from),
     };
     let report = scenario::journal_report(std::path::Path::new(journal), &opts)?;
     if let Some(path) = args.get("md-out") {
@@ -768,6 +775,9 @@ fn cmd_sweep(args: &Args) -> Result<()> {
         provenance: args.flag("provenance"),
         trace_dir: args.get("trace-dir").map(PathBuf::from),
         trace_spans: args.usize_or("trace-spans", 1_000_000)? as u64,
+        // process-substrate knobs (in-run restart budget, fault injection)
+        // keep their defaults from the CLI
+        ..Default::default()
     };
     // provenance records are keyed by journal cell, so they need one
     ensure!(
@@ -817,35 +827,96 @@ fn cmd_sweep(args: &Args) -> Result<()> {
 }
 
 fn cmd_exec_demo(args: &Args) -> Result<()> {
-    use ringmaster::exec::{run_wallclock, ExecConfig};
+    use ringmaster::engine::{ProcPoolConfig, SubstrateSpec, ThreadPoolConfig, WorkerTask};
+    use ringmaster::exec;
+    use std::time::Duration;
 
     let n = args.usize_or("n", 8)?;
     let d = args.usize_or("d", 64)?;
     let iters = args.usize_or("max-iters", 2000)? as u64;
+    let seed = args.usize_or("seed", 0)? as u64;
+    let time_scale = args.f64_or("time-scale", 2e-4)?;
+    let noise_sigma = 0.01;
+    let max_wall = Duration::from_secs(30);
+    // the demo's point is real concurrency, so it defaults to threads;
+    // --substrate process runs the same loop over child processes instead
+    let substrate = scenario::parse_substrate(
+        args.str_or("substrate", "wallclock"),
+        args.flag("deterministic"),
+        0,
+    )
+    .map_err(|e| ringmaster::anyhow!("{e}"))?;
+    let spec = match substrate {
+        Substrate::Sim => SubstrateSpec::sim(),
+        Substrate::Wallclock { deterministic, .. } => SubstrateSpec::Threads(ThreadPoolConfig {
+            time_scale,
+            max_wall,
+            seed,
+            noise_sigma,
+            deterministic,
+            compute: None,
+        }),
+        Substrate::Process { deterministic: true, .. } => {
+            SubstrateSpec::Process(ProcPoolConfig::virtual_time(seed, max_wall))
+        }
+        Substrate::Process { deterministic: false, .. } => SubstrateSpec::Process(ProcPoolConfig {
+            seed,
+            time_scale,
+            max_wall,
+            ..Default::default()
+        }),
+    };
+
     let problem = QuadraticProblem::paper(d);
     let model = ComputeModel::fixed_linear(n);
-    let cfg = ExecConfig {
-        time_scale: args.f64_or("time-scale", 2e-4)?,
+    let dcfg = DriverConfig {
+        seed,
         max_iters: iters,
-        noise_sigma: 0.01,
-        seed: args.usize_or("seed", 0)? as u64,
+        max_time: f64::INFINITY,
+        record_every: 100,
         ..Default::default()
     };
+    let task = WorkerTask::Quadratic { d, noise_sigma };
     for kind in [
         SchedulerKind::Ringmaster { r: n as u64, gamma: 0.2, cancel: true },
         SchedulerKind::Asgd { gamma: 0.1 },
     ] {
         let mut sched = kind.build();
-        let rec = run_wallclock(&problem, &model, sched.as_mut(), &cfg);
+        let (eval, samplers) = exec::noisy_workload(&problem, noise_sigma, n);
+        let rec = exec::run_on(
+            &spec,
+            eval,
+            samplers,
+            Some(task.clone()),
+            &model,
+            sched.as_mut(),
+            &dcfg,
+        );
         println!(
-            "exec {}: iters={} wall={:?} f-f*={:.4e} ‖∇f‖²={:.3e} discarded={}",
+            "exec {} [{}]: iters={} wall={:?} f-f*={:.4e} ‖∇f‖²={:.3e} discarded={}",
             sched.name(),
+            spec.name(),
             rec.iters,
             rec.wall.unwrap_or_default(),
             rec.final_gap,
             rec.final_gradnorm_sq,
             rec.discarded
         );
+        if let Some(p) = &rec.proc {
+            println!(
+                "  workers: {} child pid(s), {} restart(s)",
+                p.pids.len(),
+                p.total_restarts()
+            );
+        }
     }
     Ok(())
+}
+
+/// `ringmaster worker` — the process-substrate worker entry. Spawned by
+/// [`ringmaster::engine::ProcSource`] as `<bin> worker`, one per worker
+/// slot: reads a workload description and assignment frames on stdin,
+/// writes gradient frames on stdout, exits on EOF. Never useful by hand.
+fn cmd_worker() -> Result<()> {
+    ringmaster::engine::worker_main().map_err(|e| ringmaster::anyhow!("worker: {e}"))
 }

@@ -28,6 +28,20 @@ pub enum SpanOutcome {
     Discarded,
     /// Computation stopped by Algorithm 5 before completion.
     Cancelled,
+    /// Process substrate: child-side encoding of a gradient frame.
+    ///
+    /// The three wire outcomes measure where a gradient's wall time goes
+    /// *on the pipe* between a child worker process and the parent server
+    /// — the serialize/transfer/deserialize cost breakdown the `sweep
+    /// report` wire section aggregates. They are emitted only to the
+    /// streaming [`SpanWriter`] sink (never the in-memory [`Trace`],
+    /// whose busy/useful accounting covers compute spans only), anchored
+    /// at the delivery's source-time stamp with measured wall durations.
+    WireSerialize,
+    /// Process substrate: parent-side read of a gradient frame's bytes.
+    WireTransfer,
+    /// Process substrate: parent-side decode of a gradient frame.
+    WireDeserialize,
 }
 
 impl SpanOutcome {
@@ -37,6 +51,9 @@ impl SpanOutcome {
             SpanOutcome::Accumulated => "accumulated",
             SpanOutcome::Discarded => "discarded",
             SpanOutcome::Cancelled => "cancelled",
+            SpanOutcome::WireSerialize => "wire-serialize",
+            SpanOutcome::WireTransfer => "wire-transfer",
+            SpanOutcome::WireDeserialize => "wire-deserialize",
         }
     }
 }

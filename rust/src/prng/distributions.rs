@@ -6,6 +6,7 @@
 //! can sample it per completion.
 
 use super::Prng;
+use crate::util::json::{fnum, get_fnum, obj, Json};
 
 /// A distribution over per-gradient computation *durations* (seconds > 0).
 #[derive(Clone, Debug, PartialEq)]
@@ -59,6 +60,60 @@ impl TimeDist {
             _ => None,
         }
     }
+
+    /// JSON form (`{"kind": ..., <params>}`) for the process-substrate
+    /// setup frame. Parameters use the journal's non-finite encoding
+    /// ([`fnum`]), so e.g. an unbounded `hi` survives the wire.
+    pub fn to_json(&self) -> Json {
+        match *self {
+            TimeDist::Constant(tau) => {
+                obj(vec![("kind", Json::Str("constant".into())), ("tau", fnum(tau))])
+            }
+            TimeDist::ShiftedHalfNormal { base, sigma } => obj(vec![
+                ("kind", Json::Str("shifted-half-normal".into())),
+                ("base", fnum(base)),
+                ("sigma", fnum(sigma)),
+            ]),
+            TimeDist::Exponential { mean } => obj(vec![
+                ("kind", Json::Str("exponential".into())),
+                ("mean", fnum(mean)),
+            ]),
+            TimeDist::LogNormal { mu, sigma } => obj(vec![
+                ("kind", Json::Str("log-normal".into())),
+                ("mu", fnum(mu)),
+                ("sigma", fnum(sigma)),
+            ]),
+            TimeDist::Uniform { lo, hi } => obj(vec![
+                ("kind", Json::Str("uniform".into())),
+                ("lo", fnum(lo)),
+                ("hi", fnum(hi)),
+            ]),
+        }
+    }
+
+    /// Inverse of [`to_json`](Self::to_json).
+    pub fn from_json(j: &Json) -> Result<Self, String> {
+        let f = |k: &str| -> Result<f64, String> {
+            get_fnum(j.get(k)).ok_or_else(|| format!("TimeDist: missing/invalid field '{k}'"))
+        };
+        match j.get("kind").as_str() {
+            Some("constant") => Ok(TimeDist::Constant(f("tau")?)),
+            Some("shifted-half-normal") => Ok(TimeDist::ShiftedHalfNormal {
+                base: f("base")?,
+                sigma: f("sigma")?,
+            }),
+            Some("exponential") => Ok(TimeDist::Exponential { mean: f("mean")? }),
+            Some("log-normal") => Ok(TimeDist::LogNormal {
+                mu: f("mu")?,
+                sigma: f("sigma")?,
+            }),
+            Some("uniform") => Ok(TimeDist::Uniform {
+                lo: f("lo")?,
+                hi: f("hi")?,
+            }),
+            other => Err(format!("TimeDist: unknown kind {other:?}")),
+        }
+    }
 }
 
 #[cfg(test)]
@@ -102,6 +157,28 @@ mod tests {
                 assert!(d.sample(&mut rng) > 0.0);
             }
         }
+    }
+
+    #[test]
+    fn json_round_trip_all_variants() {
+        let dists = [
+            TimeDist::Constant(3.5),
+            TimeDist::ShiftedHalfNormal { base: 4.0, sigma: 2.0 },
+            TimeDist::Exponential { mean: 0.1 },
+            TimeDist::LogNormal { mu: -2.0, sigma: 1.0 },
+            TimeDist::Uniform { lo: 0.25, hi: f64::INFINITY },
+        ];
+        for d in &dists {
+            let text = crate::util::json::write(&d.to_json());
+            let parsed = crate::util::json::parse(&text).unwrap();
+            assert_eq!(&TimeDist::from_json(&parsed).unwrap(), d, "{text}");
+        }
+        assert!(TimeDist::from_json(&Json::Null).is_err());
+        assert!(TimeDist::from_json(&obj(vec![(
+            "kind",
+            Json::Str("constant".into())
+        )]))
+        .is_err());
     }
 
     #[test]

@@ -104,8 +104,17 @@ impl Prng {
     /// Children are decorrelated by hashing `(parent seed draw, index)`
     /// through SplitMix64.
     pub fn split(&mut self, index: u64) -> Prng {
+        Prng::seed_from_u64(self.split_seed(index))
+    }
+
+    /// The single `u64` that [`Prng::split`] seeds its child from —
+    /// `split(i)` ≡ `seed_from_u64(split_seed(i))`. The process substrate
+    /// ships this value in a worker's setup frame, so a child process
+    /// reconstructs *exactly* the timing stream an in-process worker
+    /// would have received from the shared root.
+    pub fn split_seed(&mut self, index: u64) -> u64 {
         let mut sm = SplitMix64::new(self.next_u64() ^ index.wrapping_mul(0xA24BAED4963EE407));
-        Prng::seed_from_u64(sm.next_u64())
+        sm.next_u64()
     }
 
     /// The private draw stream of one worker **assignment**, keyed by

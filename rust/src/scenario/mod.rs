@@ -14,11 +14,13 @@
 //!   deterministic cell list whose [`Cell::key`]s are derived from
 //!   nothing but cell content.
 //! * [`Substrate`] — where a cell runs: the discrete-event simulator
-//!   (`Sim`, the default) or real threads (`Wallclock`, one OS thread per
-//!   worker). Deterministic wall-clock cells use the virtual-time release
-//!   protocol and are bit-identical to their sim twins, so they stay
-//!   content-addressable, resumable, and CSV-comparable column for
-//!   column.
+//!   (`Sim`, the default), real threads (`Wallclock`, one OS thread per
+//!   worker), or real processes (`Process`, one child per worker speaking
+//!   the [`crate::engine::wire`] frame protocol over stdio, with bounded
+//!   in-run crash recovery). Deterministic wall-clock and process cells
+//!   use the virtual-time release protocol and are bit-identical to their
+//!   sim twins, so they stay content-addressable, resumable, and
+//!   CSV-comparable column for column.
 //! * [`CellStore`] — an append-only JSONL checkpoint journal
 //!   ([`crate::util::json`]); each completed cell's [`RunSummary`] is
 //!   flushed as it lands (with the [`RetryPolicy`] attempt count that

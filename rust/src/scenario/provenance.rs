@@ -37,7 +37,8 @@ pub struct Provenance {
     pub key: String,
     /// Display name of the scheduler (matches the CSV column).
     pub scheduler: String,
-    /// Substrate name (`sim` / `wallclock-det` / `wallclock-live`).
+    /// Substrate name (`sim` / `wallclock-det` / `wallclock-live` /
+    /// `process-det` / `process-live`).
     pub substrate: String,
     pub seed: u64,
     /// Code fingerprint: crate version + FNV-64 of the running binary.
@@ -61,11 +62,19 @@ pub struct Provenance {
     /// Bench-relevant environment at run time (`RINGMASTER_*` variables,
     /// e.g. `RINGMASTER_CELL_THREADS`).
     pub env: BTreeMap<String, String>,
+    /// Child PID per worker slot — empty except for process-substrate
+    /// cells, where it records which OS processes produced the result.
+    pub worker_pids: Vec<u32>,
+    /// Respawn count per worker slot (same indexing as
+    /// [`Provenance::worker_pids`]): how many child crashes the run
+    /// absorbed in place, before any grid-level retry.
+    pub worker_restarts: Vec<u32>,
 }
 
 impl Provenance {
     pub fn to_json(&self) -> Json {
-        json::obj(vec![
+        let counts = |v: &[u32]| Json::Arr(v.iter().map(|&x| num(f64::from(x))).collect());
+        let mut fields = vec![
             ("key", Json::Str(self.key.clone())),
             ("scheduler", Json::Str(self.scheduler.clone())),
             ("substrate", Json::Str(self.substrate.clone())),
@@ -90,7 +99,16 @@ impl Provenance {
                         .collect(),
                 ),
             ),
-        ])
+        ];
+        // process-substrate bookkeeping only when present, so records of
+        // the thread/sim substrates keep their historical shape
+        if !self.worker_pids.is_empty() {
+            fields.push(("worker_pids", counts(&self.worker_pids)));
+        }
+        if !self.worker_restarts.is_empty() {
+            fields.push(("worker_restarts", counts(&self.worker_restarts)));
+        }
+        json::obj(fields)
     }
 
     pub fn from_json(j: &Json) -> Option<Self> {
@@ -102,6 +120,16 @@ impl Provenance {
                 }
             }
         }
+        // absent on pre-process-substrate records → empty
+        let counts = |j: &Json| -> Vec<u32> {
+            match j {
+                Json::Arr(items) => items
+                    .iter()
+                    .filter_map(|v| get_u64(v).and_then(|x| u32::try_from(x).ok()))
+                    .collect(),
+                _ => Vec::new(),
+            }
+        };
         Some(Self {
             key: j.get("key").as_str()?.to_string(),
             scheduler: j.get("scheduler").as_str().unwrap_or_default().to_string(),
@@ -122,6 +150,8 @@ impl Provenance {
                 other => get_num(other),
             },
             env,
+            worker_pids: counts(j.get("worker_pids")),
+            worker_restarts: counts(j.get("worker_restarts")),
         })
     }
 }
@@ -199,6 +229,10 @@ pub fn capture(
         wall_secs,
         cpu_secs,
         env,
+        // the runner fills these from RunRecord::proc after capture —
+        // only process-substrate cells have any
+        worker_pids: Vec::new(),
+        worker_restarts: Vec::new(),
     }
 }
 
@@ -438,7 +472,18 @@ mod tests {
         assert_eq!(p2.key, "k");
         assert_eq!(p2.attempts, 1);
         assert_eq!(p2.cpu_secs, None);
+        assert!(p2.worker_pids.is_empty() && p2.worker_restarts.is_empty());
         assert!(Provenance::from_json(&json::parse("{}").unwrap()).is_none());
+        // process-substrate bookkeeping roundtrips when present — and is
+        // absent from the JSON when empty (historical record shape)
+        assert!(!json::write(&p.to_json()).contains("worker_pids"));
+        let mut pp = record(8);
+        pp.worker_pids = vec![101, 102];
+        pp.worker_restarts = vec![0, 3];
+        let line = json::write(&pp.to_json());
+        assert!(line.contains("worker_pids"));
+        let back = Provenance::from_json(&json::parse(&line).unwrap()).unwrap();
+        assert_eq!(back, pp);
     }
 
     #[test]

@@ -22,13 +22,18 @@ use super::provenance::read_sidecar;
 use super::store::{read_journal, RunSummary};
 
 /// Knobs of [`journal_report`]: the nominal problem constants the
-/// closed-form Table-1 columns are evaluated at (`L = Δ = 1`).
-#[derive(Clone, Copy, Debug)]
+/// closed-form Table-1 columns are evaluated at (`L = Δ = 1`), plus the
+/// optional span-trace directory the wire-cost section aggregates.
+#[derive(Clone, Debug)]
 pub struct ReportOptions {
     /// Target accuracy ε of the closed-form time complexities.
     pub eps: f64,
     /// Gradient-noise variance σ² of the closed-form time complexities.
     pub sigma_sq: f64,
+    /// Span-trace directory of the sweep (`--trace-dir`): when set, the
+    /// report aggregates the process substrate's wire spans
+    /// (serialize/transfer/deserialize) into a wire-cost section.
+    pub trace_dir: Option<std::path::PathBuf>,
 }
 
 impl Default for ReportOptions {
@@ -36,6 +41,7 @@ impl Default for ReportOptions {
         Self {
             eps: 1e-3,
             sigma_sq: 1.0,
+            trace_dir: None,
         }
     }
 }
@@ -89,6 +95,8 @@ fn parse_key(key: &str, summary: &RunSummary) -> RowMeta {
     let substrate = match parts.get(4).copied() {
         Some("wc(det)") => "wallclock-det",
         Some("wc(live)") => "wallclock-live",
+        Some("proc(det)") => "process-det",
+        Some("proc(live)") => "process-live",
         _ => "sim",
     }
     .to_string();
@@ -200,6 +208,50 @@ fn fmt_ratio(v: Option<f64>) -> String {
         Some(v) if v.is_finite() => format!("{v:.2}"),
         _ => "-".into(),
     }
+}
+
+/// Aggregate the wire spans of every `*.spans.jsonl` trace under `dir`:
+/// `(stage, span count, total wall seconds)` in the fixed
+/// serialize → transfer → deserialize order. Compute spans (the outcomes
+/// every substrate streams) are skipped; only process-substrate cells
+/// emit wire spans, so an all-sim/thread sweep totals zero.
+fn wire_cost(dir: &Path) -> Result<Vec<(&'static str, u64, f64)>> {
+    const WIRE: [&str; 3] = ["wire-serialize", "wire-transfer", "wire-deserialize"];
+    let mut totals = [(0u64, 0.0f64); 3];
+    for entry in std::fs::read_dir(dir)? {
+        let path = entry?.path();
+        let is_trace = path
+            .file_name()
+            .and_then(|n| n.to_str())
+            .is_some_and(|n| n.ends_with(".spans.jsonl"));
+        if !is_trace {
+            continue;
+        }
+        let text = std::fs::read_to_string(&path)?;
+        for line in text.lines() {
+            let Ok(j) = crate::util::json::parse(line) else {
+                continue;
+            };
+            let Some(i) = j
+                .get("outcome")
+                .as_str()
+                .and_then(|o| WIRE.iter().position(|w| *w == o))
+            else {
+                continue;
+            };
+            if let (Some(s), Some(e)) = (j.get("start").as_f64(), j.get("end").as_f64()) {
+                if s.is_finite() && e.is_finite() && e >= s {
+                    totals[i].0 += 1;
+                    totals[i].1 += e - s;
+                }
+            }
+        }
+    }
+    Ok(WIRE
+        .iter()
+        .zip(totals)
+        .map(|(&stage, (n, secs))| (stage, n, secs))
+        .collect())
 }
 
 /// CSV-quote a field that may contain commas (scheduler names do).
@@ -447,6 +499,34 @@ pub fn journal_report(journal: &Path, opts: &ReportOptions) -> Result<Report> {
         }
     }
 
+    if let Some(dir) = &opts.trace_dir {
+        let _ = writeln!(md);
+        let _ = writeln!(md, "## Wire cost (process substrate)");
+        let _ = writeln!(md);
+        let rows = if dir.is_dir() {
+            wire_cost(dir)?
+        } else {
+            Vec::new()
+        };
+        let total_spans: u64 = rows.iter().map(|&(_, n, _)| n).sum();
+        if total_spans == 0 {
+            let _ = writeln!(
+                md,
+                "No wire spans under `{}` — only process-substrate cells \
+                 emit them (run the sweep with `--substrate process` and \
+                 `--trace-dir`).",
+                dir.display()
+            );
+        } else {
+            let _ = writeln!(md, "| stage | spans | total s | mean µs |");
+            let _ = writeln!(md, "|---|---|---|---|");
+            for (stage, n, secs) in rows {
+                let mean_us = if n > 0 { secs / n as f64 * 1e6 } else { 0.0 };
+                let _ = writeln!(md, "| {stage} | {n} | {secs:.6} | {mean_us:.2} |");
+            }
+        }
+    }
+
     let _ = writeln!(md);
     let _ = writeln!(md, "## Provenance");
     let _ = writeln!(md);
@@ -467,6 +547,19 @@ pub fn journal_report(journal: &Path, opts: &ReportOptions) -> Result<Report> {
             let cpu: f64 = records.iter().filter_map(|p| p.cpu_secs).sum();
             let retried = records.iter().filter(|p| p.attempts > 1).count();
             let _ = writeln!(md, "- {} record(s), {retried} retried", records.len());
+            let proc_cells = records.iter().filter(|p| !p.worker_pids.is_empty()).count();
+            if proc_cells > 0 {
+                let restarts: u64 = records
+                    .iter()
+                    .flat_map(|p| p.worker_restarts.iter())
+                    .map(|&r| u64::from(r))
+                    .sum();
+                let _ = writeln!(
+                    md,
+                    "- {proc_cells} process-substrate cell(s), {restarts} \
+                     child restart(s) absorbed in place"
+                );
+            }
             let _ = writeln!(
                 md,
                 "- host(s): {}",
@@ -594,12 +687,75 @@ mod tests {
             wall_secs: 0.5,
             cpu_secs: None,
             env: Default::default(),
+            worker_pids: vec![41, 42, 43, 44],
+            worker_restarts: vec![0, 1, 0, 0],
         };
         prov.append(&rec).unwrap();
         drop(prov);
         let rep = journal_report(&path, &ReportOptions::default()).unwrap();
         assert!(rep.markdown.contains("testhost"), "{}", rep.markdown);
         assert!(rep.markdown.contains("0.0.0+bin:test"), "{}", rep.markdown);
+        assert!(
+            rep.markdown
+                .contains("1 process-substrate cell(s), 1 child restart(s)"),
+            "{}",
+            rep.markdown
+        );
+        std::fs::remove_dir_all(&dir).ok();
+    }
+
+    #[test]
+    fn wire_cost_section_aggregates_trace_spans() {
+        let dir = std::env::temp_dir().join(format!("ringmaster_wire_{}", std::process::id()));
+        let traces = dir.join("spans");
+        std::fs::create_dir_all(&traces).unwrap();
+        let path = dir.join("journal.jsonl");
+        std::fs::remove_file(&path).ok();
+        let ring = cell(SchedulerKind::Ringmaster { r: 4, gamma: 0.1, cancel: true });
+        let mut store = CellStore::open(&path, "fp", 1).unwrap();
+        store
+            .append(&ring.key(), &summ("ringmaster", Some(4.0), 9.0), 1)
+            .unwrap();
+        drop(store);
+
+        // hand-written trace: two wire spans plus a compute span that the
+        // aggregation must ignore
+        std::fs::write(
+            traces.join("0000000000000000.spans.jsonl"),
+            "{\"worker\":0,\"start\":1,\"end\":1.5,\"start_k\":0,\"outcome\":\"wire-serialize\"}\n\
+             {\"worker\":0,\"start\":1,\"end\":1.25,\"start_k\":0,\"outcome\":\"wire-transfer\"}\n\
+             {\"worker\":0,\"start\":0,\"end\":9,\"start_k\":0,\"outcome\":\"applied\"}\n",
+        )
+        .unwrap();
+        let opts = ReportOptions {
+            trace_dir: Some(traces.clone()),
+            ..ReportOptions::default()
+        };
+        let rep = journal_report(&path, &opts).unwrap();
+        assert!(rep.markdown.contains("## Wire cost"), "{}", rep.markdown);
+        assert!(
+            rep.markdown.contains("| wire-serialize | 1 | 0.500000 |"),
+            "{}",
+            rep.markdown
+        );
+        assert!(
+            rep.markdown.contains("| wire-transfer | 1 | 0.250000 |"),
+            "{}",
+            rep.markdown
+        );
+        assert!(
+            rep.markdown.contains("| wire-deserialize | 0 |"),
+            "{}",
+            rep.markdown
+        );
+
+        // an empty/missing trace dir degrades to a note, not an error
+        let opts = ReportOptions {
+            trace_dir: Some(dir.join("nope")),
+            ..ReportOptions::default()
+        };
+        let rep = journal_report(&path, &opts).unwrap();
+        assert!(rep.markdown.contains("No wire spans"), "{}", rep.markdown);
         std::fs::remove_dir_all(&dir).ok();
     }
 

@@ -7,13 +7,14 @@
 //! a resumed sweep reconstructs exactly the rows an uninterrupted one
 //! would have produced, and shard CSVs concatenate into the full grid.
 //!
-//! Cells dispatch by their [`Substrate`]: `Sim` runs through the
-//! discrete-event simulator ([`crate::engine::SimSource`] via
-//! [`crate::driver::Driver`]); `Wallclock` runs on real threads
-//! ([`crate::engine::ThreadSource`] via [`crate::exec`]) — deterministic
-//! wall-clock cells use the virtual-time release protocol and are
-//! bit-identical to their sim twins, so the grid CSV is substrate-
-//! invariant in every column except the trailing `substrate` tag.
+//! Cells dispatch by their [`Substrate`] through the single
+//! [`crate::exec::run_on`] entry: `Sim` builds the discrete-event
+//! simulator ([`crate::engine::SimSource`]), `Wallclock` real threads
+//! ([`crate::engine::ThreadSource`]), `Process` child worker processes
+//! ([`crate::engine::ProcSource`]) — deterministic wall-clock and process
+//! cells use the virtual-time release protocol and are bit-identical to
+//! their sim twins, so the grid CSV is substrate-invariant in every
+//! column except the trailing `substrate` tag.
 //! Transiently failing cells (host hiccups, not content bugs) are retried
 //! per [`RetryPolicy`], with the attempt count journaled alongside the
 //! result.
@@ -32,34 +33,29 @@ use std::path::PathBuf;
 use std::sync::{Arc, Mutex, OnceLock};
 use std::time::{Duration, Instant};
 
-use crate::data::partition::label_skew;
 use crate::data::{synthetic_mnist, N_CLASSES};
-use crate::driver::Driver;
 use crate::engine::sweep::{
     cell_threads, parallel_map_streaming_with, parallel_map_with, sweep_threads,
 };
-use crate::engine::{RunRecord, ThreadPoolConfig};
+use crate::engine::{
+    ProcFault, ProcPoolConfig, ProcRunStats, RunRecord, SubstrateSpec, ThreadPoolConfig,
+    WorkerTask,
+};
 use crate::exec;
 use crate::linalg::par::{ComputePool, PoolSet};
 use crate::metrics::SpanWriter;
-use crate::opt::{LogisticProblem, Noisy, QuadraticProblem, Sharded};
+use crate::opt::{LogisticProblem, QuadraticProblem};
 use crate::util::error::Result;
 
 use super::provenance::{capture, process_cpu_secs, ProvenanceStore};
 use super::spec::{fnv1a64, Cell, GridSpec, ProblemSpec, RunBudget, ShardSel, Substrate};
 use super::store::{CellStore, RunSummary};
 
-/// Build the label-skew partition of one sharded cell. `α = ∞`
-/// degenerates to IID. (The seed is offset so partition randomness and
-/// run randomness stay independent streams.)
-pub fn alpha_partition(
-    labels: &[u8],
-    n_workers: usize,
-    alpha: f64,
-    seed: u64,
-) -> crate::data::partition::Partition {
-    label_skew(labels, N_CLASSES, n_workers, alpha, seed ^ 0x5EED)
-}
+/// Build the label-skew partition of one sharded cell. Canonically
+/// defined in [`crate::data::partition`] so process-substrate child
+/// workers rebuild the identical shards; re-exported here because the
+/// scenario layer is its historical home.
+pub use crate::data::partition::alpha_partition;
 
 /// One cached dataset/objective plus every partition derived from it.
 struct CellData {
@@ -166,9 +162,98 @@ fn wallclock_pool(
     }
 }
 
+/// Pool configuration of one process-substrate cell — the child-process
+/// twin of [`wallclock_pool`], with the grid's fault-injection and
+/// restart knobs threaded in.
+fn proc_pool(
+    deterministic: bool,
+    seed: u64,
+    budget: &RunBudget,
+    restart_budget: u32,
+    fault: Option<&ProcFault>,
+) -> ProcPoolConfig {
+    let mut cfg = if deterministic {
+        ProcPoolConfig::virtual_time(seed, WALLCLOCK_SAFETY)
+    } else {
+        let max_wall = if budget.max_time.is_finite() {
+            Duration::from_secs_f64(budget.max_time.min(WALLCLOCK_SAFETY.as_secs_f64()))
+        } else {
+            WALLCLOCK_SAFETY
+        };
+        ProcPoolConfig {
+            seed,
+            time_scale: LIVE_TIME_SCALE,
+            max_wall,
+            deterministic: false,
+            ..Default::default()
+        }
+    };
+    cfg.restart_budget = restart_budget;
+    cfg.fault = fault.cloned();
+    cfg
+}
+
+/// Map a cell's [`Substrate`] to the engine-level [`SubstrateSpec`] that
+/// [`exec::run_on`] dispatches on — the one place the scenario and engine
+/// substrate vocabularies meet.
+fn substrate_spec(
+    cell: &Cell,
+    budget: &RunBudget,
+    pool: &Arc<ComputePool>,
+    noise_sigma: f64,
+    proc: &ProcCellOptions,
+) -> SubstrateSpec {
+    match cell.substrate {
+        Substrate::Sim => SubstrateSpec::Sim {
+            compute: Some(pool.clone()),
+        },
+        Substrate::Wallclock { deterministic, .. } => {
+            let mut tp = wallclock_pool(deterministic, cell.seed, noise_sigma, budget);
+            tp.compute = Some(pool.clone());
+            SubstrateSpec::Threads(tp)
+        }
+        Substrate::Process { deterministic, .. } => SubstrateSpec::Process(proc_pool(
+            deterministic,
+            cell.seed,
+            budget,
+            proc.restart_budget,
+            proc.fault.as_ref(),
+        )),
+    }
+}
+
+/// Live (non-deterministic) substrates: real sleeps, nondeterministic
+/// timing, so repeats are meaningful and journals cache whichever result
+/// landed first.
+fn is_live(substrate: Substrate) -> bool {
+    matches!(
+        substrate,
+        Substrate::Wallclock { deterministic: false, .. }
+            | Substrate::Process { deterministic: false, .. }
+    )
+}
+
+/// Process-substrate execution knobs of one grid invocation (a slice of
+/// [`GridOptions`] that [`run_cell_with`] needs).
+#[derive(Clone, Debug)]
+struct ProcCellOptions {
+    restart_budget: u32,
+    fault: Option<ProcFault>,
+}
+
+impl Default for ProcCellOptions {
+    fn default() -> Self {
+        Self {
+            restart_budget: ProcPoolConfig::default().restart_budget,
+            fault: None,
+        }
+    }
+}
+
 /// Sweep-pool width for a batch of cells: wall-clock cells each spawn one
-/// OS thread per simulated worker, so the smallest nonzero
-/// `Substrate::Wallclock { threads }` cap among them bounds how many run
+/// OS thread per simulated worker (process cells one child process), so
+/// the smallest nonzero `Substrate::Wallclock { threads }` /
+/// `Substrate::Process { workers }` cap among them bounds how many run
 /// concurrently (sim-only batches keep the pool's own default).
 fn pool_threads(cells: &[Cell]) -> usize {
     let base = sweep_threads();
@@ -176,6 +261,7 @@ fn pool_threads(cells: &[Cell]) -> usize {
         .iter()
         .filter_map(|c| match c.substrate {
             Substrate::Wallclock { threads, .. } if threads > 0 => Some(threads),
+            Substrate::Process { workers, .. } if workers > 0 => Some(workers),
             _ => None,
         })
         .min()
@@ -236,6 +322,10 @@ fn axes_cost(cell: &Cell, budget: &RunBudget) -> f64 {
         Substrate::Sim => 1.0,
         Substrate::Wallclock { deterministic: true, .. } => 8.0,
         Substrate::Wallclock { deterministic: false, .. } => 256.0,
+        // a pipe round-trip per gradient costs more than a channel send...
+        Substrate::Process { deterministic: true, .. } => 32.0,
+        // ... and live process cells pay real sleeps on top
+        Substrate::Process { deterministic: false, .. } => 512.0,
     };
     iters * per_event * substrate
 }
@@ -273,6 +363,7 @@ fn run_cell_with(
     cache: &DataCache,
     pool: &Arc<ComputePool>,
     sink: Option<&Arc<Mutex<SpanWriter>>>,
+    proc: &ProcCellOptions,
 ) -> (RunRecord, Option<f64>) {
     let server_opt = cell.scheduler.server_opt.clone();
     let mut sched = cell.scheduler.kind.build();
@@ -280,25 +371,23 @@ fn run_cell_with(
         ProblemSpec::Quadratic { d, noise_sigma } => {
             let mut dcfg = budget.driver_config(cell.seed, server_opt, false);
             dcfg.span_sink = sink.cloned();
-            let rec = match cell.substrate {
-                Substrate::Sim => {
-                    let problem = Noisy::new(QuadraticProblem::paper(*d), *noise_sigma);
-                    let mut driver = Driver::new(problem, cell.model.clone(), dcfg);
-                    driver.run_pooled(sched.as_mut(), pool)
-                }
-                Substrate::Wallclock { deterministic, .. } => {
-                    let problem = QuadraticProblem::paper(*d);
-                    let mut tp = wallclock_pool(deterministic, cell.seed, *noise_sigma, budget);
-                    tp.compute = Some(pool.clone());
-                    exec::run_wallclock_engine(
-                        &problem,
-                        &cell.model,
-                        sched.as_mut(),
-                        &tp,
-                        &dcfg,
-                    )
-                }
+            let spec = substrate_spec(cell, budget, pool, *noise_sigma, proc);
+            let problem = QuadraticProblem::paper(*d);
+            let (eval, samplers) =
+                exec::noisy_workload(&problem, *noise_sigma, cell.model.n_workers());
+            let task = WorkerTask::Quadratic {
+                d: *d,
+                noise_sigma: *noise_sigma,
             };
+            let rec = exec::run_on(
+                &spec,
+                eval,
+                samplers,
+                Some(task),
+                &cell.model,
+                sched.as_mut(),
+                &dcfg,
+            );
             (rec, None)
         }
         ProblemSpec::ShardedLogistic {
@@ -325,29 +414,30 @@ fn run_cell_with(
                 .expect("partition cache covers every sharded cell");
             let mut dcfg = budget.driver_config(cell.seed, server_opt, true);
             dcfg.span_sink = sink.cloned();
-            let rec = match cell.substrate {
-                Substrate::Sim => {
-                    // borrow the cached problem — `&LogisticProblem` is a
-                    // `SampleProblem` via the reference blanket impl, so
-                    // the dataset is shared, not cloned, across the pool
-                    let sharded = Sharded::new(&data.problem, part.clone(), *batch);
-                    let mut driver = Driver::new(sharded, cell.model.clone(), dcfg);
-                    driver.run_pooled(sched.as_mut(), pool)
-                }
-                Substrate::Wallclock { deterministic, .. } => {
-                    let mut tp = wallclock_pool(deterministic, cell.seed, 0.0, budget);
-                    tp.compute = Some(pool.clone());
-                    exec::run_wallclock_sharded_engine(
-                        &data.problem,
-                        part,
-                        *batch,
-                        &cell.model,
-                        sched.as_mut(),
-                        &tp,
-                        &dcfg,
-                    )
-                }
+            let spec = substrate_spec(cell, budget, pool, 0.0, proc);
+            // borrow the cached problem — `&LogisticProblem` is a
+            // `SampleProblem` via the reference blanket impl, so the
+            // dataset is shared, not cloned, across the pool (process
+            // children rebuild it from the WorkerTask instead)
+            let (eval, samplers) =
+                exec::sharded_workload(&data.problem, part, *batch, *n_workers);
+            let task = WorkerTask::ShardedLogistic {
+                n_data: *n_data,
+                n_workers: *n_workers,
+                batch: *batch,
+                lambda: *lambda,
+                alpha: *alpha,
+                data_seed: cell.seed,
             };
+            let rec = exec::run_on(
+                &spec,
+                eval,
+                samplers,
+                Some(task),
+                &cell.model,
+                sched.as_mut(),
+                &dcfg,
+            );
             (rec, Some(*concentration))
         }
     }
@@ -378,7 +468,7 @@ pub fn run_cell_traced(
     // benches), so the conservative width never oversubscribes; a lone
     // cell wanting the whole machine sets RINGMASTER_CELL_THREADS
     let pool = Arc::new(ComputePool::new(cell_threads(sweep_threads())));
-    run_cell_with(cell, budget, &cache, &pool, sink.as_ref())
+    run_cell_with(cell, budget, &cache, &pool, sink.as_ref(), &ProcCellOptions::default())
 }
 
 /// One completed cell with its full in-memory record.
@@ -400,8 +490,14 @@ pub fn run_cells(spec: &GridSpec) -> Vec<CellOutcome> {
     let pools = PoolSet::new(threads, cell_threads(threads));
     let out = parallel_map_with(threads, &spec.cells, |_, cell| {
         let lease = pools.lease();
-        let (record, concentration) =
-            run_cell_with(cell, &spec.budget, &cache, lease.pool(), None);
+        let (record, concentration) = run_cell_with(
+            cell,
+            &spec.budget,
+            &cache,
+            lease.pool(),
+            None,
+            &ProcCellOptions::default(),
+        );
         (record, concentration)
     });
     spec.cells
@@ -454,8 +550,10 @@ impl RetryPolicy {
     /// The explicit opt-in marker: a panic whose message contains this
     /// exact namespaced string is always classified transient — how tests
     /// and custom cell executors inject retryable failures without the
-    /// classifier having to guess.
-    pub const TRANSIENT_MARKER: &'static str = "ringmaster: transient";
+    /// classifier having to guess. The process substrate panics with it
+    /// when a worker exhausts its restart budget, which is why the
+    /// canonical value lives in the engine.
+    pub const TRANSIENT_MARKER: &'static str = crate::engine::TRANSIENT_MARKER;
 
     /// Transient-error classification over a panic payload: environmental
     /// failures (the OS refusing resources it normally grants) qualify;
@@ -525,6 +623,13 @@ pub struct GridOptions {
     /// Per-cell span cap of the trace files (`--trace-spans`); spans past
     /// the cap are counted but not written.
     pub trace_spans: u64,
+    /// Respawns allowed per child worker of a process-substrate cell
+    /// before the run is declared transient (and hits [`GridOptions::retry`]).
+    pub proc_restart_budget: u32,
+    /// Deterministic crash injection into process-substrate cells — the
+    /// crash-recovery tests' hook; `None` (always, outside tests) runs
+    /// clean.
+    pub proc_fault: Option<ProcFault>,
 }
 
 impl Default for GridOptions {
@@ -535,6 +640,8 @@ impl Default for GridOptions {
             provenance: false,
             trace_dir: None,
             trace_spans: 1_000_000,
+            proc_restart_budget: ProcPoolConfig::default().restart_budget,
+            proc_fault: None,
         }
     }
 }
@@ -636,6 +743,10 @@ pub fn run_grid_configured(
         std::fs::create_dir_all(dir)?;
     }
     let (trace_dir, trace_spans) = (opts.trace_dir.clone(), opts.trace_spans);
+    let proc = ProcCellOptions {
+        restart_budget: opts.proc_restart_budget,
+        fault: opts.proc_fault.clone(),
+    };
     run_grid_inner(spec, shard, store, max_cells, opts, |cell, budget| {
         let cache = cache.get_or_init(|| build_cache(&pending));
         let lease = pools.lease();
@@ -647,7 +758,7 @@ pub fn run_grid_configured(
                 .unwrap_or_else(|e| panic!("span trace {}: {e}", path.display()));
             Arc::new(Mutex::new(writer))
         });
-        let out = run_cell_with(cell, budget, cache, lease.pool(), sink.as_ref());
+        let out = run_cell_with(cell, budget, cache, lease.pool(), sink.as_ref(), &proc);
         if let Some(s) = &sink {
             if let Ok(mut w) = s.lock() {
                 let _ = w.finish();
@@ -730,8 +841,10 @@ where
     };
 
     // One repeat of one cell, with the transient-retry loop. Returns the
-    // summary plus how many attempts this repeat burned.
-    let run_once = |cell: &Cell| -> (RunSummary, u32) {
+    // summary, how many attempts this repeat burned, and the process-
+    // substrate bookkeeping (child PIDs / restart counts) when there is
+    // any.
+    let run_once = |cell: &Cell| -> (RunSummary, u32, Option<ProcRunStats>) {
         let mut attempt = 1u32;
         loop {
             let t0 = Instant::now();
@@ -745,7 +858,7 @@ where
                     if s.wall_secs.is_none() {
                         s.wall_secs = Some(t0.elapsed().as_secs_f64());
                     }
-                    return (s, attempt);
+                    return (s, attempt, record.proc);
                 }
                 Err(payload) => {
                     if attempt >= retry.max_attempts.max(1)
@@ -759,16 +872,13 @@ where
         }
     };
 
-    // Only live wall-clock cells repeat — their wall timings are the one
+    // Only live cells repeat — their wall timings are the one
     // nondeterministic output. Deterministic substrates would journal k
     // identical results, so they keep k = 1 and byte-identical CSVs. The
     // journaled attempt count stays `1 + transient retries` (repeats are
     // not retries), so the retry audit trail is repeat-invariant too.
-    let run_one = |cell: &Cell| -> (RunSummary, u32, f64, Option<f64>) {
-        let live = matches!(
-            cell.substrate,
-            Substrate::Wallclock { deterministic: false, .. }
-        );
+    let run_one = |cell: &Cell| -> (RunSummary, u32, f64, Option<f64>, Option<ProcRunStats>) {
+        let live = is_live(cell.substrate);
         let k = if live { repeats.max(1) } else { 1 };
         // host wall + process-CPU readings bracket the whole cell (every
         // repeat and retry) — provenance metadata only, never output
@@ -777,11 +887,15 @@ where
         let mut extra_attempts = 0u32;
         let mut wall_all = Vec::new();
         let mut first: Option<RunSummary> = None;
+        let mut proc: Option<ProcRunStats> = None;
         for _ in 0..k {
-            let (summary, attempts) = run_once(cell);
+            let (summary, attempts, p) = run_once(cell);
             extra_attempts += attempts - 1;
             if live {
                 wall_all.extend(summary.wall_secs);
+            }
+            if proc.is_none() {
+                proc = p;
             }
             first.get_or_insert(summary);
         }
@@ -792,7 +906,7 @@ where
             (Some(a), Some(b)) => Some((b - a).max(0.0)),
             _ => None,
         };
-        (s, 1 + extra_attempts, wall, cpu)
+        (s, 1 + extra_attempts, wall, cpu, proc)
     };
 
     let mut store = store;
@@ -801,7 +915,7 @@ where
         pool_threads(&pending),
         &pending,
         |_, cell| run_one(cell),
-        |i, (summary, attempts, wall, cpu)| {
+        |i, (summary, attempts, wall, cpu, proc)| {
             // checkpoint in completion order, while other cells still run;
             // a failing journal halts the pool (Break) so a dead disk
             // costs at most the in-flight cells, not the rest of the grid
@@ -813,15 +927,16 @@ where
             }
             if let Some(ps) = prov.as_mut() {
                 let cell = &pending[i];
-                let reps = if matches!(
-                    cell.substrate,
-                    Substrate::Wallclock { deterministic: false, .. }
-                ) {
+                let reps = if is_live(cell.substrate) {
                     repeats.max(1) as usize
                 } else {
                     1
                 };
-                let rec = capture(cell, &keys[pending_idx[i]], *attempts, reps, *wall, *cpu);
+                let mut rec = capture(cell, &keys[pending_idx[i]], *attempts, reps, *wall, *cpu);
+                if let Some(p) = proc {
+                    rec.worker_pids = p.pids.clone();
+                    rec.worker_restarts = p.restarts.clone();
+                }
                 if let Err(e) = ps.append(&rec) {
                     append_err = Some(e);
                     return std::ops::ControlFlow::Break(());
@@ -839,7 +954,7 @@ where
         .into_iter()
         .zip(summaries)
         .filter_map(|(i, s)| {
-            s.map(|(s, attempts, _wall, _cpu)| {
+            s.map(|(s, attempts, _wall, _cpu, _proc)| {
                 retries += u64::from(attempts) - 1;
                 (i, s)
             })
@@ -890,10 +1005,10 @@ fn median(xs: &[f64]) -> f64 {
 /// (`scheduler,alpha,seed,concentration,...`); the trailing fairness
 /// columns summarize the final per-shard losses (empty for cells without
 /// shard-loss recording), and the final `substrate` column tags where the
-/// cell ran (`sim` / `wallclock-det` / `wallclock-live`) — for a
-/// deterministic wall-clock run it is the *only* column that differs from
-/// the sim twin's row, which is what the CI substrate-parity check diffs
-/// on. Rows are rebuilt from [`RunSummary`]s, so a CSV regenerated after
+/// cell ran (`sim` / `wallclock-det` / `wallclock-live` / `process-det` /
+/// `process-live`) — for a deterministic wall-clock or process run it is
+/// the *only* column that differs from the sim twin's row, which is what
+/// the CI substrate-parity checks diff on. Rows are rebuilt from [`RunSummary`]s, so a CSV regenerated after
 /// a resume is byte-identical to an uninterrupted one. Scheduler display
 /// names may contain commas (`ringmaster(R=4,stop)`); they are normalized
 /// to `;` so every row keeps the header's column count without CSV
@@ -956,7 +1071,8 @@ pub fn grid_csv(rows: &[(Cell, RunSummary)]) -> String {
 mod tests {
     use super::*;
     use crate::coordinator::SchedulerKind;
-    use crate::driver::DriverConfig;
+    use crate::driver::{Driver, DriverConfig};
+    use crate::opt::Noisy;
     use crate::scenario::spec::GridAxes;
     use crate::sim::ComputeModel;
 

@@ -63,6 +63,21 @@ pub enum Substrate {
         /// key: it changes scheduling, never the result.
         threads: usize,
     },
+    /// One child process per worker ([`crate::engine::ProcSource`]):
+    /// gradients cross a real OS pipe, so (de)serialization and transfer
+    /// cost show up as wire spans, and worker crashes are survivable.
+    Process {
+        /// Release deliveries in virtual-time order — bit-identical to
+        /// [`Substrate::Sim`] under the same seed, exactly like the
+        /// deterministic wall-clock substrate. `false` runs on the live
+        /// wall clock and is *not* reproducible run-to-run.
+        deterministic: bool,
+        /// Cap on how many process cells a grid invocation runs
+        /// concurrently (each cell spawns one child process per worker).
+        /// `0` means the sweep pool's own default. Not part of the cell
+        /// key: it changes scheduling, never the result.
+        workers: usize,
+    },
 }
 
 impl Substrate {
@@ -72,6 +87,8 @@ impl Substrate {
             Substrate::Sim => "sim",
             Substrate::Wallclock { deterministic: true, .. } => "wallclock-det",
             Substrate::Wallclock { deterministic: false, .. } => "wallclock-live",
+            Substrate::Process { deterministic: true, .. } => "process-det",
+            Substrate::Process { deterministic: false, .. } => "process-live",
         }
     }
 
@@ -82,12 +99,14 @@ impl Substrate {
             Substrate::Sim => None,
             Substrate::Wallclock { deterministic: true, .. } => Some("wc(det)"),
             Substrate::Wallclock { deterministic: false, .. } => Some("wc(live)"),
+            Substrate::Process { deterministic: true, .. } => Some("proc(det)"),
+            Substrate::Process { deterministic: false, .. } => Some("proc(live)"),
         }
     }
 }
 
-/// Parse the CLI's `--substrate sim|wallclock` (the latter refined by the
-/// `--deterministic` switch and the `--wc-threads` cap).
+/// Parse the CLI's `--substrate sim|wallclock|process` (the latter two
+/// refined by the `--deterministic` switch and the `--wc-threads` cap).
 pub fn parse_substrate(
     name: &str,
     deterministic: bool,
@@ -99,8 +118,12 @@ pub fn parse_substrate(
             deterministic,
             threads,
         }),
+        "process" | "proc" => Ok(Substrate::Process {
+            deterministic,
+            workers: threads,
+        }),
         other => Err(format!(
-            "--substrate expects 'sim' or 'wallclock', got '{other}'"
+            "--substrate expects 'sim', 'wallclock' or 'process', got '{other}'"
         )),
     }
 }
@@ -835,6 +858,24 @@ mod tests {
         });
         assert_ne!(live.key(), cells[1].key());
         assert!(live.key().ends_with("|wc(live)"));
+        // the process substrate keys the same way: det/live is content,
+        // the concurrency cap is not
+        let proc = cells[0].clone().on(Substrate::Process {
+            deterministic: true,
+            workers: 0,
+        });
+        assert_eq!(proc.key(), format!("{}|proc(det)", plain[0].key()));
+        let proc_capped = cells[0].clone().on(Substrate::Process {
+            deterministic: true,
+            workers: 5,
+        });
+        assert_eq!(proc_capped.key(), proc.key());
+        let proc_live = cells[0].clone().on(Substrate::Process {
+            deterministic: false,
+            workers: 0,
+        });
+        assert!(proc_live.key().ends_with("|proc(live)"));
+        assert_ne!(proc_live.key(), proc.key());
     }
 
     #[test]
@@ -848,6 +889,14 @@ mod tests {
             parse_substrate("wc", false, 0).unwrap(),
             Substrate::Wallclock { deterministic: false, threads: 0 }
         );
+        assert_eq!(
+            parse_substrate("process", true, 2).unwrap(),
+            Substrate::Process { deterministic: true, workers: 2 }
+        );
+        assert_eq!(
+            parse_substrate("proc", false, 0).unwrap(),
+            Substrate::Process { deterministic: false, workers: 0 }
+        );
         assert!(parse_substrate("gpu", false, 0).is_err());
         assert_eq!(Substrate::Sim.name(), "sim");
         assert_eq!(
@@ -857,6 +906,14 @@ mod tests {
         assert_eq!(
             Substrate::Wallclock { deterministic: false, threads: 0 }.name(),
             "wallclock-live"
+        );
+        assert_eq!(
+            Substrate::Process { deterministic: true, workers: 0 }.name(),
+            "process-det"
+        );
+        assert_eq!(
+            Substrate::Process { deterministic: false, workers: 0 }.name(),
+            "process-live"
         );
     }
 

@@ -66,30 +66,14 @@ pub struct RunSummary {
 }
 
 /// JSON `Num`s cannot carry non-finite values; encode them as strings.
-/// (Shared with the provenance sidecar, which uses the same encoding.)
+/// (Shared with the provenance sidecar and the proc-substrate setup
+/// frames — the canonical encoding lives in [`crate::util::json::fnum`].)
 pub(crate) fn num(v: f64) -> Json {
-    if v.is_finite() {
-        Json::Num(v)
-    } else if v.is_nan() {
-        Json::Str("nan".into())
-    } else if v > 0.0 {
-        Json::Str("inf".into())
-    } else {
-        Json::Str("-inf".into())
-    }
+    crate::util::json::fnum(v)
 }
 
 pub(crate) fn get_num(j: &Json) -> Option<f64> {
-    match j {
-        Json::Num(n) => Some(*n),
-        Json::Str(s) => match s.as_str() {
-            "nan" => Some(f64::NAN),
-            "inf" => Some(f64::INFINITY),
-            "-inf" => Some(f64::NEG_INFINITY),
-            _ => None,
-        },
-        _ => None,
-    }
+    crate::util::json::get_fnum(j)
 }
 
 fn opt_num(v: Option<f64>) -> Json {

@@ -43,6 +43,22 @@ impl LinkCost {
             up: dist,
         }
     }
+
+    /// JSON form for the process-substrate setup frame.
+    pub fn to_json(&self) -> crate::util::json::Json {
+        crate::util::json::obj(vec![
+            ("down", self.down.to_json()),
+            ("up", self.up.to_json()),
+        ])
+    }
+
+    /// Inverse of [`to_json`](Self::to_json).
+    pub fn from_json(j: &crate::util::json::Json) -> Result<Self, String> {
+        Ok(Self {
+            down: TimeDist::from_json(j.get("down"))?,
+            up: TimeDist::from_json(j.get("up"))?,
+        })
+    }
 }
 
 /// A compute model with per-worker communication legs.

@@ -12,6 +12,7 @@
 //!   solves in closed form per piecewise segment.
 
 use crate::prng::{Prng, TimeDist};
+use crate::util::json::{fnum, get_fnum, obj, Json};
 
 /// A worker's computation-power function `v(t)` (universal model, §5).
 ///
@@ -232,6 +233,65 @@ impl PowerFn {
         }
         hi
     }
+
+    /// JSON form for the process-substrate setup frame.
+    pub fn to_json(&self) -> Json {
+        match *self {
+            PowerFn::Constant { rate } => {
+                obj(vec![("kind", Json::Str("constant".into())), ("rate", fnum(rate))])
+            }
+            PowerFn::DutyCycle {
+                rate,
+                period,
+                on_frac,
+                phase,
+            } => obj(vec![
+                ("kind", Json::Str("duty-cycle".into())),
+                ("rate", fnum(rate)),
+                ("period", fnum(period)),
+                ("on_frac", fnum(on_frac)),
+                ("phase", fnum(phase)),
+            ]),
+            PowerFn::Flip {
+                rate_before,
+                rate_after,
+                t_flip,
+            } => obj(vec![
+                ("kind", Json::Str("flip".into())),
+                ("rate_before", fnum(rate_before)),
+                ("rate_after", fnum(rate_after)),
+                ("t_flip", fnum(t_flip)),
+            ]),
+            PowerFn::Ramp { a, b } => obj(vec![
+                ("kind", Json::Str("ramp".into())),
+                ("a", fnum(a)),
+                ("b", fnum(b)),
+            ]),
+        }
+    }
+
+    /// Inverse of [`to_json`](Self::to_json).
+    pub fn from_json(j: &Json) -> Result<Self, String> {
+        let f = |k: &str| -> Result<f64, String> {
+            get_fnum(j.get(k)).ok_or_else(|| format!("PowerFn: missing/invalid field '{k}'"))
+        };
+        match j.get("kind").as_str() {
+            Some("constant") => Ok(PowerFn::Constant { rate: f("rate")? }),
+            Some("duty-cycle") => Ok(PowerFn::DutyCycle {
+                rate: f("rate")?,
+                period: f("period")?,
+                on_frac: f("on_frac")?,
+                phase: f("phase")?,
+            }),
+            Some("flip") => Ok(PowerFn::Flip {
+                rate_before: f("rate_before")?,
+                rate_after: f("rate_after")?,
+                t_flip: f("t_flip")?,
+            }),
+            Some("ramp") => Ok(PowerFn::Ramp { a: f("a")?, b: f("b")? }),
+            other => Err(format!("PowerFn: unknown kind {other:?}")),
+        }
+    }
 }
 
 /// Per-worker computation-time regime for the whole cluster.
@@ -369,12 +429,102 @@ impl ComputeModel {
                 .collect(),
         }
     }
+
+    /// JSON form for the process-substrate setup frame: the parent ships
+    /// the *model*, not drawn durations, so a child replays the identical
+    /// per-assignment timing stream from its own seeded [`Prng`].
+    pub fn to_json(&self) -> Json {
+        match self {
+            ComputeModel::Fixed { taus } => obj(vec![
+                ("kind", Json::Str("fixed".into())),
+                ("taus", Json::Arr(taus.iter().map(|&t| fnum(t)).collect())),
+            ]),
+            ComputeModel::Random { dists } => obj(vec![
+                ("kind", Json::Str("random".into())),
+                ("dists", Json::Arr(dists.iter().map(|d| d.to_json()).collect())),
+            ]),
+            ComputeModel::Universal { powers } => obj(vec![
+                ("kind", Json::Str("universal".into())),
+                ("powers", Json::Arr(powers.iter().map(|p| p.to_json()).collect())),
+            ]),
+            ComputeModel::WithComm { inner, links } => obj(vec![
+                ("kind", Json::Str("with-comm".into())),
+                ("inner", inner.to_json()),
+                ("links", Json::Arr(links.iter().map(|l| l.to_json()).collect())),
+            ]),
+        }
+    }
+
+    /// Inverse of [`to_json`](Self::to_json).
+    pub fn from_json(j: &Json) -> Result<Self, String> {
+        let arr = |k: &str| -> Result<&[Json], String> {
+            j.get(k)
+                .as_arr()
+                .ok_or_else(|| format!("ComputeModel: missing/invalid array '{k}'"))
+        };
+        match j.get("kind").as_str() {
+            Some("fixed") => Ok(ComputeModel::Fixed {
+                taus: arr("taus")?
+                    .iter()
+                    .map(|t| get_fnum(t).ok_or_else(|| "ComputeModel: bad tau".to_string()))
+                    .collect::<Result<_, _>>()?,
+            }),
+            Some("random") => Ok(ComputeModel::Random {
+                dists: arr("dists")?
+                    .iter()
+                    .map(TimeDist::from_json)
+                    .collect::<Result<_, _>>()?,
+            }),
+            Some("universal") => Ok(ComputeModel::Universal {
+                powers: arr("powers")?
+                    .iter()
+                    .map(PowerFn::from_json)
+                    .collect::<Result<_, _>>()?,
+            }),
+            Some("with-comm") => Ok(ComputeModel::WithComm {
+                inner: Box::new(ComputeModel::from_json(j.get("inner"))?),
+                links: arr("links")?
+                    .iter()
+                    .map(super::LinkCost::from_json)
+                    .collect::<Result<_, _>>()?,
+            }),
+            other => Err(format!("ComputeModel: unknown kind {other:?}")),
+        }
+    }
 }
 
 #[cfg(test)]
 mod tests {
     use super::*;
     use crate::testkit;
+
+    #[test]
+    fn compute_model_json_round_trip() {
+        use crate::sim::{CommModel, LinkCost};
+        let models = [
+            ComputeModel::fixed_sqrt(3),
+            ComputeModel::random_paper(4),
+            ComputeModel::Universal {
+                powers: vec![
+                    PowerFn::Constant { rate: 2.0 },
+                    PowerFn::DutyCycle { rate: 1.0, period: 4.0, on_frac: 0.5, phase: 0.25 },
+                    PowerFn::Flip { rate_before: 1.0, rate_after: 0.25, t_flip: 2.0 },
+                    PowerFn::Ramp { a: 0.5, b: 0.1 },
+                ],
+            },
+            CommModel::uniform(
+                ComputeModel::fixed_equal(2, 3.0),
+                LinkCost::symmetric(TimeDist::Exponential { mean: 0.5 }),
+            )
+            .into_compute_model(),
+        ];
+        for m in &models {
+            let text = crate::util::json::write(&m.to_json());
+            let parsed = crate::util::json::parse(&text).unwrap();
+            assert_eq!(&ComputeModel::from_json(&parsed).unwrap(), m, "{text}");
+        }
+        assert!(ComputeModel::from_json(&Json::Null).is_err());
+    }
 
     #[test]
     fn constant_power_matches_fixed() {

@@ -383,6 +383,37 @@ pub fn arr_f64(xs: &[f64]) -> Json {
     Json::Arr(xs.iter().map(|&x| Json::Num(x)).collect())
 }
 
+/// Encode an `f64` that may be non-finite: JSON `Num`s cannot carry
+/// NaN/±∞, so those become the strings `"nan"` / `"inf"` / `"-inf"`.
+/// This is the one canonical encoding shared by the sweep journal, the
+/// provenance sidecar, and the process-substrate setup frames — decode
+/// with [`get_fnum`].
+pub fn fnum(v: f64) -> Json {
+    if v.is_finite() {
+        Json::Num(v)
+    } else if v.is_nan() {
+        Json::Str("nan".into())
+    } else if v > 0.0 {
+        Json::Str("inf".into())
+    } else {
+        Json::Str("-inf".into())
+    }
+}
+
+/// Decode an [`fnum`]-encoded value (plain numbers pass through).
+pub fn get_fnum(j: &Json) -> Option<f64> {
+    match j {
+        Json::Num(n) => Some(*n),
+        Json::Str(s) => match s.as_str() {
+            "nan" => Some(f64::NAN),
+            "inf" => Some(f64::INFINITY),
+            "-inf" => Some(f64::NEG_INFINITY),
+            _ => None,
+        },
+        _ => None,
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;

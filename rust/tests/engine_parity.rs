@@ -16,6 +16,16 @@
 //!   keyed streams on *both* substrates — the full iterate trajectory,
 //!   per-worker shard-hit accounting and recorded curves must be
 //!   identical, including under label-skew data sharding.
+//!
+//! The process substrate ([`ringmaster::engine::ProcSource`]) joins the
+//! bitwise tier: deterministic child-process cells must reproduce the
+//! simulator trajectory bit for bit through the stdio wire protocol
+//! (`three_substrates_*` below).
+
+// the historical `run_wallclock*` entry points are exercised on purpose:
+// they are deprecated shims over `exec::run_on` and must keep producing
+// exactly what they did before the collapse, until their removal
+#![allow(deprecated)]
 
 use ringmaster::coordinator::{Decision, Scheduler, SchedulerKind};
 use ringmaster::data::{partition, synthetic_mnist, N_CLASSES};
@@ -478,6 +488,154 @@ fn monomorphized_kind_path_matches_dyn_path_on_both_substrates() {
         assert_eq!(kind_rec.x_final, wall.x_final, "{name}: wallclock trajectory");
         assert_eq!(kind_rec.worker_hits, wall.worker_hits, "{name}: wallclock hits");
         assert_eq!(kind_rec.gap_curve.v, wall.gap_curve.v, "{name}: wallclock curves");
+    }
+}
+
+/// The PR-10 acceptance test: sim ≡ wallclock-det ≡ proc-det, bit for
+/// bit, for every scheduler family — the same configuration run through
+/// all three [`ringmaster::engine::SubstrateSpec`] arms of the one
+/// [`ringmaster::exec::run_on`] entry point. The process runs cross a
+/// real OS pipe per gradient (length-prefixed binary frames, child
+/// processes rebuilding the problem from its wire description), so any
+/// f64 round-trip loss, frame reorder, or cancellation-generation drift
+/// moves a bit and fails here.
+#[test]
+fn three_substrates_bitwise_identical_for_all_seven_kinds() {
+    use ringmaster::engine::{ProcPoolConfig, SubstrateSpec, ThreadPoolConfig, WorkerTask};
+    use ringmaster::exec::{noisy_workload, run_on};
+    use std::path::PathBuf;
+    use std::time::Duration;
+
+    let model = ComputeModel::random_paper(N);
+    let iters = 120u64;
+    let seed = 9u64;
+    let problem = QuadraticProblem::paper(D);
+    let dcfg = DriverConfig {
+        seed,
+        max_iters: iters,
+        record_every: 50,
+        ..Default::default()
+    };
+    let task = WorkerTask::Quadratic { d: D, noise_sigma: NOISE };
+    let max_wall = Duration::from_secs(60);
+    let mut proc_cfg = ProcPoolConfig::virtual_time(seed, max_wall);
+    // the test harness is not the worker binary; point at the real CLI
+    proc_cfg.worker_bin = Some(PathBuf::from(env!("CARGO_BIN_EXE_ringmaster")));
+
+    for kind in all_seven_kinds() {
+        let run = |spec: &SubstrateSpec| {
+            let (eval, samplers) = noisy_workload(&problem, NOISE, N);
+            let mut s = kind.build();
+            run_on(spec, eval, samplers, Some(task.clone()), &model, s.as_mut(), &dcfg)
+        };
+        let sim = run(&SubstrateSpec::sim());
+        let wall = run(&SubstrateSpec::Threads(ThreadPoolConfig::virtual_time(
+            seed, NOISE, max_wall,
+        )));
+        let proc = run(&SubstrateSpec::Process(proc_cfg.clone()));
+
+        let name = kind.name();
+        assert!(sim.iters > 0, "{name}: progress");
+        for (sub, rec) in [("wallclock-det", &wall), ("process-det", &proc)] {
+            assert_eq!(sim.iters, rec.iters, "{name}/{sub}: iterate count");
+            assert_eq!(sim.x_final, rec.x_final, "{name}/{sub}: trajectory");
+            assert_eq!(sim.worker_hits, rec.worker_hits, "{name}/{sub}: hits");
+            assert_eq!(sim.gap_curve.t, rec.gap_curve.t, "{name}/{sub}: record times");
+            assert_eq!(sim.gap_curve.v, rec.gap_curve.v, "{name}/{sub}: record values");
+            assert_eq!(
+                (sim.applied, sim.accumulated, sim.discarded),
+                (rec.applied, rec.accumulated, rec.discarded),
+                "{name}/{sub}: decision accounting"
+            );
+            assert_eq!(
+                sim.cluster.cancellations, rec.cluster.cancellations,
+                "{name}/{sub}: Algorithm 5 parity"
+            );
+        }
+        // substrate markers: the child pool reports its PIDs and a clean
+        // (restart-free) run, and only the sim run lacks a wall duration
+        assert!(sim.wall.is_none() && proc.wall.is_some(), "{name}");
+        let stats = proc.proc.as_ref().expect("process runs carry ProcRunStats");
+        assert_eq!(stats.pids.len(), N, "{name}: one child per worker");
+        assert!(stats.pids.iter().all(|&p| p != 0), "{name}: live PIDs");
+        assert_eq!(stats.total_restarts(), 0, "{name}: no crashes expected");
+        assert!(sim.proc.is_none() && wall.proc.is_none(), "{name}");
+    }
+}
+
+/// Sharded logistic cells over the wire: the child rebuilds dataset,
+/// partition and problem from nothing but the `WorkerTask` description,
+/// and the deterministic process run must still match the simulator bit
+/// for bit — for Ringmaster (Algorithm 5 cancellation crossing the pipe
+/// as generation-stamped CANCEL frames) and Rennala (cross-round
+/// discards).
+#[test]
+fn three_substrates_sharded_proc_det_matches_sim() {
+    use ringmaster::engine::{ProcPoolConfig, SubstrateSpec, WorkerTask};
+    use ringmaster::exec::{run_on, sharded_workload};
+    use std::path::PathBuf;
+    use std::time::Duration;
+
+    let n = 4;
+    let seed = 5u64;
+    let n_data = 240;
+    let batch = 4;
+    let lambda = 0.01;
+    let alpha = 0.3;
+    // parent-side construction mirrors the child's SETUP-frame rebuild:
+    // synthetic_mnist(n_data, 0.15, seed) + alpha_partition(α, seed)
+    let ds = synthetic_mnist(n_data, 0.15, seed);
+    let problem = LogisticProblem::from_dataset(&ds, lambda);
+    let part = partition::alpha_partition(&ds.labels, n, alpha, seed);
+    let model = ComputeModel::random_paper(n);
+    let dcfg = DriverConfig {
+        seed,
+        max_iters: 60,
+        record_every: 10,
+        ..Default::default()
+    };
+    let task = WorkerTask::ShardedLogistic {
+        n_data,
+        n_workers: n,
+        batch,
+        lambda,
+        alpha,
+        data_seed: seed,
+    };
+    let mut proc_cfg = ProcPoolConfig::virtual_time(seed, Duration::from_secs(60));
+    proc_cfg.worker_bin = Some(PathBuf::from(env!("CARGO_BIN_EXE_ringmaster")));
+
+    for kind in [
+        SchedulerKind::Ringmaster { r: 3, gamma: 0.02, cancel: true },
+        SchedulerKind::Rennala { b: 2, gamma: 0.02 },
+    ] {
+        let run = |spec: &SubstrateSpec| {
+            let (eval, samplers) = sharded_workload(&problem, &part, batch, n);
+            let mut s = kind.build();
+            run_on(spec, eval, samplers, Some(task.clone()), &model, s.as_mut(), &dcfg)
+        };
+        let sim = run(&SubstrateSpec::sim());
+        let proc = run(&SubstrateSpec::Process(proc_cfg.clone()));
+
+        let name = kind.name();
+        assert!(sim.iters > 0, "{name}: progress");
+        assert_eq!(sim.iters, proc.iters, "{name}: iterate count");
+        assert_eq!(sim.x_final, proc.x_final, "{name}: iterate trajectory");
+        assert_eq!(sim.worker_hits, proc.worker_hits, "{name}: shard hits");
+        assert_eq!(sim.applied, proc.applied, "{name}");
+        assert_eq!(sim.accumulated, proc.accumulated, "{name}");
+        assert_eq!(sim.discarded, proc.discarded, "{name}");
+        assert_eq!(
+            sim.cluster.cancellations, proc.cluster.cancellations,
+            "{name}: Algorithm 5 parity over the wire"
+        );
+        assert_eq!(sim.gap_curve.t, proc.gap_curve.t, "{name}: record times");
+        assert_eq!(sim.gap_curve.v, proc.gap_curve.v, "{name}: record values");
+        assert_eq!(
+            proc.proc.as_ref().map(|p| p.total_restarts()),
+            Some(0),
+            "{name}: clean child pool"
+        );
     }
 }
 
